@@ -1,0 +1,109 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §5 "e2e"):
+//! the full three-layer stack on a real workload.
+//!
+//!   make artifacts && cargo run --release --example train_e2e
+//!
+//! What it proves: Pallas kernels (L1) and the JAX model (L2) were AOT-
+//! lowered to HLO; this Rust binary (L3) loads them via PJRT, initializes
+//! parameters with the compiled `init`, trains the Soft MoE ViT for a few
+//! hundred steps on SynthShapes with the rsqrt+cooldown schedule, logs the
+//! loss curve, evaluates p@1 + few-shot, cross-checks the trained weights
+//! on the native engine, and writes a checkpoint. Python never runs.
+//!
+//! Flags: --model soft_s --steps 300 --batch 32 --out runs/e2e
+
+use std::path::PathBuf;
+
+use softmoe::cli::Args;
+use softmoe::config::Manifest;
+use softmoe::data::{DatasetConfig, SynthShapes};
+use softmoe::eval;
+use softmoe::metrics::Registry;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::pjrt::PjrtRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::train::{Schedule, TrainConfig, Trainer};
+use softmoe::{ckpt, flops};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    let model = args.str_or("model", "soft_s");
+    let steps = args.usize_or("steps", 300)?;
+    let batch = args.usize_or("batch", 32)?;
+    let out = PathBuf::from(args.str_or("out", "runs/e2e"));
+
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let mut rt = PjrtRuntime::new(&manifest, &model)?;
+    let cfg = rt.model.config.clone();
+    println!("== e2e: AOT artifacts -> PJRT training of {model} ==");
+    println!("model: dim {} depth {} tokens {} experts {} ({} GF/img fwd)",
+             cfg.dim, cfg.depth, cfg.tokens(), cfg.num_experts,
+             flops::forward_flops(&cfg) / 1e9);
+
+    let data = SynthShapes::new(DatasetConfig {
+        image_size: cfg.image_size,
+        num_classes: cfg.num_classes,
+        seed: 0,
+        ..Default::default()
+    });
+
+    // L2-compiled init.
+    let params = rt.init(args.usize_or("seed", 0)? as i32)?;
+    let mut state = TrainState::fresh(params);
+    println!("params: {} ({} tensors)",
+             softmoe::util::human_count(state.param_count() as f64),
+             state.params.len());
+
+    // Train via the compiled train_step; Rust owns the schedule.
+    let registry = Registry::new();
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: batch,
+        schedule: Schedule::RsqrtCooldown {
+            peak: 1e-3,
+            warmup: (steps / 20).max(5),
+            timescale: (steps as f32 / 3.0).max(30.0),
+            cooldown: (steps / 6).max(10),
+        },
+        seed: 0,
+        log_every: (steps / 20).max(1),
+        eval_every: (steps / 3).max(1),
+        eval_batches: 2,
+    };
+    let mut trainer = Trainer::new(&mut rt, &data, tcfg);
+    trainer.metrics = Some(&registry);
+    trainer.verbose = true;
+    let record = trainer.run(&mut state)?;
+
+    println!("\n== loss curve (recorded in EXPERIMENTS.md) ==");
+    for p in &record.log {
+        println!("  step {:>5}  loss {:.4}  acc {:.3}", p.step, p.loss,
+                 p.accuracy);
+    }
+    println!(
+        "total {:.1}s, {:.1} ms/step, {:.1} img/s",
+        record.total_secs,
+        record.step_secs_mean * 1e3,
+        batch as f64 / record.step_secs_mean
+    );
+
+    // Final evaluation through the compiled forward.
+    let p1 = eval::precision_at_1(&mut rt, &state.params, &data, 4, batch)?;
+    let fs = eval::fewshot_probe(&mut rt, &state.params, &data, 10, 2, batch)?;
+    println!("\neval: synth p@1 {p1:.4}  few-shot probe {fs:.4}  \
+              (chance {:.4})", 1.0 / cfg.num_classes as f64);
+
+    // Cross-backend check: the PJRT-trained weights run identically on the
+    // native engine (proves the two implementations agree end-to-end).
+    let (images, _) = data.eval_batch(0, 8);
+    let (pjrt_logits, _) = rt.forward(&state.params, &images)?;
+    let mut native = NativeRuntime::new(cfg.clone());
+    let (native_logits, _) = native.forward(&state.params, &images)?;
+    let diff = pjrt_logits.max_diff(&native_logits);
+    println!("PJRT vs native logits max diff on trained weights: {diff:.2e}");
+    anyhow::ensure!(diff < 5e-3, "backend divergence");
+
+    ckpt::save_state(&out, &model, &state)?;
+    println!("checkpoint -> {}/{model}.*", out.display());
+    Ok(())
+}

@@ -1,0 +1,295 @@
+"""AOT lowering driver: JAX model -> HLO text artifacts + manifest.json.
+
+This is the ONLY bridge between Python (build time) and Rust (run time).
+Python is never on the request path: ``make artifacts`` runs this once and
+the Rust binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects (``proto.id() <=
+INT_MAX``). The HLO text parser reassigns ids and round-trips cleanly.
+Lowering goes stablehlo -> XlaComputation with ``return_tuple=True``; the
+Rust side unwraps the tuple (see rust/src/runtime/).
+
+Artifacts per model variant (name = "<moe_type>_<size>"):
+  <name>.init.hlo.txt          seed:i32 -> (params...)         [sorted names]
+  <name>.fwd_b<B>.hlo.txt      (params..., images) -> (logits, feats)
+  <name>.train.hlo.txt         (params..., m..., v..., step, images, labels,
+                                lr) -> (params..., m..., v..., step, loss, acc)
+  soft only:
+  <name>.fwd_pallas_b<B>.hlo.txt  same as fwd but through the Pallas kernels
+  <name>.inspect.hlo.txt       (params..., images) -> (logits, feats,
+                                dispatch/combine weights per MoE layer)
+
+``manifest.json`` describes every artifact: the config, the parameter
+flattening order with shapes, and each entry point's input/output layout —
+the Rust runtime is entirely manifest-driven.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import soft_moe as K
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def shape_of(s: jax.ShapeDtypeStruct):
+    return list(s.shape)
+
+
+class ArtifactBuilder:
+    """Lowers every entry point of one model variant and records manifest
+    metadata."""
+
+    def __init__(self, name: str, cfg: M.ModelConfig, out_dir: str):
+        self.name = name
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.names = M.param_names(cfg)
+        example = M.init(cfg, jax.random.PRNGKey(0))
+        self.pshapes = {k: list(example[k].shape) for k in self.names}
+        self.entries: dict = {}
+
+    # -- helpers ----------------------------------------------------------
+    def _params_specs(self):
+        return [spec(self.pshapes[k]) for k in self.names]
+
+    def _pack(self, flat):
+        return {k: v for k, v in zip(self.names, flat)}
+
+    def _emit(self, entry: str, fn, in_specs, inputs_desc, outputs_desc):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{self.name}.{entry}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries[entry] = {
+            "file": fname,
+            "inputs": inputs_desc,
+            "outputs": outputs_desc,
+        }
+        print(f"  {fname:44s} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s")
+
+    # -- entry points -----------------------------------------------------
+    def build_init(self):
+        cfg = self.cfg
+
+        def fn(seed):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+            p = M.init(cfg, key)
+            return tuple(p[k] for k in self.names)
+
+        self._emit(
+            "init", fn, [spec((), jnp.int32)],
+            [{"name": "seed", "kind": "seed", "shape": [], "dtype": "i32"}],
+            [{"name": k, "kind": "param", "shape": self.pshapes[k],
+              "dtype": "f32"} for k in self.names],
+        )
+
+    def build_fwd(self, batch: int, use_pallas: bool = False):
+        cfg = self.cfg
+        names = self.names
+
+        def fn(*flat):
+            params = self._pack(flat[:len(names)])
+            images = flat[len(names)]
+            logits, feats = M.forward(params, images, cfg,
+                                      use_pallas=use_pallas)
+            return logits, feats
+
+        img = spec((batch, cfg.image_size, cfg.image_size, cfg.channels))
+        entry = f"fwd_pallas_b{batch}" if use_pallas else f"fwd_b{batch}"
+        self._emit(
+            entry, fn, self._params_specs() + [img],
+            [{"name": k, "kind": "param", "shape": self.pshapes[k],
+              "dtype": "f32"} for k in names]
+            + [{"name": "images", "kind": "images",
+                "shape": shape_of(img), "dtype": "f32"}],
+            [{"name": "logits", "kind": "logits",
+              "shape": [batch, cfg.num_classes], "dtype": "f32"},
+             {"name": "features", "kind": "features",
+              "shape": [batch, cfg.dim], "dtype": "f32"}],
+        )
+
+    def build_train(self, batch: int):
+        cfg = self.cfg
+        names = self.names
+        np_ = len(names)
+
+        def fn(*flat):
+            params = self._pack(flat[:np_])
+            mom = self._pack(flat[np_:2 * np_])
+            vel = self._pack(flat[2 * np_:3 * np_])
+            step, images, labels, lr = flat[3 * np_:3 * np_ + 4]
+            out = M.train_step(params, mom, vel, step, images, labels, lr, cfg)
+            new_p, new_m, new_v, step, loss, acc = out
+            return (tuple(new_p[k] for k in names)
+                    + tuple(new_m[k] for k in names)
+                    + tuple(new_v[k] for k in names)
+                    + (step, loss, acc))
+
+        img = spec((batch, cfg.image_size, cfg.image_size, cfg.channels))
+        in_specs = (self._params_specs() + self._params_specs()
+                    + self._params_specs()
+                    + [spec((), jnp.int32), img, spec((batch,), jnp.int32),
+                       spec((), jnp.float32)])
+
+        def pdesc(kind):
+            return [{"name": k, "kind": kind, "shape": self.pshapes[k],
+                     "dtype": "f32"} for k in names]
+
+        io_state = pdesc("param") + pdesc("adam_m") + pdesc("adam_v")
+        self._emit(
+            "train", fn, in_specs,
+            io_state + [
+                {"name": "step", "kind": "step", "shape": [], "dtype": "i32"},
+                {"name": "images", "kind": "images",
+                 "shape": shape_of(img), "dtype": "f32"},
+                {"name": "labels", "kind": "labels",
+                 "shape": [batch], "dtype": "i32"},
+                {"name": "lr", "kind": "lr", "shape": [], "dtype": "f32"},
+            ],
+            io_state + [
+                {"name": "step", "kind": "step", "shape": [], "dtype": "i32"},
+                {"name": "loss", "kind": "loss", "shape": [], "dtype": "f32"},
+                {"name": "acc", "kind": "acc", "shape": [], "dtype": "f32"},
+            ],
+        )
+
+    def build_inspect(self, batch: int):
+        cfg = self.cfg
+        names = self.names
+
+        def fn(*flat):
+            params = self._pack(flat[:len(names)])
+            images = flat[len(names)]
+            logits, feats, weights = M.forward(params, images, cfg,
+                                               collect_weights=True)
+            wkeys = sorted(weights.keys())
+            return (logits, feats) + tuple(weights[k] for k in wkeys)
+
+        img = spec((batch, cfg.image_size, cfg.image_size, cfg.channels))
+        m, n, p = cfg.tokens, cfg.num_experts, cfg.slots_per_expert
+        wkeys = sorted(
+            [f"block_{i}/{w}" for i in cfg.moe_layers
+             for w in ("dispatch", "combine")])
+        self._emit(
+            "inspect", fn, self._params_specs() + [img],
+            [{"name": k, "kind": "param", "shape": self.pshapes[k],
+              "dtype": "f32"} for k in names]
+            + [{"name": "images", "kind": "images",
+                "shape": shape_of(img), "dtype": "f32"}],
+            [{"name": "logits", "kind": "logits",
+              "shape": [batch, cfg.num_classes], "dtype": "f32"},
+             {"name": "features", "kind": "features",
+              "shape": [batch, cfg.dim], "dtype": "f32"}]
+            + [{"name": k, "kind": "routing_weights",
+                "shape": [batch, m, n, p], "dtype": "f32"} for k in wkeys],
+        )
+
+    def manifest(self):
+        cfg = self.cfg
+        return {
+            "config": {
+                "image_size": cfg.image_size, "patch_size": cfg.patch_size,
+                "channels": cfg.channels, "dim": cfg.dim, "depth": cfg.depth,
+                "heads": cfg.heads, "mlp_dim": cfg.mlp_dim,
+                "num_classes": cfg.num_classes, "moe_type": cfg.moe_type,
+                "moe_layers": list(cfg.moe_layers),
+                "num_experts": cfg.num_experts,
+                "slots_per_expert": cfg.slots_per_expert,
+                "expert_hidden": cfg.expert_hidden, "top_k": cfg.top_k,
+                "capacity_factor": cfg.capacity_factor, "bpr": cfg.bpr,
+                "dispatch_mode": cfg.dispatch_mode,
+                "combine_mode": cfg.combine_mode,
+                "normalize_router": cfg.normalize_router,
+                "tokens": cfg.tokens,
+            },
+            "params": [{"name": k, "shape": self.pshapes[k]}
+                       for k in self.names],
+            "entries": self.entries,
+        }
+
+
+def perf_estimates(cfg: M.ModelConfig) -> dict:
+    """Analytic L1 kernel perf model for the §Perf report."""
+    m, d = cfg.tokens, cfg.dim
+    n, p, h = cfg.num_experts, cfg.slots_per_expert, cfg.expert_hidden
+    vm = K.vmem_estimate(m, d, n, p, h)
+    return {
+        "vmem_bytes": {"dispatch": vm.dispatch, "expert_ffn": vm.expert_ffn,
+                       "combine": vm.combine, "peak": vm.peak},
+        "vmem_budget_bytes": 16 * 1024 * 1024,
+        "mxu_utilization": K.mxu_utilization_estimate(m, d, n, p, h),
+        "slot_tile": K.pick_tile(n * p),
+        "token_tile": K.pick_tile(m),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--size", default="s", choices=sorted(M.FAMILY))
+    ap.add_argument("--variants",
+                    default="dense,soft,tokens_choice,experts_choice")
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--fwd-batches", default="1,8,32")
+    ap.add_argument("--num-experts", type=int, default=16)
+    ap.add_argument("--slots-per-expert", type=int, default=4)
+    ap.add_argument("--num-classes", type=int, default=32)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    fwd_batches = [int(b) for b in args.fwd_batches.split(",")]
+    manifest = {"format": 1, "size": args.size, "models": {}}
+    perf = {}
+
+    for variant in args.variants.split(","):
+        name = f"{variant}_{args.size}"
+        cfg = M.preset(args.size, variant,
+                       num_experts=args.num_experts,
+                       slots_per_expert=args.slots_per_expert,
+                       num_classes=args.num_classes)
+        print(f"[aot] building {name}: {cfg}")
+        b = ArtifactBuilder(name, cfg, args.out_dir)
+        b.build_init()
+        for fb in fwd_batches:
+            b.build_fwd(fb)
+        b.build_train(args.train_batch)
+        if variant == "soft":
+            b.build_fwd(fwd_batches[-1], use_pallas=True)
+            b.build_inspect(min(8, fwd_batches[-1]))
+            perf[name] = perf_estimates(cfg)
+        manifest["models"][name] = b.manifest()
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out_dir, "perf_estimates.json"), "w") as f:
+        json.dump(perf, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models "
+          f"to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

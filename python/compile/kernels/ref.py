@@ -1,0 +1,313 @@
+"""Pure-jnp reference oracle for the Soft MoE layer and sparse baselines.
+
+This module is the *correctness ground truth* for the whole stack:
+
+* the Pallas kernels in ``soft_moe.py`` are tested against these functions
+  (pytest + hypothesis sweeps in ``python/tests/``),
+* the L2 model (``model.py``) calls these functions inside the training
+  graph (XLA fuses them well; Pallas is used on the inference artifact),
+* the Rust native engine (``rust/src/moe/``) is parity-tested against the
+  HLO lowered from these functions.
+
+Everything follows the paper's notation (Section 2.1):
+
+    X   : (m, d)        input tokens
+    Phi : (d, n, p)     per-slot parameters (n experts, p slots/expert)
+    logits = X @ Phi                       -> (m, n, p)
+    D   = softmax over tokens (axis 0)     "dispatch" weights
+    C   = softmax over slots (axes 1,2)    "combine" weights
+    Xs  = D^T X                            -> (n, p, d) input slots
+    Ys  = f_i(Xs[i])                       per-expert MLP
+    Y   = C Ys                             -> (m, d) output tokens
+
+Batched variants add a leading batch axis; the softmaxes are always within
+one sequence (Soft MoE is per-sequence deterministic, Section 2.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Normalization (paper Section 2.3 / Algorithm 2, Appendix E)
+# ---------------------------------------------------------------------------
+
+def l2_normalize(x: jax.Array, axis: int, eps: float = 1e-6) -> jax.Array:
+    """Scale ``axis`` of ``x`` to unit L2 norm (Algorithm 2 in the paper)."""
+    norm = jnp.sqrt(jnp.square(x).sum(axis=axis, keepdims=True))
+    return x * jnp.reciprocal(norm + eps)
+
+
+def soft_moe_logits(
+    x: jax.Array,
+    phi: jax.Array,
+    scale: jax.Array | float = 1.0,
+    normalize: bool = True,
+) -> jax.Array:
+    """Per (token, slot) routing logits.
+
+    Args:
+      x: (..., m, d) tokens.
+      phi: (d, n, p) slot parameters.
+      scale: trainable scalar applied to the normalized phi.
+      normalize: if True apply the paper's L2 normalization fix; if False
+        reproduce the collapsing variant studied in Appendix E.
+
+    Returns:
+      (..., m, n, p) logits.
+    """
+    if normalize:
+        x = l2_normalize(x, axis=-1)
+        phi = scale * l2_normalize(phi, axis=0)
+    return jnp.einsum("...md,dnp->...mnp", x, phi)
+
+
+def dispatch_weights(logits: jax.Array) -> jax.Array:
+    """Softmax over the *tokens* axis (columns of X@Phi): paper eq. (1)."""
+    return jax.nn.softmax(logits, axis=-3)
+
+
+def combine_weights(logits: jax.Array) -> jax.Array:
+    """Softmax over the *slots* axes (rows of X@Phi): paper eq. (3)."""
+    m, n, p = logits.shape[-3:]
+    flat = logits.reshape(*logits.shape[:-2], n * p)
+    c = jax.nn.softmax(flat, axis=-1)
+    return c.reshape(*logits.shape[:-3], m, n, p)
+
+
+# ---------------------------------------------------------------------------
+# Expert MLP (all experts share the structure, not the parameters)
+# ---------------------------------------------------------------------------
+
+def expert_mlp(xs: jax.Array, w1, b1, w2, b2) -> jax.Array:
+    """Apply expert ``i`` to slot group ``i``.
+
+    Args:
+      xs: (..., n, p, d) input slots.
+      w1: (n, d, h); b1: (n, h); w2: (n, h, d); b2: (n, d).
+
+    Returns:
+      (..., n, p, d) output slots.
+    """
+    h = jnp.einsum("...npd,ndh->...nph", xs, w1) + b1[:, None, :]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...nph,nhd->...npd", h, w2) + b2[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Full Soft MoE layer (Algorithm 1 + ablations of Table 3 / Appendix A)
+# ---------------------------------------------------------------------------
+
+def soft_moe_layer(
+    x: jax.Array,
+    phi: jax.Array,
+    scale: jax.Array | float,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    normalize: bool = True,
+    dispatch_mode: str = "soft",
+    combine_mode: str = "soft",
+    return_weights: bool = False,
+):
+    """The Soft MoE layer, batched over any leading axes.
+
+    ``dispatch_mode`` / ``combine_mode`` in {"soft", "uniform", "identity"}
+    implement the paper's algorithmic ablations (Table 3, Appendix A):
+
+      * soft/soft         -> Soft MoE
+      * soft/uniform      -> "Soft / Uniform"
+      * uniform/soft      -> "Uniform / Soft"
+      * uniform/uniform   -> "Uniform"
+      * identity/identity -> "Identity" (round-robin token i -> slot i;
+                              requires m == n*p)
+    """
+    m, d = x.shape[-2:]
+    _, n, p = phi.shape
+    logits = soft_moe_logits(x, phi, scale, normalize)
+
+    if dispatch_mode == "soft":
+        dsp = dispatch_weights(logits)
+    elif dispatch_mode == "uniform":
+        dsp = jnp.full(logits.shape, 1.0 / m, dtype=x.dtype)
+    elif dispatch_mode == "identity":
+        assert m == n * p, "identity routing requires m == n*p"
+        eye = jnp.eye(m, dtype=x.dtype).reshape(m, n, p)
+        dsp = jnp.broadcast_to(eye, logits.shape)
+    else:
+        raise ValueError(dispatch_mode)
+
+    if combine_mode == "soft":
+        cmb = combine_weights(logits)
+    elif combine_mode == "uniform":
+        cmb = jnp.full(logits.shape, 1.0 / (n * p), dtype=x.dtype)
+    elif combine_mode == "identity":
+        assert m == n * p
+        eye = jnp.eye(m, dtype=x.dtype).reshape(m, n, p)
+        cmb = jnp.broadcast_to(eye, logits.shape)
+    else:
+        raise ValueError(combine_mode)
+
+    xs = jnp.einsum("...md,...mnp->...npd", x, dsp)
+    ys = expert_mlp(xs, w1, b1, w2, b2)
+    y = jnp.einsum("...npd,...mnp->...md", ys, cmb)
+    if return_weights:
+        return y, dsp, cmb
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP block (ViT baseline / non-MoE blocks)
+# ---------------------------------------------------------------------------
+
+def dense_mlp(x: jax.Array, w1, b1, w2, b2) -> jax.Array:
+    """Standard transformer MLP: (..., d) -> (..., d)."""
+    h = jax.nn.gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Sparse baselines: Tokens Choice (top-K + BPR) and Experts Choice (top-C)
+# ---------------------------------------------------------------------------
+
+def _strict_rank(keys: jax.Array) -> jax.Array:
+    """Rank of each element when sorting ``keys`` (last axis) descending,
+    ties broken by index. Implemented with an O(m^2) comparison matrix
+    instead of argsort/top_k: (a) jax argsort batching hits a gather
+    incompatibility in this jaxlib, and (b) ``lax.top_k`` lowers to a
+    ``topk(..., largest=true)`` HLO attribute that the xla_extension 0.5.1
+    text parser behind the Rust runtime rejects. m is small (<=1024) in
+    every config, so the comparison form is portable and XLA-fusable.
+    """
+    m = keys.shape[-1]
+    a = keys[..., :, None]
+    b = keys[..., None, :]
+    idx = jnp.arange(m)
+    earlier = (b > a) | ((b == a) & (idx[None, :] < idx[:, None]))
+    return earlier.sum(axis=-1)
+
+
+def _topk_onehot(scores: jax.Array, k: int):
+    """Rank-based replacement for ``lax.top_k`` (see ``_strict_rank``).
+
+    Returns (values (..., k), onehot (..., k, n)) where onehot[..., c, :]
+    selects the rank-c element of the last axis of ``scores``.
+    """
+    rank = _strict_rank(scores)                                # (..., n)
+    sel = (rank[..., None, :] == jnp.arange(k)[:, None])       # (..., k, n)
+    onehot = sel.astype(scores.dtype)
+    values = jnp.einsum("...kn,...n->...k", onehot, scores)
+    return values, onehot
+
+
+def tokens_choice_layer(
+    x: jax.Array,
+    wg: jax.Array,
+    w1, b1, w2, b2,
+    *,
+    k: int = 1,
+    capacity_factor: float = 1.0,
+    bpr: bool = True,
+    return_stats: bool = False,
+):
+    """Tokens Choice (Top-K) router with optional Batch Priority Routing.
+
+    Every token picks its top-K experts by router probability; each expert
+    has a buffer of ``ceil(capacity_factor * m * k / n)`` slots. Without
+    BPR, buffer positions are granted in token order; with BPR (Riquelme et
+    al., 2021) tokens are processed in decreasing max-router-probability
+    order, so important tokens are dropped last.
+
+    Args:
+      x: (..., m, d) tokens; each sequence is one routing group (the
+        paper's group-size > 1 regime is studied with the Rust simulator).
+      wg: (d, n) router weights.
+
+    Returns:
+      y: (..., m, d); dropped tokens contribute zeros (the residual
+      connection in the caller passes them through). If ``return_stats``,
+      also returns a dict with drop/usage statistics.
+    """
+    m, d = x.shape[-2:]
+    n = wg.shape[1]
+    cap = max(1, int(float(capacity_factor) * m * k / n + 0.9999))
+
+    probs = jax.nn.softmax(x @ wg, axis=-1)                    # (..., m, n)
+    topk_val, e1h = _topk_onehot(probs, k)                     # (..., m, k[, n])
+
+    # Token priority: BPR = decreasing max router prob; else token order.
+    if bpr:
+        rank = _strict_rank(probs.max(axis=-1))                # (..., m)
+    else:
+        rank = jnp.broadcast_to(jnp.arange(m), probs.shape[:-1])
+    # Priority key over the m*k (token, choice) pairs.
+    pair_rank = (rank[..., None] * k
+                 + jnp.arange(k)).reshape(*x.shape[:-2], m * k)
+
+    eflat = e1h.reshape(*x.shape[:-2], m * k, n)
+    # pos[p] = # of earlier pairs (by priority) that chose the same expert.
+    less = (pair_rank[..., None, :] < pair_rank[..., :, None]).astype(x.dtype)
+    pos = jnp.einsum("...pn,...qn,...pq->...p", eflat, eflat, less)
+    pos = pos.reshape(*x.shape[:-2], m, k).astype(jnp.int32)
+    keep = (pos < cap) & (e1h.sum(-1) > 0)                     # (..., m, k)
+
+    # Dispatch tensor (..., m, n, cap). one_hot(pos>=cap) is all-zero, which
+    # also masks dropped pairs.
+    pos1h = jax.nn.one_hot(pos, cap, dtype=x.dtype)            # (..., m, k, cap)
+    disp = jnp.einsum("...mkn,...mkc->...mnc", e1h, pos1h)
+    xs = jnp.einsum("...md,...mnc->...ncd", x, disp)
+    ys = expert_mlp(xs, w1, b1, w2, b2)                        # (..., n, cap, d)
+    gates = topk_val * keep.astype(x.dtype)                    # (..., m, k)
+    comb = jnp.einsum("...mkn,...mkc,...mk->...mnc", e1h, pos1h, gates)
+    y = jnp.einsum("...ncd,...mnc->...md", ys, comb)
+
+    if return_stats:
+        processed = keep.any(axis=-1)
+        stats = {
+            "dropped_frac": 1.0 - processed.mean(),
+            "expert_load": disp.sum(axis=(-3, -1)),            # tokens/expert
+        }
+        return y, stats
+    return y
+
+
+def experts_choice_layer(
+    x: jax.Array,
+    wg: jax.Array,
+    w1, b1, w2, b2,
+    *,
+    capacity_factor: float = 1.0,
+    return_stats: bool = False,
+):
+    """Experts Choice router (Zhou et al., 2022): each expert takes the
+    top-C tokens by affinity, C = ceil(capacity_factor * m / n).
+
+    Tokens may be chosen by several experts (their outputs are summed,
+    weighted by the softmax-over-experts gate) or by none (dropped).
+    """
+    m, d = x.shape[-2:]
+    n = wg.shape[1]
+    cap = max(1, int(float(capacity_factor) * m / n + 0.9999))
+
+    gates = jax.nn.softmax(x @ wg, axis=-1)                    # (..., m, n)
+    # Each expert picks its top-cap tokens by gate (rank-based selection;
+    # see _topk_onehot for why lax.top_k is avoided).
+    gt = jnp.swapaxes(gates, -1, -2)                           # (..., n, m)
+    top_val, disp = _topk_onehot(gt, cap)                      # (..., n, cap[, m])
+    xs = jnp.einsum("...ncm,...md->...ncd", disp, x)
+    ys = expert_mlp(xs, w1, b1, w2, b2)
+    comb = disp * top_val[..., None]                           # (..., n, cap, m)
+    y = jnp.einsum("...ncd,...ncm->...md", ys, comb)
+
+    if return_stats:
+        chosen = disp.sum(axis=(-3, -2))                       # per-token count
+        stats = {
+            "dropped_frac": (chosen == 0).mean(),
+            "tokens_per_expert_overlap": chosen,
+        }
+        return y, stats
+    return y

@@ -1,0 +1,298 @@
+"""Pallas kernels for the Soft MoE hot path (Layer 1).
+
+Three kernels implement the layer's pipeline, mirroring how the paper's
+TPU implementation tiles the computation across the MXU:
+
+  1. ``dispatch``  — routing logits + dispatch softmax + input-slot mixing,
+     gridded over *slot tiles*. Each program instance holds the full token
+     matrix X (m×d) in VMEM plus one tile of Φ, computes the (m × S_t)
+     logits tile with the MXU, normalizes over the token axis (paper
+     eq. 1 — the softmax over *columns* is local to a slot tile, so no
+     cross-program reduction is needed), and emits X̃ tile = Dᵀ X.
+  2. ``expert_ffn`` — per-expert MLP, gridded over experts. Each instance
+     runs (p×d)·(d×h) → GELU → (p×h)·(h×d) on the MXU.
+  3. ``combine``   — combine softmax + output mixing, gridded over *token
+     tiles*. The softmax over slots (paper eq. 3) needs the full slot axis,
+     which each instance holds (m_t × S logits tile + S×d slot outputs).
+
+HARDWARE ADAPTATION (DESIGN.md §6): the paper targets TPUv3. The kernels
+are written so the HBM↔VMEM schedule is expressed with BlockSpecs — slots
+are the embarrassingly-parallel grid axis for dispatch/experts (the paper
+shards slots across devices the same way), tokens for combine. On this
+testbed the kernels execute with ``interpret=True`` (the CPU PJRT plugin
+cannot run Mosaic custom-calls); the analytic VMEM/MXU estimates below are
+the optimization target for the real-TPU path and are reported in
+EXPERIMENTS.md §Perf.
+
+Correctness: every public function is tested against ``ref.py`` in
+``python/tests/test_kernels.py`` with hypothesis shape/value sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Tiling helpers
+# ---------------------------------------------------------------------------
+
+def pick_tile(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= target.
+
+    TPU MXU-friendly tiles are multiples of 128; configs in this repo use
+    powers of two so this usually returns 128 (or the whole axis when it is
+    small). Falls back to the full axis for awkward sizes so that the
+    kernels remain correct under hypothesis sweeps.
+    """
+    if dim <= target:
+        return dim
+    for t in range(target, 0, -1):
+        if dim % t == 0:
+            return t
+    return dim
+
+
+class VmemEstimate(NamedTuple):
+    """Analytic per-instance VMEM footprint (bytes) for each kernel."""
+    dispatch: int
+    expert_ffn: int
+    combine: int
+
+    @property
+    def peak(self) -> int:
+        return max(self)
+
+
+def vmem_estimate(m: int, d: int, n: int, p: int, h: int,
+                  slot_tile: int | None = None,
+                  token_tile: int | None = None,
+                  h_tile: int | None = None,
+                  bytes_per_el: int = 4) -> VmemEstimate:
+    """Per-program-instance VMEM footprint for the three kernels.
+
+    Used by the perf pass to keep every instance under the ~16 MiB/core
+    TPUv3 VMEM budget; see EXPERIMENTS.md §Perf. The expert FFN is h-tiled
+    (§Perf L1-1): each instance holds only (d × H_t) + (H_t × d) weight
+    blocks, so the footprint is O(d·H_t) instead of O(d·h).
+    """
+    s = n * p
+    st = slot_tile or pick_tile(s)
+    mt = token_tile or pick_tile(m)
+    ht = h_tile or pick_tile(h)
+    disp = 2 * (m * d) + (d * st) + (m * st) + (st * d)
+    ffn = (p * d) + (d * ht) + ht + (p * ht) + (ht * d) + d + (p * d)
+    comb = (mt * s) + (s * d) + (mt * d)
+    return VmemEstimate(*(x * bytes_per_el for x in (disp, ffn, comb)))
+
+
+def mxu_utilization_estimate(m: int, d: int, n: int, p: int, h: int) -> float:
+    """Fraction of MXU-shaped work: FLOPs in 128-aligned matmul tiles over
+    total FLOPs. 1.0 means every contraction maps onto full MXU tiles."""
+    def aligned(a, b, c):
+        def rnd(x):
+            return max(128, ((x + 127) // 128) * 128)
+        ideal = 2 * a * b * c
+        padded = 2 * rnd(a) * rnd(b) * rnd(c)
+        return ideal / padded
+    s = n * p
+    flops = {
+        "logits": (2 * m * d * s, aligned(m, d, s)),
+        "mix_in": (2 * s * m * d, aligned(s, m, d)),
+        "ffn1": (2 * n * p * d * h, aligned(p, d, h)),
+        "ffn2": (2 * n * p * h * d, aligned(p, h, d)),
+        "mix_out": (2 * m * s * d, aligned(m, s, d)),
+    }
+    total = sum(f for f, _ in flops.values())
+    eff = sum(f * u for f, u in flops.values())
+    return eff / total
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+def _dispatch_kernel(xn_ref, x_ref, phi_ref, xs_ref, logits_ref):
+    """One slot tile: logits, dispatch softmax over tokens, slot mixing.
+
+    ``xn`` is the (possibly L2-normalized) view of the tokens used for the
+    routing logits; the slot mix itself uses the raw tokens ``x`` (paper
+    Algorithm 1: normalization only affects the logits).
+    """
+    xn = xn_ref[...]                                 # (m, d)
+    phi = phi_ref[...]                               # (d, St)
+    logits = jnp.dot(xn, phi, preferred_element_type=jnp.float32)
+    logits_ref[...] = logits
+    # Dispatch softmax: normalize over the token axis (paper eq. 1).
+    z = logits - logits.max(axis=0, keepdims=True)
+    e = jnp.exp(z)
+    dsp = e / e.sum(axis=0, keepdims=True)           # (m, St)
+    xs_ref[...] = jnp.dot(dsp.T, x_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _expert_ffn_kernel(xs_ref, w1_ref, b1_ref, w2_ref, b2_ref, ys_ref):
+    """One (expert, h-tile) instance: partial FFN with accumulation.
+
+    The hidden axis h is tiled so each instance holds only (d × H_t) +
+    (H_t × d) weight blocks in VMEM — at paper scale (d=768, h=3072) the
+    untiled weights alone are ~19 MiB > the 16 MiB/core budget; tiled at
+    H_t=128 the footprint drops to ~1 MiB (see `vmem_estimate` and
+    EXPERIMENTS.md §Perf L1-1). GELU is elementwise over h, so per-tile
+    application is exact; the second matmul's h-contraction accumulates
+    across the (sequentially-iterated) h grid axis.
+    """
+    j = pl.program_id(1)
+    xs = xs_ref[0]                                   # (p, d)
+    h = jnp.dot(xs, w1_ref[0], preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h + b1_ref[0][None, :])          # (p, Ht)
+    y = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        ys_ref[0] = y + b2_ref[0][None, :]
+
+    @pl.when(j > 0)
+    def _acc():
+        ys_ref[0] += y
+
+
+def _combine_kernel(logits_ref, ys_ref, out_ref):
+    """One token tile: combine softmax over all slots, output mixing."""
+    logits = logits_ref[...]                         # (Mt, S)
+    z = logits - logits.max(axis=1, keepdims=True)
+    e = jnp.exp(z)
+    cmb = e / e.sum(axis=1, keepdims=True)           # (Mt, S)
+    out_ref[...] = jnp.dot(cmb, ys_ref[...],
+                           preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (single sequence; vmap for batches)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slot_tile"))
+def dispatch(xn, x, phi_flat, *, interpret=True, slot_tile=None):
+    """Routing logits + input slots for ONE sequence.
+
+    Args:
+      xn: (m, d) tokens as seen by the router (L2-normalized per §2.3).
+      x: (m, d) raw tokens, mixed into the slots.
+      phi_flat: (d, s) slot parameters, s = n*p (already normalized+scaled).
+
+    Returns:
+      xs: (s, d) input slots; logits: (m, s).
+    """
+    m, d = x.shape
+    s = phi_flat.shape[1]
+    st = slot_tile or pick_tile(s)
+    grid = (s // st,)
+    return pl.pallas_call(
+        _dispatch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, st), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((st, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, st), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, d), jnp.float32),
+            jax.ShapeDtypeStruct((m, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xn, x, phi_flat)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "h_tile"))
+def expert_ffn(xs, w1, b1, w2, b2, *, interpret=True, h_tile=None):
+    """Apply expert i's MLP to slot group i, h-tiled for VMEM.
+
+    Args:
+      xs: (n, p, d); w1: (n, d, h); b1: (n, h); w2: (n, h, d); b2: (n, d).
+    Returns:
+      ys: (n, p, d).
+    """
+    n, p, d = xs.shape
+    h = w1.shape[2]
+    ht = h_tile or pick_tile(h)
+    return pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=(n, h // ht),
+        in_specs=[
+            pl.BlockSpec((1, p, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d, ht), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, ht), lambda i, j: (i, j)),
+            pl.BlockSpec((1, ht, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, p, d), jnp.float32),
+        interpret=interpret,
+    )(xs, w1, b1, w2, b2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "token_tile"))
+def combine(logits, ys_flat, *, interpret=True, token_tile=None):
+    """Combine softmax + output mixing for ONE sequence.
+
+    Args:
+      logits: (m, s) routing logits from ``dispatch``.
+      ys_flat: (s, d) expert outputs.
+    Returns:
+      y: (m, d) output tokens.
+    """
+    m, s = logits.shape
+    d = ys_flat.shape[1]
+    mt = token_tile or pick_tile(m)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(m // mt,),
+        in_specs=[
+            pl.BlockSpec((mt, s), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(logits, ys_flat)
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+
+def soft_moe_layer(x, phi, scale, w1, b1, w2, b2, *,
+                   normalize=True, interpret=True):
+    """Pallas-backed Soft MoE layer for one sequence.
+
+    Semantically identical to ``ref.soft_moe_layer`` (soft/soft modes);
+    tested to 1e-5 in python/tests/test_kernels.py.
+    """
+    d, n, p = phi.shape
+    xn = ref.l2_normalize(x, axis=-1) if normalize else x
+    phi_n = scale * ref.l2_normalize(phi, axis=0) if normalize else phi
+    phi_flat = phi_n.reshape(d, n * p)
+    xs_flat, logits = dispatch(xn, x, phi_flat, interpret=interpret)
+    xs = xs_flat.reshape(n, p, d)
+    ys = expert_ffn(xs, w1, b1, w2, b2, interpret=interpret)
+    return combine(logits, ys.reshape(n * p, d), interpret=interpret)
+
+
+def soft_moe_layer_batched(x, phi, scale, w1, b1, w2, b2, *,
+                           normalize=True, interpret=True):
+    """vmap of ``soft_moe_layer`` over a leading batch axis."""
+    fn = functools.partial(soft_moe_layer, normalize=normalize,
+                           interpret=interpret)
+    return jax.vmap(fn, in_axes=(0, None, None, None, None, None, None))(
+        x, phi, scale, w1, b1, w2, b2)

@@ -1,0 +1,310 @@
+"""Layer 2: JAX ViT with pluggable MoE blocks (Soft / Tokens / Experts / Dense).
+
+This is the paper's model family, scaled for the CPU testbed (DESIGN.md §3).
+A ViT backbone where the MLP of the last ``len(moe_layers)`` blocks is
+replaced by an MoE layer, exactly as in Section 2.1 ("we typically replace
+the second half of MLP blocks").
+
+Everything is a pure function over an explicit parameter pytree so that
+``aot.py`` can lower init / forward / train_step to HLO text, and so the
+Rust native engine can replicate forward semantics 1:1 (parity-tested).
+
+Numerical contract with rust/src/nn (keep in sync!):
+  * LayerNorm eps = 1e-6
+  * GELU = tanh approximation (jax.nn.gelu approximate=True, the default)
+  * attention scale = 1/sqrt(head_dim)
+  * pooling = global average over tokens (no CLS token)
+  * Soft MoE l2-norm eps = 1e-6
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import soft_moe as pallas_kernels
+
+Params = Dict[str, Any]
+
+LN_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Scaled ViT + MoE configuration.
+
+    ``moe_type``: one of dense | soft | tokens_choice | experts_choice.
+    ``dispatch_mode``/``combine_mode`` implement the Table 3 ablations for
+    the soft variant ("soft" | "uniform" | "identity").
+    """
+    image_size: int = 32
+    patch_size: int = 4
+    channels: int = 3
+    dim: int = 128
+    depth: int = 6
+    heads: int = 4
+    mlp_dim: int = 512
+    num_classes: int = 32
+    moe_type: str = "soft"
+    moe_layers: Tuple[int, ...] = (3, 4, 5)     # second half by default
+    num_experts: int = 16
+    slots_per_expert: int = 4                   # soft: total slots = n*p
+    expert_hidden: int = 512                    # h of each expert MLP
+    top_k: int = 1                              # tokens_choice
+    capacity_factor: float = 1.0                # tokens/experts choice
+    bpr: bool = True                            # batch priority routing
+    dispatch_mode: str = "soft"
+    combine_mode: str = "soft"
+    normalize_router: bool = True               # §2.3 l2-norm fix
+
+    @property
+    def tokens(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def total_slots(self) -> int:
+        return self.num_experts * self.slots_per_expert
+
+    def validate(self) -> None:
+        assert self.dim % self.heads == 0
+        assert self.image_size % self.patch_size == 0
+        assert all(0 <= i < self.depth for i in self.moe_layers)
+        if self.moe_type == "soft" and "identity" in (
+                self.dispatch_mode, self.combine_mode):
+            assert self.tokens == self.total_slots, (
+                "identity routing requires tokens == slots")
+
+
+# Scaled model family mirroring the paper's S/16..H/14 ladder (DESIGN.md §3).
+FAMILY: Dict[str, Dict[str, int]] = {
+    # name:   dim heads depth mlp
+    "mu":  dict(dim=64,  heads=2, depth=4,  mlp_dim=256),
+    "ti":  dict(dim=96,  heads=3, depth=6,  mlp_dim=384),
+    "s":   dict(dim=128, heads=4, depth=6,  mlp_dim=512),
+    "m":   dict(dim=192, heads=6, depth=8,  mlp_dim=768),
+    "b":   dict(dim=256, heads=8, depth=10, mlp_dim=1024),
+}
+
+
+def preset(size: str, moe_type: str, **overrides) -> ModelConfig:
+    """Build a config from the scaled family; MoE in the second half."""
+    base = dict(FAMILY[size])
+    depth = base["depth"]
+    moe_layers = tuple(range(depth // 2, depth)) if moe_type != "dense" else ()
+    cfg = dict(
+        moe_type=moe_type,
+        moe_layers=moe_layers,
+        expert_hidden=base["mlp_dim"],
+        **base,
+    )
+    cfg.update(overrides)
+    return ModelConfig(**cfg)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, fan_in: int, shape) -> jax.Array:
+    """Lecun-normal style init (normal with std 1/sqrt(fan_in))."""
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Initialize the full parameter pytree (flat dict keyed by path)."""
+    cfg.validate()
+    p: Params = {}
+    d, h = cfg.dim, cfg.mlp_dim
+    patch_dim = cfg.patch_size * cfg.patch_size * cfg.channels
+    keys = iter(jax.random.split(key, 16 + 16 * cfg.depth))
+
+    p["patch_embed/w"] = _dense_init(next(keys), patch_dim, (patch_dim, d))
+    p["patch_embed/b"] = jnp.zeros((d,))
+    p["pos_embed"] = jax.random.normal(next(keys), (cfg.tokens, d)) * 0.02
+
+    for i in range(cfg.depth):
+        pre = f"block_{i}"
+        p[f"{pre}/ln1/s"] = jnp.ones((d,))
+        p[f"{pre}/ln1/b"] = jnp.zeros((d,))
+        for name in ("wq", "wk", "wv", "wo"):
+            p[f"{pre}/attn/{name}"] = _dense_init(next(keys), d, (d, d))
+            p[f"{pre}/attn/{name}_b"] = jnp.zeros((d,))
+        p[f"{pre}/ln2/s"] = jnp.ones((d,))
+        p[f"{pre}/ln2/b"] = jnp.zeros((d,))
+
+        if i in cfg.moe_layers and cfg.moe_type != "dense":
+            n, sp, eh = cfg.num_experts, cfg.slots_per_expert, cfg.expert_hidden
+            if cfg.moe_type == "soft":
+                p[f"{pre}/moe/phi"] = _dense_init(next(keys), d, (d, n, sp))
+                p[f"{pre}/moe/scale"] = jnp.ones(())
+            else:
+                p[f"{pre}/moe/wg"] = _dense_init(next(keys), d, (d, n))
+            p[f"{pre}/moe/w1"] = _dense_init(next(keys), d, (n, d, eh))
+            p[f"{pre}/moe/b1"] = jnp.zeros((n, eh))
+            p[f"{pre}/moe/w2"] = _dense_init(next(keys), eh, (n, eh, d))
+            p[f"{pre}/moe/b2"] = jnp.zeros((n, d))
+        else:
+            p[f"{pre}/mlp/w1"] = _dense_init(next(keys), d, (d, h))
+            p[f"{pre}/mlp/b1"] = jnp.zeros((h,))
+            p[f"{pre}/mlp/w2"] = _dense_init(next(keys), h, (h, d))
+            p[f"{pre}/mlp/b2"] = jnp.zeros((d,))
+
+    p["ln_f/s"] = jnp.ones((d,))
+    p["ln_f/b"] = jnp.zeros((d,))
+    p["head/w"] = _dense_init(next(keys), d, (d, cfg.num_classes))
+    p["head/b"] = jnp.zeros((cfg.num_classes,))
+    return p
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter ordering shared with the Rust manifest."""
+    return sorted(init(cfg, jax.random.PRNGKey(0)).keys())
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def layernorm(x, s, b):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * s + b
+
+
+def patchify(images: jax.Array, patch: int) -> jax.Array:
+    """(B, H, W, C) -> (B, tokens, patch*patch*C), row-major patches."""
+    b, hh, ww, c = images.shape
+    gh, gw = hh // patch, ww // patch
+    x = images.reshape(b, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch * patch * c)
+
+
+def attention(x, p, pre: str, heads: int):
+    b, m, d = x.shape
+    hd = d // heads
+
+    def proj(name):
+        return (x @ p[f"{pre}/attn/{name}"] + p[f"{pre}/attn/{name}_b"]) \
+            .reshape(b, m, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("wq"), proj("wk"), proj("wv")
+    att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / math.sqrt(hd), axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, m, d)
+    return out @ p[f"{pre}/attn/wo"] + p[f"{pre}/attn/wo_b"]
+
+
+def moe_block(x, p, pre: str, cfg: ModelConfig, use_pallas: bool,
+              collect: dict | None):
+    """Dispatch to the configured MoE/MLP implementation. x: (B, m, d)."""
+    if f"{pre}/mlp/w1" in p:
+        return ref.dense_mlp(x, p[f"{pre}/mlp/w1"], p[f"{pre}/mlp/b1"],
+                             p[f"{pre}/mlp/w2"], p[f"{pre}/mlp/b2"])
+    args = (p[f"{pre}/moe/w1"], p[f"{pre}/moe/b1"],
+            p[f"{pre}/moe/w2"], p[f"{pre}/moe/b2"])
+    if cfg.moe_type == "soft":
+        if use_pallas:
+            return pallas_kernels.soft_moe_layer_batched(
+                x, p[f"{pre}/moe/phi"], p[f"{pre}/moe/scale"], *args,
+                normalize=cfg.normalize_router)
+        out = ref.soft_moe_layer(
+            x, p[f"{pre}/moe/phi"], p[f"{pre}/moe/scale"], *args,
+            normalize=cfg.normalize_router,
+            dispatch_mode=cfg.dispatch_mode,
+            combine_mode=cfg.combine_mode,
+            return_weights=collect is not None)
+        if collect is not None:
+            out, dsp, cmb = out
+            collect[f"{pre}/dispatch"] = dsp
+            collect[f"{pre}/combine"] = cmb
+        return out
+    if cfg.moe_type == "tokens_choice":
+        return ref.tokens_choice_layer(
+            x, p[f"{pre}/moe/wg"], *args, k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, bpr=cfg.bpr)
+    if cfg.moe_type == "experts_choice":
+        return ref.experts_choice_layer(
+            x, p[f"{pre}/moe/wg"], *args,
+            capacity_factor=cfg.capacity_factor)
+    raise ValueError(cfg.moe_type)
+
+
+def forward(params: Params, images: jax.Array, cfg: ModelConfig, *,
+            use_pallas: bool = False, collect_weights: bool = False):
+    """Full model forward.
+
+    Args:
+      images: (B, H, W, C) float32 in [0, 1].
+    Returns:
+      logits (B, classes), features (B, d) pre-head GAP representation,
+      and (if collect_weights) a dict of per-layer dispatch/combine weights.
+    """
+    collect: dict | None = {} if collect_weights else None
+    x = patchify(images, cfg.patch_size)
+    x = x @ params["patch_embed/w"] + params["patch_embed/b"]
+    x = x + params["pos_embed"][None]
+    for i in range(cfg.depth):
+        pre = f"block_{i}"
+        x = x + attention(
+            layernorm(x, params[f"{pre}/ln1/s"], params[f"{pre}/ln1/b"]),
+            params, pre, cfg.heads)
+        x = x + moe_block(
+            layernorm(x, params[f"{pre}/ln2/s"], params[f"{pre}/ln2/b"]),
+            params, pre, cfg, use_pallas, collect)
+    x = layernorm(x, params["ln_f/s"], params["ln_f/b"])
+    feats = x.mean(axis=1)
+    logits = feats @ params["head/w"] + params["head/b"]
+    if collect_weights:
+        return logits, feats, collect
+    return logits, feats
+
+
+# ---------------------------------------------------------------------------
+# Loss / training step (Adam)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, images, labels, cfg: ModelConfig):
+    logits, _ = forward(params, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return nll, acc
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(params, mom, vel, step, images, labels, lr, cfg: ModelConfig):
+    """One fwd+bwd+Adam update. All state explicit; lr is an input so the
+    Rust coordinator owns the schedule (rsqrt + cooldown, train/schedule.rs).
+    """
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, images, labels, cfg)
+    step = step + 1
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+
+    def upd(p, g, m, v):
+        m = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = upd(params[k], grads[k], mom[k], vel[k])
+    return new_p, new_m, new_v, step, loss, acc
+
+
+def zeros_like_params(params: Params) -> Params:
+    return {k: jnp.zeros_like(v) for k, v in params.items()}

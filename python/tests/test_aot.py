@@ -1,0 +1,87 @@
+"""Manifest + artifact integrity: the Python->Rust interface contract."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_structure():
+    man = load()
+    assert man["format"] == 1
+    assert len(man["models"]) >= 4
+    for name, m in man["models"].items():
+        assert "config" in m and "params" in m and "entries" in m
+        assert "init" in m["entries"]
+        assert "train" in m["entries"]
+        assert any(e.startswith("fwd_b") for e in m["entries"])
+
+
+def test_all_artifact_files_exist_and_parse_as_hlo():
+    man = load()
+    for m in man["models"].values():
+        for entry in m["entries"].values():
+            path = os.path.join(ART, entry["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), path
+
+
+def test_param_order_is_sorted():
+    man = load()
+    for m in man["models"].values():
+        names = [p["name"] for p in m["params"]]
+        assert names == sorted(names)
+
+
+def test_train_entry_io_symmetry():
+    """train inputs = params+m+v+step+images+labels+lr;
+    outputs = params+m+v+step+loss+acc, with matching shapes."""
+    man = load()
+    for m in man["models"].values():
+        tr = m["entries"]["train"]
+        n = len(m["params"])
+        ins, outs = tr["inputs"], tr["outputs"]
+        assert len(ins) == 3 * n + 4
+        assert len(outs) == 3 * n + 3
+        for i in range(3 * n):
+            assert ins[i]["shape"] == outs[i]["shape"]
+        assert [o["kind"] for o in outs[-3:]] == ["step", "loss", "acc"]
+
+
+def test_fwd_entry_shapes_match_config():
+    man = load()
+    for m in man["models"].values():
+        cfg = m["config"]
+        for ename, e in m["entries"].items():
+            if not ename.startswith("fwd_b"):
+                continue
+            b = int(ename.rsplit("b", 1)[1])
+            img = [i for i in e["inputs"] if i["kind"] == "images"][0]
+            assert img["shape"] == [b, cfg["image_size"], cfg["image_size"],
+                                    cfg["channels"]]
+            logits = [o for o in e["outputs"] if o["kind"] == "logits"][0]
+            assert logits["shape"] == [b, cfg["num_classes"]]
+
+
+def test_perf_estimates_present_for_soft():
+    path = os.path.join(ART, "perf_estimates.json")
+    assert os.path.exists(path)
+    with open(path) as f:
+        perf = json.load(f)
+    for name, p in perf.items():
+        assert p["vmem_bytes"]["peak"] <= p["vmem_budget_bytes"], name
+        assert 0 < p["mxu_utilization"] <= 1

@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (m, d, n, p, h) and value scales; every kernel and
+the fused layer must match ref to tight fp32 tolerances. This is the core
+correctness signal for the AOT'd inference hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import soft_moe as K
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def make_layer(seed, m, d, n, p, h, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    return dict(
+        x=rnd(ks[0], (m, d), scale),
+        phi=rnd(ks[1], (d, n, p)),
+        w1=rnd(ks[2], (n, d, h), 1.0 / np.sqrt(d)),
+        b1=rnd(ks[3], (n, h), 0.1),
+        w2=rnd(ks[4], (n, h, d), 1.0 / np.sqrt(h)),
+        b2=rnd(ks[5], (n, d), 0.1),
+    )
+
+
+shapes = st.tuples(
+    st.integers(2, 24),            # m tokens
+    st.integers(2, 16),            # d model dim
+    st.integers(1, 6),             # n experts
+    st.integers(1, 4),             # p slots/expert
+    st.integers(1, 12),            # h expert hidden
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+def test_fused_layer_matches_ref(shape, seed, xscale):
+    m, d, n, p, h = shape
+    t = make_layer(seed, m, d, n, p, h, xscale)
+    y_ref = ref.soft_moe_layer(t["x"], t["phi"], 1.0, t["w1"], t["b1"],
+                               t["w2"], t["b2"])
+    y_pal = K.soft_moe_layer(t["x"], t["phi"], 1.0, t["w1"], t["b1"],
+                             t["w2"], t["b2"])
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_fused_layer_unnormalized(shape, seed):
+    m, d, n, p, h = shape
+    t = make_layer(seed, m, d, n, p, h)
+    y_ref = ref.soft_moe_layer(t["x"], t["phi"], 1.0, t["w1"], t["b1"],
+                               t["w2"], t["b2"], normalize=False)
+    y_pal = K.soft_moe_layer(t["x"], t["phi"], 1.0, t["w1"], t["b1"],
+                             t["w2"], t["b2"], normalize=False)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_batched_layer_matches_ref(shape, seed, batch):
+    m, d, n, p, h = shape
+    t = make_layer(seed, m, d, n, p, h)
+    xb = jnp.stack([t["x"] * (i + 1) for i in range(batch)])
+    y_ref = ref.soft_moe_layer(xb, t["phi"], 1.0, t["w1"], t["b1"],
+                               t["w2"], t["b2"])
+    y_pal = K.soft_moe_layer_batched(xb, t["phi"], 1.0, t["w1"], t["b1"],
+                                     t["w2"], t["b2"])
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_kernel_outputs():
+    """Dispatch kernel emits the exact softmax-over-tokens mixing weights."""
+    t = make_layer(0, m=12, d=8, n=3, p=2, h=4)
+    xn = ref.l2_normalize(t["x"], axis=-1)
+    phi_n = ref.l2_normalize(t["phi"], axis=0).reshape(8, 6)
+    xs, logits = K.dispatch(xn, t["x"], phi_n)
+    expected_logits = xn @ phi_n
+    np.testing.assert_allclose(logits, expected_logits, rtol=1e-5, atol=1e-6)
+    dsp = jax.nn.softmax(expected_logits, axis=0)
+    np.testing.assert_allclose(xs, dsp.T @ t["x"], rtol=1e-5, atol=1e-5)
+    # Dispatch weights are a convex combination over tokens.
+    np.testing.assert_allclose(dsp.sum(axis=0), np.ones(6), rtol=1e-5)
+
+
+def test_expert_ffn_kernel_matches_ref():
+    t = make_layer(1, m=8, d=8, n=4, p=3, h=16)
+    xs = jnp.reshape(rnd(jax.random.PRNGKey(7), (4 * 3, 8)), (4, 3, 8))
+    ys = K.expert_ffn(xs, t["w1"], t["b1"], t["w2"], t["b2"])
+    ys_ref = ref.expert_mlp(xs, t["w1"], t["b1"], t["w2"], t["b2"])
+    np.testing.assert_allclose(ys, ys_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_combine_kernel_is_convex_combination():
+    t = make_layer(2, m=10, d=8, n=2, p=3, h=4)
+    logits = rnd(jax.random.PRNGKey(3), (10, 6), 2.0)
+    ys = rnd(jax.random.PRNGKey(4), (6, 8))
+    y = K.combine(logits, ys)
+    cmb = jax.nn.softmax(logits, axis=1)
+    np.testing.assert_allclose(y, cmb @ ys, rtol=1e-5, atol=1e-5)
+    # Rows of C sum to one: each output token is a convex combination.
+    np.testing.assert_allclose(cmb.sum(axis=1), np.ones(10), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dim,target,ok", [
+    (256, 128, 128), (100, 128, 100), (192, 128, 96), (7, 4, 1),
+    (130, 128, 65),
+])
+def test_pick_tile(dim, target, ok):
+    t = K.pick_tile(dim, target)
+    assert t == ok
+    assert dim % t == 0 and t <= max(target, dim)
+
+
+def test_vmem_estimate_within_budget_default_config():
+    # The default AOT config (s-size) must fit the TPUv3 VMEM budget.
+    est = K.vmem_estimate(m=64, d=128, n=16, p=4, h=512)
+    assert est.peak < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    u = K.mxu_utilization_estimate(m=64, d=128, n=16, p=4, h=512)
+    assert 0.0 < u <= 1.0
+    # 128-aligned config should have higher estimated utilization.
+    u_aligned = K.mxu_utilization_estimate(m=128, d=128, n=128, p=1, h=512)
+    assert u_aligned >= u

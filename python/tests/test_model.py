@@ -1,0 +1,154 @@
+"""L2 model tests: shapes, determinism, gradient flow, short training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+KEY = jax.random.PRNGKey(0)
+VARIANTS = ["dense", "soft", "tokens_choice", "experts_choice"]
+
+
+def tiny(variant, **kw):
+    base = dict(num_experts=4, slots_per_expert=4, num_classes=8)
+    base.update(kw)
+    return M.preset("mu", variant, **base)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_forward_shapes(variant):
+    cfg = tiny(variant)
+    params = M.init(cfg, KEY)
+    imgs = jax.random.uniform(KEY, (3, 32, 32, 3))
+    logits, feats = M.forward(params, imgs, cfg)
+    assert logits.shape == (3, cfg.num_classes)
+    assert feats.shape == (3, cfg.dim)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_forward_deterministic(variant):
+    cfg = tiny(variant)
+    params = M.init(cfg, KEY)
+    imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
+    l1, _ = M.forward(params, imgs, cfg)
+    l2, _ = M.forward(params, imgs, cfg)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_param_names_sorted_and_stable():
+    cfg = tiny("soft")
+    names = M.param_names(cfg)
+    assert names == sorted(names)
+    p = M.init(cfg, KEY)
+    assert set(names) == set(p.keys())
+
+
+def test_soft_param_count_exceeds_dense_same_flops():
+    """The MoE model has many more parameters at matched token/slot count —
+    the paper's core scaling property."""
+    def count(cfg):
+        return sum(np.prod(v.shape) for v in M.init(cfg, KEY).values())
+    dense = count(tiny("dense"))
+    soft = count(tiny("soft", num_experts=16, slots_per_expert=1))
+    assert soft > 2 * dense
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_gradients_flow_everywhere(variant):
+    cfg = tiny(variant)
+    params = M.init(cfg, KEY)
+    imgs = jax.random.uniform(KEY, (4, 32, 32, 3))
+    labels = jnp.arange(4, dtype=jnp.int32)
+    (_, _), grads = jax.value_and_grad(M.loss_fn, has_aux=True)(
+        params, imgs, labels, cfg)
+    zero_grads = [k for k, g in grads.items()
+                  if float(jnp.abs(g).sum()) == 0.0]
+    # Soft MoE: every routing parameter receives gradient from every token
+    # (paper §1); sparse routers may have cold experts in a tiny batch, but
+    # the router weights themselves must always be updated.
+    assert not [k for k in zero_grads if "phi" in k or "wg" in k], zero_grads
+    if variant in ("dense", "soft"):
+        assert not zero_grads, zero_grads
+
+
+@pytest.mark.parametrize("variant", ["soft", "dense"])
+def test_short_training_reduces_loss(variant):
+    cfg = tiny(variant)
+    params = M.init(cfg, KEY)
+    mom, vel = M.zeros_like_params(params), M.zeros_like_params(params)
+    step = jnp.int32(0)
+    # A tiny memorization task: 8 fixed images, 8 labels.
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (8, 32, 32, 3))
+    labels = jnp.arange(8, dtype=jnp.int32)
+    jit_step = jax.jit(lambda p, m, v, s: M.train_step(
+        p, m, v, s, imgs, labels, 3e-3, cfg))
+    losses = []
+    for _ in range(30):
+        params, mom, vel, step, loss, acc = jit_step(params, mom, vel, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_pallas_forward_matches_ref_forward():
+    cfg = tiny("soft")
+    params = M.init(cfg, KEY)
+    imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
+    l_ref, f_ref = M.forward(params, imgs, cfg, use_pallas=False)
+    l_pal, f_pal = M.forward(params, imgs, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l_pal), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_collect_weights_shapes():
+    cfg = tiny("soft")
+    params = M.init(cfg, KEY)
+    imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
+    _, _, w = M.forward(params, imgs, cfg, collect_weights=True)
+    assert sorted(w) == sorted(
+        [f"block_{i}/{t}" for i in cfg.moe_layers
+         for t in ("dispatch", "combine")])
+    for v in w.values():
+        assert v.shape == (2, cfg.tokens, cfg.num_experts,
+                           cfg.slots_per_expert)
+        # Convexity, batched.
+        s = np.asarray(v).reshape(2, cfg.tokens, -1)
+        ok_d = np.allclose(np.asarray(v).sum(axis=1), 1.0, rtol=1e-4)
+        ok_c = np.allclose(s.sum(axis=-1), 1.0, rtol=1e-4)
+        assert ok_d or ok_c
+
+
+def test_ablation_modes_run():
+    for dm, cm in [("soft", "uniform"), ("uniform", "soft"),
+                   ("uniform", "uniform")]:
+        cfg = tiny("soft", dispatch_mode=dm, combine_mode=cm)
+        params = M.init(cfg, KEY)
+        imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
+        logits, _ = M.forward(params, imgs, cfg)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_identity_ablation_requires_matching_slots():
+    cfg = tiny("soft", dispatch_mode="identity", combine_mode="identity",
+               num_experts=16, slots_per_expert=4)  # 64 slots == 64 tokens
+    params = M.init(cfg, KEY)
+    imgs = jax.random.uniform(KEY, (2, 32, 32, 3))
+    logits, _ = M.forward(params, imgs, cfg)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_patchify_row_major_contract():
+    """The Rust data pipeline must produce patches in this exact order."""
+    img = jnp.arange(32 * 32 * 3, dtype=jnp.float32).reshape(1, 32, 32, 3)
+    x = M.patchify(img, 4)
+    assert x.shape == (1, 64, 48)
+    # First patch = rows 0..4, cols 0..4.
+    manual = np.asarray(img)[0, :4, :4, :].reshape(-1)
+    np.testing.assert_array_equal(np.asarray(x[0, 0]), manual)
+    # Second patch = rows 0..4, cols 4..8 (row-major over the patch grid).
+    manual2 = np.asarray(img)[0, :4, 4:8, :].reshape(-1)
+    np.testing.assert_array_equal(np.asarray(x[0, 1]), manual2)

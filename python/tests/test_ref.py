@@ -1,0 +1,216 @@
+"""Properties of the reference Soft MoE layer and the sparse baselines.
+
+These encode the paper's claims as executable invariants:
+  * dispatch/combine are convex combinations (no dropping by construction),
+  * Soft MoE is per-sequence deterministic (batch composition irrelevant),
+  * Tokens Choice drops tokens when capacity is tight; BPR drops the
+    lowest-scoring ones; Experts Choice balances load perfectly but drops,
+  * the Table 3 ablations reduce to the expected special cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def make(seed, m=12, d=16, n=4, p=2, h=8):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    r = lambda i, s, sc=1.0: jax.random.normal(ks[i], s, jnp.float32) * sc
+    return dict(x=r(0, (m, d)), phi=r(1, (d, n, p)),
+                w1=r(2, (n, d, h), 0.25), b1=r(3, (n, h), 0.1),
+                w2=r(4, (n, h, d), 0.25), b2=r(5, (n, d), 0.1),
+                wg=r(6, (d, n)))
+
+
+# ---------------------------------------------------------------------------
+# Soft MoE invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 20), st.integers(1, 5),
+       st.integers(1, 3))
+def test_dispatch_combine_are_convex(seed, m, n, p):
+    d = 8
+    t = make(seed, m=m, d=d, n=n, p=p)
+    logits = ref.soft_moe_logits(t["x"], t["phi"][:d, :n, :p], 1.0)
+    dsp = ref.dispatch_weights(logits)
+    cmb = ref.combine_weights(logits)
+    # D columns (per slot) sum to 1 over tokens; C rows sum to 1 over slots.
+    np.testing.assert_allclose(dsp.sum(axis=0), np.ones((n, p)), rtol=1e-5)
+    np.testing.assert_allclose(cmb.sum(axis=(1, 2)), np.ones(m), rtol=1e-5)
+    assert (dsp > 0).all() and (cmb > 0).all()   # nothing is ever dropped
+
+
+def test_soft_moe_per_sequence_deterministic():
+    """Paper §2.2: no batch effects — a sequence's output is identical
+    regardless of what else is in the batch."""
+    t = make(0)
+    x1 = t["x"][None]
+    other = jax.random.normal(jax.random.PRNGKey(99), x1.shape)
+    batch = jnp.concatenate([x1, other], axis=0)
+    args = (t["phi"], 1.0, t["w1"], t["b1"], t["w2"], t["b2"])
+    y_alone = ref.soft_moe_layer(x1, *args)
+    y_batch = ref.soft_moe_layer(batch, *args)
+    np.testing.assert_allclose(y_alone[0], y_batch[0], rtol=1e-6, atol=1e-6)
+
+
+def test_soft_moe_fully_differentiable():
+    """Gradients flow to every parameter, incl. phi (unlike hard routers)."""
+    t = make(1)
+
+    def loss(phi):
+        y = ref.soft_moe_layer(t["x"], phi, 1.0, t["w1"], t["b1"],
+                               t["w2"], t["b2"])
+        return (y ** 2).sum()
+
+    g = jax.grad(loss)(t["phi"])
+    assert float(jnp.abs(g).sum()) > 0
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_identity_routing_matches_manual():
+    """Identity ablation: token i is processed by expert floor(i/p)."""
+    m, d, n, p, h = 8, 6, 4, 2, 5
+    t = make(2, m=m, d=d, n=n, p=p, h=h)
+    y = ref.soft_moe_layer(t["x"], t["phi"], 1.0, t["w1"], t["b1"],
+                           t["w2"], t["b2"],
+                           dispatch_mode="identity", combine_mode="identity")
+    xs = t["x"].reshape(n, p, d)
+    ys = ref.expert_mlp(xs, t["w1"], t["b1"], t["w2"], t["b2"])
+    np.testing.assert_allclose(y, ys.reshape(m, d), rtol=1e-5, atol=1e-5)
+
+
+def test_uniform_routing_all_tokens_equal_contribution():
+    t = make(3)
+    y, dsp, cmb = ref.soft_moe_layer(
+        t["x"], t["phi"], 1.0, t["w1"], t["b1"], t["w2"], t["b2"],
+        dispatch_mode="uniform", combine_mode="uniform",
+        return_weights=True)
+    m = t["x"].shape[0]
+    np.testing.assert_allclose(dsp, np.full(dsp.shape, 1 / m), rtol=1e-6)
+    # All output tokens are identical under uniform combine.
+    np.testing.assert_allclose(y, jnp.broadcast_to(y[0], y.shape),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_l2_normalize():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 7))
+    xn = ref.l2_normalize(x, axis=-1)
+    np.testing.assert_allclose(jnp.linalg.norm(xn, axis=-1), np.ones(5),
+                               rtol=1e-4)
+
+
+def test_normalized_logits_bounded():
+    """§2.3: with l2-norm, |logits| <= scale, independent of d — the fix for
+    the Appendix E collapse."""
+    for d in (8, 64, 512):
+        t = make(4, d=d)
+        logits = ref.soft_moe_logits(t["x"] * 100.0, t["phi"], 2.0,
+                                     normalize=True)
+        assert float(jnp.abs(logits).max()) <= 2.0 + 1e-4
+        raw = ref.soft_moe_logits(t["x"] * 100.0, t["phi"], 2.0,
+                                  normalize=False)
+        assert float(jnp.abs(raw).max()) > 2.0
+
+
+# ---------------------------------------------------------------------------
+# Sparse baselines
+# ---------------------------------------------------------------------------
+
+def test_tokens_choice_no_drop_with_slack():
+    t = make(5)
+    _, st_ = ref.tokens_choice_layer(t["x"], t["wg"], t["w1"], t["b1"],
+                                     t["w2"], t["b2"], k=1,
+                                     capacity_factor=4.0, return_stats=True)
+    assert float(st_["dropped_frac"]) == 0.0
+
+
+def test_tokens_choice_tight_capacity_drops():
+    t = make(6)
+    _, st_ = ref.tokens_choice_layer(t["x"], t["wg"], t["w1"], t["b1"],
+                                     t["w2"], t["b2"], k=1,
+                                     capacity_factor=0.25, return_stats=True)
+    assert float(st_["dropped_frac"]) > 0.0
+
+
+def test_tokens_choice_capacity_respected():
+    m, n, k, c = 12, 4, 1, 1.0
+    t = make(7, m=m, n=n)
+    _, st_ = ref.tokens_choice_layer(t["x"], t["wg"], t["w1"], t["b1"],
+                                     t["w2"], t["b2"], k=k,
+                                     capacity_factor=c, return_stats=True)
+    cap = int(np.ceil(c * m * k / n))
+    assert (np.asarray(st_["expert_load"]) <= cap + 1e-6).all()
+
+
+def test_bpr_keeps_high_priority_tokens():
+    """With BPR, the tokens that survive a tight capacity are exactly the
+    ones with the highest max router probability."""
+    m, n = 16, 4
+    t = make(8, m=m, n=n)
+    probs = jax.nn.softmax(t["x"] @ t["wg"], axis=-1)
+    maxp = np.asarray(probs.max(-1))
+    y_bpr = ref.tokens_choice_layer(t["x"], t["wg"], t["w1"], t["b1"],
+                                    t["w2"], t["b2"], k=1,
+                                    capacity_factor=0.25, bpr=True)
+    nonzero = np.abs(np.asarray(y_bpr)).sum(-1) > 0
+    kept_scores = maxp[nonzero]
+    dropped_scores = maxp[~nonzero]
+    if len(kept_scores) and len(dropped_scores):
+        # Every kept token's expert choice beat the dropped ones that wanted
+        # the same expert; globally, the min kept max-prob should not be far
+        # below the max dropped max-prob. Check the strong per-expert form.
+        top1 = np.asarray(probs.argmax(-1))
+        for e in range(n):
+            ke = kept_scores if False else maxp[nonzero & (top1 == e)]
+            de = maxp[(~nonzero) & (top1 == e)]
+            if len(ke) and len(de):
+                assert ke.min() >= de.max() - 1e-6
+
+
+def test_experts_choice_perfect_balance():
+    """EC by construction: every expert processes exactly cap tokens."""
+    m, n = 16, 4
+    t = make(9, m=m, n=n)
+    _, st_ = ref.experts_choice_layer(t["x"], t["wg"], t["w1"], t["b1"],
+                                      t["w2"], t["b2"], capacity_factor=1.0,
+                                      return_stats=True)
+    overlap = np.asarray(st_["tokens_per_expert_overlap"])
+    assert overlap.sum() == m  # total processing slots == c*m
+
+
+def test_experts_choice_batch_effect():
+    """Unlike Soft MoE, EC routing depends on the rest of the group when
+    group > 1 sequence — here each sequence is a group so outputs match;
+    this documents the per-sequence grouping contract of the ref impl."""
+    t = make(10)
+    x2 = jnp.stack([t["x"], t["x"] * 2.0])
+    args = (t["wg"], t["w1"], t["b1"], t["w2"], t["b2"])
+    y2 = ref.experts_choice_layer(x2, *args)
+    y0 = ref.experts_choice_layer(t["x"], *args)
+    np.testing.assert_allclose(y2[0], y0, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(4, 20), st.integers(2, 6),
+       st.booleans())
+def test_tokens_choice_drop_monotone_in_capacity(seed, m, n, bpr):
+    t = make(seed, m=m, n=n)
+    drops = []
+    for c in (0.25, 1.0, 4.0):
+        _, st_ = ref.tokens_choice_layer(
+            t["x"], t["wg"], t["w1"], t["b1"], t["w2"], t["b2"],
+            k=1, capacity_factor=c, bpr=bpr, return_stats=True)
+        drops.append(float(st_["dropped_frac"]))
+    assert drops[0] >= drops[1] >= drops[2]
+
+
+def test_strict_rank():
+    keys = jnp.array([0.3, 0.9, 0.1, 0.9])
+    r = np.asarray(ref._strict_rank(keys))
+    # descending, ties by index: 0.9(idx1)->0, 0.9(idx3)->1, 0.3->2, 0.1->3
+    assert list(r) == [2, 0, 3, 1]

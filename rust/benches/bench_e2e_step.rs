@@ -1,0 +1,58 @@
+//! End-to-end train-step bench through the AOT PJRT path — the production
+//! training loop's inner cost (Table 1/2 "train days" analogue). Skips
+//! gracefully when artifacts are missing.
+
+use std::path::PathBuf;
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::config::Manifest;
+use softmoe::data::{DatasetConfig, SynthShapes};
+use softmoe::runtime::pjrt::PjrtRuntime;
+use softmoe::runtime::{Backend, TrainState};
+
+fn main() {
+    let dir = std::env::var("SOFTMOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP bench_e2e_step: {e}");
+            return;
+        }
+    };
+    let mut bench = Bench::from_env();
+
+    println!("== PJRT train step (fwd+bwd+Adam via AOT HLO) ==");
+    for (name, mm) in &manifest.models {
+        let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+        let params = rt.init(0).unwrap();
+        let mut state = TrainState::fresh(params);
+        let entry = mm.entry("train").unwrap();
+        let batch = entry
+            .inputs
+            .iter()
+            .find(|i| i.kind == "images")
+            .unwrap()
+            .shape[0];
+        let data = SynthShapes::new(DatasetConfig {
+            image_size: mm.config.image_size,
+            num_classes: mm.config.num_classes,
+            ..Default::default()
+        });
+        let (images, labels) = data.batch(0, batch);
+        let t = bench.run(&format!("pjrt_train_step/{name}/b{batch}"), || {
+            black_box(
+                rt.train_step(&mut state, &images, &labels, 1e-3).unwrap(),
+            );
+        });
+        println!(
+            "    -> {:.2} ms/step, {:.1} img/s, params {}",
+            t * 1e3,
+            batch as f64 / t,
+            softmoe::util::human_count(state.param_count() as f64)
+        );
+    }
+    let _ = bench.save_csv(std::path::Path::new(
+        "reports/bench_e2e_step.csv"));
+}

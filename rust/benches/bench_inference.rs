@@ -1,0 +1,124 @@
+//! Fig. 5 / Table 1 machinery: inference ms/img for the model family,
+//! through BOTH backends where available — native engine always, PJRT
+//! (AOT HLO) when `artifacts/` exists — plus the serving-path overhead
+//! (batcher vs bare forward).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::config::{Manifest, ModelConfig, MoeType};
+use softmoe::metrics::Registry;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::pjrt::PjrtRuntime;
+use softmoe::runtime::Backend;
+use softmoe::serve::{BatchPolicy, Server};
+use softmoe::tensor::Tensor;
+use softmoe::util::Rng;
+
+fn rand_images(b: usize, size: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::from_vec(
+        &[b, size, size, 3],
+        (0..b * size * size * 3).map(|_| rng.uniform()).collect(),
+    )
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let quick = std::env::var("SOFTMOE_BENCH_FAST").is_ok();
+
+    // --- Native engine: the scaled family, batch 8.
+    println!("== native inference (batch 8) ==");
+    let sizes: &[&str] = if quick { &["mu"] } else { &["mu", "ti", "s"] };
+    for size in sizes {
+        for moe in [MoeType::Dense, MoeType::Soft] {
+            let cfg = ModelConfig::preset(size, moe).unwrap();
+            let mut be = NativeRuntime::new(cfg.clone());
+            let params = be.init(0).unwrap();
+            let images = rand_images(8, cfg.image_size, 3);
+            let t = bench.run(&format!("native/{}_{size}/b8", moe.name()),
+                              || {
+                black_box(be.forward(&params, &images).unwrap());
+            });
+            println!("    -> {:.3} ms/img", t * 1e3 / 8.0);
+        }
+    }
+
+    // --- PJRT: every model in the manifest at each compiled batch size.
+    let dir = std::env::var("SOFTMOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    match Manifest::load(&dir) {
+        Err(e) => println!("\n(PJRT benches skipped: {e})"),
+        Ok(manifest) => {
+            println!("\n== PJRT (AOT HLO) inference ==");
+            for (name, mm) in &manifest.models {
+                let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+                let params = rt.init(0).unwrap();
+                let batches = rt.fwd_batches();
+                let bs: Vec<usize> = if quick {
+                    batches.last().cloned().into_iter().collect()
+                } else {
+                    batches
+                };
+                for b in bs {
+                    let images = rand_images(b, mm.config.image_size, 4);
+                    let t = bench.run(&format!("pjrt/{name}/b{b}"), || {
+                        black_box(rt.forward(&params, &images).unwrap());
+                    });
+                    println!("    -> {:.3} ms/img", t * 1e3 / b as f64);
+                }
+                // Pallas-kernel forward (soft models only).
+                if mm.entries.keys().any(|k| k.starts_with("fwd_pallas")) {
+                    let b = *mm.fwd_batches().last().unwrap();
+                    let images = rand_images(b, mm.config.image_size, 5);
+                    bench.run(&format!("pjrt/{name}/pallas_b{b}"), || {
+                        black_box(rt.forward_pallas(&params, &images).unwrap());
+                    });
+                }
+            }
+        }
+    }
+
+    // --- Serving-path overhead: batcher + channels vs bare forward.
+    println!("\n== serving path overhead (native soft mu) ==");
+    let cfg = ModelConfig::preset("mu", MoeType::Soft).unwrap();
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(0).unwrap();
+    let n = if quick { 16 } else { 64 };
+    let images = rand_images(1, cfg.image_size, 6);
+    let bare = bench.run("bare_forward/b1", || {
+        black_box(be.forward(&params, &images).unwrap());
+    });
+    let t0 = std::time::Instant::now();
+    {
+        let (server, client) = Server::new(
+            BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::from_micros(0),
+                compiled_sizes: vec![1],
+            },
+            &[cfg.image_size, cfg.image_size, cfg.channels],
+        );
+        let metrics = Registry::new();
+        let img = images.data.clone();
+        let producer = std::thread::spawn(move || {
+            let rxs: Vec<_> =
+                (0..n).map(|_| client.submit(img.clone())).collect();
+            drop(client);
+            rxs.into_iter().map(|rx| rx.recv().unwrap()).count()
+        });
+        server.run(&mut be, &params, &metrics, Some(n)).unwrap();
+        producer.join().unwrap();
+    }
+    let served = t0.elapsed().as_secs_f64() / n as f64;
+    println!(
+        "bare {:.3} ms vs served {:.3} ms  -> batcher overhead {:.1}%",
+        bare * 1e3,
+        served * 1e3,
+        (served / bare - 1.0) * 100.0
+    );
+    let _ = bench.save_csv(std::path::Path::new(
+        "reports/bench_inference.csv"));
+}

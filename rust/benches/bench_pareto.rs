@@ -1,0 +1,57 @@
+//! Fig. 3 / Table 9 machinery: training step cost across the scaled model
+//! family and routers (the quality axis comes from `softmoe experiment
+//! pareto`; this bench regenerates the COST axis with high fidelity).
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::data::{DatasetConfig, SynthShapes};
+use softmoe::flops;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::tensor::Tensor;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let quick = std::env::var("SOFTMOE_BENCH_FAST").is_ok();
+    let sizes: &[&str] = if quick { &["mu"] } else { &["mu", "ti"] };
+    let batch = if quick { 4 } else { 8 };
+
+    println!("== train step time + analytic cost per (size, router) ==");
+    println!("{:<22} {:>12} {:>16} {:>14}", "config", "params",
+             "train GF/img", "meas ms/step");
+    for size in sizes {
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                    MoeType::ExpertsChoice] {
+            let mut cfg = ModelConfig::preset(size, moe).unwrap();
+            cfg.image_size = 16; // experiment scale (16 tokens)
+            cfg.num_classes = 16;
+            cfg.num_experts = 4;
+            cfg.slots_per_expert = cfg.tokens() / 4;
+            let data = SynthShapes::new(DatasetConfig {
+                image_size: 16,
+                num_classes: 16,
+                ..Default::default()
+            });
+            let mut be = NativeRuntime::new(cfg.clone());
+            let params = be.init(0).unwrap();
+            let mut state = TrainState::fresh(params);
+            let (images, labels) = data.batch(0, batch);
+            let images: Tensor = images;
+            let name = format!("{size}/{}", moe.name());
+            let t = bench.run(&format!("train_step/{name}/b{batch}"), || {
+                black_box(
+                    be.train_step(&mut state, &images, &labels, 1e-3)
+                        .unwrap(),
+                );
+            });
+            println!(
+                "{:<22} {:>12.0} {:>16.4} {:>14.2}",
+                name,
+                flops::param_count(&cfg),
+                flops::train_flops(&cfg) / 1e9,
+                t * 1e3
+            );
+        }
+    }
+    let _ = bench.save_csv(std::path::Path::new("reports/bench_pareto.csv"));
+}

@@ -1,0 +1,56 @@
+//! Router micro-benches + dropping statistics (Appendix B machinery):
+//! routing decision cost in isolation (no expert compute), and the
+//! drop-rate table for TC/EC across expert counts and capacity factors.
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::moe::{ExpertsChoice, SoftMoe, TokensChoice};
+use softmoe::tensor::Tensor;
+use softmoe::util::Rng;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let quick = std::env::var("SOFTMOE_BENCH_FAST").is_ok();
+    let m = 256;
+    let d = 64;
+    let counts: &[usize] = if quick { &[16, 128] } else { &[16, 64, 256, 1024] };
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+
+    println!("== routing decision cost (no expert compute) ==");
+    for &n in counts {
+        let soft = SoftMoe::new(d, n, (m / n).max(1), 8, &mut rng.fold_in(n as u64));
+        bench.run(&format!("soft_logits+softmax/experts={n}"), || {
+            black_box(soft.logits(&x));
+        });
+        let tc = TokensChoice::new(d, n, 8, &mut rng.fold_in(n as u64 + 9));
+        bench.run(&format!("tokens_choice_route/experts={n}"), || {
+            black_box(tc.route(&x));
+        });
+        let ec = ExpertsChoice::new(d, n, 8, &mut rng.fold_in(n as u64 + 17));
+        bench.run(&format!("experts_choice_route/experts={n}"), || {
+            black_box(ec.route(&x));
+        });
+    }
+
+    println!("\n== dropping rates (Appendix B shape) ==");
+    println!("{:<10} {:>8} {:>10} {:>8} {:>14}", "router", "experts",
+             "capacity", "bpr", "dropped_frac");
+    for &n in counts {
+        for (cap, bpr) in [(1.0f32, true), (1.0, false), (1.125, true)] {
+            let mut tc = TokensChoice::new(d, n, 8, &mut rng.fold_in(n as u64));
+            tc.capacity_factor = cap;
+            tc.bpr = bpr;
+            let (_, st) = tc.forward_with_stats(&x);
+            println!("{:<10} {:>8} {:>10.3} {:>8} {:>14.4}",
+                     "tc", n, cap, bpr, st.dropped_frac);
+        }
+        for cap in [1.0f32, 1.125] {
+            let mut ec = ExpertsChoice::new(d, n, 8, &mut rng.fold_in(n as u64));
+            ec.capacity_factor = cap;
+            let (_, st) = ec.forward_with_stats(&x);
+            println!("{:<10} {:>8} {:>10.3} {:>8} {:>14.4}",
+                     "ec", n, cap, "-", st.dropped_frac);
+        }
+    }
+    let _ = bench.save_csv(std::path::Path::new("reports/bench_routers.csv"));
+}

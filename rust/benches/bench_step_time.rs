@@ -1,0 +1,66 @@
+//! Fig. 6-right / Fig. 20-21-26 step time: MoE layer forward time vs
+//! expert count at FIXED total slots / buffer.
+//!
+//! Paper shape to regenerate: Soft MoE stays flat as experts grow (cost is
+//! set by slot count, no sort); Tokens/Experts Choice grow (per-expert
+//! top-k/sort) — TC reaches ~3.9x at 4096 experts in the paper.
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::moe::{ExpertsChoice, SoftMoe, TokensChoice};
+use softmoe::tensor::Tensor;
+use softmoe::util::Rng;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let quick = std::env::var("SOFTMOE_BENCH_FAST").is_ok();
+    let m = 256; // tokens per group (paper-like magnitude)
+    let d = 64;
+    let h = 128;
+    let counts: &[usize] = if quick {
+        &[16, 256]
+    } else {
+        &[16, 64, 256, 1024, 4096]
+    };
+    let mut rng = Rng::new(0);
+    let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+
+    println!("== MoE layer forward step time vs expert count (fixed slots) ==");
+    let mut soft_base = None;
+    let mut rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &n in counts {
+        // "Fixed total slots": soft only defined while experts <= slots
+        // (each expert needs >= 1 slot, paper §2.2); beyond that we keep
+        // p=1 so the soft cost line shows the slot-count scaling honestly.
+        let p = (m / n).max(1);
+        let n_soft = n.min(m);
+        let soft = SoftMoe::new(d, n_soft, (m / n_soft).max(1), h,
+                                &mut rng.fold_in(n as u64));
+        let t_soft = bench.run(&format!("soft/experts={n_soft}"), || {
+            black_box(soft.forward(&x));
+        });
+        let _ = p;
+        soft_base.get_or_insert(t_soft);
+        let ec = ExpertsChoice::new(d, n, h, &mut rng.fold_in(n as u64 + 1));
+        let t_ec = bench.run(&format!("experts_choice/experts={n}"), || {
+            black_box(ec.forward(&x));
+        });
+        let tc = TokensChoice::new(d, n, h, &mut rng.fold_in(n as u64 + 2));
+        let t_tc = bench.run(&format!("tokens_choice/experts={n}"), || {
+            black_box(tc.forward(&x));
+        });
+        rows.push((n, t_soft, t_ec, t_tc));
+    }
+
+    println!("\n== normalized to soft @ {} experts (paper Fig. 6 right) ==",
+             counts[0]);
+    let base = soft_base.unwrap();
+    for (n, s, e, t) in &rows {
+        println!(
+            "experts={n:<6} soft {:>6.2}x   experts_choice {:>6.2}x   \
+             tokens_choice {:>6.2}x",
+            s / base, e / base, t / base
+        );
+    }
+    let _ = bench.save_csv(std::path::Path::new(
+        "reports/bench_step_time.csv"));
+}

@@ -1,0 +1,168 @@
+//! From-scratch micro/bench harness (criterion is not available offline).
+//!
+//! Used by `rust/benches/*.rs` (declared `harness = false`) and by the
+//! experiment drivers to measure step times. Protocol per case: warmup
+//! iterations, then timed iterations; reports mean/median/p95 and a
+//! best-effort ns/iter. `black_box` prevents the optimizer from deleting
+//! the measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+use crate::util::percentile;
+
+/// Re-export of `std::hint::black_box` under the familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub median_secs: f64,
+    pub p95_secs: f64,
+    pub min_secs: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter (median {:.3}, p95 {:.3}, min {:.3}; n={})",
+            self.name,
+            self.mean_secs * 1e3,
+            self.median_secs * 1e3,
+            self.p95_secs * 1e3,
+            self.min_secs * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters, results: Vec::new() }
+    }
+
+    /// Quick-mode scaling for CI: `SOFTMOE_BENCH_FAST=1` cuts iterations.
+    pub fn from_env() -> Self {
+        if std::env::var("SOFTMOE_BENCH_FAST").is_ok() {
+            Self::new(1, 3)
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, recording a measurement under `name`. Returns mean secs.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = crate::util::mean(&samples);
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_secs: mean,
+            median_secs: percentile(&samples, 0.5),
+            p95_secs: percentile(&samples, 0.95),
+            min_secs: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        mean
+    }
+
+    /// Emit all results as CSV (step-time figures consume this).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("name,mean_ms,median_ms,p95_ms,min_ms,iters\n");
+        for m in &self.results {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{}\n",
+                m.name,
+                m.mean_secs * 1e3,
+                m.median_secs * 1e3,
+                m.p95_secs * 1e3,
+                m.min_secs * 1e3,
+                m.iters
+            ));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_measurements() {
+        let mut b = Bench::new(1, 5);
+        let mut counter = 0u64;
+        b.run("noop-ish", || {
+            counter = black_box(counter + 1);
+        });
+        assert_eq!(b.results.len(), 1);
+        let m = &b.results[0];
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_secs >= 0.0);
+        assert!(m.min_secs <= m.median_secs);
+        assert!(m.median_secs <= m.p95_secs + 1e-12);
+        assert_eq!(counter, 6); // 1 warmup + 5 iters
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut b = Bench::new(0, 2);
+        b.run("case_a", || {});
+        let csv = b.to_csv();
+        assert!(csv.starts_with("name,mean_ms"));
+        assert!(csv.contains("case_a"));
+    }
+
+    #[test]
+    fn timing_orders_workloads() {
+        let mut b = Bench::new(1, 5);
+        let fast = b.run("fast", || {
+            let mut s = 0u64;
+            for i in 0..1_000u64 {
+                s = black_box(s + i);
+            }
+        });
+        let slow = b.run("slow", || {
+            let mut s = 0u64;
+            for i in 0..2_000_000u64 {
+                s = black_box(s + i);
+            }
+        });
+        assert!(slow > fast);
+    }
+}

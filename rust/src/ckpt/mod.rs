@@ -1,0 +1,171 @@
+//! Checkpointing: ParamStore / TrainState ⇄ disk.
+//!
+//! Format: `<name>.json` header (shapes, order, dtype, counts) +
+//! `<name>.bin` little-endian f32 payload in header order. Backend-
+//! agnostic: a checkpoint written from a PJRT training run loads into the
+//! native engine and vice versa (used by the parity and inspection
+//! pipelines).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::nn::ParamStore;
+use crate::runtime::TrainState;
+use crate::tensor::Tensor;
+
+const MAGIC: &str = "softmoe-ckpt-v1";
+
+/// Save a ParamStore under `dir/name.{json,bin}`.
+pub fn save_params(dir: &Path, name: &str, params: &ParamStore) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let mut header = Value::obj();
+    header.set("magic", Value::from(MAGIC));
+    let mut order = Vec::new();
+    let mut bin: Vec<u8> = Vec::new();
+    for (k, t) in params {
+        let mut e = Value::obj();
+        e.set("name", Value::from(k.as_str()));
+        e.set("shape", Value::Arr(
+            t.shape.iter().map(|&d| Value::from(d)).collect()));
+        order.push(e);
+        for v in &t.data {
+            bin.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    header.set("params", Value::Arr(order));
+    header.set("bytes", Value::from(bin.len()));
+    fs::write(dir.join(format!("{name}.json")), header.to_string())?;
+    let mut f = fs::File::create(dir.join(format!("{name}.bin")))?;
+    f.write_all(&bin)?;
+    Ok(())
+}
+
+/// Load a ParamStore saved by [`save_params`].
+pub fn load_params(dir: &Path, name: &str) -> Result<ParamStore> {
+    let header_text = fs::read_to_string(dir.join(format!("{name}.json")))
+        .with_context(|| format!("checkpoint {name} header"))?;
+    let header = json::parse(&header_text)?;
+    if header.req("magic")?.as_str() != Some(MAGIC) {
+        bail!("bad checkpoint magic");
+    }
+    let mut bin = Vec::new();
+    fs::File::open(dir.join(format!("{name}.bin")))?
+        .read_to_end(&mut bin)?;
+    if bin.len() != header.req("bytes")?.as_usize().context("bytes")? {
+        bail!("checkpoint payload size mismatch");
+    }
+    let mut store = ParamStore::new();
+    let mut off = 0usize;
+    for e in header.req("params")?.as_arr().context("params")? {
+        let name = e.req("name")?.as_str().context("name")?.to_string();
+        let shape = e.req("shape")?.as_shape()?;
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &bin[off + i * 4..off + i * 4 + 4];
+            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += n * 4;
+        store.insert(name, Tensor::from_vec(&shape, data));
+    }
+    if off != bin.len() {
+        bail!("checkpoint payload has trailing bytes");
+    }
+    Ok(store)
+}
+
+/// Save the full train state (params + Adam moments + step).
+pub fn save_state(dir: &Path, name: &str, state: &TrainState) -> Result<()> {
+    save_params(dir, &format!("{name}.params"), &state.params)?;
+    save_params(dir, &format!("{name}.adam_m"), &state.adam_m)?;
+    save_params(dir, &format!("{name}.adam_v"), &state.adam_v)?;
+    let mut meta = Value::obj();
+    meta.set("step", Value::from(state.step as usize));
+    fs::write(dir.join(format!("{name}.state.json")), meta.to_string())?;
+    Ok(())
+}
+
+pub fn load_state(dir: &Path, name: &str) -> Result<TrainState> {
+    let params = load_params(dir, &format!("{name}.params"))?;
+    let adam_m = load_params(dir, &format!("{name}.adam_m"))?;
+    let adam_v = load_params(dir, &format!("{name}.adam_v"))?;
+    let meta = json::parse(&fs::read_to_string(
+        dir.join(format!("{name}.state.json")))?)?;
+    Ok(TrainState {
+        params,
+        adam_m,
+        adam_v,
+        step: meta.req("step")?.as_usize().context("step")? as i32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("softmoe-ckpt-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_params(seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut p = ParamStore::new();
+        p.insert("a/w".into(), Tensor::randn(&[3, 4], 1.0, &mut rng));
+        p.insert("b".into(), Tensor::randn(&[7], 1.0, &mut rng));
+        p.insert("scale".into(), Tensor::scalar(2.5));
+        p
+    }
+
+    #[test]
+    fn roundtrip_params() {
+        let dir = tmpdir("params");
+        let p = sample_params(0);
+        save_params(&dir, "m", &p).unwrap();
+        let q = load_params(&dir, "m").unwrap();
+        assert_eq!(p.len(), q.len());
+        for (k, t) in &p {
+            assert_eq!(t, &q[k], "{k}");
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_state() {
+        let dir = tmpdir("state");
+        let mut st = TrainState::fresh(sample_params(1));
+        st.step = 17;
+        st.adam_m.get_mut("b").unwrap().data[0] = 0.5;
+        save_state(&dir, "run", &st).unwrap();
+        let got = load_state(&dir, "run").unwrap();
+        assert_eq!(got.step, 17);
+        assert_eq!(got.adam_m["b"].data[0], 0.5);
+        assert_eq!(got.params["a/w"], st.params["a/w"]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_payload_rejected() {
+        let dir = tmpdir("corrupt");
+        save_params(&dir, "m", &sample_params(2)).unwrap();
+        // Truncate the binary.
+        let bin_path = dir.join("m.bin");
+        let data = fs::read(&bin_path).unwrap();
+        fs::write(&bin_path, &data[..data.len() - 4]).unwrap();
+        assert!(load_params(&dir, "m").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_checkpoint_errors() {
+        let dir = tmpdir("missing");
+        assert!(load_params(&dir, "nope").is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! From-scratch CLI argument parsing (no clap offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` grammar the `softmoe` binary uses, with typed accessors,
+//! defaults and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first non-flag token is the subcommand.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--flag value` unless next token is another flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(stripped.to_string(), v.clone());
+                        }
+                        _ => {
+                            args.flags.insert(stripped.to_string(),
+                                              "true".to_string());
+                        }
+                    }
+                }
+            } else if args.command.is_empty() {
+                args.command = tok.clone();
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    // -- typed accessors ---------------------------------------------------
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        Ok(self
+            .str_opt(key)
+            .with_context(|| format!("missing required flag --{key}"))?
+            .to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}: not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}: not a number")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(key, default as f64)? as f32)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key}={v}: expected a boolean"),
+        }
+    }
+
+    /// Comma-separated list: `--sizes s,b` -> vec!["s","b"].
+    pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&sv(&["train", "--steps", "100", "--model=soft_s",
+                                  "--verbose", "--lr", "1e-3"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.str_or("model", ""), "soft_s");
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert!((a.f64_or("lr", 0.0).unwrap() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = Args::parse(&sv(&["serve", "--fast", "--port", "88"])).unwrap();
+        assert!(a.bool_or("fast", false).unwrap());
+        assert_eq!(a.usize_or("port", 0).unwrap(), 88);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = Args::parse(&sv(&["experiment", "pareto", "--steps=10"])).unwrap();
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["pareto"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&sv(&["train"])).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert!(a.req_str("model").is_err());
+        let b = Args::parse(&sv(&["x", "--n", "abc"])).unwrap();
+        assert!(b.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&sv(&["x", "--sizes", "s, b,l"])).unwrap();
+        assert_eq!(a.list_or("sizes", ""), vec!["s", "b", "l"]);
+        assert_eq!(a.list_or("other", "a,b"), vec!["a", "b"]);
+    }
+}

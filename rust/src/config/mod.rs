@@ -1,0 +1,420 @@
+//! Typed configuration: model/router presets and the artifact manifest.
+//!
+//! [`ModelConfig`] mirrors `python/compile/model.py::ModelConfig` — the two
+//! must agree for the native engine to be parity-comparable with the HLO
+//! artifacts. [`Manifest`] is the parsed form of `artifacts/manifest.json`,
+//! the contract that makes the Rust runtime fully manifest-driven.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Which MoE (or none) replaces the MLP in the designated blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoeType {
+    Dense,
+    Soft,
+    TokensChoice,
+    ExpertsChoice,
+}
+
+impl MoeType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dense" => MoeType::Dense,
+            "soft" => MoeType::Soft,
+            "tokens_choice" => MoeType::TokensChoice,
+            "experts_choice" => MoeType::ExpertsChoice,
+            _ => bail!("unknown moe type '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MoeType::Dense => "dense",
+            MoeType::Soft => "soft",
+            MoeType::TokensChoice => "tokens_choice",
+            MoeType::ExpertsChoice => "experts_choice",
+        }
+    }
+}
+
+/// Routing-weight modes for the Table 3 ablations (soft variant only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixMode {
+    Soft,
+    Uniform,
+    Identity,
+}
+
+impl MixMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "soft" => MixMode::Soft,
+            "uniform" => MixMode::Uniform,
+            "identity" => MixMode::Identity,
+            _ => bail!("unknown mix mode '{s}'"),
+        })
+    }
+}
+
+/// Mirror of the Python `ModelConfig` (keep in sync!).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub channels: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_dim: usize,
+    pub num_classes: usize,
+    pub moe_type: MoeType,
+    pub moe_layers: Vec<usize>,
+    pub num_experts: usize,
+    pub slots_per_expert: usize,
+    pub expert_hidden: usize,
+    pub top_k: usize,
+    pub capacity_factor: f32,
+    pub bpr: bool,
+    pub dispatch_mode: MixMode,
+    pub combine_mode: MixMode,
+    pub normalize_router: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            image_size: 32,
+            patch_size: 4,
+            channels: 3,
+            dim: 128,
+            depth: 6,
+            heads: 4,
+            mlp_dim: 512,
+            num_classes: 32,
+            moe_type: MoeType::Soft,
+            moe_layers: vec![3, 4, 5],
+            num_experts: 16,
+            slots_per_expert: 4,
+            expert_hidden: 512,
+            top_k: 1,
+            capacity_factor: 1.0,
+            bpr: true,
+            dispatch_mode: MixMode::Soft,
+            combine_mode: MixMode::Soft,
+            normalize_router: true,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn tokens(&self) -> usize {
+        let g = self.image_size / self.patch_size;
+        g * g
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.num_experts * self.slots_per_expert
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size * self.channels
+    }
+
+    /// The scaled model family, mirroring `model.FAMILY` in Python.
+    pub fn family(size: &str) -> Result<(usize, usize, usize, usize)> {
+        // (dim, heads, depth, mlp_dim)
+        Ok(match size {
+            "mu" => (64, 2, 4, 256),
+            "ti" => (96, 3, 6, 384),
+            "s" => (128, 4, 6, 512),
+            "m" => (192, 6, 8, 768),
+            "b" => (256, 8, 10, 1024),
+            _ => bail!("unknown size '{size}' (mu|ti|s|m|b)"),
+        })
+    }
+
+    /// Mirror of `model.preset(size, moe_type, ...)`.
+    pub fn preset(size: &str, moe: MoeType) -> Result<Self> {
+        let (dim, heads, depth, mlp_dim) = Self::family(size)?;
+        let moe_layers = if moe == MoeType::Dense {
+            vec![]
+        } else {
+            (depth / 2..depth).collect()
+        };
+        Ok(Self {
+            dim,
+            heads,
+            depth,
+            mlp_dim,
+            expert_hidden: mlp_dim,
+            moe_type: moe,
+            moe_layers,
+            ..Self::default()
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.dim % self.heads != 0 {
+            bail!("dim {} not divisible by heads {}", self.dim, self.heads);
+        }
+        if self.image_size % self.patch_size != 0 {
+            bail!("image_size not divisible by patch_size");
+        }
+        if self.moe_layers.iter().any(|&i| i >= self.depth) {
+            bail!("moe layer index out of range");
+        }
+        if self.moe_type == MoeType::Soft
+            && (self.dispatch_mode == MixMode::Identity
+                || self.combine_mode == MixMode::Identity)
+            && self.tokens() != self.total_slots()
+        {
+            bail!("identity routing requires tokens == total slots");
+        }
+        Ok(())
+    }
+
+    /// Parse the `config` object of a manifest model entry.
+    pub fn from_manifest(v: &Value) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            v.req(k)?.as_usize().with_context(|| format!("{k} not a number"))
+        };
+        Ok(Self {
+            image_size: u("image_size")?,
+            patch_size: u("patch_size")?,
+            channels: u("channels")?,
+            dim: u("dim")?,
+            depth: u("depth")?,
+            heads: u("heads")?,
+            mlp_dim: u("mlp_dim")?,
+            num_classes: u("num_classes")?,
+            moe_type: MoeType::parse(
+                v.req("moe_type")?.as_str().context("moe_type")?)?,
+            moe_layers: v.req("moe_layers")?.as_shape()?,
+            num_experts: u("num_experts")?,
+            slots_per_expert: u("slots_per_expert")?,
+            expert_hidden: u("expert_hidden")?,
+            top_k: u("top_k")?,
+            capacity_factor: v.req("capacity_factor")?
+                .as_f64().context("capacity_factor")? as f32,
+            bpr: v.req("bpr")?.as_bool().context("bpr")?,
+            dispatch_mode: MixMode::parse(
+                v.req("dispatch_mode")?.as_str().context("dispatch_mode")?)?,
+            combine_mode: MixMode::parse(
+                v.req("combine_mode")?.as_str().context("combine_mode")?)?,
+            normalize_router: v.req("normalize_router")?
+                .as_bool().context("normalize_router")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact manifest
+// ---------------------------------------------------------------------------
+
+/// One named input/output of an HLO entry point.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str().context("name")?.to_string(),
+            kind: v.req("kind")?.as_str().context("kind")?.to_string(),
+            shape: v.req("shape")?.as_shape()?,
+            dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO entry point (init / fwd_bN / train / inspect).
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One model variant in the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub config: ModelConfig,
+    /// Parameter order (sorted names) with shapes — the flattening contract.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl ModelManifest {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Forward batch sizes available (sorted): `fwd_b1, fwd_b8, ...`.
+    pub fn fwd_batches(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("fwd_b"))
+            .filter_map(|b| b.parse().ok())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("model {} has no entry '{name}'", self.name))
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let root = json::parse(&text)?;
+        if root.req("format")?.as_usize() != Some(1) {
+            bail!("unsupported manifest format");
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj().context("models")? {
+            let config = ModelConfig::from_manifest(m.req("config")?)?;
+            let params = m
+                .req("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.req("name")?.as_str().context("name")?.to_string(),
+                        p.req("shape")?.as_shape()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut entries = BTreeMap::new();
+            for (ename, e) in m.req("entries")?.as_obj().context("entries")? {
+                let inputs = e.req("inputs")?.as_arr().context("inputs")?
+                    .iter().map(IoSpec::parse).collect::<Result<Vec<_>>>()?;
+                let outputs = e.req("outputs")?.as_arr().context("outputs")?
+                    .iter().map(IoSpec::parse).collect::<Result<Vec<_>>>()?;
+                entries.insert(ename.clone(), Entry {
+                    file: e.req("file")?.as_str().context("file")?.to_string(),
+                    inputs,
+                    outputs,
+                });
+            }
+            models.insert(name.clone(), ModelManifest {
+                name: name.clone(),
+                config,
+                params,
+                entries,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Default artifact directory: `$SOFTMOE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SOFTMOE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_python_family() {
+        let cfg = ModelConfig::preset("s", MoeType::Soft).unwrap();
+        assert_eq!(cfg.dim, 128);
+        assert_eq!(cfg.depth, 6);
+        assert_eq!(cfg.moe_layers, vec![3, 4, 5]);
+        assert_eq!(cfg.tokens(), 64);
+        assert_eq!(cfg.total_slots(), 64);
+        cfg.validate().unwrap();
+        let dense = ModelConfig::preset("s", MoeType::Dense).unwrap();
+        assert!(dense.moe_layers.is_empty());
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut cfg = ModelConfig::default();
+        cfg.heads = 5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::default();
+        cfg.moe_layers = vec![99];
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::default();
+        cfg.dispatch_mode = MixMode::Identity;
+        cfg.num_experts = 3; // 12 slots != 64 tokens
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn moe_type_roundtrip() {
+        for t in ["dense", "soft", "tokens_choice", "experts_choice"] {
+            assert_eq!(MoeType::parse(t).unwrap().name(), t);
+        }
+        assert!(MoeType::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn config_from_manifest_json() {
+        let text = r#"{
+            "image_size": 32, "patch_size": 4, "channels": 3, "dim": 128,
+            "depth": 6, "heads": 4, "mlp_dim": 512, "num_classes": 32,
+            "moe_type": "soft", "moe_layers": [3,4,5], "num_experts": 16,
+            "slots_per_expert": 4, "expert_hidden": 512, "top_k": 1,
+            "capacity_factor": 1.0, "bpr": true, "dispatch_mode": "soft",
+            "combine_mode": "soft", "normalize_router": true, "tokens": 64
+        }"#;
+        let v = json::parse(text).unwrap();
+        let cfg = ModelConfig::from_manifest(&v).unwrap();
+        assert_eq!(cfg.num_experts, 16);
+        assert_eq!(cfg.moe_type, MoeType::Soft);
+        cfg.validate().unwrap();
+    }
+}

@@ -1,0 +1,95 @@
+//! Synthetic image–text pairs for the LIT-style contrastive experiments
+//! (paper §4, Table 4), standing in for WebLI.
+//!
+//! A "caption" is a short token sequence describing the image's class
+//! attributes (shape id, color id, texture id) plus filler tokens. The
+//! text tower trained on these embeddings exercises exactly the frozen-
+//! image-tower contrastive code path the paper evaluates.
+
+use crate::data::SynthShapes;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Caption vocabulary: 8 shape words + 4 color words + 2 texture words +
+/// 16 filler words + pad.
+pub const VOCAB: usize = 8 + 4 + 2 + 16 + 1;
+pub const PAD: usize = VOCAB - 1;
+pub const CAPTION_LEN: usize = 8;
+
+/// One image–caption pair.
+pub struct Pair {
+    pub image: Vec<f32>,
+    pub caption: [usize; CAPTION_LEN],
+    pub label: usize,
+}
+
+/// Deterministic caption for a class, with filler jitter.
+pub fn caption_for(label: usize, rng: &mut Rng) -> [usize; CAPTION_LEN] {
+    let shape = label % 8;
+    let color = (label / 8) % 4;
+    let texture = label / 32;
+    let mut cap = [PAD; CAPTION_LEN];
+    // Attribute words at jittered positions (order varies like real ALT
+    // text), fillers elsewhere.
+    let mut slots = [0usize, 1, 2, 3, 4, 5, 6, 7];
+    rng.shuffle(&mut slots);
+    cap[slots[0]] = shape;               // shape word
+    cap[slots[1]] = 8 + color;           // color word
+    cap[slots[2]] = 12 + texture;        // texture word
+    for &s in &slots[3..3 + rng.below(4)] {
+        cap[s] = 14 + rng.below(16);     // filler
+    }
+    cap
+}
+
+/// Generate a batch of pairs from the image dataset.
+pub fn pair_batch(ds: &SynthShapes, start: u64, batch: usize)
+    -> (Tensor, Vec<[usize; CAPTION_LEN]>, Vec<usize>) {
+    let s = ds.cfg.image_size;
+    let c = ds.cfg.channels;
+    let mut data = vec![0.0f32; batch * s * s * c];
+    let mut captions = Vec::with_capacity(batch);
+    let mut labels = Vec::with_capacity(batch);
+    for i in 0..batch {
+        let (img, label) = ds.sample(start + i as u64);
+        data[i * s * s * c..(i + 1) * s * s * c].copy_from_slice(&img);
+        let mut rng = Rng::new(ds.cfg.seed ^ 0xcafe).fold_in(start + i as u64);
+        captions.push(caption_for(label, &mut rng));
+        labels.push(label);
+    }
+    (Tensor::from_vec(&[batch, s, s, c], data), captions, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetConfig;
+
+    #[test]
+    fn caption_contains_attribute_words() {
+        let mut rng = Rng::new(0);
+        let cap = caption_for(13, &mut rng); // shape 5, color 1, texture 0
+        assert!(cap.contains(&5));
+        assert!(cap.contains(&9));
+        assert!(cap.contains(&12));
+        assert!(cap.iter().all(|&t| t < VOCAB));
+    }
+
+    #[test]
+    fn captions_for_different_classes_differ() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = caption_for(0, &mut r1);
+        let b = caption_for(1, &mut r2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn pair_batch_shapes() {
+        let ds = SynthShapes::new(DatasetConfig::default());
+        let (imgs, caps, labels) = pair_batch(&ds, 0, 6);
+        assert_eq!(imgs.shape[0], 6);
+        assert_eq!(caps.len(), 6);
+        assert_eq!(labels.len(), 6);
+    }
+}

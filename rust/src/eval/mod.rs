@@ -1,0 +1,281 @@
+//! Evaluation: precision@1, the few-shot linear probe (the "IN/10-shot"
+//! analogue), and retrieval metrics for the contrastive experiments.
+//!
+//! The few-shot probe follows the paper's protocol: freeze the backbone,
+//! take pre-head features, fit a closed-form ridge-regression multi-class
+//! head on `shots` examples per class, evaluate top-1 on held-out data.
+
+use anyhow::Result;
+
+use crate::data::SynthShapes;
+use crate::nn::ParamStore;
+use crate::runtime::Backend;
+use crate::tensor::{matmul, matmul_tn, Tensor};
+
+/// Top-1 precision over `batches` eval batches.
+pub fn precision_at_1(
+    backend: &mut dyn Backend,
+    params: &ParamStore,
+    data: &SynthShapes,
+    batches: usize,
+    batch_size: usize,
+) -> Result<f64> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..batches {
+        let (images, labels) = data.eval_batch((b * batch_size) as u64,
+                                               batch_size);
+        let (logits, _) = backend.forward(params, &images)?;
+        correct += count_correct(&logits, &labels);
+        total += labels.len();
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+pub fn count_correct(logits: &Tensor, labels: &[i32]) -> usize {
+    let (b, c) = logits.dims2();
+    assert_eq!(labels.len(), b);
+    let mut correct = 0;
+    for i in 0..b {
+        let row = logits.row(i);
+        let mut best = 0;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+/// Closed-form ridge regression onto one-hot targets:
+///   W = (XᵀX + λI)⁻¹ Xᵀ Y
+/// Solved by Gaussian elimination (d×d, d ≤ 256 in our configs).
+pub fn ridge_fit(features: &Tensor, labels: &[i32], classes: usize,
+                 lambda: f32) -> Tensor {
+    let (n, d) = features.dims2();
+    assert_eq!(labels.len(), n);
+    let mut xtx = matmul_tn(features, features);
+    for i in 0..d {
+        xtx.data[i * d + i] += lambda;
+    }
+    let mut y = Tensor::zeros(&[n, classes]);
+    for (i, &l) in labels.iter().enumerate() {
+        y.data[i * classes + l as usize] = 1.0;
+    }
+    let xty = matmul_tn(features, &y);
+    solve(&xtx, &xty)
+}
+
+/// Solve A X = B for X via Gaussian elimination with partial pivoting.
+/// A is (d, d), B is (d, k).
+pub fn solve(a: &Tensor, b: &Tensor) -> Tensor {
+    let (d, d2) = a.dims2();
+    assert_eq!(d, d2);
+    let (_, k) = b.dims2();
+    let mut m = a.data.clone();
+    let mut rhs = b.data.clone();
+    for col in 0..d {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..d {
+            if m[r * d + col].abs() > m[piv * d + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for j in 0..d {
+                m.swap(col * d + j, piv * d + j);
+            }
+            for j in 0..k {
+                rhs.swap(col * k + j, piv * k + j);
+            }
+        }
+        let diag = m[col * d + col];
+        assert!(diag.abs() > 1e-12, "singular matrix in ridge solve");
+        // Eliminate below.
+        for r in col + 1..d {
+            let f = m[r * d + col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..d {
+                m[r * d + j] -= f * m[col * d + j];
+            }
+            for j in 0..k {
+                rhs[r * k + j] -= f * rhs[col * k + j];
+            }
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0f32; d * k];
+    for col in (0..d).rev() {
+        for j in 0..k {
+            let mut acc = rhs[col * k + j];
+            for c2 in col + 1..d {
+                acc -= m[col * d + c2] * x[c2 * k + j];
+            }
+            x[col * k + j] = acc / m[col * d + col];
+        }
+    }
+    Tensor::from_vec(&[d, k], x)
+}
+
+/// The few-shot probe: fit on support features, evaluate on query batches.
+pub fn fewshot_probe(
+    backend: &mut dyn Backend,
+    params: &ParamStore,
+    data: &SynthShapes,
+    shots: usize,
+    query_batches: usize,
+    batch_size: usize,
+) -> Result<f64> {
+    let classes = data.cfg.num_classes;
+    let (support, slabels) = data.fewshot_support(shots);
+    // Run the support set through the backend in compiled-batch chunks.
+    let feats = forward_features_chunked(backend, params, &support,
+                                         batch_size)?;
+    let w = ridge_fit(&feats, &slabels, classes, 1e-2);
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..query_batches {
+        let (images, labels) =
+            data.eval_batch(((b + 100) * batch_size) as u64, batch_size);
+        let (_, f) = backend.forward(params, &images)?;
+        let scores = matmul(&f, &w);
+        correct += count_correct(&scores, &labels);
+        total += labels.len();
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+/// Forward a (N, H, W, C) set through the backend in chunks of
+/// `batch_size` (padding the tail), collecting features.
+pub fn forward_features_chunked(
+    backend: &mut dyn Backend,
+    params: &ParamStore,
+    images: &Tensor,
+    batch_size: usize,
+) -> Result<Tensor> {
+    let n = images.shape[0];
+    let item = images.numel() / n;
+    let mut feats: Option<Tensor> = None;
+    let mut done = 0;
+    while done < n {
+        let take = (n - done).min(batch_size);
+        // Pad the chunk to batch_size by repeating the last item.
+        let mut chunk = vec![0.0f32; batch_size * item];
+        for i in 0..batch_size {
+            let src = (done + i.min(take - 1)) * item;
+            chunk[i * item..(i + 1) * item]
+                .copy_from_slice(&images.data[src..src + item]);
+        }
+        let mut shape = images.shape.clone();
+        shape[0] = batch_size;
+        let (_, f) = backend.forward(params, &Tensor::from_vec(&shape, chunk))?;
+        let d = f.shape[1];
+        let out = feats.get_or_insert_with(|| Tensor::zeros(&[n, d]));
+        for i in 0..take {
+            let dst = (done + i) * d;
+            out.data[dst..dst + d].copy_from_slice(f.row(i));
+        }
+        done += take;
+    }
+    Ok(feats.unwrap())
+}
+
+/// Retrieval metrics for contrastive eval: recall@1 in both directions
+/// given aligned embedding matrices (n, d).
+pub fn retrieval_recall_at_1(img_emb: &Tensor, txt_emb: &Tensor) -> (f64, f64) {
+    let (n, _) = img_emb.dims2();
+    let sim = matmul(img_emb, &txt_emb.t()); // (n, n)
+    let mut i2t = 0usize;
+    let mut t2i = 0usize;
+    for i in 0..n {
+        let row = sim.row(i);
+        if (0..n).all(|j| row[j] <= row[i] || j == i) {
+            i2t += 1;
+        }
+        let col_best = (0..n)
+            .max_by(|&a, &b| sim.data[a * n + i]
+                .partial_cmp(&sim.data[b * n + i]).unwrap())
+            .unwrap();
+        if col_best == i {
+            t2i += 1;
+        }
+    }
+    (i2t as f64 / n as f64, t2i as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn count_correct_basic() {
+        let logits = Tensor::from_vec(&[2, 3],
+            vec![1.0, 5.0, 0.0, 2.0, 1.0, 0.0]);
+        assert_eq!(count_correct(&logits, &[1, 0]), 2);
+        assert_eq!(count_correct(&logits, &[0, 0]), 1);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let mut a = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            a.data[i * 3 + i] = 2.0;
+        }
+        let b = Tensor::from_vec(&[3, 1], vec![2.0, 4.0, 6.0]);
+        let x = solve(&a, &b);
+        assert!((x.data[0] - 1.0).abs() < 1e-5);
+        assert!((x.data[2] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn solve_random_system() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[6, 6], 1.0, &mut rng);
+        let x_true = Tensor::randn(&[6, 2], 1.0, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = solve(&a, &b);
+        assert!(x.max_diff(&x_true) < 1e-3);
+    }
+
+    #[test]
+    fn ridge_separates_separable_data() {
+        // Two well-separated gaussian blobs -> near-perfect probe.
+        let mut rng = Rng::new(1);
+        let n = 40;
+        let d = 8;
+        let mut feats = Tensor::zeros(&[n, d]);
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let class = i % 2;
+            labels[i] = class as i32;
+            for j in 0..d {
+                feats.data[i * d + j] =
+                    rng.normal() * 0.1 + if class == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        let w = ridge_fit(&feats, &labels, 2, 1e-3);
+        let scores = matmul(&feats, &w);
+        assert_eq!(count_correct(&scores, &labels), n);
+    }
+
+    #[test]
+    fn retrieval_perfect_alignment() {
+        // Identical *normalized* embeddings: the diagonal dominates every
+        // row/column (cosine similarity 1 with itself), so recall@1 = 1.
+        let mut rng = Rng::new(2);
+        let e = crate::tensor::l2_normalize_rows(
+            &Tensor::randn(&[6, 4], 1.0, &mut rng));
+        let (i2t, t2i) = retrieval_recall_at_1(&e, &e);
+        assert_eq!(i2t, 1.0);
+        assert_eq!(t2i, 1.0);
+    }
+}

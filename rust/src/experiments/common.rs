@@ -1,0 +1,156 @@
+//! Shared machinery for the experiment drivers: the scaled-down model
+//! family, native training harness, and evaluation bundle.
+//!
+//! Scale mapping (DESIGN.md §3): the paper's S/16..H/14 on 224² JFT-4B
+//! images becomes mu/ti/s/m on 16² SynthShapes (16 tokens) for the
+//! training sweeps — small enough that a 300-step run takes seconds, big
+//! enough that the method ordering (Soft > EC/TC > Dense) is resolvable.
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, MoeType};
+use crate::data::{DatasetConfig, SynthShapes};
+use crate::eval;
+use crate::flops;
+use crate::runtime::native::NativeRuntime;
+use crate::runtime::{Backend, TrainState};
+use crate::train::{Schedule, TrainConfig, Trainer};
+
+/// Experiment-scale image/task parameters.
+pub const EXP_IMAGE: usize = 16;
+pub const EXP_PATCH: usize = 4;
+pub const EXP_CLASSES: usize = 16;
+pub const EXP_TOKENS: usize = (EXP_IMAGE / EXP_PATCH) * (EXP_IMAGE / EXP_PATCH);
+
+/// Model config at experiment scale.
+pub fn exp_config(size: &str, moe: MoeType) -> ModelConfig {
+    let mut cfg = ModelConfig::preset(size, moe).expect("size");
+    cfg.image_size = EXP_IMAGE;
+    cfg.patch_size = EXP_PATCH;
+    cfg.num_classes = EXP_CLASSES;
+    // Default expert budget: slots == tokens (the paper's matched-FLOPs
+    // point) with 4 experts x 4 slots.
+    cfg.num_experts = 4;
+    cfg.slots_per_expert = EXP_TOKENS / 4;
+    cfg
+}
+
+pub fn exp_dataset(seed: u64) -> SynthShapes {
+    SynthShapes::new(DatasetConfig {
+        image_size: EXP_IMAGE,
+        num_classes: EXP_CLASSES,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Everything a sweep point reports.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub label: String,
+    pub params: f64,
+    pub train_exaflops: f64, // scaled: total train GFLOPs / 1e9 actually
+    pub train_secs: f64,
+    pub step_secs: f64,
+    pub eval_p1: f64,
+    pub fewshot: f64,
+    pub final_loss: f64,
+    pub fwd_gflops_per_img: f64,
+}
+
+/// Train one config natively and evaluate it.
+pub fn train_and_eval(
+    label: &str,
+    cfg: &ModelConfig,
+    data: &SynthShapes,
+    steps: usize,
+    batch: usize,
+    seed: i32,
+) -> Result<SweepResult> {
+    cfg.validate()?;
+    let mut backend = NativeRuntime::new(cfg.clone());
+    let params = backend.init(seed)?;
+    let mut state = TrainState::fresh(params);
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: batch,
+        schedule: Schedule::RsqrtCooldown {
+            peak: 1e-3,
+            warmup: (steps / 20).max(5),
+            timescale: (steps as f32 / 3.0).max(30.0),
+            cooldown: (steps / 6).max(10),
+        },
+        seed,
+        log_every: (steps / 10).max(1),
+        eval_every: 0,
+        eval_batches: 2,
+    };
+    let record = Trainer::new(&mut backend, data, tcfg).run(&mut state)?;
+
+    let eval_p1 =
+        eval::precision_at_1(&mut backend, &state.params, data, 4, batch)?;
+    let fewshot = eval::fewshot_probe(&mut backend, &state.params, data, 10,
+                                      2, batch)?;
+    Ok(SweepResult {
+        label: label.to_string(),
+        params: flops::param_count(cfg),
+        train_exaflops: flops::train_flops(cfg) * (steps * batch) as f64 / 1e9,
+        train_secs: record.total_secs,
+        step_secs: record.step_secs_mean,
+        eval_p1,
+        fewshot,
+        final_loss: record.final_loss,
+        fwd_gflops_per_img: flops::forward_flops(cfg) / 1e9,
+    })
+}
+
+/// Train and hand back the trained state too (inspection experiments).
+pub fn train_keep_state(
+    cfg: &ModelConfig,
+    data: &SynthShapes,
+    steps: usize,
+    batch: usize,
+    seed: i32,
+) -> Result<(NativeRuntime, TrainState)> {
+    let mut backend = NativeRuntime::new(cfg.clone());
+    let params = backend.init(seed)?;
+    let mut state = TrainState::fresh(params);
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: batch,
+        schedule: Schedule::default(),
+        seed,
+        log_every: steps.max(1),
+        eval_every: 0,
+        eval_batches: 1,
+    };
+    Trainer::new(&mut backend, data, tcfg).run(&mut state)?;
+    Ok((backend, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_config_is_valid_for_all_sizes_and_types() {
+        for size in ["mu", "ti", "s"] {
+            for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                        MoeType::ExpertsChoice] {
+                let cfg = exp_config(size, moe);
+                cfg.validate().unwrap();
+                assert_eq!(cfg.tokens(), EXP_TOKENS);
+            }
+        }
+    }
+
+    #[test]
+    fn quick_sweep_point_runs() {
+        let data = exp_dataset(0);
+        let cfg = exp_config("mu", MoeType::Soft);
+        let r = train_and_eval("probe", &cfg, &data, 12, 8, 0).unwrap();
+        assert!(r.final_loss.is_finite());
+        assert!(r.step_secs > 0.0);
+        assert!(r.eval_p1 >= 0.0 && r.eval_p1 <= 1.0);
+    }
+}

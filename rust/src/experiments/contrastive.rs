@@ -1,0 +1,213 @@
+//! Section 4 / Table 4: LIT-style contrastive transfer.
+//!
+//! Protocol (matches Zhai et al. 2022b as used in the paper): take the
+//! *frozen* image tower trained on classification, train a small text
+//! tower from scratch on image–caption pairs with a symmetric InfoNCE
+//! loss, then report zero-shot classification (caption prompts per class)
+//! and retrieval recall@1. Paper shape: the Soft MoE image tower's
+//! advantage on classification carries over to zero-shot transfer.
+//!
+//! The text tower (embedding -> mean-pool -> linear) and its backward are
+//! implemented here; it is small enough that hand-rolled grads are clear.
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::data::contrastive::{caption_for, pair_batch, CAPTION_LEN, VOCAB};
+use crate::eval::retrieval_recall_at_1;
+use crate::experiments::common::{self, exp_config, exp_dataset};
+use crate::runtime::Backend as _;
+use crate::experiments::ExpOptions;
+use crate::metrics::{f, Table};
+use crate::tensor::{l2_normalize_rows, matmul, matmul_nt, matmul_tn, softmax_rows, Tensor};
+use crate::util::Rng;
+
+/// Bag-of-embeddings text tower: emb (VOCAB, e) -> mean -> w (e, d).
+pub struct TextTower {
+    pub emb: Tensor,
+    pub w: Tensor,
+    pub temp: f32,
+}
+
+impl TextTower {
+    pub fn new(e_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        Self {
+            emb: Tensor::randn(&[VOCAB, e_dim], 0.1, rng),
+            w: Tensor::randn(&[e_dim, out_dim],
+                             1.0 / (e_dim as f32).sqrt(), rng),
+            temp: 10.0,
+        }
+    }
+
+    /// Encode captions to (B, out_dim), plus the pooled cache for backward.
+    pub fn encode(&self, captions: &[[usize; CAPTION_LEN]])
+        -> (Tensor, Tensor) {
+        let b = captions.len();
+        let e = self.emb.shape[1];
+        let mut pooled = Tensor::zeros(&[b, e]);
+        for (i, cap) in captions.iter().enumerate() {
+            for &tok in cap {
+                for j in 0..e {
+                    pooled.data[i * e + j] += self.emb.data[tok * e + j];
+                }
+            }
+            for j in 0..e {
+                pooled.data[i * e + j] /= CAPTION_LEN as f32;
+            }
+        }
+        (matmul(&pooled, &self.w), pooled)
+    }
+
+    /// One InfoNCE step against frozen image embeddings. Returns the loss.
+    pub fn train_step(
+        &mut self,
+        captions: &[[usize; CAPTION_LEN]],
+        img_emb_n: &Tensor, // (B, d), already L2-normalized
+        lr: f32,
+    ) -> f32 {
+        let b = captions.len();
+        let (txt, pooled) = self.encode(captions);
+        let txt_n = l2_normalize_rows(&txt);
+        // logits = temp * txt_n @ img_nᵀ ; labels = diagonal.
+        let logits = matmul_nt(&txt_n, img_emb_n).scale(self.temp);
+        let labels: Vec<usize> = (0..b).collect();
+        // Symmetric InfoNCE: rows (text->image) + cols (image->text).
+        let p_rows = softmax_rows(&logits);
+        let p_cols = crate::tensor::softmax_cols(&logits);
+        let mut loss = 0.0f32;
+        let mut dlogits = Tensor::zeros(&[b, b]);
+        for i in 0..b {
+            loss -= (p_rows.data[i * b + labels[i]] + 1e-12).ln();
+            loss -= (p_cols.data[labels[i] * b + i] + 1e-12).ln();
+            for j in 0..b {
+                dlogits.data[i * b + j] += p_rows.data[i * b + j];
+                dlogits.data[j * b + i] += p_cols.data[j * b + i];
+            }
+            dlogits.data[i * b + i] -= 2.0;
+        }
+        loss /= 2.0 * b as f32;
+        let dlogits = dlogits.scale(1.0 / (2.0 * b as f32) * self.temp);
+
+        // Back through txt_n = l2norm(txt), txt = pooled @ w.
+        let dtxt_n = matmul(&dlogits, img_emb_n);
+        let dtxt = crate::nn::layers::l2norm_rows_bwd(&txt, &dtxt_n);
+        let dw = matmul_tn(&pooled, &dtxt);
+        let dpooled = matmul_nt(&dtxt, &self.w);
+        // Embedding grads.
+        let e = self.emb.shape[1];
+        let mut demb = Tensor::zeros(&[VOCAB, e]);
+        for (i, cap) in captions.iter().enumerate() {
+            for &tok in cap {
+                for j in 0..e {
+                    demb.data[tok * e + j] +=
+                        dpooled.data[i * e + j] / CAPTION_LEN as f32;
+                }
+            }
+        }
+        self.w.axpy_inplace(-lr, &dw);
+        self.emb.axpy_inplace(-lr, &demb);
+        loss
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let cls_steps = if opts.quick { opts.steps.min(40) } else { opts.steps };
+    let lit_steps = if opts.quick { 60 } else { 400 };
+
+    let mut table = Table::new(&[
+        "image_tower", "zero_shot_acc", "img2txt_r@1", "txt2img_r@1",
+        "lit_final_loss",
+    ]);
+    let towers: &[(&str, MoeType)] = if opts.quick {
+        &[("soft_mu", MoeType::Soft)]
+    } else {
+        &[("vit_mu", MoeType::Dense), ("soft_mu", MoeType::Soft),
+          ("vit_ti", MoeType::Dense), ("soft_ti", MoeType::Soft)]
+    };
+    for (label, moe) in towers {
+        let size = if label.ends_with("ti") { "ti" } else { "mu" };
+        let cfg = exp_config(size, *moe);
+        let (mut be, state) = common::train_keep_state(
+            &cfg, &data, cls_steps, opts.batch_size, opts.seed as i32)?;
+
+        // Train the text tower against the frozen image tower.
+        let mut rng = Rng::new(opts.seed ^ 0x7357);
+        let mut text = TextTower::new(32, cfg.dim, &mut rng);
+        let b = 16usize;
+        let mut final_loss = 0.0;
+        for step in 0..lit_steps {
+            let (images, caps, _) = pair_batch(&data, (step * b) as u64, b);
+            let (_, feats) = be.forward(&state.params, &images)?;
+            let img_n = l2_normalize_rows(&feats);
+            final_loss = text.train_step(&caps, &img_n, 3e-2);
+        }
+
+        // Zero-shot classification: canonical caption per class as prompt.
+        let mut prompt_rng = Rng::new(1);
+        let prompts: Vec<[usize; CAPTION_LEN]> = (0..data.cfg.num_classes)
+            .map(|c| caption_for(c, &mut prompt_rng))
+            .collect();
+        let (class_emb, _) = text.encode(&prompts);
+        let class_n = l2_normalize_rows(&class_emb);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let eval_batches = if opts.quick { 2 } else { 4 };
+        for eb in 0..eval_batches {
+            let (images, labels) = data.eval_batch((eb * b) as u64, b);
+            let (_, feats) = be.forward(&state.params, &images)?;
+            let img_n = l2_normalize_rows(&feats);
+            let scores = matmul_nt(&img_n, &class_n);
+            correct += crate::eval::count_correct(&scores, &labels);
+            total += labels.len();
+        }
+        let zs = correct as f64 / total as f64;
+
+        // Retrieval on a held-out pair batch.
+        let (images, caps, _) = pair_batch(&data, 1 << 30, 16);
+        let (_, feats) = be.forward(&state.params, &images)?;
+        let img_n = l2_normalize_rows(&feats);
+        let (txt, _) = text.encode(&caps);
+        let txt_n = l2_normalize_rows(&txt);
+        let (i2t, t2i) = retrieval_recall_at_1(&img_n, &txt_n);
+
+        println!("  {label:<10} 0shot {zs:.3}  i2t {i2t:.3}  t2i {t2i:.3}");
+        table.row(vec![
+            label.to_string(), f(zs, 4), f(i2t, 4), f(t2i, 4),
+            f(final_loss as f64, 4),
+        ]);
+    }
+    opts.save("contrastive", &table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_tower_learns_to_align() {
+        // Frozen random "image" embeddings keyed by class; the text tower
+        // must learn to match captions to them.
+        let mut rng = Rng::new(0);
+        let d = 16;
+        let classes = 8;
+        let class_emb = l2_normalize_rows(
+            &Tensor::randn(&[classes, d], 1.0, &mut rng));
+        let mut tower = TextTower::new(16, d, &mut rng);
+        let b = classes;
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 0..300 {
+            let caps: Vec<[usize; CAPTION_LEN]> = (0..b)
+                .map(|i| {
+                    let mut r = Rng::new(step as u64).fold_in(i as u64);
+                    caption_for(i, &mut r)
+                })
+                .collect();
+            last = tower.train_step(&caps, &class_emb, 5e-2);
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap() * 0.5,
+                "InfoNCE {} -> {last}", first.unwrap());
+    }
+}

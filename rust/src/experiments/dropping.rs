@@ -1,0 +1,196 @@
+//! Appendix B (Fig. 12–15): token dropping for Tokens Choice and Experts
+//! Choice as expert count grows; capacity slack (C=1.125) and BPR effects.
+//!
+//! Protocol: briefly train each sparse model, then feed *trained* MoE-layer
+//! activations (via `VitModel::activations_at`) to standalone routers and
+//! measure drop rates — the paper's phenomenon is about trained routing
+//! distributions, not random init.
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::experiments::common::{self, exp_config, exp_dataset};
+use crate::experiments::ExpOptions;
+use crate::metrics::{f, Table};
+use crate::moe::{ExpertsChoice, RoutingStats, TokensChoice};
+use crate::tensor::Tensor;
+
+struct DropPoint {
+    experts: usize,
+    router: String,
+    capacity: f32,
+    bpr: bool,
+    dropped: f64,
+    imbalance: f64,
+    p1: f64,
+}
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let steps = if opts.quick { opts.steps.min(20) } else { opts.steps / 2 };
+    let counts: &[usize] = if opts.quick { &[4, 16] } else { &[4, 8, 16, 32] };
+
+    let mut points = Vec::new();
+    for &n in counts {
+        // --- Tokens Choice: C=1 with/without BPR, C=1.125 with BPR.
+        for (cap, bpr) in [(1.0f32, true), (1.0, false), (1.125, true)] {
+            let mut cfg = exp_config("mu", MoeType::TokensChoice);
+            cfg.num_experts = n;
+            cfg.capacity_factor = cap;
+            cfg.bpr = bpr;
+            let (be, state) = common::train_keep_state(
+                &cfg, &data, steps, opts.batch_size, opts.seed as i32)?;
+            let stats = routed_stats(&be, &state.params, &cfg, &data,
+                                     opts.batch_size, RouterKind::Tc)?;
+            let p1 = eval_p1(&cfg, &be, &state, &data, opts.batch_size)?;
+            points.push(DropPoint {
+                experts: n,
+                router: "tokens_choice".into(),
+                capacity: cap,
+                bpr,
+                dropped: stats.dropped_frac,
+                imbalance: stats.imbalance(),
+                p1,
+            });
+        }
+        // --- Experts Choice: C=1 and C=1.125.
+        for cap in [1.0f32, 1.125] {
+            let mut cfg = exp_config("mu", MoeType::ExpertsChoice);
+            cfg.num_experts = n;
+            cfg.capacity_factor = cap;
+            let (be, state) = common::train_keep_state(
+                &cfg, &data, steps, opts.batch_size, opts.seed as i32)?;
+            let stats = routed_stats(&be, &state.params, &cfg, &data,
+                                     opts.batch_size, RouterKind::Ec)?;
+            let p1 = eval_p1(&cfg, &be, &state, &data, opts.batch_size)?;
+            points.push(DropPoint {
+                experts: n,
+                router: "experts_choice".into(),
+                capacity: cap,
+                bpr: false,
+                dropped: stats.dropped_frac,
+                imbalance: stats.imbalance(),
+                p1,
+            });
+        }
+        println!("  dropping sweep experts={n} done");
+    }
+
+    let mut table = Table::new(&[
+        "experts", "router", "capacity", "bpr", "dropped_frac", "imbalance",
+        "synth_p@1",
+    ]);
+    for p in &points {
+        table.row(vec![
+            p.experts.to_string(),
+            p.router.clone(),
+            f(p.capacity as f64, 3),
+            p.bpr.to_string(),
+            f(p.dropped, 4),
+            f(p.imbalance, 2),
+            f(p.p1, 4),
+        ]);
+    }
+    opts.save("dropping", &table)?;
+
+    // Paper trend checks.
+    let tc_drop = |n: usize| {
+        points.iter().find(|p| p.experts == n && p.router == "tokens_choice"
+            && p.capacity == 1.0 && p.bpr).map(|p| p.dropped).unwrap_or(0.0)
+    };
+    let first = counts[0];
+    let last = counts[counts.len() - 1];
+    println!(
+        "  trend (Fig.12): TC drop {}exp {:.3} -> {}exp {:.3} ({})",
+        first, tc_drop(first), last, tc_drop(last),
+        if tc_drop(last) >= tc_drop(first) { "grows, matches paper" }
+        else { "flat at this scale" }
+    );
+    Ok(())
+}
+
+enum RouterKind {
+    Tc,
+    Ec,
+}
+
+/// Run the trained first-MoE-layer router over eval activations.
+fn routed_stats(
+    be: &crate::runtime::native::NativeRuntime,
+    params: &crate::nn::ParamStore,
+    cfg: &crate::config::ModelConfig,
+    data: &crate::data::SynthShapes,
+    batch: usize,
+    kind: RouterKind,
+) -> Result<RoutingStats> {
+    let layer = cfg.moe_layers[0];
+    let pre = format!("block_{layer}");
+    let wg = params[&format!("{pre}/moe/wg")].clone();
+    let w1 = &params[&format!("{pre}/moe/w1")];
+    let n = cfg.num_experts;
+    let (d, h) = (cfg.dim, cfg.expert_hidden);
+
+    // Build a standalone router with the trained gate + experts.
+    let mut rng = crate::util::Rng::new(0);
+    let mut agg: Option<RoutingStats> = None;
+    let (images, _) = data.eval_batch(0, batch);
+    for item in 0..batch.min(16) {
+        let x: Tensor = be.model.activations_at(params, &images, item, layer);
+        let stats = match kind {
+            RouterKind::Tc => {
+                let mut tc = TokensChoice::new(d, n, h, &mut rng);
+                tc.wg = wg.clone();
+                tc.top_k = cfg.top_k;
+                tc.capacity_factor = cfg.capacity_factor;
+                tc.bpr = cfg.bpr;
+                copy_experts(&mut tc.experts, w1, params, &pre, n, d, h);
+                tc.forward_with_stats(&x).1
+            }
+            RouterKind::Ec => {
+                let mut ec = ExpertsChoice::new(d, n, h, &mut rng);
+                ec.wg = wg.clone();
+                ec.capacity_factor = cfg.capacity_factor;
+                copy_experts(&mut ec.experts, w1, params, &pre, n, d, h);
+                ec.forward_with_stats(&x).1
+            }
+        };
+        match &mut agg {
+            None => agg = Some(stats),
+            Some(a) => a.merge(&stats, item),
+        }
+    }
+    Ok(agg.unwrap())
+}
+
+fn copy_experts(
+    experts: &mut crate::moe::ExpertParams,
+    w1: &Tensor,
+    params: &crate::nn::ParamStore,
+    pre: &str,
+    n: usize,
+    d: usize,
+    h: usize,
+) {
+    let b1 = &params[&format!("{pre}/moe/b1")];
+    let w2 = &params[&format!("{pre}/moe/w2")];
+    let b2 = &params[&format!("{pre}/moe/b2")];
+    for e in 0..n {
+        experts.w1[e] =
+            Tensor::from_vec(&[d, h], w1.data[e * d * h..(e + 1) * d * h].to_vec());
+        experts.b1[e] = b1.data[e * h..(e + 1) * h].to_vec();
+        experts.w2[e] =
+            Tensor::from_vec(&[h, d], w2.data[e * h * d..(e + 1) * h * d].to_vec());
+        experts.b2[e] = b2.data[e * d..(e + 1) * d].to_vec();
+    }
+}
+
+fn eval_p1(
+    _cfg: &crate::config::ModelConfig,
+    be: &crate::runtime::native::NativeRuntime,
+    state: &crate::runtime::TrainState,
+    data: &crate::data::SynthShapes,
+    batch: usize,
+) -> Result<f64> {
+    let mut be2 = crate::runtime::native::NativeRuntime::new(be.model.cfg.clone());
+    crate::eval::precision_at_1(&mut be2, &state.params, data, 2, batch)
+}

@@ -1,0 +1,202 @@
+//! Fig. 6 / 20 / 21 / 26 (fixed total slots, growing expert count),
+//! Fig. 7 (one slot per expert, unmatched cost), and Fig. 8 (matched
+//! training time).
+//!
+//! Two granularities:
+//! * model-level training sweeps at experiment scale — quality trends;
+//! * layer-level step-time sweeps at paper-like token counts (m=256,
+//!   experts to 4096) — the "Soft MoE step time is flat in expert count,
+//!   sparse routers blow up due to sorting" claim (Fig. 6-right), which
+//!   does not need training.
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::experiments::common::{self, exp_config, exp_dataset, EXP_TOKENS};
+use crate::experiments::ExpOptions;
+use crate::metrics::{f, Table};
+use crate::moe::{ExpertsChoice, SoftMoe, TokensChoice};
+use crate::tensor::Tensor;
+use crate::util::{Rng, Stopwatch};
+
+/// Fig. 6: fixed total slots / buffer, increasing experts.
+pub fn run_fixed_slots(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let steps = if opts.quick { opts.steps.min(30) } else { opts.steps };
+    let expert_counts: &[usize] =
+        if opts.quick { &[2, 8] } else { &[2, 4, 8, 16] };
+
+    let mut table = Table::new(&[
+        "experts", "routing", "slots_or_buffer", "synth_p@1", "fewshot",
+        "step_ms",
+    ]);
+    for &n in expert_counts {
+        // Soft: n experts x (slots/n) slots each, total fixed = tokens.
+        let mut cfg = exp_config("mu", MoeType::Soft);
+        cfg.num_experts = n;
+        cfg.slots_per_expert = EXP_TOKENS / n;
+        let r = common::train_and_eval(&format!("soft_{n}"), &cfg, &data,
+                                       steps, opts.batch_size,
+                                       opts.seed as i32)?;
+        table.row(vec![
+            n.to_string(), "soft".into(), EXP_TOKENS.to_string(),
+            f(r.eval_p1, 4), f(r.fewshot, 4), f(r.step_secs * 1e3, 2),
+        ]);
+        // Sparse baselines with matched total buffer (= tokens).
+        for moe in [MoeType::ExpertsChoice, MoeType::TokensChoice] {
+            let mut cfg = exp_config("mu", moe);
+            cfg.num_experts = n;
+            cfg.capacity_factor = 1.0;
+            let r = common::train_and_eval(
+                &format!("{}_{n}", moe.name()), &cfg, &data, steps,
+                opts.batch_size, opts.seed as i32)?;
+            table.row(vec![
+                n.to_string(), moe.name().into(), EXP_TOKENS.to_string(),
+                f(r.eval_p1, 4), f(r.fewshot, 4), f(r.step_secs * 1e3, 2),
+            ]);
+        }
+        println!("  experts={n} done");
+    }
+    opts.save("experts_scaling_quality", &table)?;
+
+    // Layer-level step time at paper-like scale (Fig. 6-right).
+    let st = step_time_sweep(opts)?;
+    opts.save("experts_scaling_step_time", &st)?;
+    Ok(())
+}
+
+/// Layer-level forward step time vs expert count: total slots fixed at m.
+pub fn step_time_sweep(opts: &ExpOptions) -> Result<Table> {
+    let m = 256; // tokens per group, paper-like
+    let d = 64;
+    let h = 128;
+    let counts: &[usize] = if opts.quick {
+        &[16, 256]
+    } else {
+        &[16, 64, 256, 1024, 4096]
+    };
+    let mut rng = Rng::new(opts.seed);
+    let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+    let reps = if opts.quick { 2 } else { 5 };
+
+    let mut table = Table::new(&["experts", "routing", "fwd_ms",
+                                 "normalized_vs_soft16"]);
+    let mut soft16 = None;
+    for &n in counts {
+        // Soft: total slots = m regardless of n (cost should stay flat).
+        // Experts are capped at the slot count (each needs >= 1 slot).
+        let n_soft = n.min(m);
+        let p = (m / n_soft).max(1);
+        let soft = SoftMoe::new(d, n_soft, p, h, &mut rng.fold_in(n as u64));
+        let t_soft = time_layer(reps, || {
+            let _ = soft.forward(&x);
+        });
+        if soft16.is_none() {
+            soft16 = Some(t_soft);
+        }
+        table.row(vec![
+            n.to_string(), "soft".into(), f(t_soft * 1e3, 3),
+            f(t_soft / soft16.unwrap(), 2),
+        ]);
+        let ec = ExpertsChoice::new(d, n, h, &mut rng.fold_in(n as u64 + 1));
+        let t_ec = time_layer(reps, || {
+            let _ = ec.forward(&x);
+        });
+        table.row(vec![
+            n.to_string(), "experts_choice".into(), f(t_ec * 1e3, 3),
+            f(t_ec / soft16.unwrap(), 2),
+        ]);
+        let tc = TokensChoice::new(d, n, h, &mut rng.fold_in(n as u64 + 2));
+        let t_tc = time_layer(reps, || {
+            let _ = tc.forward(&x);
+        });
+        table.row(vec![
+            n.to_string(), "tokens_choice".into(), f(t_tc * 1e3, 3),
+            f(t_tc / soft16.unwrap(), 2),
+        ]);
+        println!("  step-time experts={n}: soft {:.2}ms ec {:.2}ms tc {:.2}ms",
+                 t_soft * 1e3, t_ec * 1e3, t_tc * 1e3);
+    }
+    Ok(table)
+}
+
+fn time_layer(reps: usize, mut fwd: impl FnMut()) -> f64 {
+    fwd(); // warmup
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        fwd();
+    }
+    sw.elapsed_secs() / reps as f64
+}
+
+/// Fig. 7: one slot (or token) per expert, increasing experts — cost NOT
+/// matched; everything improves with capacity, Soft stays cheapest.
+pub fn run_unmatched(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let steps = if opts.quick { opts.steps.min(30) } else { opts.steps };
+    let counts: &[usize] = if opts.quick { &[4, 16] } else { &[4, 8, 16, 32] };
+    let mut table = Table::new(&[
+        "experts", "routing", "synth_p@1", "fewshot", "step_ms",
+    ]);
+    for &n in counts {
+        for moe in [MoeType::Soft, MoeType::ExpertsChoice] {
+            let mut cfg = exp_config("mu", moe);
+            cfg.num_experts = n;
+            cfg.slots_per_expert = 1;
+            let r = common::train_and_eval(
+                &format!("{}_{n}", moe.name()), &cfg, &data, steps,
+                opts.batch_size, opts.seed as i32)?;
+            table.row(vec![
+                n.to_string(), moe.name().into(), f(r.eval_p1, 4),
+                f(r.fewshot, 4), f(r.step_secs * 1e3, 2),
+            ]);
+        }
+        println!("  unmatched experts={n} done");
+    }
+    opts.save("experts_unmatched", &table)
+}
+
+/// Fig. 8: match total training *time* across expert counts by adjusting
+/// step counts; report quality at equal wall-clock budget.
+pub fn run_matched_time(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let counts: &[usize] = if opts.quick { &[4, 16] } else { &[4, 8, 16, 32] };
+    let base_steps = if opts.quick { opts.steps.min(30) } else { opts.steps };
+
+    // 1) Measure step time per config with a short probe.
+    let mut probes = Vec::new();
+    for &n in counts {
+        for moe in [MoeType::Soft, MoeType::ExpertsChoice] {
+            let mut cfg = exp_config("mu", moe);
+            cfg.num_experts = n;
+            cfg.slots_per_expert = 1;
+            let r = common::train_and_eval("probe", &cfg, &data, 6,
+                                           opts.batch_size,
+                                           opts.seed as i32)?;
+            probes.push((n, moe, r.step_secs));
+        }
+    }
+    // Budget = what the slowest config needs for base_steps.
+    let slowest = probes.iter().map(|p| p.2).fold(0.0, f64::max);
+    let budget = slowest * base_steps as f64;
+
+    let mut table = Table::new(&[
+        "experts", "routing", "steps_for_budget", "synth_p@1", "fewshot",
+    ]);
+    for (n, moe, step_secs) in probes {
+        let steps = ((budget / step_secs) as usize).clamp(10, base_steps * 8);
+        let mut cfg = exp_config("mu", moe);
+        cfg.num_experts = n;
+        cfg.slots_per_expert = 1;
+        let r = common::train_and_eval(
+            &format!("{}_{n}", moe.name()), &cfg, &data, steps,
+            opts.batch_size, opts.seed as i32)?;
+        println!("  matched-time {}_{n}: {} steps, p@1 {:.3}",
+                 moe.name(), steps, r.eval_p1);
+        table.row(vec![
+            n.to_string(), moe.name().into(), steps.to_string(),
+            f(r.eval_p1, 4), f(r.fewshot, 4),
+        ]);
+    }
+    opts.save("experts_matched_time", &table)
+}

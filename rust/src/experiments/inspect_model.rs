@@ -1,0 +1,119 @@
+//! Section 5 + Appendices G/H: routing-weight inspection of a trained
+//! Soft MoE — Fig. 9 (token contributions, expert importance, tokens per
+//! slot), Fig. 27/28 (cumulative mass curves) and Fig. 29–31 (slot
+//! parameter correlation at p ∈ {1, 4}).
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::experiments::common::{self, exp_config, exp_dataset, EXP_TOKENS};
+use crate::experiments::ExpOptions;
+use crate::inspect;
+use crate::metrics::{f, Table};
+use crate::tensor::Tensor;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let steps = if opts.quick { opts.steps.min(40) } else { opts.steps };
+
+    // One slot per expert (the paper's recommended configuration).
+    let mut cfg = exp_config("ti", MoeType::Soft);
+    cfg.num_experts = EXP_TOKENS;
+    cfg.slots_per_expert = 1;
+    let (be, state) = common::train_keep_state(
+        &cfg, &data, steps, opts.batch_size, opts.seed as i32)?;
+
+    let (images, _) = data.eval_batch(0, 8);
+    // Aggregate dispatch/combine per layer over items.
+    let mut per_layer: std::collections::BTreeMap<usize, Vec<(Tensor, Tensor)>> =
+        Default::default();
+    for item in 0..8 {
+        for (layer, d, c) in
+            be.model.routing_weights(&state.params, &images, item)
+        {
+            per_layer.entry(layer).or_default().push((d, c));
+        }
+    }
+
+    // --- Fig. 9 summaries per layer.
+    let mut t9 = Table::new(&[
+        "layer", "frac_tokens_weight>2", "frac_tokens_weight<=0.25",
+        "expert_importance_spread", "median_tokens_for_90pct_mass",
+    ]);
+    for (layer, mats) in &per_layer {
+        let mut weights = Vec::new();
+        let mut spreads = Vec::new();
+        let mut t90 = Vec::new();
+        for (d, c) in mats {
+            weights.extend(inspect::token_weights(d));
+            let imp = inspect::slot_importance_normalized(c);
+            spreads.push(imp.iter().cloned().fold(0.0, f64::max));
+            t90.extend(inspect::tokens_per_slot_for_mass(d, 0.9));
+        }
+        let s = inspect::summarize_token_weights(&weights);
+        t90.sort_unstable();
+        let med = t90[t90.len() / 2];
+        println!(
+            "  layer {layer}: >2 {:.3}, <=0.25 {:.3}, spread {:.1}x, \
+             tokens@90% {med}",
+            s.frac_above_2, s.frac_below_quarter,
+            crate::util::mean(&spreads)
+        );
+        t9.row(vec![
+            layer.to_string(),
+            f(s.frac_above_2, 4),
+            f(s.frac_below_quarter, 4),
+            f(crate::util::mean(&spreads), 2),
+            med.to_string(),
+        ]);
+    }
+    opts.save("inspect_fig9", &t9)?;
+
+    // --- Fig. 27/28: cumulative-mass curves (sampled at k = 1, 2, 4, ...).
+    let mut t27 = Table::new(&["layer", "kind", "k", "mean_cumulative_mass"]);
+    for (layer, mats) in &per_layer {
+        let (d, c) = &mats[0];
+        for (kind, curve) in [
+            ("dispatch", inspect::mean_cumulative_mass_per_slot(d)),
+            ("combine", inspect::mean_cumulative_mass_per_token(c)),
+        ] {
+            let mut k = 1usize;
+            while k <= curve.len() {
+                t27.row(vec![
+                    layer.to_string(), kind.into(), k.to_string(),
+                    f(curve[k - 1], 4),
+                ]);
+                k *= 2;
+            }
+        }
+    }
+    opts.save("inspect_cumulative_mass", &t27)?;
+
+    // --- Fig. 29–31: slot correlation for p in {1, 4}.
+    let mut t29 = Table::new(&[
+        "slots_per_expert", "mean_abs_corr_same_expert",
+        "mean_abs_corr_diff_expert",
+    ]);
+    for p in [1usize, 4] {
+        let mut cfg_p = exp_config("mu", MoeType::Soft);
+        cfg_p.num_experts = EXP_TOKENS / p;
+        cfg_p.slots_per_expert = p;
+        let (_, st_p) = common::train_keep_state(
+            &cfg_p, &data, steps, opts.batch_size, opts.seed as i32)?;
+        let layer = cfg_p.moe_layers[0];
+        let phi_raw = &st_p.params[&format!("block_{layer}/moe/phi")];
+        let (d, s_total) = (phi_raw.shape[0],
+                            phi_raw.shape[1] * phi_raw.shape[2]);
+        let phi = phi_raw.clone().reshape(&[d, s_total]);
+        let corr = inspect::slot_correlation(&phi);
+        let (same, diff) = inspect::correlation_split(&corr, p);
+        println!("  p={p}: |corr| same-expert {same:.3} vs diff {diff:.3}");
+        t29.row(vec![p.to_string(), f(same, 4), f(diff, 4)]);
+    }
+    opts.save("inspect_slot_correlation", &t29)?;
+    println!(
+        "  Appendix H check: same-expert slot correlation should exceed \
+         cross-expert correlation for p=4 (lazy experts)."
+    );
+    Ok(())
+}

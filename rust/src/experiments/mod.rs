@@ -1,0 +1,110 @@
+//! Experiment drivers: one module per paper table/figure (index in
+//! DESIGN.md §5). Each driver emits a [`crate::metrics::Table`] whose
+//! rows mirror the paper's, plus CSV files under `reports/`.
+
+pub mod ablations;
+pub mod bpr;
+pub mod common;
+pub mod collapse;
+pub mod contrastive;
+pub mod dropping;
+pub mod experts_scaling;
+pub mod inference;
+pub mod inspect_model;
+pub mod pareto;
+pub mod placement;
+pub mod slots;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::metrics::Table;
+
+/// Common experiment options parsed from the CLI.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Training steps per configuration (scaled-down default).
+    pub steps: usize,
+    pub batch_size: usize,
+    pub seed: u64,
+    /// Where CSV/markdown reports go.
+    pub out_dir: PathBuf,
+    /// Quick mode: tiny sweep for CI / smoke runs.
+    pub quick: bool,
+}
+
+impl ExpOptions {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        Ok(Self {
+            steps: args.usize_or("steps", 300)?,
+            batch_size: args.usize_or("batch", 32)?,
+            seed: args.usize_or("seed", 0)? as u64,
+            out_dir: PathBuf::from(args.str_or("out-dir", "reports")),
+            quick: args.bool_or("quick", false)?,
+        })
+    }
+
+    pub fn save(&self, name: &str, table: &Table) -> Result<()> {
+        let path = self.out_dir.join(format!("{name}.csv"));
+        table.save_csv(&path)?;
+        println!("\n## {name}\n\n{}", table.to_markdown());
+        println!("[saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// All experiment ids (keep in sync with DESIGN.md §5).
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("pareto", "Fig.3/Table 9: training cost vs quality Pareto"),
+    ("longrun", "Fig.4/Table 2: long-horizon runs per model class"),
+    ("inference", "Fig.5/Table 1: inference-optimized models"),
+    ("experts_scaling", "Fig.6/20/21/26: experts at fixed total slots"),
+    ("experts_unmatched", "Fig.7: one slot/expert, unmatched cost"),
+    ("experts_matched_time", "Fig.8: matched training time"),
+    ("ablations", "Table 3/Fig.11: soft/uniform/identity routing"),
+    ("dropping", "Fig.12-15: token dropping for TC/EC"),
+    ("slots_per_expert", "Fig.16: more slots per expert"),
+    ("placement", "Tables 5-7: where to put the MoE layers"),
+    ("collapse", "Fig.17-18: softmax collapse vs l2-norm fix"),
+    ("bpr", "Table 8: Batch Priority Routing ablation"),
+    ("contrastive", "Table 4: LIT-style frozen-tower transfer"),
+    ("inspect", "Fig.9/27/28/29-31: routing weight analysis"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    let opts = ExpOptions::from_args(args)?;
+    match id {
+        "pareto" => pareto::run(&opts),
+        "longrun" => pareto::run_longrun(&opts),
+        "inference" => inference::run(&opts),
+        "experts_scaling" => experts_scaling::run_fixed_slots(&opts),
+        "experts_unmatched" => experts_scaling::run_unmatched(&opts),
+        "experts_matched_time" => experts_scaling::run_matched_time(&opts),
+        "ablations" => ablations::run(&opts),
+        "dropping" => dropping::run(&opts),
+        "slots_per_expert" => slots::run(&opts),
+        "placement" => placement::run(&opts),
+        "collapse" => collapse::run(&opts),
+        "bpr" => bpr::run(&opts),
+        "contrastive" => contrastive::run(&opts),
+        "inspect" => inspect_model::run(&opts),
+        "all" => {
+            for (name, _) in EXPERIMENTS {
+                if *name == "longrun" && opts.quick {
+                    continue;
+                }
+                println!("\n===== experiment: {name} =====");
+                run(name, args)?;
+            }
+            Ok(())
+        }
+        _ => bail!(
+            "unknown experiment '{id}'; available: {}",
+            EXPERIMENTS.iter().map(|(n, _)| *n)
+                .collect::<Vec<_>>().join(", ")
+        ),
+    }
+}

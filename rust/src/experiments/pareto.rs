@@ -1,0 +1,94 @@
+//! Fig. 3 / Fig. 22–25 / Table 9: the training-cost vs quality Pareto
+//! sweep over model sizes and routing algorithms, and the Fig. 4 /
+//! Table 2 long-run variant.
+//!
+//! Paper shape to reproduce: at every FLOP/wall-clock budget, Soft MoE
+//! sits above Dense and the sparse routers on both metrics (synth p@1 ~
+//! JFT p@1, fewshot ~ IN/10-shot).
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::experiments::common::{self, exp_config, exp_dataset};
+use crate::experiments::ExpOptions;
+use crate::metrics::{f, Table};
+
+const ROUTERS: &[MoeType] = &[
+    MoeType::Dense,
+    MoeType::Soft,
+    MoeType::TokensChoice,
+    MoeType::ExpertsChoice,
+];
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let sizes: &[&str] = if opts.quick { &["mu"] } else { &["mu", "ti", "s"] };
+    let steps = if opts.quick { opts.steps.min(40) } else { opts.steps };
+    sweep("pareto", sizes, steps, opts)
+}
+
+/// Fig. 4 / Table 2: longer horizon, larger budget per class.
+pub fn run_longrun(opts: &ExpOptions) -> Result<()> {
+    let sizes: &[&str] = if opts.quick { &["mu"] } else { &["mu", "ti", "s"] };
+    let steps = if opts.quick { opts.steps.min(60) } else { opts.steps * 3 };
+    sweep("longrun", sizes, steps, opts)
+}
+
+fn sweep(name: &str, sizes: &[&str], steps: usize, opts: &ExpOptions)
+    -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let mut table = Table::new(&[
+        "model", "routing", "params", "train_gflop", "train_secs",
+        "step_ms", "synth_p@1", "fewshot", "final_loss",
+    ]);
+    for size in sizes {
+        for &moe in ROUTERS {
+            let cfg = exp_config(size, moe);
+            let label = format!("{}/{}", size, moe.name());
+            let r = common::train_and_eval(&label, &cfg, &data, steps,
+                                           opts.batch_size,
+                                           opts.seed as i32)?;
+            println!(
+                "  {label:<22} p@1 {:.3}  fewshot {:.3}  {:.1}s",
+                r.eval_p1, r.fewshot, r.train_secs
+            );
+            table.row(vec![
+                size.to_string(),
+                moe.name().to_string(),
+                format!("{:.0}", r.params),
+                f(r.train_exaflops, 2),
+                f(r.train_secs, 1),
+                f(r.step_secs * 1e3, 2),
+                f(r.eval_p1, 4),
+                f(r.fewshot, 4),
+                f(r.final_loss, 4),
+            ]);
+        }
+    }
+    opts.save(name, &table)?;
+    summarize_pareto(&table);
+    Ok(())
+}
+
+/// Print which router dominates at each size (the Fig. 3 takeaway).
+fn summarize_pareto(table: &Table) {
+    let idx_size = 0;
+    let idx_routing = 1;
+    let idx_p1 = 6;
+    let mut sizes: Vec<String> =
+        table.rows.iter().map(|r| r[idx_size].clone()).collect();
+    sizes.dedup();
+    for size in sizes {
+        let best = table
+            .rows
+            .iter()
+            .filter(|r| r[idx_size] == size)
+            .max_by(|a, b| {
+                a[idx_p1].parse::<f64>().unwrap()
+                    .partial_cmp(&b[idx_p1].parse::<f64>().unwrap())
+                    .unwrap()
+            });
+        if let Some(b) = best {
+            println!("  [{size}] best router by p@1: {}", b[idx_routing]);
+        }
+    }
+}

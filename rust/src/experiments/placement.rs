@@ -1,0 +1,59 @@
+//! Tables 5–7 (Appendix D): where to put the MoE layers. Total experts
+//! fixed; distribute them over different layer subsets. Paper finding:
+//! experts-per-layer ≈ tokens, spread over the last few layers, wins —
+//! and the optimal placement is similar across routing algorithms.
+//!
+//! Scaled mapping: 512 total experts over 12 layers becomes 16 total
+//! experts over our 6-layer "ti" backbone.
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::experiments::common::{self, exp_config, exp_dataset};
+use crate::experiments::ExpOptions;
+use crate::metrics::{f, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let steps = if opts.quick { opts.steps.min(30) } else { opts.steps };
+    // (description, layers, experts per layer) with 16 total experts on a
+    // depth-6 backbone — mirrors Table 5's "all in one layer ... spread".
+    let placements: Vec<(&str, Vec<usize>, usize)> = vec![
+        ("last (5)", vec![5], 16),
+        ("mid (4)", vec![4], 16),
+        ("last two (4,5)", vec![4, 5], 8),
+        ("split (2,5)", vec![2, 5], 8),
+        ("last four (2:5)", vec![2, 3, 4, 5], 4),
+    ];
+    let routers: &[MoeType] = if opts.quick {
+        &[MoeType::Soft]
+    } else {
+        &[MoeType::Soft, MoeType::TokensChoice, MoeType::ExpertsChoice]
+    };
+
+    let mut table = Table::new(&[
+        "routing", "layers", "experts_per_layer", "total_experts",
+        "synth_p@1", "fewshot",
+    ]);
+    for &moe in routers {
+        for (desc, layers, per_layer) in &placements {
+            let mut cfg = exp_config("ti", moe);
+            cfg.moe_layers = layers.clone();
+            cfg.num_experts = *per_layer;
+            cfg.slots_per_expert = 1;
+            let r = common::train_and_eval(desc, &cfg, &data, steps,
+                                           opts.batch_size,
+                                           opts.seed as i32)?;
+            println!("  {:<16} {desc:<18} p@1 {:.3}", moe.name(), r.eval_p1);
+            table.row(vec![
+                moe.name().into(),
+                desc.to_string(),
+                per_layer.to_string(),
+                (per_layer * layers.len()).to_string(),
+                f(r.eval_p1, 4),
+                f(r.fewshot, 4),
+            ]);
+        }
+    }
+    opts.save("placement", &table)
+}

@@ -1,0 +1,43 @@
+//! Fig. 16 (Appendix C): fixed expert count, increasing slots per expert.
+//! Paper shape: quality grows only modestly while cost grows quickly —
+//! the "lazy experts" effect (same-expert slots align; see also the
+//! slot-correlation inspection, Appendix H).
+
+use anyhow::Result;
+
+use crate::config::MoeType;
+use crate::experiments::common::{self, exp_config, exp_dataset};
+use crate::experiments::ExpOptions;
+use crate::flops;
+use crate::metrics::{f, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = exp_dataset(opts.seed);
+    let steps = if opts.quick { opts.steps.min(30) } else { opts.steps };
+    let slot_counts: &[usize] = if opts.quick { &[1, 4] } else { &[1, 2, 4, 8] };
+
+    let mut table = Table::new(&[
+        "experts", "slots_per_expert", "total_slots", "moe_gflops",
+        "synth_p@1", "fewshot", "step_ms",
+    ]);
+    let experts = 4;
+    for &p in slot_counts {
+        let mut cfg = exp_config("mu", MoeType::Soft);
+        cfg.num_experts = experts;
+        cfg.slots_per_expert = p;
+        let r = common::train_and_eval(&format!("p{p}"), &cfg, &data, steps,
+                                       opts.batch_size, opts.seed as i32)?;
+        println!("  slots/expert={p}: p@1 {:.3} step {:.2}ms",
+                 r.eval_p1, r.step_secs * 1e3);
+        table.row(vec![
+            experts.to_string(),
+            p.to_string(),
+            (experts * p).to_string(),
+            f(flops::moe_flops(&cfg) / 1e9, 4),
+            f(r.eval_p1, 4),
+            f(r.fewshot, 4),
+            f(r.step_secs * 1e3, 2),
+        ]);
+    }
+    opts.save("slots_per_expert", &table)
+}

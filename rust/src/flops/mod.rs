@@ -1,0 +1,176 @@
+//! Analytic FLOP and parameter accounting, mirroring the paper's cost
+//! model (§2.3 time complexity; Tables 1/2/9 exaFLOP columns).
+//!
+//! Conventions: a matmul (m,k)x(k,n) costs 2mkn FLOPs; softmax/layernorm
+//! and other elementwise work is counted at small constants (the paper
+//! ignores them too — "the routing cost is small"). Training cost is
+//! approximated as 3x the forward cost (fwd + 2x bwd), the standard
+//! accounting the ViT-scaling papers use.
+
+use crate::config::{ModelConfig, MoeType};
+
+/// Per-image forward FLOPs of the full model.
+pub fn forward_flops(cfg: &ModelConfig) -> f64 {
+    let m = cfg.tokens() as f64;
+    let d = cfg.dim as f64;
+    let pd = cfg.patch_dim() as f64;
+
+    let mut fl = 2.0 * m * pd * d; // patch embed
+    for i in 0..cfg.depth {
+        fl += attention_flops(cfg);
+        fl += if cfg.moe_layers.contains(&i) && cfg.moe_type != MoeType::Dense
+        {
+            moe_flops(cfg)
+        } else {
+            dense_mlp_flops(cfg)
+        };
+        fl += 2.0 * 4.0 * m * d; // two layernorms + residuals (approx)
+    }
+    fl += 2.0 * m * d; // final LN + GAP
+    fl += 2.0 * d * cfg.num_classes as f64; // head
+    fl
+}
+
+pub fn attention_flops(cfg: &ModelConfig) -> f64 {
+    let m = cfg.tokens() as f64;
+    let d = cfg.dim as f64;
+    // qkv + out projections: 4 * 2*m*d*d; attention scores+apply:
+    // 2 * 2*m*m*d (QK^T and AV, summed over heads).
+    4.0 * 2.0 * m * d * d + 2.0 * 2.0 * m * m * d
+}
+
+pub fn dense_mlp_flops(cfg: &ModelConfig) -> f64 {
+    let m = cfg.tokens() as f64;
+    let d = cfg.dim as f64;
+    let h = cfg.mlp_dim as f64;
+    2.0 * m * d * h * 2.0
+}
+
+/// MoE layer forward FLOPs — the paper's O(mnpd + npk) (§2.3), with the
+/// sparse routers' buffer arithmetic handled per their capacity formulas.
+pub fn moe_flops(cfg: &ModelConfig) -> f64 {
+    let m = cfg.tokens() as f64;
+    let d = cfg.dim as f64;
+    let h = cfg.expert_hidden as f64;
+    let n = cfg.num_experts as f64;
+    match cfg.moe_type {
+        MoeType::Dense => dense_mlp_flops(cfg),
+        MoeType::Soft => {
+            let s = cfg.total_slots() as f64;
+            // logits m*d*s, mix-in s*m*d, experts s*(2dh), mix-out m*s*d.
+            2.0 * m * d * s      // logits
+                + 2.0 * s * m * d // dispatch mix
+                + 2.0 * s * d * h * 2.0 // expert MLPs over all slots
+                + 2.0 * m * s * d // combine mix
+        }
+        MoeType::TokensChoice => {
+            let cap = (cfg.capacity_factor as f64 * m * cfg.top_k as f64 / n)
+                .ceil()
+                .max(1.0);
+            // router m*d*n + processed buffers n*cap*(2dh).
+            2.0 * m * d * n + n * cap * 2.0 * d * h * 2.0
+        }
+        MoeType::ExpertsChoice => {
+            let cap = (cfg.capacity_factor as f64 * m / n).ceil().max(1.0);
+            2.0 * m * d * n + n * cap * 2.0 * d * h * 2.0
+        }
+    }
+}
+
+/// Training FLOPs per image (fwd + bwd ≈ 3x fwd).
+pub fn train_flops(cfg: &ModelConfig) -> f64 {
+    3.0 * forward_flops(cfg)
+}
+
+/// Total parameters.
+pub fn param_count(cfg: &ModelConfig) -> f64 {
+    let d = cfg.dim as f64;
+    let pd = cfg.patch_dim() as f64;
+    let m = cfg.tokens() as f64;
+    let mut p = pd * d + d + m * d; // patch embed + pos
+    for i in 0..cfg.depth {
+        p += 4.0 * (d * d + d) + 4.0 * d; // attn + ln1/ln2
+        if cfg.moe_layers.contains(&i) && cfg.moe_type != MoeType::Dense {
+            let n = cfg.num_experts as f64;
+            let h = cfg.expert_hidden as f64;
+            p += n * (d * h + h + h * d + d); // experts
+            p += match cfg.moe_type {
+                MoeType::Soft => d * cfg.total_slots() as f64 + 1.0, // phi+scale
+                _ => d * n,                                          // wg
+            };
+        } else {
+            let h = cfg.mlp_dim as f64;
+            p += d * h + h + h * d + d;
+        }
+    }
+    p += 2.0 * d; // final ln
+    p += d * cfg.num_classes as f64 + cfg.num_classes as f64;
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::nn::VitModel;
+
+    #[test]
+    fn param_count_matches_actual_model() {
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice] {
+            let cfg = ModelConfig::preset("s", moe).unwrap();
+            let model = VitModel::new(cfg.clone());
+            let params = model.init(0);
+            let actual: usize = params.values().map(|t| t.numel()).sum();
+            let predicted = param_count(&cfg);
+            assert_eq!(actual as f64, predicted, "{moe:?}");
+        }
+    }
+
+    #[test]
+    fn soft_matched_slots_is_flop_comparable_to_dense() {
+        // The paper's headline: slots == tokens => Soft MoE layer costs
+        // about the same as the dense MLP (plus the small mixing terms).
+        let mut cfg = ModelConfig::preset("s", MoeType::Soft).unwrap();
+        cfg.num_experts = 16;
+        cfg.slots_per_expert = 4; // 64 slots == 64 tokens
+        let soft = moe_flops(&cfg);
+        let dense = dense_mlp_flops(&cfg);
+        assert!(soft < 2.0 * dense, "soft {soft} vs dense {dense}");
+        assert!(soft > dense, "mixing terms should add cost");
+    }
+
+    #[test]
+    fn soft_flops_independent_of_expert_count_at_fixed_slots() {
+        let mk = |n: usize, p: usize| {
+            let mut cfg = ModelConfig::preset("s", MoeType::Soft).unwrap();
+            cfg.num_experts = n;
+            cfg.slots_per_expert = p;
+            moe_flops(&cfg)
+        };
+        // 64 slots either way.
+        assert_eq!(mk(2, 32), mk(64, 1));
+    }
+
+    #[test]
+    fn sparse_flops_scale_with_capacity() {
+        let mut cfg = ModelConfig::preset("s", MoeType::ExpertsChoice).unwrap();
+        cfg.capacity_factor = 1.0;
+        let c1 = moe_flops(&cfg);
+        cfg.capacity_factor = 2.0;
+        let c2 = moe_flops(&cfg);
+        assert!(c2 > 1.5 * c1);
+    }
+
+    #[test]
+    fn train_is_3x_forward() {
+        let cfg = ModelConfig::preset("s", MoeType::Soft).unwrap();
+        assert_eq!(train_flops(&cfg), 3.0 * forward_flops(&cfg));
+    }
+
+    #[test]
+    fn bigger_models_cost_more() {
+        let s = forward_flops(&ModelConfig::preset("s", MoeType::Dense).unwrap());
+        let b = forward_flops(&ModelConfig::preset("b", MoeType::Dense).unwrap());
+        assert!(b > 2.0 * s);
+    }
+}

@@ -1,0 +1,217 @@
+//! Model inspection: the paper's Section 5 + Appendices G/H analyses.
+//!
+//! * token→slot total dispatch weight distribution (Fig. 9 left),
+//! * per-slot combine importance (Fig. 9 middle),
+//! * tokens-needed-for-cumulative-mass curves (Fig. 9 right, Fig. 27/28),
+//! * slot-parameter correlation matrices (Fig. 29–31, the "lazy experts"
+//!   evidence for one-slot-per-expert).
+
+use crate::metrics::Histogram;
+use crate::moe::stats::tokens_to_mass;
+use crate::tensor::{l2_normalize_cols, matmul_tn, Tensor};
+
+/// Summary of the dispatch-weight distribution of one layer (Fig. 9 left).
+#[derive(Clone, Debug)]
+pub struct TokenWeightSummary {
+    /// Fraction of tokens whose summed dispatch weight exceeds 2.0 (the
+    /// paper reports 2–5%).
+    pub frac_above_2: f64,
+    /// Fraction contributing at most 0.25 total (paper: 15–20%).
+    pub frac_below_quarter: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Per-token summed dispatch weights from a (m, s) dispatch matrix.
+pub fn token_weights(dispatch: &Tensor) -> Vec<f64> {
+    let (m, _s) = dispatch.dims2();
+    (0..m)
+        .map(|i| dispatch.row(i).iter().map(|&v| v as f64).sum())
+        .collect()
+}
+
+pub fn summarize_token_weights(weights: &[f64]) -> TokenWeightSummary {
+    let n = weights.len().max(1) as f64;
+    TokenWeightSummary {
+        frac_above_2: weights.iter().filter(|&&w| w > 2.0).count() as f64 / n,
+        frac_below_quarter:
+            weights.iter().filter(|&&w| w <= 0.25).count() as f64 / n,
+        mean: weights.iter().sum::<f64>() / n,
+        max: weights.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Per-slot combine importance, normalized by its minimum (Fig. 9 middle).
+pub fn slot_importance_normalized(combine: &Tensor) -> Vec<f64> {
+    let (m, s) = combine.dims2();
+    let mut imp = vec![0.0f64; s];
+    for i in 0..m {
+        for j in 0..s {
+            imp[j] += combine.data[i * s + j] as f64;
+        }
+    }
+    let mn = imp.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-12);
+    imp.iter().map(|&v| v / mn).collect()
+}
+
+/// For every slot: tokens needed to reach `target` cumulative dispatch
+/// mass (Fig. 9 right).
+pub fn tokens_per_slot_for_mass(dispatch: &Tensor, target: f64) -> Vec<usize> {
+    let (m, s) = dispatch.dims2();
+    (0..s)
+        .map(|j| {
+            let col: Vec<f32> = (0..m).map(|i| dispatch.data[i * s + j]).collect();
+            tokens_to_mass(&col, target)
+        })
+        .collect()
+}
+
+/// Cumulative-mass curve averaged over slots (Fig. 27): entry k is the
+/// mean fraction of each slot's dispatch mass covered by its top-(k+1)
+/// tokens.
+pub fn mean_cumulative_mass_per_slot(dispatch: &Tensor) -> Vec<f64> {
+    let (m, s) = dispatch.dims2();
+    let mut acc = vec![0.0f64; m];
+    for j in 0..s {
+        let mut h = Histogram::new();
+        for i in 0..m {
+            h.record(dispatch.data[i * s + j] as f64);
+        }
+        for (k, v) in h.cumulative_mass().iter().enumerate() {
+            acc[k] += v;
+        }
+    }
+    acc.iter().map(|v| v / s as f64).collect()
+}
+
+/// Cumulative-mass curve averaged over tokens (Fig. 28): combine weights.
+pub fn mean_cumulative_mass_per_token(combine: &Tensor) -> Vec<f64> {
+    mean_cumulative_mass_per_slot(&combine.t())
+}
+
+/// Slot-parameter correlation: normalized inner products between all slot
+/// vectors of one layer's Φ (d, s). Entry (i, j) in [-1, 1]. Fig. 29–31.
+pub fn slot_correlation(phi: &Tensor) -> Tensor {
+    let pn = l2_normalize_cols(phi);
+    matmul_tn(&pn, &pn) // (s, s)
+}
+
+/// Mean |correlation| between same-expert slot pairs vs different-expert
+/// pairs — the Appendix H statistic showing same-expert slots align.
+pub fn correlation_split(corr: &Tensor, slots_per_expert: usize)
+    -> (f64, f64) {
+    let (s, _) = corr.dims2();
+    let mut same = (0.0, 0usize);
+    let mut diff = (0.0, 0usize);
+    for i in 0..s {
+        for j in 0..s {
+            if i == j {
+                continue;
+            }
+            let v = corr.data[i * s + j].abs() as f64;
+            if i / slots_per_expert == j / slots_per_expert {
+                same.0 += v;
+                same.1 += 1;
+            } else {
+                diff.0 += v;
+                diff.1 += 1;
+            }
+        }
+    }
+    (
+        if same.1 > 0 { same.0 / same.1 as f64 } else { 0.0 },
+        if diff.1 > 0 { diff.0 / diff.1 as f64 } else { 0.0 },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::softmax_cols;
+    use crate::util::Rng;
+
+    #[test]
+    fn token_weights_sum_to_slots() {
+        // Dispatch columns are convex => total weight mass == #slots.
+        let mut rng = Rng::new(0);
+        let logits = Tensor::randn(&[10, 6], 1.0, &mut rng);
+        let d = softmax_cols(&logits);
+        let w = token_weights(&d);
+        let total: f64 = w.iter().sum();
+        assert!((total - 6.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn summary_fractions() {
+        let w = vec![0.1, 0.2, 2.5, 1.0];
+        let s = summarize_token_weights(&w);
+        assert!((s.frac_above_2 - 0.25).abs() < 1e-9);
+        assert!((s.frac_below_quarter - 0.5).abs() < 1e-9);
+        assert_eq!(s.max, 2.5);
+    }
+
+    #[test]
+    fn importance_normalized_min_is_one() {
+        let mut rng = Rng::new(1);
+        let c = Tensor::randn(&[8, 5], 1.0, &mut rng).map(|v| v.abs() + 0.01);
+        let imp = slot_importance_normalized(&c);
+        let mn = imp.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((mn - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tokens_for_mass_uniform_vs_peaked() {
+        // Peaked slot: 1 token covers 90%; uniform: needs most tokens.
+        let m = 10;
+        let mut d = Tensor::zeros(&[m, 2]);
+        for i in 0..m {
+            d.data[i * 2] = 0.1; // uniform col
+            d.data[i * 2 + 1] = if i == 0 { 0.91 } else { 0.01 };
+        }
+        let counts = tokens_per_slot_for_mass(&d, 0.9);
+        assert_eq!(counts[1], 1);
+        assert!(counts[0] >= 8);
+    }
+
+    #[test]
+    fn cumulative_mass_monotone() {
+        let mut rng = Rng::new(2);
+        let d = softmax_cols(&Tensor::randn(&[12, 4], 1.0, &mut rng));
+        let cm = mean_cumulative_mass_per_slot(&d);
+        assert_eq!(cm.len(), 12);
+        assert!(cm.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+        assert!((cm[11] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slot_correlation_diag_is_one() {
+        let mut rng = Rng::new(3);
+        let phi = Tensor::randn(&[16, 6], 1.0, &mut rng);
+        let c = slot_correlation(&phi);
+        for i in 0..6 {
+            assert!((c.data[i * 6 + i] - 1.0).abs() < 1e-3);
+        }
+        // symmetric
+        assert!((c.data[1 * 6 + 2] - c.data[2 * 6 + 1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn correlation_split_detects_aligned_slots() {
+        // Build phi where each expert's two slots are identical vectors.
+        let mut rng = Rng::new(4);
+        let d = 8;
+        let experts = 3;
+        let mut phi = Tensor::zeros(&[d, experts * 2]);
+        for e in 0..experts {
+            let v = Tensor::randn(&[d], 1.0, &mut rng);
+            for k in 0..d {
+                phi.data[k * experts * 2 + e * 2] = v.data[k];
+                phi.data[k * experts * 2 + e * 2 + 1] = v.data[k];
+            }
+        }
+        let corr = slot_correlation(&phi);
+        let (same, diff) = correlation_split(&corr, 2);
+        assert!(same > 0.99);
+        assert!(diff < same);
+    }
+}

@@ -1,0 +1,45 @@
+//! # softmoe — Rust + JAX + Pallas reproduction of *From Sparse to Soft Mixtures of Experts* (ICLR 2024)
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** (Pallas, build time): `python/compile/kernels/` — the Soft MoE
+//!   dispatch/expert/combine kernels.
+//! * **L2** (JAX, build time): `python/compile/model.py` — ViT with
+//!   pluggable MoE blocks, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3** (this crate, run time): coordinator + every substrate. Python
+//!   is **never** on the request path; the binary is self-contained once
+//!   `make artifacts` has run.
+//!
+//! The crate deliberately implements its own substrates (JSON, CLI, PRNG,
+//! thread pool, metrics, property testing, bench harness): only the `xla`
+//! PJRT bindings and `anyhow` are available offline.
+//!
+//! Two interchangeable execution backends live in [`runtime`]:
+//! * [`runtime::pjrt::PjrtModel`] — loads the AOT HLO artifacts and runs
+//!   them through the PJRT CPU client (the production path).
+//! * a native pure-Rust engine ([`nn`], [`moe`]) — parity-tested against
+//!   the HLO outputs, used for the wide experiment sweeps (up to 4096
+//!   experts) and the router-behaviour studies that would be impractical
+//!   to AOT-compile one artifact at a time.
+
+pub mod bench;
+pub mod ckpt;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod flops;
+pub mod inspect;
+pub mod json;
+pub mod metrics;
+pub mod moe;
+pub mod nn;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod threadpool;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,307 @@
+//! `softmoe` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   train       train a model (PJRT artifacts or the native engine)
+//!   serve       run the batching inference server on synthetic traffic
+//!   eval        evaluate a checkpoint (p@1 + few-shot probe)
+//!   experiment  run a paper experiment by id (see `experiment list`)
+//!   models      list AOT models available in the manifest
+//!   flops       print the analytic cost table for the model family
+//!
+//! Python never runs here: `make artifacts` must have produced
+//! `artifacts/` beforehand for the PJRT paths.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use softmoe::cli::Args;
+use softmoe::config::{Manifest, ModelConfig, MoeType};
+use softmoe::data::{DatasetConfig, SynthShapes};
+use softmoe::metrics::Registry;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::pjrt::PjrtRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::serve::{BatchPolicy, Server};
+use softmoe::train::{Schedule, TrainConfig, Trainer};
+use softmoe::util::Rng;
+use softmoe::{ckpt, eval, experiments, flops};
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "softmoe — Soft Mixture of Experts (ICLR 2024) reproduction\n\n\
+         USAGE: softmoe <command> [flags]\n\n\
+         COMMANDS:\n  \
+         train       --model soft_s|dense_s|... --backend pjrt|native \
+         --steps N --batch N --ckpt-dir DIR\n  \
+         serve       --model soft_s --backend pjrt|native --requests N\n  \
+         eval        --model soft_s --ckpt-dir DIR --ckpt NAME\n  \
+         experiment  <id>|all|list [--steps N --quick]\n  \
+         models      [--artifacts DIR]\n  \
+         flops       print the analytic cost table\n"
+    );
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "eval" => cmd_eval(args),
+        "experiment" => cmd_experiment(args),
+        "models" => cmd_models(args),
+        "flops" => cmd_flops(),
+        "" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            usage();
+            bail!("unknown command '{other}'");
+        }
+    }
+}
+
+/// Build the requested backend. PJRT needs a manifest; native derives its
+/// config either from the manifest (same name) or from `--size`/`--moe`.
+fn make_backend(args: &Args) -> Result<(Box<dyn Backend>, ModelConfig)> {
+    let backend = args.str_or("backend", "pjrt");
+    let model_name = args.str_or("model", "soft_s");
+    match backend.as_str() {
+        "pjrt" => {
+            let dir = PathBuf::from(
+                args.str_or("artifacts",
+                            Manifest::default_dir().to_str().unwrap()));
+            let manifest = Manifest::load(&dir)?;
+            let cfg = manifest.model(&model_name)?.config.clone();
+            let rt = PjrtRuntime::new(&manifest, &model_name)?;
+            Ok((Box::new(rt), cfg))
+        }
+        "native" => {
+            // Prefer the manifest config when available for parity.
+            let dir = PathBuf::from(
+                args.str_or("artifacts",
+                            Manifest::default_dir().to_str().unwrap()));
+            let cfg = if let Ok(manifest) = Manifest::load(&dir) {
+                manifest.model(&model_name).map(|m| m.config.clone()).ok()
+            } else {
+                None
+            };
+            let cfg = match cfg {
+                Some(c) => c,
+                None => {
+                    let (moe, size) = model_name
+                        .rsplit_once('_')
+                        .context("model name must look like soft_s")?;
+                    ModelConfig::preset(size, MoeType::parse(moe)?)?
+                }
+            };
+            Ok((Box::new(NativeRuntime::new(cfg.clone())), cfg))
+        }
+        other => bail!("unknown backend '{other}' (pjrt|native)"),
+    }
+}
+
+fn dataset_for(cfg: &ModelConfig, seed: u64) -> SynthShapes {
+    SynthShapes::new(DatasetConfig {
+        image_size: cfg.image_size,
+        channels: cfg.channels,
+        num_classes: cfg.num_classes,
+        seed,
+        ..Default::default()
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (mut backend, cfg) = make_backend(args)?;
+    let steps = args.usize_or("steps", 300)?;
+    let batch = args.usize_or("batch", 32)?;
+    let seed = args.usize_or("seed", 0)? as i32;
+    let data = dataset_for(&cfg, seed as u64);
+
+    println!("backend: {}", backend.name());
+    let params = backend.init(seed)?;
+    let mut state = TrainState::fresh(params);
+    println!("params: {}", softmoe::util::human_count(
+        state.param_count() as f64));
+
+    let tcfg = TrainConfig {
+        steps,
+        batch_size: batch,
+        schedule: Schedule::RsqrtCooldown {
+            peak: args.f32_or("lr", 1e-3)?,
+            warmup: args.usize_or("warmup", (steps / 20).max(5))?,
+            timescale: (steps as f32 / 3.0).max(30.0),
+            cooldown: args.usize_or("cooldown", (steps / 6).max(10))?,
+        },
+        seed,
+        log_every: args.usize_or("log-every", 10)?,
+        eval_every: args.usize_or("eval-every", 100)?,
+        eval_batches: 4,
+    };
+    let registry = Registry::new();
+    let mut trainer = Trainer::new(backend.as_mut(), &data, tcfg);
+    trainer.metrics = Some(&registry);
+    trainer.verbose = true;
+    let record = trainer.run(&mut state)?;
+
+    println!(
+        "\ndone: {} steps in {:.1}s ({:.1} ms/step), final loss {:.4}",
+        steps, record.total_secs, record.step_secs_mean * 1e3,
+        record.final_loss
+    );
+    let p1 = eval::precision_at_1(backend.as_mut(), &state.params, &data, 4,
+                                  batch)?;
+    println!("eval p@1: {p1:.4}");
+
+    if let Some(dir) = args.str_opt("ckpt-dir") {
+        let name = args.str_or("ckpt", "latest");
+        ckpt::save_state(&PathBuf::from(dir), &name, &state)?;
+        println!("checkpoint saved to {dir}/{name}.*");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (mut backend, cfg) = make_backend(args)?;
+    let requests = args.usize_or("requests", 256)?;
+    let seed = args.usize_or("seed", 0)? as i32;
+    println!("backend: {}", backend.name());
+
+    let params = match args.str_opt("ckpt-dir") {
+        Some(dir) => ckpt::load_params(
+            &PathBuf::from(dir),
+            &format!("{}.params", args.str_or("ckpt", "latest")))?,
+        None => backend.init(seed)?,
+    };
+
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 32)?,
+        max_delay: Duration::from_micros(
+            args.usize_or("max-delay-us", 2000)? as u64),
+        compiled_sizes: vec![1, 8, 32],
+    };
+    let (server, client) = Server::new(
+        policy, &[cfg.image_size, cfg.image_size, cfg.channels]);
+    let metrics = Registry::new();
+
+    // Synthetic open-loop traffic from a client thread.
+    let image_len = cfg.image_size * cfg.image_size * cfg.channels;
+    let gap_us = args.usize_or("gap-us", 300)? as u64;
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(7);
+        let rxs: Vec<_> = (0..requests)
+            .map(|_| {
+                let img: Vec<f32> =
+                    (0..image_len).map(|_| rng.uniform()).collect();
+                let rx = client.submit(img);
+                std::thread::sleep(Duration::from_micros(gap_us));
+                rx
+            })
+            .collect();
+        drop(client);
+        rxs.into_iter().filter(|rx| rx.recv().is_ok()).count()
+    });
+
+    let served = server.run(backend.as_mut(), &params, &metrics,
+                            Some(requests))?;
+    let answered = producer.join().unwrap();
+    let lat = metrics.histogram("serve/latency_secs").unwrap();
+    let bs = metrics.histogram("serve/batch_size").unwrap();
+    let ex = metrics.histogram("serve/execute_secs").unwrap();
+    println!(
+        "served {served} requests ({answered} answered)\n\
+         latency  p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms\n\
+         batch    mean {:.1} (max {:.0})\n\
+         execute  p50 {:.2} ms per batch\n\
+         throughput {:.0} img/s",
+        lat.p50() * 1e3, lat.p95() * 1e3, lat.max() * 1e3,
+        bs.mean(), bs.max(),
+        ex.p50() * 1e3,
+        served as f64 / ex.samples().iter().sum::<f64>().max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (mut backend, cfg) = make_backend(args)?;
+    let dir = PathBuf::from(args.req_str("ckpt-dir")?);
+    let name = args.str_or("ckpt", "latest");
+    let params = ckpt::load_params(&dir, &format!("{name}.params"))?;
+    let data = dataset_for(&cfg, args.usize_or("seed", 0)? as u64);
+    let batch = args.usize_or("batch", 32)?;
+    let p1 = eval::precision_at_1(backend.as_mut(), &params, &data, 8, batch)?;
+    let fs = eval::fewshot_probe(backend.as_mut(), &params, &data, 10, 4,
+                                 batch)?;
+    println!("synth p@1: {p1:.4}\nfew-shot (10-shot probe): {fs:.4}");
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("list");
+    if id == "list" {
+        println!("available experiments:");
+        for (name, desc) in experiments::EXPERIMENTS {
+            println!("  {name:<22} {desc}");
+        }
+        return Ok(());
+    }
+    experiments::run(id, args)
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or(
+        "artifacts", Manifest::default_dir().to_str().unwrap()));
+    let manifest = Manifest::load(&dir)?;
+    println!("{:<22} {:>12} {:>8}  entries", "model", "params", "tokens");
+    for (name, m) in &manifest.models {
+        println!(
+            "{:<22} {:>12} {:>8}  {}",
+            name,
+            softmoe::util::human_count(m.param_count() as f64),
+            m.config.tokens(),
+            m.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_flops() -> Result<()> {
+    println!(
+        "{:<8} {:<16} {:>14} {:>16} {:>16}",
+        "size", "routing", "params", "fwd GFLOP/img", "train GFLOP/img"
+    );
+    for size in ["mu", "ti", "s", "m", "b"] {
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                    MoeType::ExpertsChoice] {
+            let cfg = ModelConfig::preset(size, moe)?;
+            println!(
+                "{:<8} {:<16} {:>14} {:>16.4} {:>16.4}",
+                size,
+                moe.name(),
+                softmoe::util::human_count(flops::param_count(&cfg)),
+                flops::forward_flops(&cfg) / 1e9,
+                flops::train_flops(&cfg) / 1e9
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,299 @@
+//! Metrics substrate: counters, gauges, histograms, CSV/JSON emitters.
+//!
+//! Every experiment and the serving path report through this module so
+//! the bench harness and EXPERIMENTS.md tables come from one code path.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::json::Value;
+use crate::util::{mean, percentile};
+
+/// Streaming histogram over f64 samples (latencies, losses, weights).
+#[derive(Debug, Default, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 0.99)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.4} p50={:.4} p95={:.4} max={:.4}",
+            self.len(), self.mean(), self.p50(), self.p95(), self.max()
+        )
+    }
+
+    /// Cumulative-mass curve: fraction of total mass covered by the top-k
+    /// samples, for k = 1..n (paper Fig. 27/28 machinery).
+    pub fn cumulative_mass(&self) -> Vec<f64> {
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total: f64 = v.iter().sum();
+        let mut acc = 0.0;
+        v.iter()
+            .map(|x| {
+                acc += x;
+                if total > 0.0 { acc / total } else { 0.0 }
+            })
+            .collect()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Thread-safe registry of named counters + histograms.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.inner.lock().unwrap().histograms.get(name).cloned()
+    }
+
+    /// Dump everything as a JSON object.
+    pub fn to_json(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let mut root = Value::obj();
+        let mut counters = Value::obj();
+        for (k, v) in &g.counters {
+            counters.set(k, Value::from(*v as usize));
+        }
+        let mut gauges = Value::obj();
+        for (k, v) in &g.gauges {
+            gauges.set(k, Value::from(*v));
+        }
+        let mut hists = Value::obj();
+        for (k, h) in &g.histograms {
+            hists.set(k, Value::from_pairs(vec![
+                ("n", Value::from(h.len())),
+                ("mean", Value::from(h.mean())),
+                ("p50", Value::from(h.p50())),
+                ("p95", Value::from(h.p95())),
+                ("p99", Value::from(h.p99())),
+                ("max", Value::from(h.max())),
+            ]));
+        }
+        root.set("counters", counters);
+        root.set("gauges", gauges);
+        root.set("histograms", hists);
+        root
+    }
+}
+
+/// A tabular result sink: rows keyed by column name, emitted as CSV and as
+/// a markdown table (the experiment reports in EXPERIMENTS.md).
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Self {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(),
+                   "row width {} != columns {}", cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(s, "|{}|", self.columns.iter()
+            .map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Convenience for formatting numeric cells.
+pub fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.p50() - 50.0).abs() <= 1.0);
+        assert!(h.p95() >= 94.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn cumulative_mass_is_monotone_to_one() {
+        let mut h = Histogram::new();
+        for v in [5.0, 1.0, 3.0, 1.0] {
+            h.record(v);
+        }
+        let cm = h.cumulative_mass();
+        assert_eq!(cm.len(), 4);
+        assert!(cm.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+        assert!((cm[3] - 1.0).abs() < 1e-9);
+        assert!((cm[0] - 0.5).abs() < 1e-9); // top sample = 5/10
+    }
+
+    #[test]
+    fn registry_concurrent() {
+        use std::sync::Arc;
+        let reg = Arc::new(Registry::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let reg = Arc::clone(&reg);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        reg.inc("requests", 1);
+                        reg.observe("latency", 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.counter("requests"), 8000);
+        assert_eq!(reg.histogram("latency").unwrap().len(), 8000);
+    }
+
+    #[test]
+    fn registry_json() {
+        let reg = Registry::new();
+        reg.inc("a", 2);
+        reg.set_gauge("g", 1.5);
+        reg.observe("h", 3.0);
+        let j = reg.to_json();
+        assert_eq!(j.get("counters").unwrap().get("a").unwrap().as_f64(),
+                   Some(2.0));
+        assert_eq!(j.get("gauges").unwrap().get("g").unwrap().as_f64(),
+                   Some(1.5));
+    }
+
+    #[test]
+    fn table_csv_markdown() {
+        let mut t = Table::new(&["model", "p@1"]);
+        t.row(vec!["soft_s".into(), "0.91".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("model,p@1\n"));
+        assert!(csv.contains("soft_s,0.91"));
+        let md = t.to_markdown();
+        assert!(md.contains("| model | p@1 |"));
+        assert!(md.contains("| soft_s | 0.91 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

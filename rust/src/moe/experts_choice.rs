@@ -1,0 +1,189 @@
+//! Experts Choice router (Zhou et al., 2022): each expert picks its top-C
+//! tokens by gate score. Perfectly balanced by construction; tokens may be
+//! picked by several experts or by none (dropped).
+//!
+//! Matches `ref.experts_choice_layer` semantics. Like Tokens Choice, the
+//! per-expert top-C selection is a real sort whose cost grows with expert
+//! count — the step-time contrast with Soft MoE in Fig. 6/7/20.
+
+use crate::moe::{ExpertParams, RoutingStats};
+use crate::tensor::{matmul, softmax_rows, Tensor};
+use crate::util::Rng;
+
+/// An Experts Choice MoE layer.
+#[derive(Clone, Debug)]
+pub struct ExpertsChoice {
+    /// Router weights (d, n).
+    pub wg: Tensor,
+    pub experts: ExpertParams,
+    pub capacity_factor: f32,
+}
+
+impl ExpertsChoice {
+    pub fn new(d: usize, n: usize, h: usize, rng: &mut Rng) -> Self {
+        Self {
+            wg: Tensor::randn(&[d, n], 1.0 / (d as f32).sqrt(), rng),
+            experts: ExpertParams::new(n, d, h, rng),
+            capacity_factor: 1.0,
+        }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.wg.shape[1]
+    }
+
+    pub fn capacity(&self, tokens: usize) -> usize {
+        let n = self.num_experts() as f32;
+        ((self.capacity_factor * tokens as f32 / n).ceil() as usize).max(1)
+    }
+
+    /// Per-expert top-C token selection: (expert -> [(token, gate)]).
+    pub fn route(&self, x: &Tensor) -> Vec<Vec<(usize, f32)>> {
+        let (t, _d) = x.dims2();
+        let n = self.num_experts();
+        let cap = self.capacity(t).min(t);
+        let gates = softmax_rows(&matmul(x, &self.wg)); // (t, n)
+
+        (0..n)
+            .map(|e| {
+                // Sort token indices by this expert's gate, descending.
+                let mut idx: Vec<usize> = (0..t).collect();
+                idx.sort_by(|&a, &b| {
+                    gates.data[b * n + e]
+                        .partial_cmp(&gates.data[a * n + e])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                idx[..cap]
+                    .iter()
+                    .map(|&tok| (tok, gates.data[tok * n + e]))
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with_stats(x).0
+    }
+
+    pub fn forward_with_stats(&self, x: &Tensor) -> (Tensor, RoutingStats) {
+        let (t, d) = x.dims2();
+        let n = self.num_experts();
+        let selection = self.route(x);
+        let cap = selection[0].len();
+
+        let mut y = Tensor::zeros(&[t, d]);
+        let mut expert_load = vec![0.0f64; n];
+        let mut token_weight = vec![0.0f64; t];
+        for (e, picks) in selection.iter().enumerate() {
+            // Gather the expert's buffer.
+            let mut buf = Tensor::zeros(&[cap, d]);
+            for (row, &(tok, _)) in picks.iter().enumerate() {
+                buf.data[row * d..(row + 1) * d].copy_from_slice(x.row(tok));
+            }
+            let out = self.experts.apply(e, &buf);
+            // Scatter-add weighted outputs.
+            for (row, &(tok, gate)) in picks.iter().enumerate() {
+                let src = &out.data[row * d..(row + 1) * d];
+                let dst = &mut y.data[tok * d..(tok + 1) * d];
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += gate * s;
+                }
+                expert_load[e] += 1.0;
+                token_weight[tok] += 1.0;
+            }
+        }
+
+        let dropped = token_weight.iter().filter(|&&w| w == 0.0).count();
+        let stats = RoutingStats {
+            dropped_frac: dropped as f64 / t as f64,
+            expert_load,
+            token_weight,
+            slot_importance: vec![],
+        };
+        (y, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(t: usize, d: usize, n: usize) -> (ExpertsChoice, Tensor) {
+        let mut rng = Rng::new(0);
+        let ec = ExpertsChoice::new(d, n, 2 * d, &mut rng);
+        let x = Tensor::randn(&[t, d], 1.0, &mut rng);
+        (ec, x)
+    }
+
+    #[test]
+    fn forward_shape_finite() {
+        let (ec, x) = layer(16, 8, 4);
+        let y = ec.forward(&x);
+        assert_eq!(y.shape, vec![16, 8]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn perfectly_balanced_by_construction() {
+        let (ec, x) = layer(16, 8, 4);
+        let (_, st) = ec.forward_with_stats(&x);
+        // Every expert processes exactly capacity tokens.
+        let cap = ec.capacity(16) as f64;
+        assert!(st.expert_load.iter().all(|&l| (l - cap).abs() < 1e-9));
+        assert!((st.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_processing_equals_c_times_tokens() {
+        let (mut ec, x) = layer(16, 8, 4);
+        for c in [0.5f32, 1.0, 2.0] {
+            ec.capacity_factor = c;
+            let (_, st) = ec.forward_with_stats(&x);
+            let total: f64 = st.token_weight.iter().sum();
+            let expected = ec.capacity(16) * 4;
+            assert!((total - expected as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn some_tokens_selected_multiple_times() {
+        // The paper's Figure 14 phenomenon: EC overlaps selections.
+        let (ec, x) = layer(32, 8, 8);
+        let (_, st) = ec.forward_with_stats(&x);
+        let max_w = st.token_weight.iter().cloned().fold(0.0, f64::max);
+        assert!(max_w >= 2.0, "expected some token chosen by >1 expert");
+    }
+
+    #[test]
+    fn dropping_decreases_with_capacity() {
+        let (mut ec, x) = layer(32, 8, 8);
+        let mut drops = Vec::new();
+        for c in [0.5f32, 1.0, 2.0] {
+            ec.capacity_factor = c;
+            let (_, st) = ec.forward_with_stats(&x);
+            drops.push(st.dropped_frac);
+        }
+        assert!(drops[0] >= drops[1] && drops[1] >= drops[2], "{drops:?}");
+    }
+
+    #[test]
+    fn selection_is_top_c_by_gate() {
+        let (ec, x) = layer(12, 8, 3);
+        let n = 3;
+        let gates = softmax_rows(&matmul(&x, &ec.wg));
+        let sel = ec.route(&x);
+        for (e, picks) in sel.iter().enumerate() {
+            let min_kept = picks
+                .iter()
+                .map(|&(_, g)| g)
+                .fold(f32::INFINITY, f32::min);
+            let kept: Vec<usize> = picks.iter().map(|p| p.0).collect();
+            for tok in 0..12 {
+                if !kept.contains(&tok) {
+                    assert!(gates.data[tok * n + e] <= min_kept + 1e-6);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Pure-Rust MoE routing: Soft MoE (the paper's contribution) plus the
+//! Tokens Choice and Experts Choice sparse baselines it is evaluated
+//! against, and the fixed-routing ablations of Table 3.
+//!
+//! These implementations power (a) the native inference engine (parity-
+//! tested against the HLO artifacts), and (b) the router-behaviour
+//! experiments — token dropping (Fig. 12–15), expert imbalance, step-time
+//! scaling with expert count (Fig. 6/7), group-size effects — at expert
+//! counts (up to 4096) far beyond what we AOT-compile.
+
+pub mod experts_choice;
+pub mod soft;
+pub mod stats;
+pub mod tokens_choice;
+
+pub use experts_choice::ExpertsChoice;
+pub use soft::SoftMoe;
+pub use stats::RoutingStats;
+pub use tokens_choice::TokensChoice;
+
+use crate::tensor::{gelu, matmul, Tensor};
+use crate::util::Rng;
+
+/// Per-expert MLP parameters: each expert i has w1 (d,h), b1 (h),
+/// w2 (h,d), b2 (d). Stored as one struct-of-vecs for cache-friendly
+/// per-expert access.
+#[derive(Clone, Debug)]
+pub struct ExpertParams {
+    pub w1: Vec<Tensor>,
+    pub b1: Vec<Vec<f32>>,
+    pub w2: Vec<Tensor>,
+    pub b2: Vec<Vec<f32>>,
+}
+
+impl ExpertParams {
+    pub fn new(n: usize, d: usize, h: usize, rng: &mut Rng) -> Self {
+        let mut w1 = Vec::with_capacity(n);
+        let mut b1 = Vec::with_capacity(n);
+        let mut w2 = Vec::with_capacity(n);
+        let mut b2 = Vec::with_capacity(n);
+        let s1 = 1.0 / (d as f32).sqrt();
+        let s2 = 1.0 / (h as f32).sqrt();
+        for i in 0..n {
+            let mut r = rng.fold_in(i as u64);
+            w1.push(Tensor::randn(&[d, h], s1, &mut r));
+            b1.push(vec![0.0; h]);
+            w2.push(Tensor::randn(&[h, d], s2, &mut r));
+            b2.push(vec![0.0; d]);
+        }
+        Self { w1, b1, w2, b2 }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.w1.len()
+    }
+
+    /// Apply expert `i`'s MLP to a (rows, d) tensor.
+    pub fn apply(&self, i: usize, x: &Tensor) -> Tensor {
+        let h = matmul(x, &self.w1[i]).add_bias(&self.b1[i]).map(gelu);
+        matmul(&h, &self.w2[i]).add_bias(&self.b2[i])
+    }
+
+    /// Parameter count (for FLOP/param accounting).
+    pub fn param_count(&self) -> usize {
+        self.w1.iter().map(|t| t.numel()).sum::<usize>()
+            + self.b1.iter().map(|v| v.len()).sum::<usize>()
+            + self.w2.iter().map(|t| t.numel()).sum::<usize>()
+            + self.b2.iter().map(|v| v.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_apply_shapes() {
+        let mut rng = Rng::new(0);
+        let ep = ExpertParams::new(3, 8, 16, &mut rng);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let y = ep.apply(1, &x);
+        assert_eq!(y.shape, vec![5, 8]);
+    }
+
+    #[test]
+    fn experts_differ() {
+        let mut rng = Rng::new(1);
+        let ep = ExpertParams::new(2, 4, 8, &mut rng);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let y0 = ep.apply(0, &x);
+        let y1 = ep.apply(1, &x);
+        assert!(y0.max_diff(&y1) > 1e-3);
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Rng::new(2);
+        let ep = ExpertParams::new(4, 8, 16, &mut rng);
+        assert_eq!(ep.param_count(), 4 * (8 * 16 + 16 + 16 * 8 + 8));
+    }
+}

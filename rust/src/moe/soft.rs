@@ -1,0 +1,247 @@
+//! The Soft MoE layer (paper Section 2.1, Algorithm 1 + 2) in pure Rust.
+//!
+//! Per sequence X (m, d):
+//!   logits = l2norm(X) · (scale · l2norm(Φ))        (m, s), s = n·p
+//!   D = softmax over tokens (cols)                   dispatch weights
+//!   C = softmax over slots (rows)                    combine weights
+//!   X̃ = Dᵀ X, Ỹ_i = f_{⌊i/p⌋}(X̃_i), Y = C Ỹ
+//!
+//! The layer never sorts and never drops: cost is set by the slot count,
+//! not the expert count — the property behind Fig. 6-right, which the
+//! `bench_step_time` bench reproduces against the sparse routers.
+
+use crate::config::MixMode;
+use crate::moe::{ExpertParams, RoutingStats};
+use crate::tensor::{
+    l2_normalize_cols, l2_normalize_rows, matmul, matmul_tn, softmax_cols,
+    softmax_rows, Tensor,
+};
+use crate::util::Rng;
+
+/// A Soft MoE layer instance.
+#[derive(Clone, Debug)]
+pub struct SoftMoe {
+    /// Slot parameters Φ, shape (d, n·p).
+    pub phi: Tensor,
+    /// Trainable scale on the normalized Φ (§2.3).
+    pub scale: f32,
+    pub experts: ExpertParams,
+    pub slots_per_expert: usize,
+    pub normalize: bool,
+    pub dispatch_mode: MixMode,
+    pub combine_mode: MixMode,
+}
+
+/// Forward output with optional inspection data.
+#[derive(Debug)]
+pub struct SoftMoeOutput {
+    pub y: Tensor,
+    /// Dispatch weights D (m, s) — convex over tokens per slot.
+    pub dispatch: Tensor,
+    /// Combine weights C (m, s) — convex over slots per token.
+    pub combine: Tensor,
+}
+
+impl SoftMoe {
+    pub fn new(d: usize, n: usize, p: usize, h: usize, rng: &mut Rng) -> Self {
+        Self {
+            phi: Tensor::randn(&[d, n * p], 1.0 / (d as f32).sqrt(), rng),
+            scale: 1.0,
+            experts: ExpertParams::new(n, d, h, rng),
+            slots_per_expert: p,
+            normalize: true,
+            dispatch_mode: MixMode::Soft,
+            combine_mode: MixMode::Soft,
+        }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.experts.num_experts()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.phi.shape[1]
+    }
+
+    /// Routing logits (m, s) for tokens x (m, d).
+    pub fn logits(&self, x: &Tensor) -> Tensor {
+        if self.normalize {
+            let xn = l2_normalize_rows(x);
+            let phi_n = l2_normalize_cols(&self.phi).scale(self.scale);
+            matmul(&xn, &phi_n)
+        } else {
+            matmul(x, &self.phi)
+        }
+    }
+
+    fn mix_weights(&self, logits: &Tensor, mode: MixMode, dispatch: bool)
+        -> Tensor {
+        let (m, s) = logits.dims2();
+        match mode {
+            MixMode::Soft => {
+                if dispatch {
+                    softmax_cols(logits)
+                } else {
+                    softmax_rows(logits)
+                }
+            }
+            MixMode::Uniform => {
+                let v = if dispatch { 1.0 / m as f32 } else { 1.0 / s as f32 };
+                Tensor::full(&[m, s], v)
+            }
+            MixMode::Identity => {
+                assert_eq!(m, s, "identity routing requires m == slots");
+                let mut t = Tensor::zeros(&[m, s]);
+                for i in 0..m {
+                    t.data[i * s + i] = 1.0;
+                }
+                t
+            }
+        }
+    }
+
+    /// Forward one sequence x (m, d) -> (m, d) with inspection weights.
+    pub fn forward_full(&self, x: &Tensor) -> SoftMoeOutput {
+        let logits = self.logits(x);
+        let dispatch = self.mix_weights(&logits, self.dispatch_mode, true);
+        let combine = self.mix_weights(&logits, self.combine_mode, false);
+
+        // X̃ = Dᵀ X : (s, d)
+        let xs = matmul_tn(&dispatch, x);
+        // Per-expert MLP on its slot group.
+        let p = self.slots_per_expert;
+        let n = self.num_experts();
+        let d = x.shape[1];
+        let mut ys = Tensor::zeros(&[n * p, d]);
+        for e in 0..n {
+            let xe = xs.rows(e * p, (e + 1) * p);
+            let ye = self.experts.apply(e, &xe);
+            ys.data[e * p * d..(e + 1) * p * d].copy_from_slice(&ye.data);
+        }
+        // Y = C Ỹ : (m, d)
+        let y = matmul(&combine, &ys);
+        SoftMoeOutput { y, dispatch, combine }
+    }
+
+    /// Forward without keeping the weights.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_full(x).y
+    }
+
+    /// Routing statistics for the inspection experiments (Fig. 9/27/28).
+    pub fn stats(&self, x: &Tensor) -> RoutingStats {
+        let out = self.forward_full(x);
+        RoutingStats::from_soft(&out.dispatch, &out.combine,
+                                self.slots_per_expert)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(m: usize, d: usize, n: usize, p: usize) -> (SoftMoe, Tensor) {
+        let mut rng = Rng::new(0);
+        let sm = SoftMoe::new(d, n, p, 2 * d, &mut rng);
+        let x = Tensor::randn(&[m, d], 1.0, &mut rng);
+        (sm, x)
+    }
+
+    #[test]
+    fn forward_shape() {
+        let (sm, x) = layer(10, 8, 4, 2);
+        let y = sm.forward(&x);
+        assert_eq!(y.shape, vec![10, 8]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dispatch_convex_over_tokens() {
+        let (sm, x) = layer(12, 8, 3, 2);
+        let out = sm.forward_full(&x);
+        let (m, s) = out.dispatch.dims2();
+        assert_eq!((m, s), (12, 6));
+        for j in 0..s {
+            let col: f32 = (0..m).map(|i| out.dispatch.data[i * s + j]).sum();
+            assert!((col - 1.0).abs() < 1e-5);
+        }
+        // No dropping: every weight strictly positive.
+        assert!(out.dispatch.data.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn combine_convex_over_slots() {
+        let (sm, x) = layer(12, 8, 3, 2);
+        let out = sm.forward_full(&x);
+        let (m, s) = out.combine.dims2();
+        for i in 0..m {
+            let row: f32 = out.combine.data[i * s..(i + 1) * s].iter().sum();
+            assert!((row - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalized_logits_bounded_by_scale() {
+        // §2.3: |logits| <= scale regardless of input magnitude/dim.
+        let mut rng = Rng::new(1);
+        let mut sm = SoftMoe::new(64, 4, 1, 16, &mut rng);
+        sm.scale = 2.0;
+        let x = Tensor::randn(&[6, 64], 100.0, &mut rng);
+        let logits = sm.logits(&x);
+        assert!(logits.max_abs() <= 2.0 + 1e-4);
+        sm.normalize = false;
+        let raw = sm.logits(&x);
+        assert!(raw.max_abs() > 2.0);
+    }
+
+    #[test]
+    fn per_sequence_deterministic() {
+        let (sm, x) = layer(8, 8, 2, 4);
+        let y1 = sm.forward(&x);
+        let y2 = sm.forward(&x);
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    fn identity_mode_routes_token_i_to_slot_i() {
+        let mut rng = Rng::new(2);
+        let mut sm = SoftMoe::new(8, 4, 2, 16, &mut rng); // 8 slots == 8 tokens
+        sm.dispatch_mode = MixMode::Identity;
+        sm.combine_mode = MixMode::Identity;
+        let x = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let y = sm.forward(&x);
+        // token 0,1 -> expert 0; manual check of token 0:
+        let x0 = x.rows(0, 1);
+        let manual = sm.experts.apply(0, &x0);
+        assert!(y.rows(0, 1).max_diff(&manual) < 1e-5);
+        // token 7 -> expert 3, slot 7
+        let x7 = x.rows(7, 8);
+        let manual7 = sm.experts.apply(3, &x7);
+        assert!(y.rows(7, 8).max_diff(&manual7) < 1e-5);
+    }
+
+    #[test]
+    fn uniform_mode_all_outputs_equal() {
+        let mut rng = Rng::new(3);
+        let mut sm = SoftMoe::new(8, 2, 2, 16, &mut rng);
+        sm.dispatch_mode = MixMode::Uniform;
+        sm.combine_mode = MixMode::Uniform;
+        let x = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let y = sm.forward(&x);
+        for i in 1..6 {
+            assert!(y.rows(0, 1).max_diff(&y.rows(i, i + 1)) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cost_independent_of_expert_count() {
+        // Same total slots, different expert counts: outputs differ but both
+        // are valid; step-time claims are measured in benches.
+        let mut rng = Rng::new(4);
+        let few = SoftMoe::new(16, 2, 8, 32, &mut rng);
+        let many = SoftMoe::new(16, 16, 1, 32, &mut rng);
+        assert_eq!(few.total_slots(), many.total_slots());
+        let x = Tensor::randn(&[12, 16], 1.0, &mut rng);
+        assert_eq!(few.forward(&x).shape, many.forward(&x).shape);
+    }
+}

@@ -1,0 +1,177 @@
+//! Routing statistics shared by all routers — the raw material for the
+//! dropping experiments (Fig. 12–15), expert-importance inspection
+//! (Fig. 9) and cumulative-mass curves (Fig. 27/28).
+
+use crate::tensor::Tensor;
+
+/// Statistics of one routing decision over a group of tokens.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingStats {
+    /// Fraction of tokens processed by no expert (0 for Soft MoE).
+    pub dropped_frac: f64,
+    /// Tokens (or total dispatch weight) handled per expert.
+    pub expert_load: Vec<f64>,
+    /// Per-token total dispatch weight (Soft MoE: sum over slots of D;
+    /// sparse: number of experts that processed the token).
+    pub token_weight: Vec<f64>,
+    /// Per-slot combine importance, summed over tokens (Fig. 9 middle).
+    pub slot_importance: Vec<f64>,
+}
+
+impl RoutingStats {
+    /// Build from Soft MoE dispatch (m, s) and combine (m, s) weights.
+    pub fn from_soft(dispatch: &Tensor, combine: &Tensor, p: usize) -> Self {
+        let (m, s) = dispatch.dims2();
+        let n = s / p;
+        let mut token_weight = vec![0.0f64; m];
+        for i in 0..m {
+            token_weight[i] = dispatch.row(i).iter().map(|&v| v as f64).sum();
+        }
+        let mut expert_load = vec![0.0f64; n];
+        for i in 0..m {
+            for j in 0..s {
+                expert_load[j / p] += dispatch.data[i * s + j] as f64;
+            }
+        }
+        let mut slot_importance = vec![0.0f64; s];
+        for i in 0..m {
+            for j in 0..s {
+                slot_importance[j] += combine.data[i * s + j] as f64;
+            }
+        }
+        Self {
+            dropped_frac: 0.0, // Soft MoE never drops (weights > 0)
+            expert_load,
+            token_weight,
+            slot_importance,
+        }
+    }
+
+    /// Load-imbalance ratio: max/mean expert load (1.0 = perfectly even).
+    pub fn imbalance(&self) -> f64 {
+        if self.expert_load.is_empty() {
+            return 1.0;
+        }
+        let mx = self.expert_load.iter().cloned().fold(0.0, f64::max);
+        let mean: f64 =
+            self.expert_load.iter().sum::<f64>() / self.expert_load.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            mx / mean
+        }
+    }
+
+    /// Ratio of the most- to least-important slot (Fig. 9 middle: "some
+    /// experts impact outputs 3–14x more than others").
+    pub fn importance_spread(&self) -> f64 {
+        let mx = self.slot_importance.iter().cloned().fold(0.0, f64::max);
+        let mn = self
+            .slot_importance
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        if mn <= 0.0 {
+            f64::INFINITY
+        } else {
+            mx / mn
+        }
+    }
+
+    /// Merge (sum) another group's stats into this one.
+    pub fn merge(&mut self, other: &RoutingStats, groups_so_far: usize) {
+        let g = groups_so_far as f64;
+        self.dropped_frac =
+            (self.dropped_frac * g + other.dropped_frac) / (g + 1.0);
+        if self.expert_load.len() == other.expert_load.len() {
+            for (a, b) in self.expert_load.iter_mut().zip(&other.expert_load) {
+                *a += b;
+            }
+        }
+        if self.slot_importance.len() == other.slot_importance.len() {
+            for (a, b) in
+                self.slot_importance.iter_mut().zip(&other.slot_importance)
+            {
+                *a += b;
+            }
+        }
+        self.token_weight.extend_from_slice(&other.token_weight);
+    }
+}
+
+/// How many of the highest-weight entries are needed to reach `target`
+/// cumulative fraction of the row's mass (Fig. 9-right / Fig. 27 metric).
+pub fn tokens_to_mass(weights: &[f32], target: f64) -> usize {
+    let mut v: Vec<f64> = weights.iter().map(|&x| x as f64).collect();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = v.iter().sum();
+    if total <= 0.0 {
+        return v.len();
+    }
+    let mut acc = 0.0;
+    for (i, x) in v.iter().enumerate() {
+        acc += x;
+        if acc / total >= target - 1e-7 {
+            return i + 1;
+        }
+    }
+    v.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_stats_basics() {
+        // 2 tokens, 2 slots (2 experts, p=1), uniform weights.
+        let d = Tensor::from_vec(&[2, 2], vec![0.5, 0.5, 0.5, 0.5]);
+        let c = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.2, 0.8]);
+        let st = RoutingStats::from_soft(&d, &c, 1);
+        assert_eq!(st.dropped_frac, 0.0);
+        assert_eq!(st.token_weight, vec![1.0, 1.0]);
+        assert_eq!(st.expert_load, vec![1.0, 1.0]);
+        assert!((st.slot_importance[0] - 1.1).abs() < 1e-6);
+        assert!((st.imbalance() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let st = RoutingStats {
+            expert_load: vec![3.0, 1.0, 0.0, 0.0],
+            ..Default::default()
+        };
+        assert!((st.imbalance() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tokens_to_mass_counts() {
+        let w = [0.5f32, 0.3, 0.1, 0.1];
+        assert_eq!(tokens_to_mass(&w, 0.5), 1);
+        assert_eq!(tokens_to_mass(&w, 0.8), 2);
+        assert_eq!(tokens_to_mass(&w, 1.0), 4);
+        // uniform: need all
+        let u = [0.25f32; 4];
+        assert_eq!(tokens_to_mass(&u, 0.99), 4);
+    }
+
+    #[test]
+    fn merge_averages_drop_and_sums_load() {
+        let mut a = RoutingStats {
+            dropped_frac: 0.2,
+            expert_load: vec![1.0, 1.0],
+            slot_importance: vec![1.0, 1.0],
+            token_weight: vec![1.0],
+        };
+        let b = RoutingStats {
+            dropped_frac: 0.4,
+            expert_load: vec![2.0, 0.0],
+            slot_importance: vec![0.5, 0.5],
+            token_weight: vec![2.0],
+        };
+        a.merge(&b, 1);
+        assert!((a.dropped_frac - 0.3).abs() < 1e-9);
+        assert_eq!(a.expert_load, vec![3.0, 1.0]);
+        assert_eq!(a.token_weight.len(), 2);
+    }
+}

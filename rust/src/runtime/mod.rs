@@ -1,0 +1,96 @@
+//! Runtime: execution backends for the AOT'd model.
+//!
+//! * [`pjrt::PjrtRuntime`] — the production path. Loads the HLO-text
+//!   artifacts emitted by `python/compile/aot.py`, compiles them on the
+//!   PJRT CPU client (`xla` crate), and exposes typed `init` / `forward` /
+//!   `train_step` / `inspect` calls driven entirely by the manifest.
+//! * [`native::NativeRuntime`] — the pure-Rust engine ([`crate::nn`]),
+//!   parity-tested against PJRT, used for wide experiment sweeps.
+//!
+//! Both implement [`Backend`], so the trainer, server and experiment
+//! drivers are backend-agnostic.
+
+pub mod native;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::nn::ParamStore;
+use crate::tensor::Tensor;
+
+/// Model state carried through training: parameters + Adam moments + step.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: ParamStore,
+    pub adam_m: ParamStore,
+    pub adam_v: ParamStore,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn fresh(params: ParamStore) -> Self {
+        let zeros = |p: &ParamStore| -> ParamStore {
+            p.iter()
+                .map(|(k, v)| (k.clone(), Tensor::zeros(&v.shape)))
+                .collect()
+        };
+        Self {
+            adam_m: zeros(&params),
+            adam_v: zeros(&params),
+            params,
+            step: 0,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.values().map(|t| t.numel()).sum()
+    }
+}
+
+/// Result of one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// A model execution backend: everything the coordinator needs.
+pub trait Backend {
+    /// Human-readable name ("pjrt:soft_s" / "native:soft_s").
+    fn name(&self) -> String;
+
+    /// Initialize parameters from a seed.
+    fn init(&mut self, seed: i32) -> Result<ParamStore>;
+
+    /// Batched forward: images (B, H, W, C) -> (logits (B, classes),
+    /// features (B, d)). The backend may require B to match a compiled
+    /// batch size (see `PjrtRuntime::fwd_batches`).
+    fn forward(&mut self, params: &ParamStore, images: &Tensor)
+        -> Result<(Tensor, Tensor)>;
+
+    /// One optimizer step (Adam, lr supplied by the caller's schedule).
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<StepOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn train_state_fresh_zeroes_moments() {
+        let mut p = ParamStore::new();
+        p.insert("w".into(), Tensor::full(&[2, 2], 3.0));
+        let st = TrainState::fresh(p);
+        assert_eq!(st.step, 0);
+        assert_eq!(st.adam_m["w"].data, vec![0.0; 4]);
+        assert_eq!(st.adam_v["w"].shape, vec![2, 2]);
+        assert_eq!(st.param_count(), 4);
+    }
+}

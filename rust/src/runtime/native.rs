@@ -1,0 +1,172 @@
+//! Native backend: the pure-Rust engine behind the [`Backend`] trait.
+//!
+//! Used for the wide experiment sweeps (configurations that were never
+//! AOT-compiled) and as the parity reference for the PJRT path. Training
+//! uses the hand-derived backward pass in [`crate::nn::vit`] plus the
+//! in-Rust Adam below (same hyperparameters as the JAX train_step:
+//! b1=0.9, b2=0.999, eps=1e-8, bias correction on).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::nn::{ParamStore, VitModel};
+use crate::runtime::{Backend, StepOut, TrainState};
+use crate::tensor::Tensor;
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Apply one Adam update in place. `step` must already be incremented
+/// (matches the JAX `train_step`, which increments before the update).
+pub fn adam_update(
+    state: &mut TrainState,
+    grads: &crate::nn::Grads,
+    lr: f32,
+) {
+    state.step += 1;
+    let bc1 = 1.0 - ADAM_B1.powi(state.step);
+    let bc2 = 1.0 - ADAM_B2.powi(state.step);
+    for (k, p) in state.params.iter_mut() {
+        let g = match grads.get(k) {
+            Some(g) => g,
+            None => continue,
+        };
+        let m = state.adam_m.get_mut(k).expect("moment m");
+        let v = state.adam_v.get_mut(k).expect("moment v");
+        for i in 0..p.data.len() {
+            let gi = g.data[i];
+            m.data[i] = ADAM_B1 * m.data[i] + (1.0 - ADAM_B1) * gi;
+            v.data[i] = ADAM_B2 * v.data[i] + (1.0 - ADAM_B2) * gi * gi;
+            let mhat = m.data[i] / bc1;
+            let vhat = v.data[i] / bc2;
+            p.data[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+    }
+}
+
+/// Pure-Rust backend over [`VitModel`].
+pub struct NativeRuntime {
+    pub model: VitModel,
+    label: String,
+}
+
+impl NativeRuntime {
+    pub fn new(cfg: ModelConfig) -> Self {
+        let label = format!("{}_{}d{}", cfg.moe_type.name(), cfg.num_experts,
+                            cfg.dim);
+        Self { model: VitModel::new(cfg), label }
+    }
+}
+
+impl Backend for NativeRuntime {
+    fn name(&self) -> String {
+        format!("native:{}", self.label)
+    }
+
+    fn init(&mut self, seed: i32) -> Result<ParamStore> {
+        Ok(self.model.init(seed as u64))
+    }
+
+    fn forward(&mut self, params: &ParamStore, images: &Tensor)
+        -> Result<(Tensor, Tensor)> {
+        let out = self.model.forward(params, images);
+        Ok((out.logits, out.features))
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<StepOut> {
+        let labels_usize: Vec<usize> =
+            labels.iter().map(|&l| l as usize).collect();
+        let (loss, acc, grads) =
+            self.model.loss_and_grads(&state.params, images, &labels_usize);
+        adam_update(state, &grads, lr);
+        Ok(StepOut { loss, accuracy: acc })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MoeType;
+    use crate::util::Rng;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            image_size: 8,
+            patch_size: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_dim: 24,
+            num_classes: 4,
+            num_experts: 2,
+            slots_per_expert: 2,
+            expert_hidden: 24,
+            moe_layers: vec![1],
+            moe_type: MoeType::Soft,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn images(b: usize, cfg: &ModelConfig, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n = b * cfg.image_size * cfg.image_size * cfg.channels;
+        Tensor::from_vec(
+            &[b, cfg.image_size, cfg.image_size, cfg.channels],
+            (0..n).map(|_| rng.uniform()).collect(),
+        )
+    }
+
+    #[test]
+    fn native_training_reduces_loss() {
+        let cfg = tiny();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(0).unwrap();
+        let mut state = TrainState::fresh(params);
+        let imgs = images(4, &cfg, 1);
+        let labels = [0i32, 1, 2, 3];
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..25 {
+            let out = be.train_step(&mut state, &imgs, &labels, 3e-3).unwrap();
+            first.get_or_insert(out.loss);
+            last = out.loss;
+        }
+        assert!(last < first.unwrap() * 0.8,
+                "loss {:?} -> {last}", first.unwrap());
+        assert_eq!(state.step, 25);
+    }
+
+    #[test]
+    fn adam_moves_toward_minimum() {
+        // Minimize (w - 3)^2 with Adam: w must approach 3.
+        let mut p = ParamStore::new();
+        p.insert("w".into(), Tensor::scalar(0.0));
+        let mut state = TrainState::fresh(p);
+        for _ in 0..800 {
+            let w = state.params["w"].data[0];
+            let mut grads = crate::nn::Grads::new();
+            grads.insert("w".into(), Tensor::scalar(2.0 * (w - 3.0)));
+            adam_update(&mut state, &grads, 0.05);
+        }
+        let w = state.params["w"].data[0];
+        assert!((w - 3.0).abs() < 0.05, "w={w}");
+    }
+
+    #[test]
+    fn forward_matches_vitmodel() {
+        let cfg = tiny();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(7).unwrap();
+        let imgs = images(2, &cfg, 8);
+        let (logits, _) = be.forward(&params, &imgs).unwrap();
+        let direct = VitModel::new(cfg).forward(&params, &imgs);
+        assert!(logits.max_diff(&direct.logits) < 1e-6);
+    }
+}

@@ -1,0 +1,265 @@
+//! PJRT backend: load HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the pattern validated in `/opt/xla-example/load_hlo`:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects in proto form). All entry points were lowered with
+//! `return_tuple=True`, so every result is one tuple literal that we
+//! decompose according to the manifest.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Entry, Manifest, ModelManifest};
+use crate::nn::ParamStore;
+use crate::runtime::{Backend, StepOut, TrainState};
+use crate::tensor::Tensor;
+
+/// Tensor -> xla Literal (f32).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // Scalars: vec1 gives rank-1 [1]; reshape to rank-0.
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// xla Literal -> Tensor (expects f32 data; converts if needed).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let lit = if shape.ty() == xla::ElementType::F32 {
+        lit.clone()
+    } else {
+        lit.convert(xla::ElementType::F32.primitive_type())?
+    };
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+fn i32_literal(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+fn f32_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// One compiled entry point.
+struct CompiledEntry {
+    entry: Entry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT-backed model runtime for one manifest model.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub model: ModelManifest,
+    manifest_dir: std::path::PathBuf,
+    compiled: BTreeMap<String, CompiledEntry>,
+}
+
+impl PjrtRuntime {
+    /// Create a runtime for `model_name`, compiling nothing yet (entries
+    /// compile lazily on first use and are cached).
+    pub fn new(manifest: &Manifest, model_name: &str) -> Result<Self> {
+        let model = manifest.model(model_name)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            model,
+            manifest_dir: manifest.dir.clone(),
+            compiled: BTreeMap::new(),
+        })
+    }
+
+    /// Compile (or fetch the cached) entry point.
+    fn entry(&mut self, name: &str) -> Result<&CompiledEntry> {
+        if !self.compiled.contains_key(name) {
+            let entry = self.model.entry(name)?.clone();
+            let path = self.manifest_dir.join(&entry.file);
+            let path_str = path
+                .to_str()
+                .context("artifact path is not valid UTF-8")?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled
+                .insert(name.to_string(), CompiledEntry { entry, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an entry point with positional literals; returns the
+    /// decomposed output tuple.
+    fn execute(&mut self, name: &str, inputs: &[xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        let ce = self.entry(name)?;
+        if inputs.len() != ce.entry.inputs.len() {
+            bail!(
+                "entry {name}: expected {} inputs, got {}",
+                ce.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = ce
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing {name} tuple: {e:?}"))?;
+        if outs.len() != ce.entry.outputs.len() {
+            bail!(
+                "entry {name}: manifest declares {} outputs, got {}",
+                ce.entry.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Pack the parameter store in manifest order.
+    fn pack_params(&self, params: &ParamStore) -> Result<Vec<xla::Literal>> {
+        self.model
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let t = params
+                    .get(name)
+                    .with_context(|| format!("missing param {name}"))?;
+                if &t.shape != shape
+                    && !(t.shape.is_empty() && shape.is_empty())
+                {
+                    bail!("param {name}: shape {:?} != manifest {:?}",
+                          t.shape, shape);
+                }
+                tensor_to_literal(t)
+            })
+            .collect()
+    }
+
+    fn unpack_params(&self, outs: &[xla::Literal]) -> Result<ParamStore> {
+        let mut store = ParamStore::new();
+        for ((name, shape), lit) in self.model.params.iter().zip(outs) {
+            let mut t = literal_to_tensor(lit)?;
+            t.shape = shape.clone(); // normalize rank-0 vs [1] ambiguity
+            if t.numel() != shape.iter().product::<usize>() {
+                bail!("param {name}: wrong element count");
+            }
+            store.insert(name.clone(), t);
+        }
+        Ok(store)
+    }
+
+    /// Compiled forward batch sizes, ascending.
+    pub fn fwd_batches(&self) -> Vec<usize> {
+        self.model.fwd_batches()
+    }
+
+    /// Forward through the Pallas-kernel variant (soft models only).
+    pub fn forward_pallas(&mut self, params: &ParamStore, images: &Tensor)
+        -> Result<(Tensor, Tensor)> {
+        let b = images.shape[0];
+        let name = format!("fwd_pallas_b{b}");
+        self.forward_entry(&name, params, images)
+    }
+
+    fn forward_entry(&mut self, entry: &str, params: &ParamStore,
+                     images: &Tensor) -> Result<(Tensor, Tensor)> {
+        let mut inputs = self.pack_params(params)?;
+        inputs.push(tensor_to_literal(images)?);
+        let outs = self.execute(entry, &inputs)?;
+        Ok((literal_to_tensor(&outs[0])?, literal_to_tensor(&outs[1])?))
+    }
+
+    /// Run the `inspect` entry: returns (logits, features, named routing
+    /// weights per MoE layer).
+    pub fn inspect(&mut self, params: &ParamStore, images: &Tensor)
+        -> Result<(Tensor, Tensor, BTreeMap<String, Tensor>)> {
+        let mut inputs = self.pack_params(params)?;
+        inputs.push(tensor_to_literal(images)?);
+        let outs = self.execute("inspect", &inputs)?;
+        let entry = self.model.entry("inspect")?;
+        let logits = literal_to_tensor(&outs[0])?;
+        let feats = literal_to_tensor(&outs[1])?;
+        let mut weights = BTreeMap::new();
+        for (spec, lit) in entry.outputs.iter().zip(&outs).skip(2) {
+            weights.insert(spec.name.clone(), literal_to_tensor(lit)?);
+        }
+        Ok((logits, feats, weights))
+    }
+}
+
+impl Backend for PjrtRuntime {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.model.name)
+    }
+
+    fn init(&mut self, seed: i32) -> Result<ParamStore> {
+        let outs = self.execute("init", &[i32_literal(seed)])?;
+        self.unpack_params(&outs)
+    }
+
+    fn forward(&mut self, params: &ParamStore, images: &Tensor)
+        -> Result<(Tensor, Tensor)> {
+        let b = images.shape[0];
+        let name = format!("fwd_b{b}");
+        if self.model.entries.get(&name).is_none() {
+            bail!(
+                "no compiled forward for batch {b} (have {:?}); the serving \
+                 batcher must pad to a compiled size",
+                self.fwd_batches()
+            );
+        }
+        self.forward_entry(&name, params, images)
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<StepOut> {
+        let mut inputs = self.pack_params(&state.params)?;
+        inputs.extend(self.pack_params(&state.adam_m)?);
+        inputs.extend(self.pack_params(&state.adam_v)?);
+        inputs.push(i32_literal(state.step));
+        inputs.push(tensor_to_literal(images)?);
+        inputs.push(
+            xla::Literal::vec1(labels)
+                .reshape(&[labels.len() as i64])?,
+        );
+        inputs.push(f32_literal(lr));
+        let outs = self.execute("train", &inputs)?;
+
+        let np = self.model.params.len();
+        state.params = self.unpack_params(&outs[..np])?;
+        state.adam_m = self.unpack_params(&outs[np..2 * np])?;
+        state.adam_v = self.unpack_params(&outs[2 * np..3 * np])?;
+        state.step = outs[3 * np]
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("step: {e:?}"))?[0];
+        let loss = outs[3 * np + 1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?[0];
+        let acc = outs[3 * np + 2]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("acc: {e:?}"))?[0];
+        Ok(StepOut { loss, accuracy: acc })
+    }
+}

@@ -1,0 +1,368 @@
+//! Inference serving: request queue → dynamic batcher → model executor.
+//!
+//! This is the L3 coordination piece for the paper's inference story
+//! (§3.4.2, Table 1: "Soft MoE optimized for inference"): the server
+//! demonstrates that a Soft MoE with a small backbone serves at the
+//! latency of the small model while carrying MoE capacity — and, unlike
+//! sparse routers, its predictions are *per-sequence deterministic*, so
+//! batching decisions can never change a result (§2.2 "no batch-effects",
+//! verified in `determinism_under_batching`).
+//!
+//! Architecture (single-process, channel-based):
+//!   clients ──mpsc──► batcher (size/deadline policy, pads to a compiled
+//!   batch size) ──► executor (Backend::forward) ──► per-request replies.
+//!
+//! The executor runs on the thread that owns the `Backend` (PJRT handles
+//! are not `Send`); clients are any number of threads holding a
+//! [`Client`].
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::Registry;
+use crate::nn::ParamStore;
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+/// One inference request: an image (H*W*C floats) and a reply channel.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// Time from submit to reply send.
+    pub latency: Duration,
+    /// Size of the batch this request rode in (observability).
+    pub batch_size: usize,
+}
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap on requests per executed batch.
+    pub max_batch: usize,
+    /// How long the batcher waits for more requests once it has one.
+    pub max_delay: Duration,
+    /// Compiled batch sizes (ascending); actual batches are padded up to
+    /// the smallest compiled size ≥ the collected count.
+    pub compiled_sizes: Vec<usize>,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+            compiled_sizes: vec![1, 8, 32],
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Smallest compiled size that fits `n` requests.
+    pub fn padded_size(&self, n: usize) -> usize {
+        for &s in &self.compiled_sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        *self.compiled_sizes.last().expect("no compiled sizes")
+    }
+}
+
+/// Client handle: submit images, receive replies.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Request>,
+}
+
+impl Client {
+    /// Submit one image; returns the receiver for the response.
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            image,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        };
+        // If the server is gone the receiver will simply disconnect.
+        let _ = self.tx.send(req);
+        reply_rx
+    }
+}
+
+/// The server: owns the request receiver; `run` drives the batch loop on
+/// the calling thread (which must own the backend).
+pub struct Server {
+    rx: mpsc::Receiver<Request>,
+    pub policy: BatchPolicy,
+    image_elems: usize,
+    image_shape: Vec<usize>,
+}
+
+impl Server {
+    /// Create a server + client pair for images of shape (H, W, C).
+    pub fn new(policy: BatchPolicy, image_shape: &[usize]) -> (Self, Client) {
+        let (tx, rx) = mpsc::channel();
+        let server = Self {
+            rx,
+            policy,
+            image_elems: image_shape.iter().product(),
+            image_shape: image_shape.to_vec(),
+        };
+        (server, Client { tx })
+    }
+
+    /// Collect one batch according to the policy. Blocks for the first
+    /// request; returns `None` when all clients disconnected.
+    fn collect(&self) -> Option<Vec<Request>> {
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_delay;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+
+    /// Serve until all clients disconnect (or `max_requests` served).
+    /// Runs on the caller's thread; `backend` executes every batch.
+    pub fn run(
+        &self,
+        backend: &mut dyn Backend,
+        params: &ParamStore,
+        metrics: &Registry,
+        max_requests: Option<usize>,
+    ) -> Result<usize> {
+        let mut served = 0usize;
+        // Reusable padded input buffer: zero allocations in the hot loop
+        // beyond what the backend itself does.
+        let mut buf: Vec<f32> = Vec::new();
+        while let Some(batch) = self.collect() {
+            let n = batch.len();
+            let padded = self.policy.padded_size(n);
+            buf.clear();
+            buf.resize(padded * self.image_elems, 0.0);
+            for (i, req) in batch.iter().enumerate() {
+                buf[i * self.image_elems..(i + 1) * self.image_elems]
+                    .copy_from_slice(&req.image);
+            }
+            // Pad by repeating the last request (keeps activations in a
+            // realistic range; results for pad rows are discarded).
+            for i in n..padded {
+                let src = (n - 1) * self.image_elems;
+                buf.copy_within(src..src + self.image_elems,
+                                i * self.image_elems);
+            }
+            let mut shape = vec![padded];
+            shape.extend_from_slice(&self.image_shape);
+            let images = Tensor::from_vec(&shape, std::mem::take(&mut buf));
+
+            let exec_start = Instant::now();
+            let (logits, _feats) = backend.forward(params, &images)?;
+            let exec_secs = exec_start.elapsed().as_secs_f64();
+            buf = images.data; // reclaim the buffer
+
+            metrics.observe("serve/batch_size", n as f64);
+            metrics.observe("serve/padded_size", padded as f64);
+            metrics.observe("serve/execute_secs", exec_secs);
+            metrics.inc("serve/batches", 1);
+
+            let c = logits.shape[1];
+            for (i, req) in batch.into_iter().enumerate() {
+                let row = logits.row(i).to_vec();
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                let latency = req.submitted.elapsed();
+                metrics.observe("serve/latency_secs", latency.as_secs_f64());
+                metrics.inc("serve/requests", 1);
+                let _ = req.reply.send(Response {
+                    logits: row,
+                    argmax,
+                    latency,
+                    batch_size: n,
+                });
+                served += 1;
+                let _ = c;
+            }
+            if let Some(maxr) = max_requests {
+                if served >= maxr {
+                    break;
+                }
+            }
+        }
+        Ok(served)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, MoeType};
+    use crate::runtime::native::NativeRuntime;
+    use crate::util::Rng;
+
+    fn tiny_backend() -> (NativeRuntime, ParamStore, ModelConfig) {
+        let cfg = ModelConfig {
+            image_size: 8,
+            patch_size: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_dim: 24,
+            num_classes: 4,
+            num_experts: 2,
+            slots_per_expert: 2,
+            expert_hidden: 24,
+            moe_layers: vec![1],
+            moe_type: MoeType::Soft,
+            ..ModelConfig::default()
+        };
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(0).unwrap();
+        (be, params, cfg)
+    }
+
+    fn rand_image(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..cfg.image_size * cfg.image_size * cfg.channels)
+            .map(|_| rng.uniform())
+            .collect()
+    }
+
+    #[test]
+    fn padded_size_policy() {
+        let p = BatchPolicy { compiled_sizes: vec![1, 8, 32],
+                              ..Default::default() };
+        assert_eq!(p.padded_size(1), 1);
+        assert_eq!(p.padded_size(2), 8);
+        assert_eq!(p.padded_size(8), 8);
+        assert_eq!(p.padded_size(9), 32);
+        assert_eq!(p.padded_size(40), 32); // capped at the largest
+    }
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let (mut be, params, cfg) = tiny_backend();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+            compiled_sizes: vec![1, 2, 4, 8],
+        };
+        let (server, client) = Server::new(
+            policy, &[cfg.image_size, cfg.image_size, cfg.channels]);
+        let metrics = Registry::new();
+        let n_requests = 20;
+
+        let handles: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let c = client.clone();
+                let img = rand_image(&cfg, i as u64);
+                std::thread::spawn(move || c.submit(img).recv().unwrap())
+            })
+            .collect();
+        drop(client);
+
+        let served = server
+            .run(&mut be, &params, &metrics, Some(n_requests))
+            .unwrap();
+        assert_eq!(served, n_requests);
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.logits.len(), 4);
+            assert!(resp.argmax < 4);
+        }
+        assert_eq!(metrics.counter("serve/requests"), n_requests as u64);
+        assert!(metrics.histogram("serve/latency_secs").unwrap().len() > 0);
+    }
+
+    #[test]
+    fn determinism_under_batching() {
+        // Paper §2.2: Soft MoE has no batch effects — the same image must
+        // produce identical logits whether served alone or in a batch.
+        let (mut be, params, cfg) = tiny_backend();
+        let img = rand_image(&cfg, 7);
+
+        // Serve alone (max_delay 0 forces batch of 1).
+        let (server1, client1) = Server::new(
+            BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::from_millis(0),
+                compiled_sizes: vec![1, 4],
+            },
+            &[cfg.image_size, cfg.image_size, cfg.channels],
+        );
+        let m1 = Registry::new();
+        let rx = client1.submit(img.clone());
+        drop(client1);
+        server1.run(&mut be, &params, &m1, Some(1)).unwrap();
+        let solo = rx.recv().unwrap();
+
+        // Serve with companions in one batch.
+        let (server2, client2) = Server::new(
+            BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(100),
+                compiled_sizes: vec![4],
+            },
+            &[cfg.image_size, cfg.image_size, cfg.channels],
+        );
+        let m2 = Registry::new();
+        let rx0 = client2.submit(img);
+        let _rx1 = client2.submit(rand_image(&cfg, 100));
+        let _rx2 = client2.submit(rand_image(&cfg, 101));
+        drop(client2);
+        server2.run(&mut be, &params, &m2, Some(3)).unwrap();
+        let batched = rx0.recv().unwrap();
+        assert!(batched.batch_size >= 2);
+
+        for (a, b) in solo.logits.iter().zip(&batched.logits) {
+            assert!((a - b).abs() < 1e-5, "batch effect: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batcher_aggregates_under_load() {
+        let (mut be, params, cfg) = tiny_backend();
+        let (server, client) = Server::new(
+            BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(50),
+                compiled_sizes: vec![1, 8],
+            },
+            &[cfg.image_size, cfg.image_size, cfg.channels],
+        );
+        let metrics = Registry::new();
+        // Submit 8 before the server runs: they should ride one batch.
+        let rxs: Vec<_> = (0..8)
+            .map(|i| client.submit(rand_image(&cfg, i)))
+            .collect();
+        drop(client);
+        server.run(&mut be, &params, &metrics, Some(8)).unwrap();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.batch_size, 8);
+        }
+        assert_eq!(metrics.counter("serve/batches"), 1);
+    }
+}

@@ -1,0 +1,613 @@
+//! Row-major f32 tensor with the ops the native engine needs.
+//!
+//! Not a general autodiff framework: a deliberate, small, fast numeric
+//! core. The matmul is blocked and parallelized (see [`matmul`]) because
+//! it dominates the native engine's profile; everything else is simple
+//! vectorizable loops. Shapes are validated with `debug_assert!` in hot
+//! paths and `assert!` at API boundaries.
+//!
+//! Numerical contract with `python/compile/model.py` (parity-tested in
+//! `rust/tests/runtime_hlo.rs`):
+//! * LayerNorm eps = 1e-6,
+//! * GELU = tanh approximation,
+//! * softmax subtracts the row max,
+//! * L2-norm eps = 1e-6.
+
+use crate::threadpool::parallel_for;
+use crate::util::Rng;
+
+pub const LN_EPS: f32 = 1e-6;
+pub const L2_EPS: f32 = 1e-6;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    // -- construction -------------------------------------------------------
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// iid normal entries scaled by `std` (native init).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+    }
+
+    // -- shape utilities ----------------------------------------------------
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols view of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (r, c) = self.dims2();
+        debug_assert!(i < r);
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (r, c) = self.dims2();
+        debug_assert!(i < r);
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Extract rows [start, end) of a rank-2 tensor.
+    pub fn rows(&self, start: usize, end: usize) -> Tensor {
+        let (_, c) = self.dims2();
+        Tensor::from_vec(&[end - start, c],
+                         self.data[start * c..end * c].to_vec())
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    // -- elementwise ----------------------------------------------------------
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn axpy_inplace(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Broadcast-add a length-c bias to every row of an (r, c) tensor.
+    /// Consumes self (hot path: avoids a full-tensor copy per linear —
+    /// see EXPERIMENTS.md §Perf L3-2).
+    pub fn add_bias(mut self, bias: &[f32]) -> Tensor {
+        let (r, c) = self.dims2();
+        assert_eq!(bias.len(), c);
+        for i in 0..r {
+            let row = self.row_mut(i);
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+        self
+    }
+
+    // -- reductions -------------------------------------------------------------
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        self.sum() / self.numel() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Column mean of an (r, c) tensor -> length-c vec.
+    pub fn mean_rows(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for (o, x) in out.iter_mut().zip(self.row(i)) {
+                *o += x;
+            }
+        }
+        for o in &mut out {
+            *o /= r as f32;
+        }
+        out
+    }
+
+    /// Max difference to another tensor (parity checks).
+    pub fn max_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family — the native engine hot path.
+// ---------------------------------------------------------------------------
+
+/// Threshold (in FLOPs) below which matmul stays single-threaded.
+const PAR_FLOPS: usize = 1 << 22;
+
+/// C = A(m,k) @ B(k,n). i-k-j loop order: the inner loop is a contiguous
+/// AXPY over C's row, which LLVM auto-vectorizes; row blocks go to the
+/// thread pool when the problem is large enough.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let flops = 2 * m * n * k;
+
+    let body = |i: usize, out_row: &mut [f32]| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    };
+
+    if flops < PAR_FLOPS {
+        for i in 0..m {
+            let (lo, hi) = (i * n, (i + 1) * n);
+            body(i, &mut out[lo..hi]);
+        }
+    } else {
+        // Split `out` into disjoint row slices; safe to parallelize.
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_for(m, |i| {
+            let slice = unsafe { out_ptr.slice(i * n, n) };
+            body(i, slice);
+        });
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// C = Aᵀ(m,k) @ B(m,n) -> (k, n). Used by the backward pass (dW = Xᵀ dY).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (m2, n) = b.dims2();
+    assert_eq!(m, m2);
+    let mut out = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let brow = &b.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[k, n], out)
+}
+
+/// C = A(m,k) @ Bᵀ(n,k) -> (m, n). Used by attention (QKᵀ) and backward.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (n, k2) = b.dims2();
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let flops = 2 * m * n * k;
+    let body = |i: usize, orow: &mut [f32]| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            *o = dot(arow, brow);
+        }
+    };
+    if flops < PAR_FLOPS {
+        for i in 0..m {
+            let (lo, hi) = (i * n, (i + 1) * n);
+            body(i, &mut out[lo..hi]);
+        }
+    } else {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_for(m, |i| {
+            let slice = unsafe { out_ptr.slice(i * n, n) };
+            body(i, slice);
+        });
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Disjoint mutable slice at `offset` (callers guarantee disjointness).
+    /// A method (rather than field access) so 2021-edition closures capture
+    /// the whole `SendPtr`, keeping the closure `Sync`.
+    unsafe fn slice(&self, offset: usize, len: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane manual unroll; LLVM turns this into SIMD.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// NN primitives
+// ---------------------------------------------------------------------------
+
+/// Row-wise softmax of an (r, c) tensor (subtracts the row max).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (r, _c) = x.dims2();
+    let mut out = x.clone();
+    for i in 0..r {
+        softmax_inplace(out.row_mut(i));
+    }
+    out
+}
+
+/// Column-wise softmax of an (r, c) tensor: the Soft MoE *dispatch*
+/// normalization (softmax over tokens, paper eq. 1).
+pub fn softmax_cols(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut out = x.clone();
+    for j in 0..c {
+        let mut mx = f32::NEG_INFINITY;
+        for i in 0..r {
+            mx = mx.max(out.data[i * c + j]);
+        }
+        let mut sum = 0.0;
+        for i in 0..r {
+            let e = (out.data[i * c + j] - mx).exp();
+            out.data[i * c + j] = e;
+            sum += e;
+        }
+        for i in 0..r {
+            out.data[i * c + j] /= sum;
+        }
+    }
+    out
+}
+
+pub fn softmax_inplace(row: &mut [f32]) {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in row.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// GELU, tanh approximation — matches `jax.nn.gelu(approximate=True)`.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approx GELU (native backward pass).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let x3 = 0.044715 * x * x * x;
+    let t = (C * (x + x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// LayerNorm over the last axis of an (r, c) tensor with scale/bias.
+pub fn layernorm(x: &Tensor, scale: &[f32], bias: &[f32]) -> Tensor {
+    let (r, c) = x.dims2();
+    assert_eq!(scale.len(), c);
+    assert_eq!(bias.len(), c);
+    let mut out = Tensor::zeros(&[r, c]);
+    for i in 0..r {
+        let xin = x.row(i);
+        let mu = xin.iter().sum::<f32>() / c as f32;
+        let var = xin.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..c {
+            orow[j] = (xin[j] - mu) * inv * scale[j] + bias[j];
+        }
+    }
+    out
+}
+
+/// L2-normalize each row (Soft MoE §2.3, Algorithm 2: eps *after* sqrt).
+pub fn l2_normalize_rows(x: &Tensor) -> Tensor {
+    let (r, _c) = x.dims2();
+    let mut out = x.clone();
+    for i in 0..r {
+        let row = out.row_mut(i);
+        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let inv = 1.0 / (norm + L2_EPS);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// L2-normalize each *column* (phi is normalized over the d axis).
+pub fn l2_normalize_cols(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut out = x.clone();
+    for j in 0..c {
+        let mut sq = 0.0f32;
+        for i in 0..r {
+            sq += out.data[i * c + j] * out.data[i * c + j];
+        }
+        let inv = 1.0 / (sq.sqrt() + L2_EPS);
+        for i in 0..r {
+            out.data[i * c + j] *= inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            eye.data[i * 5 + i] = 1.0;
+        }
+        let c = matmul(&a, &eye);
+        assert!(a.max_diff(&c) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[9, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 11], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let c_tn = matmul_tn(&a.t(), &b);
+        let c_nt = matmul_nt(&a, &b.t());
+        assert!(c.max_diff(&c_tn) < 1e-4);
+        assert!(c.max_diff(&c_nt) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches_serial() {
+        let mut rng = Rng::new(2);
+        // big enough to trigger the parallel path
+        let a = Tensor::randn(&[256, 300], 1.0, &mut rng);
+        let b = Tensor::randn(&[300, 256], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        // serial reference
+        let mut refd = vec![0.0f32; 256 * 256];
+        for i in 0..256 {
+            for kk in 0..300 {
+                let av = a.data[i * 300 + kk];
+                for j in 0..256 {
+                    refd[i * 256 + j] += av * b.data[kk * 256 + j];
+                }
+            }
+        }
+        let r = Tensor::from_vec(&[256, 256], refd);
+        assert!(c.max_diff(&r) < 1e-3);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[4, 9], 3.0, &mut rng);
+        let s = softmax_rows(&x);
+        for i in 0..4 {
+            approx(s.row(i).iter().sum::<f32>(), 1.0, 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_cols_sums_to_one() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[6, 5], 3.0, &mut rng);
+        let s = softmax_cols(&x);
+        for j in 0..5 {
+            let col: f32 = (0..6).map(|i| s.data[i * 5 + j]).sum();
+            approx(col, 1.0, 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_large_values() {
+        let x = Tensor::from_vec(&[1, 3], vec![1000.0, 1001.0, 1002.0]);
+        let s = softmax_rows(&x);
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        approx(s.data.iter().sum::<f32>(), 1.0, 1e-5);
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        // Values from jax.nn.gelu(approximate=True).
+        approx(gelu(0.0), 0.0, 1e-6);
+        approx(gelu(1.0), 0.841_192, 1e-4);
+        approx(gelu(-1.0), -0.158_808, 1e-4);
+        approx(gelu(3.0), 2.996_363, 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            approx(gelu_grad(x), fd, 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[3, 64], 5.0, &mut rng);
+        let ones = vec![1.0; 64];
+        let zeros = vec![0.0; 64];
+        let y = layernorm(&x, &ones, &zeros);
+        for i in 0..3 {
+            let row = y.row(i);
+            let mu = row.iter().sum::<f32>() / 64.0;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 64.0;
+            approx(mu, 0.0, 1e-5);
+            approx(var, 1.0, 1e-3);
+        }
+    }
+
+    #[test]
+    fn l2_norms() {
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[4, 8], 2.0, &mut rng);
+        let r = l2_normalize_rows(&x);
+        for i in 0..4 {
+            let n = r.row(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            approx(n, 1.0, 1e-4);
+        }
+        let c = l2_normalize_cols(&x);
+        for j in 0..8 {
+            let n: f32 = (0..4).map(|i| c.data[i * 8 + j].powi(2)).sum::<f32>().sqrt();
+            approx(n, 1.0, 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        assert!(x.max_diff(&x.t().t()) < 1e-9);
+    }
+
+    #[test]
+    fn rows_slicing() {
+        let x = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let r = x.rows(1, 3);
+        assert_eq!(r.shape, vec![2, 2]);
+        assert_eq!(r.data, vec![3., 4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

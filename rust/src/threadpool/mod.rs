@@ -1,0 +1,174 @@
+//! Minimal scoped thread pool (no rayon offline).
+//!
+//! Two entry points cover every parallel need in the repo:
+//! * [`parallel_for`] — split `0..n` into chunks and run a closure per
+//!   chunk on a transient scope (used by the tensor matmul hot path and
+//!   the data generator);
+//! * [`ThreadPool`] — a long-lived pool with a job queue (used by the
+//!   inference server's worker pool).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use: respects `SOFTMOE_THREADS`, defaults
+/// to available parallelism capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SOFTMOE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(i)` for every `i` in `0..n`, work-stealing via an atomic cursor.
+/// `f` must be `Sync`; chunking keeps the atomic traffic negligible.
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = default_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    // Chunk size balances scheduling overhead and load balance.
+    let chunk = (n / (threads * 4)).max(1);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel collecting results in order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
+        parallel_for(n, |i| {
+            **slots[i].lock().unwrap() = f(i);
+        });
+    }
+    out
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived pool with an MPMC job queue. Workers exit when the pool is
+/// dropped. Panics in jobs are contained per-worker.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), handles }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers gone");
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(1000, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_for_small_n() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        parallel_for(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let sum = Arc::clone(&sum);
+            pool.execute(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+}

@@ -1,0 +1,203 @@
+//! Training coordinator: schedules, the training loop, and run records.
+//!
+//! The LR schedule lives here (in Rust) rather than inside the compiled
+//! train_step — the HLO takes `lr` as an input — so one artifact serves
+//! every schedule, exactly like the paper's rsqrt-decay + linear-cooldown
+//! recipes (Zhai et al. 2022a).
+
+pub mod schedule;
+
+pub use schedule::Schedule;
+
+use anyhow::Result;
+
+use crate::data::SynthShapes;
+use crate::eval;
+use crate::metrics::Registry;
+use crate::runtime::{Backend, TrainState};
+use crate::util::Stopwatch;
+
+/// Training loop configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch_size: usize,
+    pub schedule: Schedule,
+    pub seed: i32,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            batch_size: 32,
+            schedule: Schedule::default(),
+            seed: 0,
+            log_every: 10,
+            eval_every: 100,
+            eval_batches: 4,
+        }
+    }
+}
+
+/// One row of the training log.
+#[derive(Clone, Debug)]
+pub struct LogPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+    pub lr: f64,
+    pub wall_secs: f64,
+}
+
+/// The complete record of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub log: Vec<LogPoint>,
+    /// (step, eval precision@1)
+    pub evals: Vec<(usize, f64)>,
+    pub total_secs: f64,
+    pub step_secs_mean: f64,
+    pub final_loss: f64,
+}
+
+impl RunRecord {
+    /// Smoothed final training accuracy (mean of last k points).
+    pub fn final_train_acc(&self, k: usize) -> f64 {
+        let n = self.log.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let lo = n.saturating_sub(k);
+        let pts = &self.log[lo..];
+        pts.iter().map(|p| p.accuracy).sum::<f64>() / pts.len() as f64
+    }
+
+    pub fn final_eval(&self) -> f64 {
+        self.evals.last().map(|&(_, a)| a).unwrap_or(0.0)
+    }
+}
+
+/// Run the training loop against any backend.
+pub struct Trainer<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub data: &'a SynthShapes,
+    pub cfg: TrainConfig,
+    pub metrics: Option<&'a Registry>,
+    pub verbose: bool,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(backend: &'a mut dyn Backend, data: &'a SynthShapes,
+               cfg: TrainConfig) -> Self {
+        Self { backend, data, cfg, metrics: None, verbose: false }
+    }
+
+    pub fn run(&mut self, state: &mut TrainState) -> Result<RunRecord> {
+        let mut record = RunRecord::default();
+        let total = Stopwatch::start();
+        let mut step_times = Vec::with_capacity(self.cfg.steps);
+
+        for step in 0..self.cfg.steps {
+            let (images, labels) = self
+                .data
+                .batch((step * self.cfg.batch_size) as u64,
+                       self.cfg.batch_size);
+            let lr = self.cfg.schedule.lr(step, self.cfg.steps);
+            let sw = Stopwatch::start();
+            let out = self.backend.train_step(state, &images, &labels, lr)?;
+            let dt = sw.elapsed_secs();
+            step_times.push(dt);
+
+            if let Some(m) = self.metrics {
+                m.observe("train/step_secs", dt);
+                m.set_gauge("train/loss", out.loss as f64);
+                m.inc("train/steps", 1);
+            }
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                let point = LogPoint {
+                    step,
+                    loss: out.loss as f64,
+                    accuracy: out.accuracy as f64,
+                    lr: lr as f64,
+                    wall_secs: total.elapsed_secs(),
+                };
+                if self.verbose {
+                    println!(
+                        "step {:>6}  loss {:.4}  acc {:.3}  lr {:.2e}  ({:.1}s)",
+                        point.step, point.loss, point.accuracy, point.lr,
+                        point.wall_secs
+                    );
+                }
+                record.log.push(point);
+            }
+            if self.cfg.eval_every > 0
+                && (step + 1) % self.cfg.eval_every == 0 {
+                let p1 = eval::precision_at_1(
+                    self.backend, &state.params, self.data,
+                    self.cfg.eval_batches, self.cfg.batch_size)?;
+                record.evals.push((step + 1, p1));
+                if self.verbose {
+                    println!("step {:>6}  eval p@1 {:.3}", step + 1, p1);
+                }
+            }
+        }
+        record.total_secs = total.elapsed_secs();
+        record.step_secs_mean = crate::util::mean(&step_times);
+        record.final_loss = record.log.last().map(|p| p.loss).unwrap_or(0.0);
+        Ok(record)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, MoeType};
+    use crate::data::DatasetConfig;
+    use crate::runtime::native::NativeRuntime;
+    use crate::runtime::Backend;
+
+    #[test]
+    fn trainer_reduces_loss_native() {
+        let cfg = ModelConfig {
+            image_size: 16,
+            patch_size: 4,
+            dim: 24,
+            depth: 2,
+            heads: 2,
+            mlp_dim: 32,
+            num_classes: 8,
+            num_experts: 4,
+            slots_per_expert: 4,
+            expert_hidden: 32,
+            moe_layers: vec![1],
+            moe_type: MoeType::Soft,
+            ..ModelConfig::default()
+        };
+        let data = SynthShapes::new(DatasetConfig {
+            image_size: 16,
+            num_classes: 8,
+            ..Default::default()
+        });
+        let mut be = NativeRuntime::new(cfg);
+        let params = be.init(0).unwrap();
+        let mut state = crate::runtime::TrainState::fresh(params);
+        let tcfg = TrainConfig {
+            steps: 40,
+            batch_size: 16,
+            eval_every: 0,
+            log_every: 5,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&mut be, &data, tcfg);
+        let rec = trainer.run(&mut state).unwrap();
+        let first = rec.log.first().unwrap().loss;
+        let last = rec.log.last().unwrap().loss;
+        assert!(last < first, "loss {first} -> {last}");
+        assert!(rec.step_secs_mean > 0.0);
+        assert_eq!(state.step, 40);
+    }
+}

@@ -1,0 +1,118 @@
+//! Learning-rate schedules matching the paper's recipes:
+//! linear warmup → inverse-sqrt decay → linear cooldown to zero
+//! (Zhai et al. 2022a; used for both the 300k-step Pareto runs and the
+//! long "overtraining" runs with extended cooldowns, §3.4.2).
+
+/// LR schedule. All step counts are in optimizer steps.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// Constant LR.
+    Constant { lr: f32 },
+    /// Linear warmup to `peak`, inverse-sqrt decay with `timescale`,
+    /// linear cooldown over the last `cooldown` steps.
+    RsqrtCooldown {
+        peak: f32,
+        warmup: usize,
+        timescale: f32,
+        cooldown: usize,
+    },
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        // Scaled-down analogue of the paper's 1e-3 peak / 10^5 timescale.
+        Schedule::RsqrtCooldown {
+            peak: 1e-3,
+            warmup: 20,
+            timescale: 100.0,
+            cooldown: 50,
+        }
+    }
+}
+
+impl Schedule {
+    /// LR at `step` of a run with `total_steps`.
+    pub fn lr(&self, step: usize, total_steps: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::RsqrtCooldown { peak, warmup, timescale, cooldown } => {
+                let s = step as f32;
+                // Warmup.
+                if step < warmup {
+                    return peak * (s + 1.0) / warmup as f32;
+                }
+                let rsqrt = |st: f32| {
+                    peak * (timescale / (st - warmup as f32 + timescale)).sqrt()
+                };
+                let cooldown = cooldown.min(total_steps);
+                let cd_start = total_steps.saturating_sub(cooldown);
+                if step >= cd_start && cooldown > 0 {
+                    // Linear to zero from the rsqrt value at cd_start.
+                    let base = rsqrt(cd_start as f32);
+                    let frac = (total_steps - step) as f32 / cooldown as f32;
+                    base * frac
+                } else {
+                    rsqrt(s)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = Schedule::Constant { lr: 0.5 };
+        assert_eq!(s.lr(0, 100), 0.5);
+        assert_eq!(s.lr(99, 100), 0.5);
+    }
+
+    #[test]
+    fn warmup_rises_to_peak() {
+        let s = Schedule::RsqrtCooldown {
+            peak: 1.0, warmup: 10, timescale: 100.0, cooldown: 0,
+        };
+        assert!(s.lr(0, 1000) < 0.2);
+        assert!(s.lr(4, 1000) < s.lr(8, 1000));
+        let at_peak = s.lr(10, 1000);
+        assert!((at_peak - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rsqrt_decays() {
+        let s = Schedule::RsqrtCooldown {
+            peak: 1.0, warmup: 0, timescale: 100.0, cooldown: 0,
+        };
+        assert!(s.lr(100, 10_000) > s.lr(1000, 10_000));
+        assert!(s.lr(1000, 10_000) > s.lr(5000, 10_000));
+    }
+
+    #[test]
+    fn cooldown_reaches_zero() {
+        let s = Schedule::RsqrtCooldown {
+            peak: 1.0, warmup: 0, timescale: 100.0, cooldown: 100,
+        };
+        let total = 1000;
+        let near_end = s.lr(total - 1, total);
+        assert!(near_end < 0.02, "{near_end}");
+        // Monotone decreasing through the cooldown.
+        assert!(s.lr(900, total) > s.lr(950, total));
+        assert!(s.lr(950, total) > s.lr(999, total));
+    }
+
+    #[test]
+    fn longer_cooldown_lowers_midpoint_lr() {
+        // The §3.4.2 recipe: extending the cooldown changes late-stage LR.
+        let short = Schedule::RsqrtCooldown {
+            peak: 1.0, warmup: 0, timescale: 100.0, cooldown: 50,
+        };
+        let long = Schedule::RsqrtCooldown {
+            peak: 1.0, warmup: 0, timescale: 100.0, cooldown: 500,
+        };
+        let total = 1000;
+        assert!(long.lr(800, total) < short.lr(800, total));
+    }
+}

@@ -1,0 +1,97 @@
+//! Small shared utilities: PRNG, timing, formatting.
+
+pub mod rng;
+
+pub use rng::Rng;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch used by the trainer, server and bench harness.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Human-readable count formatting: 1_234_567 -> "1.23M".
+pub fn human_count(n: f64) -> String {
+    let a = n.abs();
+    if a >= 1e12 {
+        format!("{:.2}T", n / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}B", n / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", n / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Percentile by nearest-rank on a *sorted copy* of the input (q in [0,1]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_counts() {
+        assert_eq!(human_count(12.0), "12");
+        assert_eq!(human_count(1_234.0), "1.23k");
+        assert_eq!(human_count(7_200_000.0), "7.20M");
+        assert_eq!(human_count(3.1e9), "3.10B");
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Cross-module integration tests (native backend; no artifacts needed).
+//!
+//! Covers the full coordinator story: data -> trainer -> checkpoint ->
+//! reload -> eval -> serve, plus experiment smoke runs in quick mode.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use softmoe::ckpt;
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::data::{DatasetConfig, SynthShapes};
+use softmoe::eval;
+use softmoe::metrics::Registry;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::serve::{BatchPolicy, Server};
+use softmoe::train::{Schedule, TrainConfig, Trainer};
+use softmoe::util::Rng;
+
+fn tiny_cfg(moe: MoeType) -> ModelConfig {
+    ModelConfig {
+        image_size: 16,
+        patch_size: 4,
+        dim: 32,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 48,
+        num_classes: 8,
+        num_experts: 4,
+        slots_per_expert: 4,
+        expert_hidden: 48,
+        moe_layers: if moe == MoeType::Dense { vec![] } else { vec![1] },
+        moe_type: moe,
+        ..ModelConfig::default()
+    }
+}
+
+fn tiny_data(seed: u64) -> SynthShapes {
+    SynthShapes::new(DatasetConfig {
+        image_size: 16,
+        num_classes: 8,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn train_checkpoint_reload_eval_roundtrip() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let data = tiny_data(0);
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(0).unwrap();
+    let mut state = TrainState::fresh(params);
+
+    let tcfg = TrainConfig {
+        steps: 150,
+        batch_size: 16,
+        schedule: Schedule::default(),
+        seed: 0,
+        log_every: 50,
+        eval_every: 75,
+        eval_batches: 2,
+    };
+    let rec = Trainer::new(&mut be, &data, tcfg).run(&mut state).unwrap();
+    assert!(rec.final_loss < rec.log[0].loss);
+    assert!(!rec.evals.is_empty());
+
+    // Checkpoint round-trip.
+    let dir = std::env::temp_dir()
+        .join(format!("softmoe-int-{}", std::process::id()));
+    ckpt::save_state(&dir, "run", &state).unwrap();
+    let restored = ckpt::load_state(&dir, "run").unwrap();
+    assert_eq!(restored.step, state.step);
+
+    // Evaluation from the restored params matches.
+    let p1_a = eval::precision_at_1(&mut be, &state.params, &data, 2, 16)
+        .unwrap();
+    let p1_b = eval::precision_at_1(&mut be, &restored.params, &data, 2, 16)
+        .unwrap();
+    assert_eq!(p1_a, p1_b);
+    // Learned something beyond chance (8 classes -> 0.125).
+    assert!(p1_a > 0.2, "p@1 {p1_a} not above chance");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resumed_training_continues_from_checkpoint() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let data = tiny_data(1);
+    let mut be = NativeRuntime::new(cfg.clone());
+    let mut state = TrainState::fresh(be.init(1).unwrap());
+    let (images, labels) = data.batch(0, 8);
+
+    for _ in 0..5 {
+        be.train_step(&mut state, &images, &labels, 1e-3).unwrap();
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("softmoe-resume-{}", std::process::id()));
+    ckpt::save_state(&dir, "mid", &state).unwrap();
+
+    // Continue in-memory.
+    let mut cont = state.clone();
+    let out_a = be.train_step(&mut cont, &images, &labels, 1e-3).unwrap();
+    // Continue from disk.
+    let mut resumed = ckpt::load_state(&dir, "mid").unwrap();
+    let out_b = be.train_step(&mut resumed, &images, &labels, 1e-3).unwrap();
+
+    assert_eq!(cont.step, resumed.step);
+    assert!((out_a.loss - out_b.loss).abs() < 1e-6,
+            "resume diverged: {} vs {}", out_a.loss, out_b.loss);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fewshot_probe_improves_with_training() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let data = tiny_data(2);
+    let mut be = NativeRuntime::new(cfg.clone());
+    let init_params = be.init(2).unwrap();
+    let fs_before =
+        eval::fewshot_probe(&mut be, &init_params, &data, 5, 2, 16).unwrap();
+
+    let mut state = TrainState::fresh(init_params);
+    let tcfg = TrainConfig {
+        steps: 120,
+        batch_size: 16,
+        eval_every: 0,
+        log_every: 40,
+        ..Default::default()
+    };
+    Trainer::new(&mut be, &data, tcfg).run(&mut state).unwrap();
+    let fs_after =
+        eval::fewshot_probe(&mut be, &state.params, &data, 5, 2, 16).unwrap();
+    assert!(fs_after > fs_before,
+            "probe did not improve: {fs_before} -> {fs_after}");
+}
+
+#[test]
+fn serve_trained_model_end_to_end() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let data = tiny_data(3);
+    let mut be = NativeRuntime::new(cfg.clone());
+    let mut state = TrainState::fresh(be.init(3).unwrap());
+    let tcfg = TrainConfig {
+        steps: 80,
+        batch_size: 16,
+        eval_every: 0,
+        log_every: 40,
+        ..Default::default()
+    };
+    Trainer::new(&mut be, &data, tcfg).run(&mut state).unwrap();
+
+    let (server, client) = Server::new(
+        BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(3),
+            compiled_sizes: vec![1, 4, 8],
+        },
+        &[cfg.image_size, cfg.image_size, cfg.channels],
+    );
+    let metrics = Registry::new();
+    let n = 24usize;
+    // Request classification of eval images; track true labels.
+    let (images, labels) = data.eval_batch(0, n);
+    let item = images.numel() / n;
+    let producer = std::thread::spawn(move || {
+        let rxs: Vec<_> = (0..n)
+            .map(|i| client.submit(images.data[i * item..(i + 1) * item]
+                                   .to_vec()))
+            .collect();
+        drop(client);
+        rxs.into_iter().map(|rx| rx.recv().unwrap()).collect::<Vec<_>>()
+    });
+    server.run(&mut be, &state.params, &metrics, Some(n)).unwrap();
+    let responses = producer.join().unwrap();
+
+    let correct = responses
+        .iter()
+        .zip(&labels)
+        .filter(|(r, &l)| r.argmax == l as usize)
+        .count();
+    // Trained model through the serving path beats chance (1/8).
+    assert!(correct as f64 / n as f64 > 0.2,
+            "served accuracy {}/{n}", correct);
+    assert_eq!(metrics.counter("serve/requests"), n as u64);
+}
+
+#[test]
+fn experiment_quick_smoke_step_time() {
+    // The Fig. 6-right machinery runs and produces the paper's shape:
+    // soft step time flat vs experts, sparse grows.
+    let args = softmoe::cli::Args::parse(&[
+        "experiment".into(), "x".into(), "--quick".into(),
+        "--steps".into(), "8".into(), "--batch".into(), "8".into(),
+        "--out-dir".into(),
+        std::env::temp_dir()
+            .join(format!("softmoe-exp-{}", std::process::id()))
+            .to_str().unwrap().into(),
+    ]).unwrap();
+    let opts = softmoe::experiments::ExpOptions::from_args(&args).unwrap();
+    let table =
+        softmoe::experiments::experts_scaling::step_time_sweep(&opts).unwrap();
+    assert!(table.rows.len() >= 6);
+    let _ = std::fs::remove_dir_all(&opts.out_dir);
+}
+
+#[test]
+fn rng_streams_are_stable_across_runs() {
+    // Regression guard: experiment reproducibility depends on the PRNG
+    // emitting identical streams for identical seeds.
+    let mut a = Rng::new(0xdead_beef);
+    let got: Vec<u32> = (0..4).map(|_| a.next_u32()).collect();
+    let mut b = Rng::new(0xdead_beef);
+    let again: Vec<u32> = (0..4).map(|_| b.next_u32()).collect();
+    assert_eq!(got, again);
+}
+
+#[test]
+fn sparse_variants_train_through_full_stack() {
+    for moe in [MoeType::TokensChoice, MoeType::ExpertsChoice] {
+        let cfg = tiny_cfg(moe);
+        let data = tiny_data(4);
+        let mut be = NativeRuntime::new(cfg);
+        let mut state = TrainState::fresh(be.init(4).unwrap());
+        let tcfg = TrainConfig {
+            steps: 40,
+            batch_size: 8,
+            eval_every: 0,
+            log_every: 10,
+            ..Default::default()
+        };
+        let rec = Trainer::new(&mut be, &data, tcfg).run(&mut state).unwrap();
+        assert!(rec.final_loss < rec.log[0].loss, "{moe:?}");
+    }
+}
+
+#[test]
+fn artifacts_dir_missing_is_a_clean_error() {
+    let missing = PathBuf::from("/definitely/not/here");
+    let err = softmoe::config::Manifest::load(&missing).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}

@@ -1,0 +1,280 @@
+//! Property-based tests with a hand-rolled generator harness (proptest is
+//! unavailable offline). Each property runs over many random cases drawn
+//! from the deterministic PRNG; failures print the case seed so they can
+//! be replayed exactly.
+
+use softmoe::config::{MixMode, ModelConfig, MoeType};
+use softmoe::json::{self, Value};
+use softmoe::moe::{ExpertsChoice, SoftMoe, TokensChoice};
+use softmoe::nn::VitModel;
+use softmoe::tensor::{softmax_cols, softmax_rows, Tensor};
+use softmoe::util::Rng;
+
+/// Run `prop` over `cases` random seeds; panic with the failing seed.
+fn check(cases: u64, name: &str, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0x5eed_0000 + case);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Soft MoE routing invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_soft_moe_convexity_and_no_drop() {
+    check(25, "soft convexity", |rng| {
+        let m = 2 + rng.below(20);
+        let d = 4 + rng.below(12);
+        let n = 1 + rng.below(6);
+        let p = 1 + rng.below(3);
+        let sm = SoftMoe::new(d, n, p, 8, rng);
+        let x = Tensor::randn(&[m, d], rng.range(0.1, 5.0), rng);
+        let out = sm.forward_full(&x);
+        let (mm, s) = out.dispatch.dims2();
+        assert_eq!((mm, s), (m, n * p));
+        for j in 0..s {
+            let col: f32 = (0..m).map(|i| out.dispatch.data[i * s + j]).sum();
+            assert!((col - 1.0).abs() < 1e-4);
+        }
+        for i in 0..m {
+            let row: f32 =
+                out.combine.data[i * s..(i + 1) * s].iter().sum();
+            assert!((row - 1.0).abs() < 1e-4);
+        }
+        // No token dropped: all dispatch weights strictly positive.
+        assert!(out.dispatch.data.iter().all(|&v| v > 0.0));
+        assert!(out.y.data.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_soft_moe_permutation_equivariance() {
+    // Soft MoE has no positional preference: permuting the input tokens
+    // permutes the output the same way (Φ only sees token *contents*).
+    check(15, "permutation equivariance", |rng| {
+        let m = 3 + rng.below(10);
+        let d = 4 + rng.below(8);
+        let sm = SoftMoe::new(d, 3, 2, 8, rng);
+        let x = Tensor::randn(&[m, d], 1.0, rng);
+        let mut perm: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut perm);
+        let mut xp = Tensor::zeros(&[m, d]);
+        for (i, &pi) in perm.iter().enumerate() {
+            xp.row_mut(i).copy_from_slice(x.row(pi));
+        }
+        let y = sm.forward(&x);
+        let yp = sm.forward(&xp);
+        for (i, &pi) in perm.iter().enumerate() {
+            let a = Tensor::from_vec(&[1, d], yp.row(i).to_vec());
+            let b = Tensor::from_vec(&[1, d], y.row(pi).to_vec());
+            assert!(a.max_diff(&b) < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_soft_moe_scale_invariance_of_normalized_router() {
+    // With the §2.3 fix, scaling the inputs does not change the routing
+    // logits (l2-normalized), so D and C are input-scale invariant.
+    check(15, "router scale invariance", |rng| {
+        let sm = SoftMoe::new(8, 2, 2, 8, rng);
+        let x = Tensor::randn(&[6, 8], 1.0, rng);
+        let xs = x.scale(rng.range(2.0, 50.0));
+        let a = sm.logits(&x);
+        let b = sm.logits(&xs);
+        assert!(a.max_diff(&b) < 1e-3);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Sparse router invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tokens_choice_capacity_and_conservation() {
+    check(25, "tc capacity", |rng| {
+        let t = 4 + rng.below(28);
+        let d = 4 + rng.below(8);
+        let n = 2 + rng.below(6);
+        let mut tc = TokensChoice::new(d, n, 8, rng);
+        tc.top_k = 1 + rng.below(2);
+        tc.capacity_factor = [0.5, 1.0, 1.125, 2.0][rng.below(4)];
+        tc.bpr = rng.below(2) == 0;
+        let x = Tensor::randn(&[t, d], 1.0, rng);
+        let (asg, _) = tc.route(&x);
+        let cap = tc.capacity(t);
+        assert_eq!(asg.capacity, cap);
+        let mut used = vec![0usize; n];
+        let mut seen = std::collections::BTreeSet::new();
+        for &(tok, e, gate, pos) in &asg.kept {
+            assert!(tok < t && e < n && pos < cap);
+            assert!(gate > 0.0 && gate <= 1.0);
+            assert!(seen.insert((e, pos)), "buffer slot reused");
+            used[e] += 1;
+        }
+        // kept + dropped covers exactly the processed/unprocessed split.
+        let processed: std::collections::BTreeSet<usize> =
+            asg.kept.iter().map(|k| k.0).collect();
+        for &d_ in &asg.dropped {
+            assert!(!processed.contains(&d_));
+        }
+        assert!(used.iter().all(|&u| u <= cap));
+    });
+}
+
+#[test]
+fn prop_experts_choice_balanced_and_top() {
+    check(25, "ec balance", |rng| {
+        let t = 4 + rng.below(28);
+        let d = 4 + rng.below(8);
+        let n = 2 + rng.below(6);
+        let mut ec = ExpertsChoice::new(d, n, 8, rng);
+        ec.capacity_factor = [0.5, 1.0, 2.0][rng.below(3)];
+        let x = Tensor::randn(&[t, d], 1.0, rng);
+        let sel = ec.route(&x);
+        let cap = ec.capacity(t).min(t);
+        for picks in &sel {
+            assert_eq!(picks.len(), cap, "perfect balance by construction");
+            // picked tokens are distinct per expert
+            let mut toks: Vec<usize> = picks.iter().map(|p| p.0).collect();
+            toks.sort_unstable();
+            toks.dedup();
+            assert_eq!(toks.len(), cap);
+        }
+    });
+}
+
+#[test]
+fn prop_bpr_never_increases_dropping() {
+    check(15, "bpr drop", |rng| {
+        let t = 8 + rng.below(24);
+        let d = 8;
+        let n = 2 + rng.below(8);
+        let mut tc = TokensChoice::new(d, n, 8, rng);
+        tc.capacity_factor = 0.5;
+        let x = Tensor::randn(&[t, d], 1.0, rng);
+        tc.bpr = false;
+        let (_, s_off) = tc.forward_with_stats(&x);
+        tc.bpr = true;
+        let (_, s_on) = tc.forward_with_stats(&x);
+        // BPR reorders *which* tokens survive, not how many: dropping is
+        // a pure capacity phenomenon.
+        assert!((s_on.dropped_frac - s_off.dropped_frac).abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tensor + gradient properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_softmax_rows_and_cols_are_transposes() {
+    check(20, "softmax transpose", |rng| {
+        let r = 2 + rng.below(8);
+        let c = 2 + rng.below(8);
+        let x = Tensor::randn(&[r, c], rng.range(0.2, 4.0), rng);
+        let a = softmax_rows(&x).t();
+        let b = softmax_cols(&x.t());
+        assert!(a.max_diff(&b) < 1e-5);
+    });
+}
+
+#[test]
+fn prop_full_model_gradients_match_finite_differences() {
+    // Random tiny configs across all routing types: one random parameter
+    // entry FD-checked per case. Complements the targeted tests in nn/.
+    check(8, "model grad fd", |rng| {
+        let moe = [MoeType::Dense, MoeType::Soft][rng.below(2)];
+        let cfg = ModelConfig {
+            image_size: 8,
+            patch_size: 4,
+            dim: 8 + 4 * rng.below(3),
+            depth: 1 + rng.below(2),
+            heads: 2,
+            mlp_dim: 8 + 4 * rng.below(3),
+            num_classes: 4,
+            num_experts: 2,
+            slots_per_expert: 1 + rng.below(2),
+            expert_hidden: 12,
+            moe_layers: if moe == MoeType::Dense { vec![] } else { vec![0] },
+            moe_type: moe,
+            dispatch_mode: MixMode::Soft,
+            combine_mode: MixMode::Soft,
+            ..ModelConfig::default()
+        };
+        let model = VitModel::new(cfg.clone());
+        let p = model.init(rng.next_u64());
+        let b = 2;
+        let npx = b * cfg.image_size * cfg.image_size * cfg.channels;
+        let images = Tensor::from_vec(
+            &[b, cfg.image_size, cfg.image_size, cfg.channels],
+            (0..npx).map(|_| rng.uniform()).collect(),
+        );
+        let labels = [rng.below(4), rng.below(4)];
+        let (_, _, grads) = model.loss_and_grads(&p, &images, &labels);
+
+        let keys: Vec<&String> = p.keys().collect();
+        let k = keys[rng.below(keys.len())].clone();
+        let idx = rng.below(p[&k].numel());
+        let h = 1e-2f32;
+        let loss_of = |pp: &softmoe::nn::ParamStore| {
+            let out = model.forward(pp, &images);
+            softmoe::nn::layers::softmax_xent(&out.logits, &labels).0
+        };
+        let mut pp = p.clone();
+        pp.get_mut(&k).unwrap().data[idx] += h;
+        let lp = loss_of(&pp);
+        pp.get_mut(&k).unwrap().data[idx] -= 2.0 * h;
+        let lm = loss_of(&pp);
+        let fd = (lp - lm) / (2.0 * h);
+        let an = grads[&k].data[idx];
+        assert!(
+            (fd - an).abs() < 3e-2 * (1.0 + fd.abs().max(an.abs())),
+            "{moe:?} {k}[{idx}] fd={fd} analytic={an}"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip on random documents
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 1),
+            2 => Value::Num((rng.normal() * 100.0) as f64),
+            _ => Value::Str(format!("s{}-\"esc\\ape\"\n{}", rng.below(100),
+                                    rng.below(100))),
+        };
+    }
+    match rng.below(2) {
+        0 => Value::Arr((0..rng.below(4))
+            .map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut o = Value::obj();
+            for i in 0..rng.below(4) {
+                o.set(&format!("k{i}"), random_json(rng, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(50, "json roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(v, back, "document: {text}");
+    });
+}

@@ -1,0 +1,216 @@
+//! End-to-end tests over the AOT HLO artifacts (the L1/L2 -> L3 bridge).
+//!
+//! Requires `make artifacts`. Tests are skipped (with a loud message) when
+//! the artifacts are absent so `cargo test` stays runnable pre-build.
+//!
+//! The centerpiece is PJRT-vs-native parity: the pure-Rust engine must
+//! reproduce the JAX-lowered forward to fp32 tolerance, for every model
+//! variant, starting from the *same* HLO-initialized parameters.
+
+use std::path::PathBuf;
+
+use softmoe::config::Manifest;
+use softmoe::data::{DatasetConfig, SynthShapes};
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::pjrt::PjrtRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::tensor::Tensor;
+use softmoe::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::env::var("SOFTMOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn rand_images(b: usize, size: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::from_vec(
+        &[b, size, size, 3],
+        (0..b * size * size * 3).map(|_| rng.uniform()).collect(),
+    )
+}
+
+#[test]
+fn pjrt_init_matches_manifest_shapes() {
+    let Some(manifest) = manifest() else { return };
+    for name in manifest.models.keys() {
+        let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+        let params = rt.init(0).unwrap();
+        let mm = manifest.model(name).unwrap();
+        assert_eq!(params.len(), mm.params.len(), "{name}");
+        for (pname, shape) in &mm.params {
+            let t = &params[pname];
+            assert_eq!(&t.shape, shape, "{name}/{pname}");
+            assert!(t.data.iter().all(|v| v.is_finite()), "{name}/{pname}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_forward_runs_all_models_and_batches() {
+    let Some(manifest) = manifest() else { return };
+    for (name, mm) in &manifest.models {
+        let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+        let params = rt.init(1).unwrap();
+        for b in rt.fwd_batches() {
+            let images = rand_images(b, mm.config.image_size, b as u64);
+            let (logits, feats) = rt.forward(&params, &images).unwrap();
+            assert_eq!(logits.shape, vec![b, mm.config.num_classes]);
+            assert_eq!(feats.shape, vec![b, mm.config.dim]);
+            assert!(logits.data.iter().all(|v| v.is_finite()),
+                    "{name} b={b}");
+        }
+    }
+}
+
+/// THE parity test: native engine == JAX/XLA forward, from HLO-init
+/// params, for every routing variant.
+#[test]
+fn native_forward_matches_pjrt() {
+    let Some(manifest) = manifest() else { return };
+    for (name, mm) in &manifest.models {
+        let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+        let params = rt.init(2).unwrap();
+        let b = 8;
+        let images = rand_images(b, mm.config.image_size, 42);
+        let (pl, pf) = rt.forward(&params, &images).unwrap();
+
+        let mut native = NativeRuntime::new(mm.config.clone());
+        let (nl, nf) = native.forward(&params, &images).unwrap();
+
+        let dl = pl.max_diff(&nl);
+        let df = pf.max_diff(&nf);
+        assert!(dl < 2e-3, "{name}: logits diverge by {dl}");
+        assert!(df < 2e-3, "{name}: features diverge by {df}");
+        println!("{name}: parity logits {dl:.2e} feats {df:.2e}");
+    }
+}
+
+#[test]
+fn pallas_forward_matches_reference_forward() {
+    let Some(manifest) = manifest() else { return };
+    let name = "soft_s";
+    if !manifest.models.contains_key(name) {
+        eprintln!("SKIP: no {name} in manifest");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+    let params = rt.init(3).unwrap();
+    let b = *rt.fwd_batches().last().unwrap();
+    let images = rand_images(b, rt.model.config.image_size, 7);
+    let (ref_logits, _) = rt.forward(&params, &images).unwrap();
+    let (pallas_logits, _) = rt.forward_pallas(&params, &images).unwrap();
+    let d = ref_logits.max_diff(&pallas_logits);
+    assert!(d < 1e-3, "pallas vs jnp forward differ by {d}");
+}
+
+#[test]
+fn pjrt_train_step_decreases_loss() {
+    let Some(manifest) = manifest() else { return };
+    let name = "soft_s";
+    if !manifest.models.contains_key(name) {
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+    let cfg = rt.model.config.clone();
+    let params = rt.init(4).unwrap();
+    let mut state = TrainState::fresh(params);
+    let data = SynthShapes::new(DatasetConfig {
+        image_size: cfg.image_size,
+        num_classes: cfg.num_classes,
+        seed: 0,
+        ..Default::default()
+    });
+    // Memorize one batch for a few steps: loss must drop.
+    let (images, labels) = data.batch(0, 32);
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let out = rt.train_step(&mut state, &images, &labels, 1e-3).unwrap();
+        losses.push(out.loss);
+    }
+    assert_eq!(state.step, 8);
+    assert!(losses.last().unwrap() < &(losses[0] * 0.98),
+            "loss did not decrease: {losses:?}");
+}
+
+#[test]
+fn pjrt_inspect_weights_are_convex() {
+    let Some(manifest) = manifest() else { return };
+    let name = "soft_s";
+    if !manifest.models.contains_key(name) {
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+    let cfg = rt.model.config.clone();
+    let params = rt.init(5).unwrap();
+    let entry = rt.model.entry("inspect").unwrap();
+    let b = entry.inputs.last().unwrap().shape[0];
+    let images = rand_images(b, cfg.image_size, 9);
+    let (_logits, _feats, weights) = rt.inspect(&params, &images).unwrap();
+    assert_eq!(weights.len(), cfg.moe_layers.len() * 2);
+    let m = cfg.tokens();
+    for (wname, w) in &weights {
+        // (batch, m, n, p)
+        assert_eq!(w.shape[1], m, "{wname}");
+        let (n, p) = (w.shape[2], w.shape[3]);
+        let per_img = m * n * p;
+        for img in 0..w.shape[0] {
+            let base = img * per_img;
+            if wname.ends_with("dispatch") {
+                // Columns (slots) sum to 1 over tokens.
+                for s in 0..n * p {
+                    let sum: f32 = (0..m)
+                        .map(|t| w.data[base + t * n * p + s])
+                        .sum();
+                    assert!((sum - 1.0).abs() < 1e-4, "{wname} img{img} s{s}");
+                }
+            } else {
+                // Rows (tokens) sum to 1 over slots.
+                for t in 0..m {
+                    let sum: f32 = (0..n * p)
+                        .map(|s| w.data[base + t * n * p + s])
+                        .sum();
+                    assert!((sum - 1.0).abs() < 1e-4, "{wname} img{img} t{t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn native_training_from_pjrt_init_works() {
+    // Cross-backend: HLO-initialized params trained by the native engine.
+    let Some(manifest) = manifest() else { return };
+    let name = "soft_s";
+    if !manifest.models.contains_key(name) {
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&manifest, name).unwrap();
+    let cfg = rt.model.config.clone();
+    let params = rt.init(6).unwrap();
+    let mut native = NativeRuntime::new(cfg.clone());
+    let mut state = TrainState::fresh(params);
+    let data = SynthShapes::new(DatasetConfig {
+        image_size: cfg.image_size,
+        num_classes: cfg.num_classes,
+        seed: 1,
+        ..Default::default()
+    });
+    let (images, labels) = data.batch(0, 8);
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let out = native
+            .train_step(&mut state, &images, &labels, 1e-3)
+            .unwrap();
+        losses.push(out.loss);
+    }
+    assert!(losses.last().unwrap() < &losses[0]);
+}

@@ -1,0 +1,146 @@
+//! GEMM microbenchmark: GFLOP/s at the exact shapes the mu/ti/s presets
+//! hit on the native hot path (patch embed, attention projections and
+//! scores, MLP/expert layers, Soft MoE dispatch, backward dW).
+//!
+//! Emits `reports/BENCH_GEMM.json` (machine-readable, with GFLOP/s per
+//! shape) so the perf trajectory can be tracked across PRs, plus the
+//! usual CSV.
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::json::Value;
+use softmoe::tensor::{
+    matmul_bias_gelu_into, matmul_into, matmul_nt_into, matmul_tn_into,
+    Tensor, Workspace,
+};
+use softmoe::util::Rng;
+
+/// One benched shape: logical (m, k, n) for FLOP accounting plus a
+/// closure-dispatch tag for which kernel variant it exercises.
+struct Case {
+    name: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    kind: Kind,
+}
+
+enum Kind {
+    /// C(m,n) = A(m,k)·B(k,n)
+    Nn,
+    /// C(k,n) = Aᵀ with A(m,k), B(m,n) — backward/dispatch layout.
+    Tn,
+    /// C(m,n) = A(m,k)·Bᵀ(n,k) — attention scores layout.
+    Nt,
+    /// Fused C = gelu(A·B + bias) — the expert/MLP first layer.
+    NnBiasGelu,
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let quick = std::env::var("SOFTMOE_BENCH_FAST").is_ok();
+    let sizes: &[&str] = if quick { &["mu"] } else { &["mu", "ti", "s"] };
+
+    let mut cases = Vec::new();
+    for size in sizes {
+        let cfg = ModelConfig::preset(size, MoeType::Soft).unwrap();
+        let m = cfg.tokens();
+        let d = cfg.dim;
+        let hd = cfg.head_dim();
+        let mlp = cfg.mlp_dim;
+        let s = cfg.total_slots();
+        let pd = cfg.patch_dim();
+        let mk = |name: &str, m, k, n, kind| Case {
+            name: format!("{size}/{name}"),
+            m,
+            k,
+            n,
+            kind,
+        };
+        cases.push(mk("patch_embed", m, pd, d, Kind::Nn));
+        cases.push(mk("attn_proj", m, d, d, Kind::Nn));
+        cases.push(mk("attn_scores_nt", m, hd, m, Kind::Nt));
+        cases.push(mk("mlp1_bias_gelu", m, d, mlp, Kind::NnBiasGelu));
+        cases.push(mk("mlp2", m, mlp, d, Kind::Nn));
+        // Soft MoE dispatch X̃ = Dᵀ X: A = D (m, s), B = X (m, d).
+        cases.push(mk("dispatch_tn", m, s, d, Kind::Tn));
+        // Backward dW = Xᵀ dY at the MLP shape.
+        cases.push(mk("backward_dw_tn", m, d, mlp, Kind::Tn));
+    }
+
+    println!("== GEMM GFLOP/s at preset shapes ==");
+    let mut rows: Vec<Value> = Vec::new();
+    let mut rng = Rng::new(0);
+    let mut ws = Workspace::new();
+    for case in &cases {
+        let (m, k, n) = (case.m, case.k, case.n);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let mean = match case.kind {
+            Kind::Nn => {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                let mut out = vec![0.0f32; m * n];
+                bench.run(&case.name, || {
+                    matmul_into(&a, &b, &mut out, &mut ws);
+                    black_box(&out);
+                })
+            }
+            Kind::Tn => {
+                // C = Aᵀ·B with A (m, k), B (m, n): output is (k, n) and
+                // the contraction runs over m.
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[m, n], 1.0, &mut rng);
+                let mut out = vec![0.0f32; k * n];
+                bench.run(&case.name, || {
+                    matmul_tn_into(&a, &b, &mut out, &mut ws);
+                    black_box(&out);
+                })
+            }
+            Kind::Nt => {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+                let mut out = vec![0.0f32; m * n];
+                bench.run(&case.name, || {
+                    matmul_nt_into(&a, &b, &mut out, &mut ws);
+                    black_box(&out);
+                })
+            }
+            Kind::NnBiasGelu => {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                let bias = vec![0.01f32; n];
+                let mut out = vec![0.0f32; m * n];
+                bench.run(&case.name, || {
+                    matmul_bias_gelu_into(&a, &b, &bias, &mut out, &mut ws);
+                    black_box(&out);
+                })
+            }
+        };
+        let gflops = flops / mean / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s  ({m}x{k}x{n})");
+        let mut o = Value::obj();
+        o.set("name", Value::Str(case.name.clone()));
+        o.set("m", Value::Num(m as f64));
+        o.set("k", Value::Num(k as f64));
+        o.set("n", Value::Num(n as f64));
+        o.set("mean_ms", Value::Num(mean * 1e3));
+        o.set("gflops", Value::Num(gflops));
+        rows.push(o);
+    }
+
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("gemm".into()));
+    root.set("threads",
+             Value::Num(softmoe::threadpool::default_threads() as f64));
+    root.set("results", Value::Arr(rows));
+    let path = std::path::Path::new("reports/BENCH_GEMM.json");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(path, root.to_string()) {
+        eprintln!("could not write {path:?}: {e}");
+    } else {
+        println!("\nwrote {path:?}");
+    }
+    let _ = bench.save_csv(std::path::Path::new("reports/bench_gemm.csv"));
+}

@@ -121,4 +121,7 @@ fn main() {
     );
     let _ = bench.save_csv(std::path::Path::new(
         "reports/bench_inference.csv"));
+    // Machine-readable perf trajectory (tracked across PRs).
+    let _ = bench.save_json(std::path::Path::new(
+        "reports/BENCH_INFERENCE.json"));
 }

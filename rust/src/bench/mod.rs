@@ -117,6 +117,34 @@ impl Bench {
         std::fs::write(path, self.to_csv())?;
         Ok(())
     }
+
+    /// Emit all results as a JSON document (the machine-readable
+    /// `BENCH_*.json` files that track the perf trajectory across PRs).
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        let mut root = Value::obj();
+        let mut arr = Vec::new();
+        for m in &self.results {
+            let mut o = Value::obj();
+            o.set("name", Value::Str(m.name.clone()));
+            o.set("mean_ms", Value::Num(m.mean_secs * 1e3));
+            o.set("median_ms", Value::Num(m.median_secs * 1e3));
+            o.set("p95_ms", Value::Num(m.p95_secs * 1e3));
+            o.set("min_ms", Value::Num(m.min_secs * 1e3));
+            o.set("iters", Value::Num(m.iters as f64));
+            arr.push(o);
+        }
+        root.set("results", Value::Arr(arr));
+        root
+    }
+
+    pub fn save_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -7,7 +7,7 @@
 //! count — the step-time contrast with Soft MoE in Fig. 6/7/20.
 
 use crate::moe::{ExpertParams, RoutingStats};
-use crate::tensor::{matmul, softmax_rows, Tensor};
+use crate::tensor::{matmul, softmax_rows, with_workspace, Tensor, Workspace};
 use crate::util::Rng;
 
 /// An Experts Choice MoE layer.
@@ -67,6 +67,14 @@ impl ExpertsChoice {
     }
 
     pub fn forward_with_stats(&self, x: &Tensor) -> (Tensor, RoutingStats) {
+        with_workspace(|ws| self.forward_with_stats_ws(x, ws))
+    }
+
+    /// Forward with an explicit workspace: the per-expert gather/output
+    /// buffers are pooled and reused across experts instead of freshly
+    /// allocated `n` times per call.
+    pub fn forward_with_stats_ws(&self, x: &Tensor, ws: &mut Workspace)
+        -> (Tensor, RoutingStats) {
         let (t, d) = x.dims2();
         let n = self.num_experts();
         let selection = self.route(x);
@@ -75,13 +83,15 @@ impl ExpertsChoice {
         let mut y = Tensor::zeros(&[t, d]);
         let mut expert_load = vec![0.0f64; n];
         let mut token_weight = vec![0.0f64; t];
+        let mut buf = ws.take_tensor(&[cap, d]);
+        let mut out = ws.take_tensor(&[cap, d]);
         for (e, picks) in selection.iter().enumerate() {
-            // Gather the expert's buffer.
-            let mut buf = Tensor::zeros(&[cap, d]);
+            // Gather the expert's buffer (every row is overwritten: EC
+            // fills exactly `cap` picks per expert).
             for (row, &(tok, _)) in picks.iter().enumerate() {
                 buf.data[row * d..(row + 1) * d].copy_from_slice(x.row(tok));
             }
-            let out = self.experts.apply(e, &buf);
+            self.experts.apply_into(e, &buf, &mut out.data, ws);
             // Scatter-add weighted outputs.
             for (row, &(tok, gate)) in picks.iter().enumerate() {
                 let src = &out.data[row * d..(row + 1) * d];
@@ -93,6 +103,8 @@ impl ExpertsChoice {
                 token_weight[tok] += 1.0;
             }
         }
+        ws.give_tensor(out);
+        ws.give_tensor(buf);
 
         let dropped = token_weight.iter().filter(|&&w| w == 0.0).count();
         let stats = RoutingStats {

@@ -18,7 +18,7 @@ pub use soft::SoftMoe;
 pub use stats::RoutingStats;
 pub use tokens_choice::TokensChoice;
 
-use crate::tensor::{gelu, matmul, Tensor};
+use crate::tensor::{with_workspace, Tensor, Workspace};
 use crate::util::Rng;
 
 /// Per-expert MLP parameters: each expert i has w1 (d,h), b1 (h),
@@ -56,8 +56,19 @@ impl ExpertParams {
 
     /// Apply expert `i`'s MLP to a (rows, d) tensor.
     pub fn apply(&self, i: usize, x: &Tensor) -> Tensor {
-        let h = matmul(x, &self.w1[i]).add_bias(&self.b1[i]).map(gelu);
-        matmul(&h, &self.w2[i]).add_bias(&self.b2[i])
+        let (r, _d) = x.dims2();
+        let mut out = Tensor::zeros(&[r, self.w2[i].shape[1]]);
+        with_workspace(|ws| self.apply_into(i, x, &mut out.data, ws));
+        out
+    }
+
+    /// Apply expert `i`'s MLP writing into `out` (len rows·d_out); the
+    /// hidden activation comes from `ws` and the first GEMM fuses
+    /// bias+GELU into its epilogue. Zero allocations at steady state.
+    pub fn apply_into(&self, i: usize, x: &Tensor, out: &mut [f32],
+                      ws: &mut Workspace) {
+        crate::nn::layers::mlp_infer_into(
+            x, &self.w1[i], &self.b1[i], &self.w2[i], &self.b2[i], out, ws);
     }
 
     /// Parameter count (for FLOP/param accounting).

@@ -13,8 +13,10 @@
 use crate::config::MixMode;
 use crate::moe::{ExpertParams, RoutingStats};
 use crate::tensor::{
-    l2_normalize_cols, l2_normalize_rows, matmul, matmul_tn, softmax_cols,
-    softmax_rows, Tensor,
+    l2_normalize_cols, l2_normalize_cols_inplace, l2_normalize_rows,
+    l2_normalize_rows_inplace, matmul, matmul_into, matmul_tn_into,
+    softmax_cols_inplace, softmax_rows_inplace, with_workspace, Tensor,
+    Workspace,
 };
 use crate::util::Rng;
 
@@ -74,16 +76,20 @@ impl SoftMoe {
         }
     }
 
-    fn mix_weights(&self, logits: &Tensor, mode: MixMode, dispatch: bool)
-        -> Tensor {
+    /// Mix weights for `logits` (m, s): either softmax over a given axis
+    /// or one of the fixed-routing ablations (Table 3).
+    fn mix_weights_ws(&self, logits: &Tensor, mode: MixMode, dispatch: bool,
+                      ws: &mut Workspace) -> Tensor {
         let (m, s) = logits.dims2();
         match mode {
             MixMode::Soft => {
+                let mut t = logits.clone();
                 if dispatch {
-                    softmax_cols(logits)
+                    softmax_cols_inplace(&mut t, ws);
                 } else {
-                    softmax_rows(logits)
+                    softmax_rows_inplace(&mut t);
                 }
+                t
             }
             MixMode::Uniform => {
                 let v = if dispatch { 1.0 / m as f32 } else { 1.0 / s as f32 };
@@ -102,24 +108,77 @@ impl SoftMoe {
 
     /// Forward one sequence x (m, d) -> (m, d) with inspection weights.
     pub fn forward_full(&self, x: &Tensor) -> SoftMoeOutput {
-        let logits = self.logits(x);
-        let dispatch = self.mix_weights(&logits, self.dispatch_mode, true);
-        let combine = self.mix_weights(&logits, self.combine_mode, false);
+        with_workspace(|ws| self.forward_full_ws(x, ws))
+    }
 
-        // X̃ = Dᵀ X : (s, d)
-        let xs = matmul_tn(&dispatch, x);
-        // Per-expert MLP on its slot group.
+    /// Forward with an explicit workspace: all transients (normalized
+    /// router inputs, slot buffers, GEMM pack panels) are pooled; only
+    /// the returned tensors are fresh allocations.
+    pub fn forward_full_ws(&self, x: &Tensor, ws: &mut Workspace)
+        -> SoftMoeOutput {
+        let (m, d) = x.dims2();
+        let s = self.total_slots();
         let p = self.slots_per_expert;
         let n = self.num_experts();
-        let d = x.shape[1];
-        let mut ys = Tensor::zeros(&[n * p, d]);
-        for e in 0..n {
-            let xe = xs.rows(e * p, (e + 1) * p);
-            let ye = self.experts.apply(e, &xe);
-            ys.data[e * p * d..(e + 1) * p * d].copy_from_slice(&ye.data);
+
+        // Router logits are only needed when some mix is actually Soft
+        // (the fixed-routing ablations ignore them; the pooled tensor's
+        // stale contents are never read in that case).
+        let need_logits = self.dispatch_mode == MixMode::Soft
+            || self.combine_mode == MixMode::Soft;
+        let mut logits = ws.take_tensor(&[m, s]);
+        if need_logits {
+            if self.normalize {
+                let mut xn = ws.take_tensor(&[m, d]);
+                xn.data.copy_from_slice(&x.data);
+                l2_normalize_rows_inplace(&mut xn);
+                let mut phin = ws.take_tensor(&[d, s]);
+                phin.data.copy_from_slice(&self.phi.data);
+                l2_normalize_cols_inplace(&mut phin, ws);
+                for v in phin.data.iter_mut() {
+                    *v *= self.scale;
+                }
+                matmul_into(&xn, &phin, &mut logits.data, ws);
+                ws.give_tensor(phin);
+                ws.give_tensor(xn);
+            } else {
+                matmul_into(x, &self.phi, &mut logits.data, ws);
+            }
         }
-        // Y = C Ỹ : (m, d)
-        let y = matmul(&combine, &ys);
+        let dispatch =
+            self.mix_weights_ws(&logits, self.dispatch_mode, true, ws);
+        let combine =
+            self.mix_weights_ws(&logits, self.combine_mode, false, ws);
+        ws.give_tensor(logits);
+
+        // X̃ = Dᵀ X : (s, d). In Identity mode D is the one-hot identity
+        // (slot i = token i), so the dispatch "GEMM" is a copy — the one
+        // place a caller is allowed to exploit structural sparsity now
+        // that the dense kernel has no zero-skip branch.
+        let mut xs = ws.take_tensor(&[s, d]);
+        if self.dispatch_mode == MixMode::Identity {
+            xs.data.copy_from_slice(&x.data);
+        } else {
+            matmul_tn_into(&dispatch, x, &mut xs.data, ws);
+        }
+        // Per-expert MLP on its slot group.
+        let mut ys = ws.take_tensor(&[s, d]);
+        let mut xe = ws.take_tensor(&[p, d]);
+        for e in 0..n {
+            xe.data.copy_from_slice(&xs.data[e * p * d..(e + 1) * p * d]);
+            self.experts.apply_into(
+                e, &xe, &mut ys.data[e * p * d..(e + 1) * p * d], ws);
+        }
+        ws.give_tensor(xe);
+        ws.give_tensor(xs);
+        // Y = C Ỹ : (m, d); Identity combine is again a copy.
+        let mut y = Tensor::zeros(&[m, d]);
+        if self.combine_mode == MixMode::Identity {
+            y.data.copy_from_slice(&ys.data);
+        } else {
+            matmul_into(&combine, &ys, &mut y.data, ws);
+        }
+        ws.give_tensor(ys);
         SoftMoeOutput { y, dispatch, combine }
     }
 

@@ -12,7 +12,7 @@
 //! the buffer logic here does.
 
 use crate::moe::{ExpertParams, RoutingStats};
-use crate::tensor::{matmul, softmax_rows, Tensor};
+use crate::tensor::{matmul, softmax_rows, with_workspace, Tensor, Workspace};
 use crate::util::Rng;
 
 /// A Tokens Choice MoE layer.
@@ -122,37 +122,58 @@ impl TokensChoice {
     }
 
     pub fn forward_with_stats(&self, x: &Tensor) -> (Tensor, RoutingStats) {
+        with_workspace(|ws| self.forward_with_stats_ws(x, ws))
+    }
+
+    /// Forward with an explicit workspace: one reusable gather buffer and
+    /// one output buffer, processed expert-by-expert (instead of `n`
+    /// fresh capacity-sized tensors per call).
+    pub fn forward_with_stats_ws(&self, x: &Tensor, ws: &mut Workspace)
+        -> (Tensor, RoutingStats) {
         let (t, d) = x.dims2();
         let n = self.num_experts();
         let (asg, _probs) = self.route(x);
 
-        // Gather per-expert buffers.
         let cap = asg.capacity;
-        let mut buffers = vec![Tensor::zeros(&[cap, d]); n];
-        for &(tok, e, _gate, pos) in &asg.kept {
-            buffers[e].data[pos * d..(pos + 1) * d]
-                .copy_from_slice(x.row(tok));
-        }
-        // Expert compute.
-        let outs: Vec<Tensor> = (0..n)
-            .map(|e| self.experts.apply(e, &buffers[e]))
-            .collect();
-        // Scatter back with gate weights.
         let mut y = Tensor::zeros(&[t, d]);
-        for &(tok, e, gate, pos) in &asg.kept {
-            let src = &outs[e].data[pos * d..(pos + 1) * d];
-            let dst = &mut y.data[tok * d..(tok + 1) * d];
-            for (o, s) in dst.iter_mut().zip(src) {
-                *o += gate * s;
-            }
-        }
-
         let mut expert_load = vec![0.0f64; n];
         let mut token_weight = vec![0.0f64; t];
-        for &(tok, e, _g, _p) in &asg.kept {
-            expert_load[e] += 1.0;
-            token_weight[tok] += 1.0;
+        // Group assignments by expert (one in-place sort) so each expert
+        // is a single contiguous pass, not an O(n·|kept|) rescan. Pairs
+        // (tok, e) are unique, so per-group order doesn't affect results.
+        let mut kept = asg.kept;
+        kept.sort_unstable_by_key(|&(_, e, _, _)| e);
+        let mut buf = ws.take_tensor(&[cap, d]);
+        let mut out = ws.take_tensor(&[cap, d]);
+        let mut i0 = 0usize;
+        while i0 < kept.len() {
+            let e = kept[i0].1;
+            let mut i1 = i0;
+            while i1 < kept.len() && kept[i1].1 == e {
+                i1 += 1;
+            }
+            let group = &kept[i0..i1];
+            // Gather this expert's buffer (stale rows beyond its fill are
+            // never read back: the scatter only visits kept positions).
+            for &(tok, _e, _gate, pos) in group {
+                buf.data[pos * d..(pos + 1) * d].copy_from_slice(x.row(tok));
+            }
+            self.experts.apply_into(e, &buf, &mut out.data, ws);
+            // Scatter back with gate weights.
+            for &(tok, _e, gate, pos) in group {
+                let src = &out.data[pos * d..(pos + 1) * d];
+                let dst = &mut y.data[tok * d..(tok + 1) * d];
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += gate * s;
+                }
+                expert_load[e] += 1.0;
+                token_weight[tok] += 1.0;
+            }
+            i0 = i1;
         }
+        ws.give_tensor(out);
+        ws.give_tensor(buf);
+
         let stats = RoutingStats {
             dropped_frac: asg.dropped.len() as f64 / t as f64,
             expert_load,

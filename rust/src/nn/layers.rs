@@ -6,8 +6,9 @@
 //! the tests below.
 
 use crate::tensor::{
-    dot, gelu, gelu_grad, layernorm, matmul, matmul_nt, matmul_tn,
-    softmax_rows, Tensor, L2_EPS, LN_EPS,
+    dot, gelu, gelu_grad, layernorm, matmul, matmul_bias, matmul_bias_gelu_into,
+    matmul_bias_into, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
+    softmax_inplace, softmax_rows, Tensor, Workspace, L2_EPS, LN_EPS,
 };
 
 // ---------------------------------------------------------------------------
@@ -19,8 +20,16 @@ pub struct LinearCache {
 }
 
 pub fn linear_fwd(x: &Tensor, w: &Tensor, b: &[f32]) -> (Tensor, LinearCache) {
-    let y = matmul(x, w).add_bias(b);
+    // Bias is fused into the GEMM epilogue (no second pass over Y).
+    let y = matmul_bias(x, w, b);
     (y, LinearCache { x: x.clone() })
+}
+
+/// Inference-only linear: Y written into `out` (len r·n), all scratch from
+/// `ws`, no cache, no allocation.
+pub fn linear_infer_into(x: &Tensor, w: &Tensor, b: &[f32], out: &mut [f32],
+                         ws: &mut Workspace) {
+    matmul_bias_into(x, w, b, out, ws);
 }
 
 /// Returns (dX, dW, db).
@@ -55,10 +64,26 @@ pub struct MlpCache {
 
 pub fn mlp_fwd(x: &Tensor, w1: &Tensor, b1: &[f32], w2: &Tensor, b2: &[f32])
     -> (Tensor, MlpCache) {
-    let h_pre = matmul(x, w1).add_bias(b1);
+    // Training path: h_pre must be materialized for the backward GELU
+    // derivative, so only the bias is fused here.
+    let h_pre = matmul_bias(x, w1, b1);
     let g = h_pre.map(gelu);
-    let y = matmul(&g, w2).add_bias(b2);
+    let y = matmul_bias(&g, w2, b2);
     (y, MlpCache { x: x.clone(), h_pre, g })
+}
+
+/// Inference-only MLP: Y = gelu(X·W1 + b1)·W2 + b2 written into `out`
+/// (len r·d_out). The hidden activation lives in `ws` scratch and the
+/// first GEMM fuses bias+GELU into its epilogue — no cache, no
+/// allocation at steady state.
+pub fn mlp_infer_into(x: &Tensor, w1: &Tensor, b1: &[f32], w2: &Tensor,
+                      b2: &[f32], out: &mut [f32], ws: &mut Workspace) {
+    let (r, _d) = x.dims2();
+    let h = w1.shape[1];
+    let mut g = ws.take_tensor(&[r, h]);
+    matmul_bias_gelu_into(x, w1, b1, &mut g.data, ws);
+    matmul_bias_into(&g, w2, b2, out, ws);
+    ws.give_tensor(g);
 }
 
 /// Returns (dX, dW1, db1, dW2, db2).
@@ -226,14 +251,21 @@ pub struct AttnCache {
     pub o: Tensor,
 }
 
+/// Gather columns [h*hd, (h+1)*hd) of a (m, d) tensor into `dst` (m, hd).
+fn head_gather(src: &Tensor, h: usize, hd: usize, dst: &mut Tensor) {
+    let (m, d) = src.dims2();
+    debug_assert_eq!(dst.shape, vec![m, hd]);
+    for i in 0..m {
+        dst.data[i * hd..(i + 1) * hd]
+            .copy_from_slice(&src.data[i * d + h * hd..i * d + (h + 1) * hd]);
+    }
+}
+
 /// Extract columns [h*hd, (h+1)*hd) of a (m, d) tensor.
 fn head_slice(t: &Tensor, h: usize, hd: usize) -> Tensor {
-    let (m, d) = t.dims2();
+    let (m, _d) = t.dims2();
     let mut out = Tensor::zeros(&[m, hd]);
-    for i in 0..m {
-        out.data[i * hd..(i + 1) * hd]
-            .copy_from_slice(&t.data[i * d + h * hd..i * d + (h + 1) * hd]);
-    }
+    head_gather(t, h, hd, &mut out);
     out
 }
 
@@ -255,25 +287,101 @@ fn head_add(dst: &mut Tensor, src: &Tensor, h: usize, hd: usize) {
 }
 
 pub fn attention_fwd(x: &Tensor, p: &AttnParams) -> (Tensor, AttnCache) {
+    crate::tensor::with_workspace(|ws| attention_fwd_ws(x, p, ws))
+}
+
+/// Training attention forward with an explicit workspace: cache tensors
+/// (q/k/v/att/o) are owned allocations because they outlive the call, but
+/// every transient (head gathers, head outputs, GEMM pack panels) comes
+/// from `ws`.
+pub fn attention_fwd_ws(x: &Tensor, p: &AttnParams, ws: &mut Workspace)
+    -> (Tensor, AttnCache) {
     let (m, d) = x.dims2();
     let hd = d / p.heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let q = matmul(x, p.wq).add_bias(p.bq);
-    let k = matmul(x, p.wk).add_bias(p.bk);
-    let v = matmul(x, p.wv).add_bias(p.bv);
+    let mut q = Tensor::zeros(&[m, d]);
+    let mut k = Tensor::zeros(&[m, d]);
+    let mut v = Tensor::zeros(&[m, d]);
+    matmul_bias_into(x, p.wq, p.bq, &mut q.data, ws);
+    matmul_bias_into(x, p.wk, p.bk, &mut k.data, ws);
+    matmul_bias_into(x, p.wv, p.bv, &mut v.data, ws);
     let mut o = Tensor::zeros(&[m, d]);
     let mut att = Vec::with_capacity(p.heads);
+    let mut qh = ws.take_tensor(&[m, hd]);
+    let mut kh = ws.take_tensor(&[m, hd]);
+    let mut vh = ws.take_tensor(&[m, hd]);
+    let mut oh = ws.take_tensor(&[m, hd]);
     for h in 0..p.heads {
-        let qh = head_slice(&q, h, hd);
-        let kh = head_slice(&k, h, hd);
-        let vh = head_slice(&v, h, hd);
-        let a = softmax_rows(&matmul_nt(&qh, &kh).scale(scale));
-        let oh = matmul(&a, &vh);
+        head_gather(&q, h, hd, &mut qh);
+        head_gather(&k, h, hd, &mut kh);
+        head_gather(&v, h, hd, &mut vh);
+        let mut a = Tensor::zeros(&[m, m]); // cached per head
+        matmul_nt_into(&qh, &kh, &mut a.data, ws);
+        for i in 0..m {
+            let row = a.row_mut(i);
+            for val in row.iter_mut() {
+                *val *= scale;
+            }
+            softmax_inplace(row);
+        }
+        matmul_into(&a, &vh, &mut oh.data, ws);
         head_write(&mut o, &oh, h, hd);
         att.push(a);
     }
-    let y = matmul(&o, p.wo).add_bias(p.bo);
+    ws.give_tensor(qh);
+    ws.give_tensor(kh);
+    ws.give_tensor(vh);
+    ws.give_tensor(oh);
+    let mut y = Tensor::zeros(&[m, d]);
+    matmul_bias_into(&o, p.wo, p.bo, &mut y.data, ws);
     (y, AttnCache { x: x.clone(), q, k, v, att, o })
+}
+
+/// Inference-only attention: y written into `out` (len m·d); q/k/v, the
+/// per-head gathers, and the attention matrix all live in `ws` scratch.
+/// Zero heap allocations at steady state.
+pub fn attention_infer_into(x: &Tensor, p: &AttnParams, out: &mut [f32],
+                            ws: &mut Workspace) {
+    let (m, d) = x.dims2();
+    let hd = d / p.heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut q = ws.take_tensor(&[m, d]);
+    let mut k = ws.take_tensor(&[m, d]);
+    let mut v = ws.take_tensor(&[m, d]);
+    matmul_bias_into(x, p.wq, p.bq, &mut q.data, ws);
+    matmul_bias_into(x, p.wk, p.bk, &mut k.data, ws);
+    matmul_bias_into(x, p.wv, p.bv, &mut v.data, ws);
+    let mut o = ws.take_tensor(&[m, d]);
+    let mut qh = ws.take_tensor(&[m, hd]);
+    let mut kh = ws.take_tensor(&[m, hd]);
+    let mut vh = ws.take_tensor(&[m, hd]);
+    let mut oh = ws.take_tensor(&[m, hd]);
+    let mut a = ws.take_tensor(&[m, m]);
+    for h in 0..p.heads {
+        head_gather(&q, h, hd, &mut qh);
+        head_gather(&k, h, hd, &mut kh);
+        head_gather(&v, h, hd, &mut vh);
+        matmul_nt_into(&qh, &kh, &mut a.data, ws);
+        for i in 0..m {
+            let row = a.row_mut(i);
+            for val in row.iter_mut() {
+                *val *= scale;
+            }
+            softmax_inplace(row);
+        }
+        matmul_into(&a, &vh, &mut oh.data, ws);
+        head_write(&mut o, &oh, h, hd);
+    }
+    matmul_bias_into(&o, p.wo, p.bo, out, ws);
+    ws.give_tensor(a);
+    ws.give_tensor(oh);
+    ws.give_tensor(vh);
+    ws.give_tensor(kh);
+    ws.give_tensor(qh);
+    ws.give_tensor(o);
+    ws.give_tensor(v);
+    ws.give_tensor(k);
+    ws.give_tensor(q);
 }
 
 pub struct AttnGrads {

@@ -14,10 +14,14 @@ use crate::config::{MixMode, ModelConfig, MoeType};
 use crate::nn::layers::*;
 use crate::nn::{accumulate, Grads};
 use crate::tensor::{
-    l2_normalize_cols, l2_normalize_rows, matmul, matmul_nt, matmul_tn,
-    softmax_cols, softmax_rows, Tensor,
+    l2_normalize_cols, l2_normalize_cols_inplace, l2_normalize_rows,
+    l2_normalize_rows_inplace, layernorm_into, matmul,
+    matmul_bias_gelu_slice_into, matmul_bias_slice_into, matmul_into,
+    matmul_nt, matmul_slice_into, matmul_tn, matmul_tn_into, softmax_cols,
+    softmax_cols_inplace, softmax_rows, softmax_rows_inplace, with_workspace,
+    Tensor, Workspace,
 };
-use crate::threadpool::parallel_for;
+use crate::threadpool::parallel_map;
 use crate::util::Rng;
 
 /// Named parameter storage; keys match the Python/HLO manifest exactly.
@@ -166,13 +170,31 @@ impl VitModel {
     /// `model.patchify` (tested by `test_patchify_row_major_contract`).
     pub fn patchify_item(&self, images: &Tensor, item: usize) -> Tensor {
         let cfg = &self.cfg;
+        let g = cfg.image_size / cfg.patch_size;
+        let mut out =
+            Tensor::zeros(&[g * g, cfg.patch_dim()]);
+        self.patchify_into(images, item, &mut out);
+        out
+    }
+
+    /// Patchify into a pooled tensor (the zero-alloc inference path).
+    fn patchify_item_ws(&self, images: &Tensor, item: usize,
+                        ws: &mut Workspace) -> Tensor {
+        let cfg = &self.cfg;
+        let g = cfg.image_size / cfg.patch_size;
+        let mut out = ws.take_tensor(&[g * g, cfg.patch_dim()]);
+        self.patchify_into(images, item, &mut out);
+        out
+    }
+
+    fn patchify_into(&self, images: &Tensor, item: usize, out: &mut Tensor) {
+        let cfg = &self.cfg;
         let (h, w, c) = (cfg.image_size, cfg.image_size, cfg.channels);
         let ps = cfg.patch_size;
         let g = h / ps;
-        let m = g * g;
         let pdim = ps * ps * c;
         let base = item * h * w * c;
-        let mut out = Tensor::zeros(&[m, pdim]);
+        debug_assert_eq!(out.shape, vec![g * g, pdim]);
         for gy in 0..g {
             for gx in 0..g {
                 let tok = gy * g + gx;
@@ -186,7 +208,6 @@ impl VitModel {
                 }
             }
         }
-        out
     }
 
     // -----------------------------------------------------------------------
@@ -311,21 +332,14 @@ impl VitModel {
         )
     }
 
-    fn sparse_moe_fwd(&self, p: &ParamStore, pre: &str, x: &Tensor)
-        -> (Tensor, MoeCache) {
+    /// Routing decision from gate probs (t, n): identical semantics to
+    /// moe::{tokens,experts}_choice and ref.py. Shared by the training
+    /// forward (which caches it for backward) and the inference path.
+    fn sparse_route(&self, probs: &Tensor, t: usize)
+        -> (Vec<(usize, usize, f32, usize)>, usize) {
         let cfg = &self.cfg;
-        let wg = self.get(p, &format!("{pre}/moe/wg"));
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let b1 = self.get(p, &format!("{pre}/moe/b1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
-        let b2 = self.get(p, &format!("{pre}/moe/b2"));
-        let (t, d) = x.dims2();
         let n = cfg.num_experts;
-        let probs = softmax_rows(&matmul(x, wg));
-
-        // Routing decision (identical semantics to moe::{tokens,experts}_choice
-        // and ref.py; duplicated here so the cache holds what backward needs).
-        let (kept, capacity) = match cfg.moe_type {
+        match cfg.moe_type {
             MoeType::TokensChoice => {
                 let k = cfg.top_k;
                 let cap = ((cfg.capacity_factor * t as f32 * k as f32
@@ -383,7 +397,21 @@ impl VitModel {
                 (kept, cap)
             }
             _ => unreachable!(),
-        };
+        }
+    }
+
+    fn sparse_moe_fwd(&self, p: &ParamStore, pre: &str, x: &Tensor)
+        -> (Tensor, MoeCache) {
+        let cfg = &self.cfg;
+        let wg = self.get(p, &format!("{pre}/moe/wg"));
+        let w1 = self.get(p, &format!("{pre}/moe/w1"));
+        let b1 = self.get(p, &format!("{pre}/moe/b1"));
+        let w2 = self.get(p, &format!("{pre}/moe/w2"));
+        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        let (t, d) = x.dims2();
+        let n = cfg.num_experts;
+        let probs = softmax_rows(&matmul(x, wg));
+        let (kept, capacity) = self.sparse_route(&probs, t);
 
         // Gather -> expert MLPs -> scatter.
         let mut buffers = vec![Tensor::zeros(&[capacity, d]); n];
@@ -421,6 +449,260 @@ impl VitModel {
                 expert_caches,
             })),
         )
+    }
+
+    // -----------------------------------------------------------------------
+    // Inference fast path: no caches, all transients from the workspace.
+    // Math is identical to the training forward (same kernels, same
+    // accumulation order), parity-tested in `forward_infer_matches_item`.
+    // -----------------------------------------------------------------------
+
+    fn moe_infer_into(&self, p: &ParamStore, pre: &str, x: &Tensor,
+                      out: &mut [f32], ws: &mut Workspace) {
+        if p.contains_key(&format!("{pre}/mlp/w1")) {
+            mlp_infer_into(
+                x,
+                self.get(p, &format!("{pre}/mlp/w1")),
+                &self.get(p, &format!("{pre}/mlp/b1")).data,
+                self.get(p, &format!("{pre}/mlp/w2")),
+                &self.get(p, &format!("{pre}/mlp/b2")).data,
+                out,
+                ws,
+            );
+            return;
+        }
+        match self.cfg.moe_type {
+            MoeType::Soft => self.soft_moe_infer_into(p, pre, x, out, ws),
+            MoeType::TokensChoice | MoeType::ExpertsChoice => {
+                self.sparse_moe_infer_into(p, pre, x, out, ws)
+            }
+            MoeType::Dense => unreachable!("dense handled above"),
+        }
+    }
+
+    fn soft_moe_infer_into(&self, p: &ParamStore, pre: &str, x: &Tensor,
+                           out: &mut [f32], ws: &mut Workspace) {
+        let cfg = &self.cfg;
+        let scale = self.get(p, &format!("{pre}/moe/scale")).data[0];
+        let w1 = self.get(p, &format!("{pre}/moe/w1"));
+        let b1 = self.get(p, &format!("{pre}/moe/b1"));
+        let w2 = self.get(p, &format!("{pre}/moe/w2"));
+        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        // (d, n, p) row-major flattens to (d, s) without copying: the
+        // slice GEMM variants address it directly.
+        let phi = self.get(p, &format!("{pre}/moe/phi"));
+        let (m, d) = x.dims2();
+        let n = cfg.num_experts;
+        let sp = cfg.slots_per_expert;
+        let s = n * sp;
+        let eh = cfg.expert_hidden;
+
+        let need_logits = cfg.dispatch_mode == MixMode::Soft
+            || cfg.combine_mode == MixMode::Soft;
+        let mut logits = ws.take_tensor(&[m, s]);
+        if need_logits {
+            if cfg.normalize_router {
+                let mut xn = ws.take_tensor(&[m, d]);
+                xn.data.copy_from_slice(&x.data);
+                l2_normalize_rows_inplace(&mut xn);
+                let mut phin = ws.take_tensor(&[d, s]);
+                phin.data.copy_from_slice(&phi.data);
+                l2_normalize_cols_inplace(&mut phin, ws);
+                for v in phin.data.iter_mut() {
+                    *v *= scale;
+                }
+                matmul_into(&xn, &phin, &mut logits.data, ws);
+                ws.give_tensor(phin);
+                ws.give_tensor(xn);
+            } else {
+                matmul_slice_into(x, &phi.data, s, &mut logits.data, ws);
+            }
+        }
+
+        // X̃ = Dᵀ X. Identity dispatch is one-hot: the GEMM is a copy
+        // (the caller-side sparsity shortcut; the dense kernel itself has
+        // no zero-skip branch).
+        let mut xs = ws.take_tensor(&[s, d]);
+        match cfg.dispatch_mode {
+            MixMode::Identity => {
+                assert_eq!(m, s, "identity routing requires m == slots");
+                xs.data.copy_from_slice(&x.data);
+            }
+            MixMode::Uniform => {
+                let mut disp = ws.take_tensor(&[m, s]);
+                for v in disp.data.iter_mut() {
+                    *v = 1.0 / m as f32;
+                }
+                matmul_tn_into(&disp, x, &mut xs.data, ws);
+                ws.give_tensor(disp);
+            }
+            MixMode::Soft => {
+                let mut disp = ws.take_tensor(&[m, s]);
+                disp.data.copy_from_slice(&logits.data);
+                softmax_cols_inplace(&mut disp, ws);
+                matmul_tn_into(&disp, x, &mut xs.data, ws);
+                ws.give_tensor(disp);
+            }
+        }
+
+        // Per-expert MLPs on their slot groups (stacked weights addressed
+        // as slices — no per-expert clone).
+        let mut ys = ws.take_tensor(&[s, d]);
+        let mut xe = ws.take_tensor(&[sp, d]);
+        let mut ge = ws.take_tensor(&[sp, eh]);
+        for e in 0..n {
+            xe.data.copy_from_slice(&xs.data[e * sp * d..(e + 1) * sp * d]);
+            let w1e = &w1.data[e * d * eh..(e + 1) * d * eh];
+            let b1e = &b1.data[e * eh..(e + 1) * eh];
+            let w2e = &w2.data[e * eh * d..(e + 1) * eh * d];
+            let b2e = &b2.data[e * d..(e + 1) * d];
+            matmul_bias_gelu_slice_into(&xe, w1e, eh, b1e, &mut ge.data, ws);
+            matmul_bias_slice_into(
+                &ge, w2e, d, b2e,
+                &mut ys.data[e * sp * d..(e + 1) * sp * d], ws);
+        }
+        ws.give_tensor(ge);
+        ws.give_tensor(xe);
+        ws.give_tensor(xs);
+
+        // Y = C Ỹ.
+        match cfg.combine_mode {
+            MixMode::Identity => {
+                assert_eq!(m, s, "identity routing requires m == slots");
+                out.copy_from_slice(&ys.data);
+            }
+            MixMode::Uniform => {
+                let mut comb = ws.take_tensor(&[m, s]);
+                for v in comb.data.iter_mut() {
+                    *v = 1.0 / s as f32;
+                }
+                matmul_into(&comb, &ys, out, ws);
+                ws.give_tensor(comb);
+            }
+            MixMode::Soft => {
+                let mut comb = ws.take_tensor(&[m, s]);
+                comb.data.copy_from_slice(&logits.data);
+                softmax_rows_inplace(&mut comb);
+                matmul_into(&comb, &ys, out, ws);
+                ws.give_tensor(comb);
+            }
+        }
+        ws.give_tensor(ys);
+        ws.give_tensor(logits);
+    }
+
+    fn sparse_moe_infer_into(&self, p: &ParamStore, pre: &str, x: &Tensor,
+                             out: &mut [f32], ws: &mut Workspace) {
+        let cfg = &self.cfg;
+        let wg = self.get(p, &format!("{pre}/moe/wg"));
+        let w1 = self.get(p, &format!("{pre}/moe/w1"));
+        let b1 = self.get(p, &format!("{pre}/moe/b1"));
+        let w2 = self.get(p, &format!("{pre}/moe/w2"));
+        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        let (t, d) = x.dims2();
+        let n = cfg.num_experts;
+        let eh = cfg.expert_hidden;
+
+        let mut probs = ws.take_tensor(&[t, n]);
+        matmul_into(x, wg, &mut probs.data, ws);
+        softmax_rows_inplace(&mut probs);
+        let (mut kept, cap) = self.sparse_route(&probs, t);
+        ws.give_tensor(probs);
+
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        // Group by expert with one in-place sort (single pass per expert
+        // instead of rescanning `kept` n times). (tok, e) pairs are
+        // unique, so per-group order doesn't affect the scatter-add.
+        kept.sort_unstable_by_key(|&(_, e, _, _)| e);
+        let mut buf = ws.take_tensor(&[cap, d]);
+        let mut ge = ws.take_tensor(&[cap, eh]);
+        let mut ob = ws.take_tensor(&[cap, d]);
+        let mut i0 = 0usize;
+        while i0 < kept.len() {
+            let e = kept[i0].1;
+            let mut i1 = i0;
+            while i1 < kept.len() && kept[i1].1 == e {
+                i1 += 1;
+            }
+            let group = &kept[i0..i1];
+            for &(tok, _e, _g, pos) in group {
+                buf.data[pos * d..(pos + 1) * d].copy_from_slice(x.row(tok));
+            }
+            let w1e = &w1.data[e * d * eh..(e + 1) * d * eh];
+            let b1e = &b1.data[e * eh..(e + 1) * eh];
+            let w2e = &w2.data[e * eh * d..(e + 1) * eh * d];
+            let b2e = &b2.data[e * d..(e + 1) * d];
+            matmul_bias_gelu_slice_into(&buf, w1e, eh, b1e, &mut ge.data, ws);
+            matmul_bias_slice_into(&ge, w2e, d, b2e, &mut ob.data, ws);
+            for &(tok, _e, gate, pos) in group {
+                let src = &ob.data[pos * d..(pos + 1) * d];
+                let dst = &mut out[tok * d..(tok + 1) * d];
+                for (o, sv) in dst.iter_mut().zip(src) {
+                    *o += gate * sv;
+                }
+            }
+            i0 = i1;
+        }
+        ws.give_tensor(ob);
+        ws.give_tensor(ge);
+        ws.give_tensor(buf);
+    }
+
+    /// Inference-only forward for one item: no caches; every transient
+    /// (activations, attention scratch, MoE slot buffers, GEMM panels)
+    /// comes from `ws`, so steady-state calls perform zero workspace
+    /// heap allocations (see `forward_infer_steady_state_no_allocs`).
+    pub fn forward_item_infer(&self, p: &ParamStore, images: &Tensor,
+                              item: usize, ws: &mut Workspace)
+        -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.cfg;
+        let m = cfg.tokens();
+        let d = cfg.dim;
+        let patches = self.patchify_item_ws(images, item, ws);
+        let mut x = ws.take_tensor(&[m, d]);
+        linear_infer_into(&patches, self.get(p, "patch_embed/w"),
+                          &self.get(p, "patch_embed/b").data, &mut x.data, ws);
+        ws.give_tensor(patches);
+        x.add_inplace(self.get(p, "pos_embed"));
+
+        let mut h = ws.take_tensor(&[m, d]);
+        let mut branch = ws.take_tensor(&[m, d]);
+        for i in 0..cfg.depth {
+            let pre = format!("block_{i}");
+            layernorm_into(
+                &x,
+                &self.get(p, &format!("{pre}/ln1/s")).data,
+                &self.get(p, &format!("{pre}/ln1/b")).data,
+                &mut h.data,
+            );
+            let ap = self.attn_params(p, &pre);
+            attention_infer_into(&h, &ap, &mut branch.data, ws);
+            x.add_inplace(&branch);
+            layernorm_into(
+                &x,
+                &self.get(p, &format!("{pre}/ln2/s")).data,
+                &self.get(p, &format!("{pre}/ln2/b")).data,
+                &mut h.data,
+            );
+            self.moe_infer_into(p, &pre, &h, &mut branch.data, ws);
+            x.add_inplace(&branch);
+        }
+
+        layernorm_into(&x, &self.get(p, "ln_f/s").data,
+                       &self.get(p, "ln_f/b").data, &mut h.data);
+        let feats = h.mean_rows();
+        let mut ft = ws.take_tensor(&[1, d]);
+        ft.data.copy_from_slice(&feats);
+        let mut logits = vec![0.0f32; cfg.num_classes];
+        linear_infer_into(&ft, self.get(p, "head/w"),
+                          &self.get(p, "head/b").data, &mut logits, ws);
+        ws.give_tensor(ft);
+        ws.give_tensor(branch);
+        ws.give_tensor(h);
+        ws.give_tensor(x);
+        (logits, feats)
     }
 
     fn forward_item(&self, p: &ParamStore, images: &Tensor, item: usize)
@@ -476,23 +758,24 @@ impl VitModel {
     }
 
     /// Batched forward. `images.shape == [B, H, W, C]`.
+    ///
+    /// Uses the cache-free inference path. Items are data-parallel; the
+    /// parallelism budget (see `threadpool`) automatically gives the
+    /// threads to the items when b > 1 and to the per-item GEMMs when
+    /// b == 1 — never both. Scratch pooling: for b == 1 the caller
+    /// thread's workspace persists across calls (zero steady-state
+    /// allocations); for b > 1 each scoped worker's workspace is reused
+    /// across the items it processes but dropped at batch end (a
+    /// persistent worker pool is a ROADMAP follow-up).
     pub fn forward(&self, p: &ParamStore, images: &Tensor) -> ForwardOut {
         let b = images.shape[0];
         let c = self.cfg.num_classes;
         let d = self.cfg.dim;
         let mut logits = Tensor::zeros(&[b, c]);
         let mut features = Tensor::zeros(&[b, d]);
-        let results: Vec<(Vec<f32>, Vec<f32>)> = {
-            let mut out: Vec<(Vec<f32>, Vec<f32>)> = vec![Default::default(); b];
-            let slots: Vec<std::sync::Mutex<&mut (Vec<f32>, Vec<f32>)>> =
-                out.iter_mut().map(std::sync::Mutex::new).collect();
-            parallel_for(b, |i| {
-                let (l, f, _) = self.forward_item(p, images, i);
-                **slots[i].lock().unwrap() = (l, f);
-            });
-            drop(slots);
-            out
-        };
+        let results: Vec<(Vec<f32>, Vec<f32>)> = parallel_map(b, |i| {
+            with_workspace(|ws| self.forward_item_infer(p, images, i, ws))
+        });
         for (i, (l, f)) in results.into_iter().enumerate() {
             logits.row_mut(i).copy_from_slice(&l);
             features.row_mut(i).copy_from_slice(&f);
@@ -939,6 +1222,92 @@ mod tests {
             assert_eq!(out.features.shape, vec![3, 16]);
             assert!(out.logits.data.iter().all(|v| v.is_finite()),
                     "{moe:?} logits not finite");
+        }
+    }
+
+    fn assert_infer_matches(cfg: &ModelConfig, tag: &str) {
+        let model = VitModel::new(cfg.clone());
+        let p = model.init(0);
+        let imgs = rand_images(2, cfg, 1);
+        let mut ws = Workspace::new();
+        for item in 0..2 {
+            let (li, fi) = model.forward_item_infer(&p, &imgs, item, &mut ws);
+            let (lt, ft, _) = model.forward_item(&p, &imgs, item);
+            for (a, b) in li.iter().zip(&lt) {
+                assert!((a - b).abs() < 1e-5, "{tag} logits {a} vs {b}");
+            }
+            for (a, b) in fi.iter().zip(&ft) {
+                assert!((a - b).abs() < 1e-5, "{tag} feats {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_infer_matches_item() {
+        // The cache-free inference path must reproduce the training
+        // forward's outputs for every routing variant.
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                    MoeType::ExpertsChoice] {
+            let cfg = tiny_cfg(moe);
+            assert_infer_matches(&cfg, &format!("{moe:?}"));
+        }
+    }
+
+    #[test]
+    fn forward_infer_matches_item_soft_ablations() {
+        // The infer path has dedicated branches for the Table-3 fixed-
+        // routing ablations and the unnormalized router; each must match
+        // the training forward too.
+        let base = tiny_cfg(MoeType::Soft);
+
+        let mut unnorm = base.clone();
+        unnorm.normalize_router = false;
+        assert_infer_matches(&unnorm, "soft/unnormalized");
+
+        let mut uniform = base.clone();
+        uniform.dispatch_mode = MixMode::Uniform;
+        uniform.combine_mode = MixMode::Uniform;
+        assert_infer_matches(&uniform, "soft/uniform");
+
+        // Identity routing needs tokens == total slots (4 tokens here).
+        let mut ident = base.clone();
+        ident.num_experts = 2;
+        ident.slots_per_expert = 2;
+        ident.dispatch_mode = MixMode::Identity;
+        ident.combine_mode = MixMode::Identity;
+        assert_eq!(ident.tokens(), ident.total_slots());
+        assert_infer_matches(&ident, "soft/identity");
+
+        // Mixed: soft dispatch, uniform combine (exercises the logits-
+        // needed-for-one-side path).
+        let mut mixed = base.clone();
+        mixed.combine_mode = MixMode::Uniform;
+        assert_infer_matches(&mixed, "soft/mixed");
+    }
+
+    #[test]
+    fn forward_infer_steady_state_no_allocs() {
+        // Acceptance criterion: steady-state forward_item_infer performs
+        // no workspace heap allocations in the GEMM/attention/MoE path —
+        // after warmup every transient is served from the pool.
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                    MoeType::ExpertsChoice] {
+            let cfg = tiny_cfg(moe);
+            let model = VitModel::new(cfg.clone());
+            let p = model.init(1);
+            let imgs = rand_images(2, &cfg, 2);
+            let mut ws = Workspace::new();
+            for _ in 0..4 {
+                model.forward_item_infer(&p, &imgs, 0, &mut ws);
+                model.forward_item_infer(&p, &imgs, 1, &mut ws);
+            }
+            let warm = ws.fresh_allocs();
+            for _ in 0..3 {
+                model.forward_item_infer(&p, &imgs, 0, &mut ws);
+                model.forward_item_infer(&p, &imgs, 1, &mut ws);
+            }
+            assert_eq!(ws.fresh_allocs(), warm,
+                       "{moe:?}: steady-state forward allocated");
         }
     }
 

@@ -143,6 +143,17 @@ impl Server {
 
     /// Serve until all clients disconnect (or `max_requests` served).
     /// Runs on the caller's thread; `backend` executes every batch.
+    ///
+    /// The executor thread is the root of the parallelism budget (see
+    /// `threadpool::parallel_depth`): padded batches > 1 parallelize over
+    /// items inside the backend, single-item batches hand the threads to
+    /// the GEMM kernel instead — the budget rule prevents the two levels
+    /// from oversubscribing each other. For single-item batches the
+    /// executor thread's own workspace persists across requests, so that
+    /// steady state allocates nothing per op; batch > 1 workers are
+    /// currently transient (`thread::scope`), so their scratch pools
+    /// live only for one batch — see the ROADMAP item on a persistent
+    /// worker pool.
     pub fn run(
         &self,
         backend: &mut dyn Backend,
@@ -150,6 +161,11 @@ impl Server {
         metrics: &Registry,
         max_requests: Option<usize>,
     ) -> Result<usize> {
+        debug_assert!(
+            crate::threadpool::parallelism_available(),
+            "serve executor must own the parallelism budget (don't call \
+             Server::run from inside a parallel region)"
+        );
         let mut served = 0usize;
         // Reusable padded input buffer: zero allocations in the hot loop
         // beyond what the backend itself does.

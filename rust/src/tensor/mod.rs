@@ -1,10 +1,13 @@
 //! Row-major f32 tensor with the ops the native engine needs.
 //!
 //! Not a general autodiff framework: a deliberate, small, fast numeric
-//! core. The matmul is blocked and parallelized (see [`matmul`]) because
-//! it dominates the native engine's profile; everything else is simple
-//! vectorizable loops. Shapes are validated with `debug_assert!` in hot
-//! paths and `assert!` at API boundaries.
+//! core. The matmul family is built on one cache-blocked, register-tiled
+//! GEMM microkernel (see the "Matmul family" section below): B is packed
+//! once per call into NR-wide panels, the kernel accumulates an MR×NR
+//! (4×16) tile in registers, and row blocks go to the thread pool for all
+//! three layouts (NN, TN, NT). Fused epilogues (bias, bias+GELU) avoid
+//! extra passes over the output, and a reusable [`Workspace`] arena keeps
+//! the steady-state forward path free of per-op heap allocations.
 //!
 //! Numerical contract with `python/compile/model.py` (parity-tested in
 //! `rust/tests/runtime_hlo.rs`):
@@ -12,6 +15,8 @@
 //! * GELU = tanh approximation,
 //! * softmax subtracts the row max,
 //! * L2-norm eps = 1e-6.
+
+use std::cell::RefCell;
 
 use crate::threadpool::parallel_for;
 use crate::util::Rng;
@@ -98,11 +103,7 @@ impl Tensor {
     pub fn t(&self) -> Tensor {
         let (r, c) = self.dims2();
         let mut out = vec![0.0; r * c];
-        for i in 0..r {
-            for j in 0..c {
-                out[j * r + i] = self.data[i * c + j];
-            }
-        }
+        transpose_into(&self.data, r, c, &mut out);
         Tensor::from_vec(&[c, r], out)
     }
 
@@ -152,7 +153,8 @@ impl Tensor {
 
     /// Broadcast-add a length-c bias to every row of an (r, c) tensor.
     /// Consumes self (hot path: avoids a full-tensor copy per linear —
-    /// see EXPERIMENTS.md §Perf L3-2).
+    /// see EXPERIMENTS.md §Perf L3-2). Prefer [`matmul_bias`] where the
+    /// bias can be fused into the GEMM epilogue instead.
     pub fn add_bias(mut self, bias: &[f32]) -> Tensor {
         let (r, c) = self.dims2();
         assert_eq!(bias.len(), c);
@@ -204,100 +206,609 @@ impl Tensor {
 }
 
 // ---------------------------------------------------------------------------
-// Matmul family — the native engine hot path.
+// Workspace — reusable scratch arena for the hot path.
 // ---------------------------------------------------------------------------
 
+/// A free-list of reusable f32 buffers. The steady-state forward path
+/// takes every transient buffer (GEMM pack panels, attention head slices,
+/// softmax column stats, MoE slot buffers) from a workspace and gives it
+/// back, so after warmup no per-op heap allocation happens.
+///
+/// Not thread-safe by design: one workspace per thread. Use
+/// [`with_workspace`] for the calling thread's own arena, or thread an
+/// explicit `&mut Workspace` through a call chain (the inference fast
+/// path does the latter so allocation behavior is testable).
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    allocs: usize,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self { free: Vec::new(), allocs: 0 }
+    }
+
+    /// Number of fresh heap allocations this workspace has performed.
+    /// Steady-state code paths must stop increasing this after warmup —
+    /// asserted by the workspace-reuse tests.
+    pub fn fresh_allocs(&self) -> usize {
+        self.allocs
+    }
+
+    /// Number of buffers currently parked in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take a buffer of length `n` with **unspecified contents** (reused
+    /// buffers keep their stale — finite — values), reusing a pooled one
+    /// if any has the capacity (best fit, so big panels don't get burned
+    /// on tiny column-stat vectors). The hot-path consumers (pack
+    /// panels, gathers, GEMM outputs with init epilogues) overwrite
+    /// every element, so skipping the memset saves a full pass per
+    /// buffer per op; use [`Workspace::take_zeroed`] when the caller
+    /// accumulates into the buffer.
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= n
+                && best.map_or(true, |j: usize| {
+                    b.capacity() < self.free[j].capacity()
+                })
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.free.swap_remove(i);
+                if b.len() < n {
+                    b.resize(n, 0.0);
+                } else {
+                    b.truncate(n);
+                }
+                b
+            }
+            None => {
+                self.allocs += 1;
+                vec![0.0; n]
+            }
+        }
+    }
+
+    /// Take a buffer of length `n` guaranteed to be all zeros (for
+    /// accumulators: column softmax sums, squared-norm reductions).
+    pub fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        let mut b = self.take(n);
+        for v in b.iter_mut() {
+            *v = 0.0;
+        }
+        b
+    }
+
+    /// Return a buffer to the pool.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Take a tensor (unspecified contents, like [`Workspace::take`])
+    /// whose storage comes from the pool. Callers fully overwrite it.
+    pub fn take_tensor(&mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: self.take(n) }
+    }
+
+    /// Recycle a tensor's storage into the pool.
+    pub fn give_tensor(&mut self, t: Tensor) {
+        self.give(t.data);
+    }
+
+    fn absorb(&mut self, mut other: Workspace) {
+        self.allocs += other.allocs;
+        self.free.append(&mut other.free);
+    }
+}
+
+thread_local! {
+    static TL_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Run `f` with the calling thread's workspace. The workspace persists
+/// across calls on the same thread, so repeated forwards reuse buffers.
+///
+/// Reentrancy-safe: the workspace is checked out of the thread-local
+/// cell for the duration of `f`; a nested call sees a fresh arena whose
+/// buffers are merged back afterwards. Hot paths avoid nesting (the
+/// `*_ws` function variants never open their own scope). Panic-safe:
+/// the arena is returned to the cell on unwind too (via a drop guard),
+/// so a caught panic cannot silently discard the thread's buffer pool.
+pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    TL_WS.with(|cell| {
+        struct Restore<'a> {
+            cell: &'a RefCell<Workspace>,
+            ws: Workspace,
+        }
+        impl Drop for Restore<'_> {
+            fn drop(&mut self) {
+                let inner = self.cell.take();
+                self.ws.absorb(inner);
+                *self.cell.borrow_mut() = std::mem::take(&mut self.ws);
+            }
+        }
+        let mut guard = Restore { cell, ws: cell.take() };
+        f(&mut guard.ws)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family — the native engine hot path.
+//
+// One packed, register-tiled kernel serves all three layouts:
+//   NN: C = A(m,k) · B(k,n)
+//   TN: C = Aᵀ(m,k) · B(m,n)   (backward: dW = Xᵀ·dY)
+//   NT: C = A(m,k) · Bᵀ(n,k)   (attention: Q·Kᵀ; backward dX = dY·Wᵀ)
+//
+// Blocking scheme:
+// * B is packed once per call into column panels of width NR; panels are
+//   laid out k-block-major (KC rows per block) so the kernel streams a
+//   kb×NR panel that stays in L1.
+// * The microkernel holds an MR×NR (4×16) accumulator tile in registers
+//   and performs rank-1 updates over the k block — with MR/NR const,
+//   LLVM vectorizes the 16-wide row FMA.
+// * Rows are split into MR-aligned chunks across the thread pool for all
+//   three layouts (the old code ran TN serial; TN carries the entire
+//   backward pass). Per-row results are bit-identical regardless of the
+//   thread count because each output row is always accumulated in the
+//   same order.
+// * Epilogues (bias init, GELU) are fused into the row-chunk pass, so
+//   `linear` and the expert MLP first layer never re-traverse C.
+//
+// There is deliberately NO `if a == 0.0 { skip }` branch in the inner
+// loops: it pessimizes the dense common case (branch per element). The
+// only sparsity shortcut lives where the *caller* knows the operand is
+// structurally sparse (one-hot Identity dispatch in `moe::soft`).
+// ---------------------------------------------------------------------------
+
+/// Register microtile rows.
+const MR: usize = 4;
+/// Register microtile columns (two 8-lane AVX vectors per row).
+const NR: usize = 16;
+/// k-dimension cache block: KC·NR·4B = 16 KiB per packed panel (L1-sized).
+const KC: usize = 256;
 /// Threshold (in FLOPs) below which matmul stays single-threaded.
 const PAR_FLOPS: usize = 1 << 22;
+/// Below this many FLOPs the packed kernel's pack cost dominates; use the
+/// direct strided loops instead.
+const SMALL_FLOPS: usize = 1 << 15;
 
-/// C = A(m,k) @ B(k,n). i-k-j loop order: the inner loop is a contiguous
-/// AXPY over C's row, which LLVM auto-vectorizes; row blocks go to the
-/// thread pool when the problem is large enough.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+#[inline]
+fn div_up(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Pack the logical (k, n) matrix `b[(row)*rs + (col)*cs]` into
+/// k-block-major NR panels: for each KC block, for each panel, a kb×NR
+/// contiguous tile (columns past `n` zero-padded).
+fn pack_b(b: &[f32], rs: usize, cs: usize, k: usize, n: usize,
+          out: &mut [f32]) {
+    let npanels = div_up(n, NR);
+    debug_assert!(out.len() >= k * npanels * NR);
+    let mut off = 0usize;
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for p in 0..npanels {
+            let j0 = p * NR;
+            let nr = NR.min(n - j0);
+            for kk in 0..kb {
+                let row = k0 + kk;
+                let dst = &mut out[off + kk * NR..off + (kk + 1) * NR];
+                for (j, d) in dst.iter_mut().enumerate().take(nr) {
+                    *d = b[row * rs + (j0 + j) * cs];
+                }
+                for d in dst.iter_mut().skip(nr) {
+                    *d = 0.0;
+                }
+            }
+            off += kb * NR;
+        }
+        k0 += kb;
+    }
+}
+
+/// Cache-blocked transpose: `dst[(c, r)] = src[(r, c)]` for a row-major
+/// (rows, cols) source.
+fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert!(src.len() >= rows * cols && dst.len() >= rows * cols);
+    const TB: usize = 32;
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + TB).min(rows);
+        let mut j0 = 0;
+        while j0 < cols {
+            let j1 = (j0 + TB).min(cols);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+}
+
+/// The register-tiled microkernel: accumulate an mr×nr tile of C
+/// (`c[(r)*ldc + j]`) with A rows `a[(r)*lda + kk]` against a packed
+/// kb×NR panel. `mr <= MR`, `nr <= NR`.
+#[inline(always)]
+fn microkernel(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+               c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for r in 0..mr {
+        for j in 0..nr {
+            acc[r][j] = c[r * ldc + j];
+        }
+    }
+    if mr == MR && nr == NR {
+        // Full tile: const bounds let LLVM keep the tile in registers.
+        for kk in 0..kb {
+            let bw = &bp[kk * NR..(kk + 1) * NR];
+            for r in 0..MR {
+                let av = a[r * lda + kk];
+                for j in 0..NR {
+                    acc[r][j] += av * bw[j];
+                }
+            }
+        }
+    } else {
+        for kk in 0..kb {
+            let bw = &bp[kk * NR..(kk + 1) * NR];
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = a[r * lda + kk];
+                for (j, av_acc) in accr.iter_mut().enumerate().take(nr) {
+                    *av_acc += av * bw[j];
+                }
+            }
+        }
+    }
+    for r in 0..mr {
+        for j in 0..nr {
+            c[r * ldc + j] = acc[r][j];
+        }
+    }
+}
+
+/// GEMM epilogue selector.
+#[derive(Clone, Copy)]
+enum Epilogue<'a> {
+    /// C = A·B
+    None,
+    /// C = A·B + bias (broadcast over rows)
+    Bias(&'a [f32]),
+    /// C = gelu(A·B + bias)
+    BiasGelu(&'a [f32]),
+}
+
+impl<'a> Epilogue<'a> {
+    fn bias(&self) -> Option<&'a [f32]> {
+        match *self {
+            Epilogue::None => None,
+            Epilogue::Bias(b) | Epilogue::BiasGelu(b) => Some(b),
+        }
+    }
+
+    fn wants_gelu(&self) -> bool {
+        matches!(self, Epilogue::BiasGelu(_))
+    }
+}
+
+/// Process output rows `rows` of C into `out_rows` (a dense slice holding
+/// exactly those rows): bias/zero init, k-blocked panel accumulation,
+/// optional fused GELU. `a` is the full contiguous (m, lda) A matrix.
+fn gemm_rows(a: &[f32], lda: usize, bp: &[f32], k: usize, n: usize,
+             rows: std::ops::Range<usize>, out_rows: &mut [f32],
+             ep: Epilogue) {
+    let nrows = rows.len();
+    debug_assert_eq!(out_rows.len(), nrows * n);
+    let npanels = div_up(n, NR);
+    match ep.bias() {
+        Some(bv) => {
+            for r in 0..nrows {
+                out_rows[r * n..(r + 1) * n].copy_from_slice(bv);
+            }
+        }
+        None => {
+            for v in out_rows.iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+    let mut off_block = 0usize;
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let mut i0 = 0usize;
+        while i0 < nrows {
+            let mr = MR.min(nrows - i0);
+            let abase = &a[(rows.start + i0) * lda + k0..];
+            for p in 0..npanels {
+                let j0 = p * NR;
+                let nr = NR.min(n - j0);
+                let bpp = &bp[off_block + p * kb * NR..];
+                let c = &mut out_rows[i0 * n + j0..];
+                microkernel(abase, lda, bpp, kb, c, n, mr, nr);
+            }
+            i0 += MR;
+        }
+        off_block += npanels * kb * NR;
+        k0 += kb;
+    }
+    if ep.wants_gelu() {
+        for v in out_rows.iter_mut() {
+            *v = gelu(*v);
+        }
+    }
+}
+
+/// Direct (unpacked) path for problems too small to amortize packing.
+/// `b` is strided like in [`pack_b`]. Accumulates on top of the already
+/// initialized `out`.
+fn gemm_small(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+              rs: usize, cs: usize, out: &mut [f32]) {
+    if cs == 1 {
+        // B rows contiguous: i-k-j AXPY order.
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * rs..kk * rs + n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    } else {
+        // B columns contiguous (the NT case, rs == 1): dot products.
+        debug_assert_eq!(rs, 1);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += dot(arow, &b[j * cs..j * cs + k]);
+            }
+        }
+    }
+}
+
+/// Shared driver: pack B, then run row chunks (possibly in parallel)
+/// through the microkernel with the fused epilogue.
+fn gemm_driver(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+               rs_b: usize, cs_b: usize, out: &mut [f32], ep: Epilogue,
+               ws: &mut Workspace) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let flops = 2 * m * n * k;
+    if k == 0 || flops < SMALL_FLOPS {
+        // Init + direct accumulation; packing would cost more than it saves.
+        match ep.bias() {
+            Some(bv) => {
+                for r in 0..m {
+                    out[r * n..(r + 1) * n].copy_from_slice(bv);
+                }
+            }
+            None => {
+                for v in out.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        gemm_small(m, n, k, a, b, rs_b, cs_b, out);
+        if ep.wants_gelu() {
+            for v in out.iter_mut() {
+                *v = gelu(*v);
+            }
+        }
+        return;
+    }
+
+    let npanels = div_up(n, NR);
+    let bp = {
+        let mut bp = ws.take(k * npanels * NR);
+        pack_b(b, rs_b, cs_b, k, n, &mut bp);
+        bp
+    };
+
+    if flops < PAR_FLOPS || !crate::threadpool::parallelism_available() {
+        gemm_rows(a, k, &bp, k, n, 0..m, out, ep);
+    } else {
+        // MR-aligned row chunks; each thread owns disjoint output rows.
+        let threads = crate::threadpool::default_threads();
+        let rows_per = div_up(div_up(m, threads * 4), MR) * MR;
+        let nchunks = div_up(m, rows_per);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let bp_ref: &[f32] = &bp;
+        parallel_for(nchunks, |c| {
+            let r0 = c * rows_per;
+            let r1 = (r0 + rows_per).min(m);
+            let slice = unsafe { out_ptr.slice(r0 * n, (r1 - r0) * n) };
+            gemm_rows(a, k, bp_ref, k, n, r0..r1, slice, ep);
+        });
+    }
+    ws.give(bp);
+}
+
+/// C = A(m,k) @ B(k,n), written into `out` (len m·n) using `ws` scratch.
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut [f32],
+                   ws: &mut Workspace) {
     let (m, k) = a.dims2();
     let (k2, n) = b.dims2();
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    assert_eq!(out.len(), m * n);
+    gemm_driver(m, n, k, &a.data, &b.data, n, 1, out, Epilogue::None, ws);
+}
+
+/// C = A(m,k) @ B(k,n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, _) = a.dims2();
+    let (_, n) = b.dims2();
     let mut out = vec![0.0f32; m * n];
-    let flops = 2 * m * n * k;
-
-    let body = |i: usize, out_row: &mut [f32]| {
-        let arow = &a.data[i * k..(i + 1) * k];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for (o, &bv) in out_row.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    };
-
-    if flops < PAR_FLOPS {
-        for i in 0..m {
-            let (lo, hi) = (i * n, (i + 1) * n);
-            body(i, &mut out[lo..hi]);
-        }
-    } else {
-        // Split `out` into disjoint row slices; safe to parallelize.
-        let out_ptr = SendPtr(out.as_mut_ptr());
-        parallel_for(m, |i| {
-            let slice = unsafe { out_ptr.slice(i * n, n) };
-            body(i, slice);
-        });
-    }
+    with_workspace(|ws| matmul_into(a, b, &mut out, ws));
     Tensor::from_vec(&[m, n], out)
 }
 
-/// C = Aᵀ(m,k) @ B(m,n) -> (k, n). Used by the backward pass (dW = Xᵀ dY).
-pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+/// C = Aᵀ(m,k) @ B(m,n) -> (k, n), into `out`. Used by the backward pass
+/// (dW = Xᵀ dY); parallelized like the other layouts (the old
+/// implementation ran this serial, starving the backward pass).
+pub fn matmul_tn_into(a: &Tensor, b: &Tensor, out: &mut [f32],
+                      ws: &mut Workspace) {
     let (m, k) = a.dims2();
     let (m2, n) = b.dims2();
-    assert_eq!(m, m2);
-    let mut out = vec![0.0f32; k * n];
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let brow = &b.data[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    assert_eq!(m, m2, "matmul_tn outer dims {m} vs {m2}");
+    assert_eq!(out.len(), k * n);
+    let flops = 2 * m * n * k;
+    if flops < SMALL_FLOPS {
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let brow = &b.data[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
+        return;
     }
+    // Pack Aᵀ once so the kernel streams contiguous rows, then it is a
+    // plain NN GEMM of (k, m) · (m, n).
+    let at = {
+        let mut at = ws.take(k * m);
+        transpose_into(&a.data, m, k, &mut at);
+        at
+    };
+    gemm_driver(k, n, m, &at, &b.data, n, 1, out, Epilogue::None, ws);
+    ws.give(at);
+}
+
+/// C = Aᵀ(m,k) @ B(m,n) -> (k, n).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (_, k) = a.dims2();
+    let (_, n) = b.dims2();
+    let mut out = vec![0.0f32; k * n];
+    with_workspace(|ws| matmul_tn_into(a, b, &mut out, ws));
     Tensor::from_vec(&[k, n], out)
 }
 
-/// C = A(m,k) @ Bᵀ(n,k) -> (m, n). Used by attention (QKᵀ) and backward.
-pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+/// C = A(m,k) @ Bᵀ(n,k) -> (m, n), into `out`. Used by attention (QKᵀ)
+/// and backward (dX = dY·Wᵀ).
+pub fn matmul_nt_into(a: &Tensor, b: &Tensor, out: &mut [f32],
+                      ws: &mut Workspace) {
     let (m, k) = a.dims2();
     let (n, k2) = b.dims2();
-    assert_eq!(k, k2);
+    assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+    assert_eq!(out.len(), m * n);
+    // Bᵀ element (kk, j) = b[j*k + kk]: rs = 1, cs = k.
+    gemm_driver(m, n, k, &a.data, &b.data, 1, k, out, Epilogue::None, ws);
+}
+
+/// C = A(m,k) @ Bᵀ(n,k) -> (m, n).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, _) = a.dims2();
+    let (n, _) = b.dims2();
     let mut out = vec![0.0f32; m * n];
-    let flops = 2 * m * n * k;
-    let body = |i: usize, orow: &mut [f32]| {
-        let arow = &a.data[i * k..(i + 1) * k];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b.data[j * k..(j + 1) * k];
-            *o = dot(arow, brow);
-        }
-    };
-    if flops < PAR_FLOPS {
-        for i in 0..m {
-            let (lo, hi) = (i * n, (i + 1) * n);
-            body(i, &mut out[lo..hi]);
-        }
-    } else {
-        let out_ptr = SendPtr(out.as_mut_ptr());
-        parallel_for(m, |i| {
-            let slice = unsafe { out_ptr.slice(i * n, n) };
-            body(i, slice);
-        });
-    }
+    with_workspace(|ws| matmul_nt_into(a, b, &mut out, ws));
     Tensor::from_vec(&[m, n], out)
+}
+
+/// Fused C = A·B + bias (bias broadcast over rows), into `out`.
+pub fn matmul_bias_into(a: &Tensor, b: &Tensor, bias: &[f32],
+                        out: &mut [f32], ws: &mut Workspace) {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    assert_eq!(bias.len(), n, "bias len {} vs n {n}", bias.len());
+    assert_eq!(out.len(), m * n);
+    gemm_driver(m, n, k, &a.data, &b.data, n, 1, out, Epilogue::Bias(bias),
+                ws);
+}
+
+/// Fused C = A·B + bias.
+pub fn matmul_bias(a: &Tensor, b: &Tensor, bias: &[f32]) -> Tensor {
+    let (m, _) = a.dims2();
+    let (_, n) = b.dims2();
+    let mut out = vec![0.0f32; m * n];
+    with_workspace(|ws| matmul_bias_into(a, b, bias, &mut out, ws));
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Fused C = gelu(A·B + bias), into `out` (the expert/MLP first layer).
+pub fn matmul_bias_gelu_into(a: &Tensor, b: &Tensor, bias: &[f32],
+                             out: &mut [f32], ws: &mut Workspace) {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    assert_eq!(bias.len(), n, "bias len {} vs n {n}", bias.len());
+    assert_eq!(out.len(), m * n);
+    gemm_driver(m, n, k, &a.data, &b.data, n, 1, out,
+                Epilogue::BiasGelu(bias), ws);
+}
+
+/// Fused C = gelu(A·B + bias).
+pub fn matmul_bias_gelu(a: &Tensor, b: &Tensor, bias: &[f32]) -> Tensor {
+    let (m, _) = a.dims2();
+    let (_, n) = b.dims2();
+    let mut out = vec![0.0f32; m * n];
+    with_workspace(|ws| matmul_bias_gelu_into(a, b, bias, &mut out, ws));
+    Tensor::from_vec(&[m, n], out)
+}
+
+// The `*_slice_into` variants take B as a raw row-major (k, n) slice, so
+// callers holding stacked parameters (the (n_experts, d, h) expert
+// weights, the (d, n, p) phi tensor) can address one sub-matrix without
+// cloning it into a fresh Tensor first.
+
+/// C = A(m,k) @ B(k,n) where B is a raw row-major slice.
+pub fn matmul_slice_into(a: &Tensor, b: &[f32], n: usize, out: &mut [f32],
+                         ws: &mut Workspace) {
+    let (m, k) = a.dims2();
+    assert_eq!(b.len(), k * n, "B slice len {} vs {k}x{n}", b.len());
+    assert_eq!(out.len(), m * n);
+    gemm_driver(m, n, k, &a.data, b, n, 1, out, Epilogue::None, ws);
+}
+
+/// Fused C = A·B + bias where B is a raw row-major (k, n) slice.
+pub fn matmul_bias_slice_into(a: &Tensor, b: &[f32], n: usize, bias: &[f32],
+                              out: &mut [f32], ws: &mut Workspace) {
+    let (m, k) = a.dims2();
+    assert_eq!(b.len(), k * n, "B slice len {} vs {k}x{n}", b.len());
+    assert_eq!(bias.len(), n);
+    assert_eq!(out.len(), m * n);
+    gemm_driver(m, n, k, &a.data, b, n, 1, out, Epilogue::Bias(bias), ws);
+}
+
+/// Fused C = gelu(A·B + bias) where B is a raw row-major (k, n) slice.
+pub fn matmul_bias_gelu_slice_into(a: &Tensor, b: &[f32], n: usize,
+                                   bias: &[f32], out: &mut [f32],
+                                   ws: &mut Workspace) {
+    let (m, k) = a.dims2();
+    assert_eq!(b.len(), k * n, "B slice len {} vs {k}x{n}", b.len());
+    assert_eq!(bias.len(), n);
+    assert_eq!(out.len(), m * n);
+    gemm_driver(m, n, k, &a.data, b, n, 1, out, Epilogue::BiasGelu(bias), ws);
 }
 
 struct SendPtr(*mut f32);
@@ -339,35 +850,64 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// Row-wise softmax of an (r, c) tensor (subtracts the row max).
 pub fn softmax_rows(x: &Tensor) -> Tensor {
-    let (r, _c) = x.dims2();
     let mut out = x.clone();
-    for i in 0..r {
-        softmax_inplace(out.row_mut(i));
-    }
+    softmax_rows_inplace(&mut out);
     out
+}
+
+/// In-place row softmax (no scratch needed).
+pub fn softmax_rows_inplace(x: &mut Tensor) {
+    let (r, _c) = x.dims2();
+    for i in 0..r {
+        softmax_inplace(x.row_mut(i));
+    }
 }
 
 /// Column-wise softmax of an (r, c) tensor: the Soft MoE *dispatch*
 /// normalization (softmax over tokens, paper eq. 1).
 pub fn softmax_cols(x: &Tensor) -> Tensor {
-    let (r, c) = x.dims2();
     let mut out = x.clone();
-    for j in 0..c {
-        let mut mx = f32::NEG_INFINITY;
-        for i in 0..r {
-            mx = mx.max(out.data[i * c + j]);
-        }
-        let mut sum = 0.0;
-        for i in 0..r {
-            let e = (out.data[i * c + j] - mx).exp();
-            out.data[i * c + j] = e;
-            sum += e;
-        }
-        for i in 0..r {
-            out.data[i * c + j] /= sum;
+    with_workspace(|ws| softmax_cols_inplace(&mut out, ws));
+    out
+}
+
+/// In-place column softmax with row-major traversal: three streaming
+/// passes over the rows against length-c max/sum vectors, instead of the
+/// strided per-column walk (which thrashes the cache for large r·c).
+pub fn softmax_cols_inplace(x: &mut Tensor, ws: &mut Workspace) {
+    let (r, c) = x.dims2();
+    let mut mx = ws.take(c);
+    let mut sum = ws.take_zeroed(c);
+    for v in mx.iter_mut() {
+        *v = f32::NEG_INFINITY;
+    }
+    for i in 0..r {
+        let row = &x.data[i * c..(i + 1) * c];
+        for (m, &v) in mx.iter_mut().zip(row) {
+            if v > *m {
+                *m = v;
+            }
         }
     }
-    out
+    for i in 0..r {
+        let row = &mut x.data[i * c..(i + 1) * c];
+        for j in 0..c {
+            let e = (row[j] - mx[j]).exp();
+            row[j] = e;
+            sum[j] += e;
+        }
+    }
+    for (m, &s) in mx.iter_mut().zip(sum.iter()) {
+        *m = 1.0 / s; // reuse mx as the inverse
+    }
+    for i in 0..r {
+        let row = &mut x.data[i * c..(i + 1) * c];
+        for j in 0..c {
+            row[j] *= mx[j];
+        }
+    }
+    ws.give(mx);
+    ws.give(sum);
 }
 
 pub fn softmax_inplace(row: &mut [f32]) {
@@ -405,49 +945,75 @@ pub fn layernorm(x: &Tensor, scale: &[f32], bias: &[f32]) -> Tensor {
     assert_eq!(scale.len(), c);
     assert_eq!(bias.len(), c);
     let mut out = Tensor::zeros(&[r, c]);
+    layernorm_into(x, scale, bias, &mut out.data);
+    out
+}
+
+/// LayerNorm written into a caller-provided buffer (len r·c).
+pub fn layernorm_into(x: &Tensor, scale: &[f32], bias: &[f32],
+                      out: &mut [f32]) {
+    let (r, c) = x.dims2();
+    debug_assert_eq!(out.len(), r * c);
     for i in 0..r {
         let xin = x.row(i);
         let mu = xin.iter().sum::<f32>() / c as f32;
         let var = xin.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
         let inv = 1.0 / (var + LN_EPS).sqrt();
-        let orow = out.row_mut(i);
+        let orow = &mut out[i * c..(i + 1) * c];
         for j in 0..c {
             orow[j] = (xin[j] - mu) * inv * scale[j] + bias[j];
         }
     }
-    out
 }
 
 /// L2-normalize each row (Soft MoE §2.3, Algorithm 2: eps *after* sqrt).
 pub fn l2_normalize_rows(x: &Tensor) -> Tensor {
-    let (r, _c) = x.dims2();
     let mut out = x.clone();
+    l2_normalize_rows_inplace(&mut out);
+    out
+}
+
+/// In-place row L2 normalization (no scratch needed).
+pub fn l2_normalize_rows_inplace(x: &mut Tensor) {
+    let (r, _c) = x.dims2();
     for i in 0..r {
-        let row = out.row_mut(i);
+        let row = x.row_mut(i);
         let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
         let inv = 1.0 / (norm + L2_EPS);
         for v in row.iter_mut() {
             *v *= inv;
         }
     }
-    out
 }
 
 /// L2-normalize each *column* (phi is normalized over the d axis).
 pub fn l2_normalize_cols(x: &Tensor) -> Tensor {
-    let (r, c) = x.dims2();
     let mut out = x.clone();
-    for j in 0..c {
-        let mut sq = 0.0f32;
-        for i in 0..r {
-            sq += out.data[i * c + j] * out.data[i * c + j];
-        }
-        let inv = 1.0 / (sq.sqrt() + L2_EPS);
-        for i in 0..r {
-            out.data[i * c + j] *= inv;
+    with_workspace(|ws| l2_normalize_cols_inplace(&mut out, ws));
+    out
+}
+
+/// In-place column L2 normalization with row-major traversal (two
+/// streaming passes against a length-c accumulator).
+pub fn l2_normalize_cols_inplace(x: &mut Tensor, ws: &mut Workspace) {
+    let (r, c) = x.dims2();
+    let mut sq = ws.take_zeroed(c);
+    for i in 0..r {
+        let row = &x.data[i * c..(i + 1) * c];
+        for (s, &v) in sq.iter_mut().zip(row) {
+            *s += v * v;
         }
     }
-    out
+    for s in sq.iter_mut() {
+        *s = 1.0 / (s.sqrt() + L2_EPS);
+    }
+    for i in 0..r {
+        let row = &mut x.data[i * c..(i + 1) * c];
+        for (v, &inv) in row.iter_mut().zip(sq.iter()) {
+            *v *= inv;
+        }
+    }
+    ws.give(sq);
 }
 
 #[cfg(test)]
@@ -456,6 +1022,23 @@ mod tests {
 
     fn approx(a: f32, b: f32, tol: f32) {
         assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    /// Naive triple-loop reference (the pre-refactor semantics).
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[i * k + kk];
+                for j in 0..n {
+                    out[i * n + j] += av * b.data[kk * n + j];
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
     }
 
     #[test]
@@ -479,6 +1062,39 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernel_matches_naive_awkward_shapes() {
+        // Odd m/k/n, the m=1 row-vector case, k smaller than a tile,
+        // dims straddling the MR/NR/KC boundaries, and empty edges.
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 1, 1),
+            (1, 7, 13),     // row vector
+            (3, 1, 5),      // k = 1
+            (5, 3, 16),     // n exactly NR
+            (4, 300, 17),   // k > KC with ragged n
+            (17, 33, 65),   // all odd, straddles MR/NR
+            (63, 129, 31),  // forces the packed path with remainders
+            (64, 256, 48),  // KC-boundary k
+            (2, 5, 0),      // empty n edge
+            (0, 4, 6),      // empty m edge
+            (6, 0, 9),      // k = 0: result must be all zeros
+        ];
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in shapes {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let r = naive_matmul(&a, &b);
+            assert!(c.max_diff(&r) < 1e-4 * (k.max(1) as f32),
+                    "shape ({m},{k},{n})");
+            // TN and NT must agree on the same product.
+            let c_tn = matmul_tn(&a.t(), &b);
+            let c_nt = matmul_nt(&a, &b.t());
+            assert!(c.max_diff(&c_tn) < 1e-3, "tn ({m},{k},{n})");
+            assert!(c.max_diff(&c_nt) < 1e-3, "nt ({m},{k},{n})");
+        }
+    }
+
+    #[test]
     fn matmul_variants_agree() {
         let mut rng = Rng::new(1);
         let a = Tensor::randn(&[9, 6], 1.0, &mut rng);
@@ -497,18 +1113,106 @@ mod tests {
         let a = Tensor::randn(&[256, 300], 1.0, &mut rng);
         let b = Tensor::randn(&[300, 256], 1.0, &mut rng);
         let c = matmul(&a, &b);
-        // serial reference
-        let mut refd = vec![0.0f32; 256 * 256];
-        for i in 0..256 {
-            for kk in 0..300 {
-                let av = a.data[i * 300 + kk];
-                for j in 0..256 {
-                    refd[i * 256 + j] += av * b.data[kk * 256 + j];
-                }
-            }
-        }
-        let r = Tensor::from_vec(&[256, 256], refd);
+        let r = naive_matmul(&a, &b);
         assert!(c.max_diff(&r) < 1e-3);
+        // And the parallel result must be identical to the same kernel
+        // forced serial (bit-exact: per-row accumulation order is fixed).
+        let serial = crate::threadpool::serial_scope(|| matmul(&a, &b));
+        assert_eq!(c.data, serial.data);
+    }
+
+    #[test]
+    fn matmul_tn_parallel_large() {
+        // The backward-pass layout must also survive the threaded path.
+        let mut rng = Rng::new(12);
+        let a = Tensor::randn(&[300, 128], 1.0, &mut rng);
+        let b = Tensor::randn(&[300, 96], 1.0, &mut rng);
+        let c = matmul_tn(&a, &b);
+        let r = naive_matmul(&a.t(), &b);
+        assert!(c.max_diff(&r) < 1e-3);
+    }
+
+    #[test]
+    fn fused_bias_epilogue_matches_unfused() {
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &[(1usize, 8usize, 5usize), (7, 33, 17), (64, 128, 96)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|j| 0.1 * j as f32 - 0.3).collect();
+            let fused = matmul_bias(&a, &b, &bias);
+            let unfused = matmul(&a, &b).add_bias(&bias);
+            assert!(fused.max_diff(&unfused) < 1e-5, "bias ({m},{k},{n})");
+            let fused_g = matmul_bias_gelu(&a, &b, &bias);
+            let unfused_g = unfused.map(gelu);
+            assert!(fused_g.max_diff(&unfused_g) < 1e-5, "gelu ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn workspace_reuses_buffers() {
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(14);
+        let a = Tensor::randn(&[40, 70], 1.0, &mut rng);
+        let b = Tensor::randn(&[70, 50], 1.0, &mut rng);
+        let mut out = vec![0.0f32; 40 * 50];
+        matmul_into(&a, &b, &mut out, &mut ws);
+        let warm = ws.fresh_allocs();
+        for _ in 0..5 {
+            matmul_into(&a, &b, &mut out, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "steady-state matmul_into must not allocate");
+        // And the tn variant reuses the same pool.
+        let a2 = Tensor::randn(&[40, 70], 1.0, &mut rng);
+        let b2 = Tensor::randn(&[40, 50], 1.0, &mut rng);
+        let mut out_tn = vec![0.0f32; 70 * 50];
+        matmul_tn_into(&a2, &b2, &mut out_tn, &mut ws);
+        let warm2 = ws.fresh_allocs();
+        matmul_tn_into(&a2, &b2, &mut out_tn, &mut ws);
+        assert_eq!(ws.fresh_allocs(), warm2);
+    }
+
+    #[test]
+    fn workspace_take_give_roundtrip() {
+        let mut ws = Workspace::new();
+        let mut b1 = ws.take(100);
+        assert_eq!(b1.len(), 100);
+        assert!(b1.iter().all(|&v| v == 0.0)); // fresh allocs start zeroed
+        for v in b1.iter_mut() {
+            *v = 7.0; // dirty it so reuse semantics are observable
+        }
+        ws.give(b1);
+        assert_eq!(ws.pooled(), 1);
+        let b2 = ws.take(60); // reuse: smaller than pooled capacity
+        assert_eq!(ws.fresh_allocs(), 1);
+        assert_eq!(b2.len(), 60); // contents unspecified (stale 7.0s)
+        ws.give(b2);
+        let bz = ws.take_zeroed(60); // zeroed variant really zeroes
+        assert_eq!(ws.fresh_allocs(), 1);
+        assert!(bz.iter().all(|&v| v == 0.0));
+        ws.give(bz);
+        let _b3 = ws.take(200); // too big for the pooled one: fresh alloc
+        assert_eq!(ws.fresh_allocs(), 2);
+    }
+
+    #[test]
+    fn with_workspace_is_reentrancy_safe() {
+        with_workspace(|ws| {
+            let b = ws.take(10);
+            // A nested scope must not panic and must keep its buffers.
+            with_workspace(|inner| {
+                let c = inner.take(20);
+                inner.give(c);
+            });
+            ws.give(b);
+        });
+        // The nested arena's buffers were merged back into the TLS pool.
+        with_workspace(|ws| {
+            let before = ws.fresh_allocs();
+            let b = ws.take(15);
+            ws.give(b);
+            assert_eq!(ws.fresh_allocs(), before);
+        });
     }
 
     #[test]
@@ -533,11 +1237,62 @@ mod tests {
     }
 
     #[test]
+    fn softmax_cols_matches_strided_reference() {
+        // The row-major rewrite must agree with the textbook per-column
+        // walk (the pre-refactor implementation) exactly.
+        let mut rng = Rng::new(15);
+        for &(r, c) in &[(1usize, 1usize), (1, 9), (9, 1), (17, 23), (64, 64)] {
+            let x = Tensor::randn(&[r, c], 2.5, &mut rng);
+            let got = softmax_cols(&x);
+            let mut want = x.clone();
+            for j in 0..c {
+                let mut mx = f32::NEG_INFINITY;
+                for i in 0..r {
+                    mx = mx.max(want.data[i * c + j]);
+                }
+                let mut sum = 0.0;
+                for i in 0..r {
+                    let e = (want.data[i * c + j] - mx).exp();
+                    want.data[i * c + j] = e;
+                    sum += e;
+                }
+                for i in 0..r {
+                    want.data[i * c + j] /= sum;
+                }
+            }
+            assert!(got.max_diff(&want) < 1e-6, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn l2_cols_matches_strided_reference() {
+        let mut rng = Rng::new(16);
+        for &(r, c) in &[(1usize, 5usize), (8, 1), (13, 29), (64, 48)] {
+            let x = Tensor::randn(&[r, c], 1.5, &mut rng);
+            let got = l2_normalize_cols(&x);
+            let mut want = x.clone();
+            for j in 0..c {
+                let mut sq = 0.0f32;
+                for i in 0..r {
+                    sq += want.data[i * c + j] * want.data[i * c + j];
+                }
+                let inv = 1.0 / (sq.sqrt() + L2_EPS);
+                for i in 0..r {
+                    want.data[i * c + j] *= inv;
+                }
+            }
+            assert!(got.max_diff(&want) < 1e-6, "({r},{c})");
+        }
+    }
+
+    #[test]
     fn softmax_stable_large_values() {
         let x = Tensor::from_vec(&[1, 3], vec![1000.0, 1001.0, 1002.0]);
         let s = softmax_rows(&x);
         assert!(s.data.iter().all(|v| v.is_finite()));
         approx(s.data.iter().sum::<f32>(), 1.0, 1e-5);
+        let sc = softmax_cols(&x.t());
+        assert!(sc.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
@@ -595,6 +1350,9 @@ mod tests {
         let mut rng = Rng::new(7);
         let x = Tensor::randn(&[5, 9], 1.0, &mut rng);
         assert!(x.max_diff(&x.t().t()) < 1e-9);
+        // And the blocked transpose handles tile-straddling shapes.
+        let y = Tensor::randn(&[37, 65], 1.0, &mut rng);
+        assert!(y.max_diff(&y.t().t()) < 1e-9);
     }
 
     #[test]

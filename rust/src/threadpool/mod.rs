@@ -6,7 +6,21 @@
 //!   the data generator);
 //! * [`ThreadPool`] — a long-lived pool with a job queue (used by the
 //!   inference server's worker pool).
+//!
+//! # Parallelism budget
+//!
+//! Parallel regions must not fight each other: when `Vit::forward`
+//! parallelizes over batch items, the per-item GEMMs must NOT also spawn
+//! threads (oversubscription ruins both). The rule is **one level of
+//! parallelism**: either the outer loop gets the threads or the inner
+//! GEMM does, never both. This is enforced with a thread-local depth
+//! counter — [`parallel_for`] runs serially whenever the calling thread
+//! is already inside a parallel region (see [`parallel_depth`]). Callers
+//! therefore never need to coordinate manually: batch loops parallelize
+//! and their inner matmuls degrade to the serial kernel automatically,
+//! while a batch of one leaves the GEMM free to use every core.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -23,13 +37,58 @@ pub fn default_threads() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
+thread_local! {
+    /// Nesting depth of parallel regions on this thread. 0 = root.
+    static PAR_DEPTH: Cell<usize> = Cell::new(0);
+}
+
+/// Current parallel-region nesting depth on the calling thread (0 at the
+/// root). Worker closures run by [`parallel_for`] observe depth >= 1.
+pub fn parallel_depth() -> usize {
+    PAR_DEPTH.with(|c| c.get())
+}
+
+/// True when a `parallel_for` issued from this thread would actually use
+/// multiple threads (i.e. we are at the root of the parallelism budget).
+pub fn parallelism_available() -> bool {
+    parallel_depth() == 0
+}
+
+/// Run `f` with inner parallelism disabled on the calling thread: any
+/// `parallel_for` inside `f` runs serially. Used by callers that manage
+/// their own thread budget (e.g. the serve executor pinning the model to
+/// one core while other requests stream in).
+///
+/// Panic-safe: the previous depth is restored on unwind too, so a
+/// caught panic inside `f` cannot permanently serialize the thread.
+pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
+    struct DepthGuard(usize);
+    impl Drop for DepthGuard {
+        fn drop(&mut self) {
+            PAR_DEPTH.with(|c| c.set(self.0));
+        }
+    }
+    let prev = PAR_DEPTH.with(|c| {
+        let p = c.get();
+        c.set(p + 1);
+        p
+    });
+    let _guard = DepthGuard(prev);
+    f()
+}
+
 /// Run `f(i)` for every `i` in `0..n`, work-stealing via an atomic cursor.
 /// `f` must be `Sync`; chunking keeps the atomic traffic negligible.
+///
+/// Respects the parallelism budget: if the calling thread is already
+/// inside a parallel region, the loop runs serially on the caller (the
+/// outer region owns the threads).
 pub fn parallel_for<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let threads = default_threads().min(n.max(1));
+    let nested = parallel_depth() > 0;
+    let threads = if nested { 1 } else { default_threads().min(n.max(1)) };
     if threads <= 1 || n <= 1 {
         for i in 0..n {
             f(i);
@@ -41,32 +100,54 @@ where
     let chunk = (n / (threads * 4)).max(1);
     thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                for i in start..(start + chunk).min(n) {
-                    f(i);
+            s.spawn(|| {
+                // Workers are inside a parallel region: inner
+                // parallel_for calls must degrade to serial.
+                PAR_DEPTH.with(|c| c.set(1));
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + chunk).min(n) {
+                        f(i);
+                    }
                 }
             });
         }
     });
 }
 
+/// Typed `SendPtr`: a raw pointer blessed for cross-thread use when the
+/// caller guarantees disjoint access per index (same pattern the tensor
+/// GEMM uses for its output rows).
+struct SendPtrT<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtrT<T> {}
+unsafe impl<T: Send> Sync for SendPtrT<T> {}
+
+impl<T> SendPtrT<T> {
+    /// Pointer to element `i`. A method (not field access) so 2021-edition
+    /// closures capture the whole wrapper, keeping them `Sync`.
+    unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
 /// Map `f` over `0..n` in parallel collecting results in order.
+///
+/// Results are written through disjoint raw-pointer slots (each index is
+/// written by exactly one worker) — no per-slot `Mutex`.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send + Default,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<Mutex<&mut T>> = out.iter_mut().map(Mutex::new).collect();
-        parallel_for(n, |i| {
-            **slots[i].lock().unwrap() = f(i);
-        });
-    }
+    let mut out: Vec<T> = (0..n).map(|_| T::default()).collect();
+    let ptr = SendPtrT(out.as_mut_ptr());
+    parallel_for(n, |i| unsafe {
+        // Disjoint per-index writes; assignment drops the default value.
+        *ptr.at(i) = f(i);
+    });
     out
 }
 
@@ -156,6 +237,49 @@ mod tests {
     fn parallel_map_ordered() {
         let out = parallel_map(100, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_non_clone_values() {
+        // The SendPtr rewrite must not require Clone (only Default + Send).
+        let out = parallel_map(10, |i| vec![i; i]);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.len(), i);
+        }
+    }
+
+    #[test]
+    fn nested_parallel_runs_serial_inner() {
+        // Inside a parallel region the inner loop must observe depth >= 1
+        // and therefore run on the calling worker thread.
+        let outer_hits = AtomicUsize::new(0);
+        let inner_hits = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            assert!(parallel_depth() >= 1, "worker must be inside a region");
+            parallel_for(16, |_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+            outer_hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(outer_hits.load(Ordering::Relaxed), 8);
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 8 * 16);
+        // Back at the root, the budget is available again.
+        assert_eq!(parallel_depth(), 0);
+        assert!(parallelism_available());
+    }
+
+    #[test]
+    fn serial_scope_disables_and_restores() {
+        assert_eq!(parallel_depth(), 0);
+        serial_scope(|| {
+            assert_eq!(parallel_depth(), 1);
+            let hits = AtomicUsize::new(0);
+            parallel_for(32, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 32);
+        });
+        assert_eq!(parallel_depth(), 0);
     }
 
     #[test]

@@ -7,7 +7,10 @@ use softmoe::config::{MixMode, ModelConfig, MoeType};
 use softmoe::json::{self, Value};
 use softmoe::moe::{ExpertsChoice, SoftMoe, TokensChoice};
 use softmoe::nn::VitModel;
-use softmoe::tensor::{softmax_cols, softmax_rows, Tensor};
+use softmoe::tensor::{
+    gelu, l2_normalize_cols, matmul, matmul_bias, matmul_bias_gelu,
+    matmul_nt, matmul_tn, softmax_cols, softmax_rows, Tensor, L2_EPS,
+};
 use softmoe::util::Rng;
 
 /// Run `prop` over `cases` random seeds; panic with the failing seed.
@@ -167,6 +170,106 @@ fn prop_bpr_never_increases_dropping() {
         // BPR reorders *which* tokens survive, not how many: dropping is
         // a pure capacity phenomenon.
         assert!((s_on.dropped_frac - s_off.dropped_frac).abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Blocked GEMM kernel vs. naive reference
+// ---------------------------------------------------------------------------
+
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    assert_eq!(k, b.shape[0]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.data[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += av * b.data[kk * n + j];
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive() {
+    // Random shapes spanning the small/packed and serial/parallel paths,
+    // plus the degenerate edges (m=1 row vectors, k=1).
+    check(40, "gemm vs naive", |rng| {
+        let m = 1 + rng.below(70);
+        let k = 1 + rng.below(330); // crosses the KC=256 block boundary
+        let n = 1 + rng.below(70);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let c = matmul(&a, &b);
+        let r = naive_matmul(&a, &b);
+        let tol = 1e-5 * (k as f32) + 1e-5;
+        assert!(c.max_diff(&r) < tol, "({m},{k},{n})");
+        // All three layouts compute the same product.
+        assert!(matmul_tn(&a.t(), &b).max_diff(&r) < tol, "tn ({m},{k},{n})");
+        assert!(matmul_nt(&a, &b.t()).max_diff(&r) < tol, "nt ({m},{k},{n})");
+    });
+}
+
+#[test]
+fn prop_fused_epilogues_match_unfused() {
+    check(30, "fused epilogues", |rng| {
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(90);
+        let n = 1 + rng.below(50);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let base = naive_matmul(&a, &b).add_bias(&bias);
+        assert!(matmul_bias(&a, &b, &bias).max_diff(&base) < 1e-3);
+        let gelu_ref = base.map(gelu);
+        assert!(matmul_bias_gelu(&a, &b, &bias).max_diff(&gelu_ref) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_column_ops_match_strided_reference() {
+    // The row-major-traversal softmax_cols / l2_normalize_cols rewrites
+    // must agree with the old per-column strided walks.
+    check(30, "column ops", |rng| {
+        let r = 1 + rng.below(40);
+        let c = 1 + rng.below(40);
+        let x = Tensor::randn(&[r, c], rng.range(0.2, 4.0), rng);
+
+        let got = softmax_cols(&x);
+        let mut want = x.clone();
+        for j in 0..c {
+            let mut mx = f32::NEG_INFINITY;
+            for i in 0..r {
+                mx = mx.max(want.data[i * c + j]);
+            }
+            let mut sum = 0.0;
+            for i in 0..r {
+                let e = (want.data[i * c + j] - mx).exp();
+                want.data[i * c + j] = e;
+                sum += e;
+            }
+            for i in 0..r {
+                want.data[i * c + j] /= sum;
+            }
+        }
+        assert!(got.max_diff(&want) < 1e-6, "softmax_cols ({r},{c})");
+
+        let got_l2 = l2_normalize_cols(&x);
+        let mut want_l2 = x.clone();
+        for j in 0..c {
+            let mut sq = 0.0f32;
+            for i in 0..r {
+                sq += want_l2.data[i * c + j] * want_l2.data[i * c + j];
+            }
+            let inv = 1.0 / (sq.sqrt() + L2_EPS);
+            for i in 0..r {
+                want_l2.data[i * c + j] *= inv;
+            }
+        }
+        assert!(got_l2.max_diff(&want_l2) < 1e-6, "l2_cols ({r},{c})");
     });
 }
 

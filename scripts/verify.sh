@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verify + perf smoke for the native engine.
+#
+# Mirrors ROADMAP.md's tier-1 line (`cargo build --release && cargo test
+# -q`) and then drives the bench binaries' code paths in quick mode
+# (SOFTMOE_BENCH_FAST=1), so a change that breaks the GEMM kernel, the
+# serving path, or the bench plumbing fails here instead of at "real"
+# bench time. Run from anywhere; operates on the rust/ crate.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== perf smoke: bench_gemm (quick) =="
+SOFTMOE_BENCH_FAST=1 cargo bench --bench bench_gemm
+
+echo "== perf smoke: bench_inference (quick) =="
+SOFTMOE_BENCH_FAST=1 cargo bench --bench bench_inference
+
+echo "verify.sh: all green"

@@ -27,6 +27,12 @@ fn rand_images(b: usize, size: usize, seed: u64) -> Tensor {
 fn main() {
     let mut bench = Bench::from_env();
     let quick = std::env::var("SOFTMOE_BENCH_FAST").is_ok();
+    // Spawn the persistent worker pool up front so the one-time spawn
+    // cost never lands inside a measured iteration (matches what the
+    // serve executor does); the batched numbers below then measure the
+    // steady state the pool is built for: resident per-worker workspaces,
+    // zero thread spawns per batch.
+    softmoe::threadpool::prewarm();
 
     // --- Native engine: the scaled family, batch 8.
     println!("== native inference (batch 8) ==");

@@ -4,10 +4,16 @@
 //!
 //! Matches `ref.experts_choice_layer` semantics. Like Tokens Choice, the
 //! per-expert top-C selection is a real sort whose cost grows with expert
-//! count — the step-time contrast with Soft MoE in Fig. 6/7/20.
+//! count — the step-time contrast with Soft MoE in Fig. 6/7/20. The sort
+//! buffers (not the sort cost) are pooled through the workspace
+//! ([`ExpertsChoice::route_core`]): zero decision-step allocations at
+//! steady state.
 
 use crate::moe::{ExpertParams, RoutingStats};
-use crate::tensor::{matmul, softmax_rows, with_workspace, Tensor, Workspace};
+use crate::tensor::{
+    matmul, matmul_into, softmax_rows, softmax_rows_inplace, with_workspace,
+    RouteEntry, Tensor, Workspace,
+};
 use crate::util::Rng;
 
 /// An Experts Choice MoE layer.
@@ -37,29 +43,34 @@ impl ExpertsChoice {
         ((self.capacity_factor * tokens as f32 / n).ceil() as usize).max(1)
     }
 
-    /// Per-expert top-C token selection: (expert -> [(token, gate)]).
-    pub fn route(&self, x: &Tensor) -> Vec<Vec<(usize, f32)>> {
-        let (t, _d) = x.dims2();
-        let n = self.num_experts();
-        let cap = self.capacity(t).min(t);
-        let gates = softmax_rows(&matmul(x, &self.wg)); // (t, n)
+    /// Routing decision core: per-expert top-C selection written into
+    /// `kept` as `(token, expert, gate, pos)` tuples, grouped by expert
+    /// in ascending order. Delegates to the shared
+    /// [`crate::moe::experts_choice_route_into`] (one implementation for
+    /// this router and `nn::vit`'s fused layers); the sort-order buffer
+    /// comes from `ws` and the sort cost the step-time benches measure is
+    /// unchanged. Returns the per-expert capacity used.
+    pub fn route_core(&self, gates: &Tensor, kept: &mut Vec<RouteEntry>,
+                      ws: &mut Workspace) -> usize {
+        crate::moe::experts_choice_route_into(
+            gates, self.capacity_factor, kept, ws)
+    }
 
-        (0..n)
-            .map(|e| {
-                // Sort token indices by this expert's gate, descending.
-                let mut idx: Vec<usize> = (0..t).collect();
-                idx.sort_by(|&a, &b| {
-                    gates.data[b * n + e]
-                        .partial_cmp(&gates.data[a * n + e])
-                        .unwrap()
-                        .then(a.cmp(&b))
-                });
-                idx[..cap]
-                    .iter()
-                    .map(|&tok| (tok, gates.data[tok * n + e]))
-                    .collect()
-            })
-            .collect()
+    /// Per-expert top-C token selection: (expert -> [(token, gate)]).
+    /// Standalone API over [`ExpertsChoice::route_core`] (the forward
+    /// path uses the core with pooled buffers directly).
+    pub fn route(&self, x: &Tensor) -> Vec<Vec<(usize, f32)>> {
+        let n = self.num_experts();
+        let gates = softmax_rows(&matmul(x, &self.wg)); // (t, n)
+        let mut kept = Vec::new();
+        let cap =
+            with_workspace(|ws| self.route_core(&gates, &mut kept, ws));
+        let mut sel: Vec<Vec<(usize, f32)>> =
+            (0..n).map(|_| Vec::with_capacity(cap)).collect();
+        for &(tok, e, gate, _pos) in &kept {
+            sel[e].push((tok, gate));
+        }
+        sel
     }
 
     pub fn forward(&self, x: &Tensor) -> Tensor {
@@ -70,31 +81,45 @@ impl ExpertsChoice {
         with_workspace(|ws| self.forward_with_stats_ws(x, ws))
     }
 
-    /// Forward with an explicit workspace: the per-expert gather/output
-    /// buffers are pooled and reused across experts instead of freshly
-    /// allocated `n` times per call.
+    /// Forward with an explicit workspace: the routing decision (via
+    /// [`ExpertsChoice::route_core`]), the gate tensor, the kept list and
+    /// the per-expert gather/output buffers are all pooled and reused
+    /// across experts and across calls — zero allocations at steady
+    /// state beyond the returned output.
     pub fn forward_with_stats_ws(&self, x: &Tensor, ws: &mut Workspace)
         -> (Tensor, RoutingStats) {
         let (t, d) = x.dims2();
         let n = self.num_experts();
-        let selection = self.route(x);
-        let cap = selection[0].len();
+        let mut gates = ws.take_tensor(&[t, n]);
+        matmul_into(x, &self.wg, &mut gates.data, ws);
+        softmax_rows_inplace(&mut gates);
+        let mut kept = ws.take_route();
+        let cap = self.route_core(&gates, &mut kept, ws);
+        ws.give_tensor(gates);
 
         let mut y = Tensor::zeros(&[t, d]);
         let mut expert_load = vec![0.0f64; n];
         let mut token_weight = vec![0.0f64; t];
         let mut buf = ws.take_tensor(&[cap, d]);
         let mut out = ws.take_tensor(&[cap, d]);
-        for (e, picks) in selection.iter().enumerate() {
+        // `kept` is grouped by expert in ascending order by construction.
+        let mut i0 = 0usize;
+        while i0 < kept.len() {
+            let e = kept[i0].1;
+            let mut i1 = i0;
+            while i1 < kept.len() && kept[i1].1 == e {
+                i1 += 1;
+            }
+            let group = &kept[i0..i1];
             // Gather the expert's buffer (every row is overwritten: EC
             // fills exactly `cap` picks per expert).
-            for (row, &(tok, _)) in picks.iter().enumerate() {
-                buf.data[row * d..(row + 1) * d].copy_from_slice(x.row(tok));
+            for &(tok, _e, _gate, pos) in group {
+                buf.data[pos * d..(pos + 1) * d].copy_from_slice(x.row(tok));
             }
             self.experts.apply_into(e, &buf, &mut out.data, ws);
             // Scatter-add weighted outputs.
-            for (row, &(tok, gate)) in picks.iter().enumerate() {
-                let src = &out.data[row * d..(row + 1) * d];
+            for &(tok, _e, gate, pos) in group {
+                let src = &out.data[pos * d..(pos + 1) * d];
                 let dst = &mut y.data[tok * d..(tok + 1) * d];
                 for (o, s) in dst.iter_mut().zip(src) {
                     *o += gate * s;
@@ -102,9 +127,11 @@ impl ExpertsChoice {
                 expert_load[e] += 1.0;
                 token_weight[tok] += 1.0;
             }
+            i0 = i1;
         }
         ws.give_tensor(out);
         ws.give_tensor(buf);
+        ws.give_route(kept);
 
         let dropped = token_weight.iter().filter(|&&w| w == 0.0).count();
         let stats = RoutingStats {
@@ -177,6 +204,38 @@ mod tests {
             drops.push(st.dropped_frac);
         }
         assert!(drops[0] >= drops[1] && drops[1] >= drops[2], "{drops:?}");
+    }
+
+    #[test]
+    fn forward_ws_steady_state_no_allocs() {
+        // Decision buffers (sort order, kept list) and gather/output
+        // tensors must all come from the pool after warmup.
+        let (ec, x) = layer(32, 8, 8);
+        let mut ws = Workspace::new();
+        ec.forward_with_stats_ws(&x, &mut ws);
+        let warm = ws.fresh_allocs();
+        for _ in 0..4 {
+            ec.forward_with_stats_ws(&x, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "forward_with_stats_ws must not allocate at steady state");
+    }
+
+    #[test]
+    fn route_wrapper_matches_core() {
+        let (ec, x) = layer(20, 8, 4);
+        let gates = softmax_rows(&matmul(&x, &ec.wg));
+        let sel = ec.route(&x);
+        let mut ws = Workspace::new();
+        let mut kept = Vec::new();
+        let cap = ec.route_core(&gates, &mut kept, &mut ws);
+        assert_eq!(sel.len(), 4);
+        for (e, picks) in sel.iter().enumerate() {
+            assert_eq!(picks.len(), cap);
+            for (pos, &(tok, gate)) in picks.iter().enumerate() {
+                assert_eq!(kept[e * cap + pos], (tok, e, gate, pos));
+            }
+        }
     }
 
     #[test]

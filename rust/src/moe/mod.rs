@@ -18,8 +18,137 @@ pub use soft::SoftMoe;
 pub use stats::RoutingStats;
 pub use tokens_choice::TokensChoice;
 
-use crate::tensor::{with_workspace, Tensor, Workspace};
+use crate::tensor::{with_workspace, RouteEntry, Tensor, Workspace};
 use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Shared sparse routing decision cores
+// ---------------------------------------------------------------------------
+//
+// One implementation each for the Tokens-Choice (top-k + optional BPR)
+// and Experts-Choice (per-expert top-C) decision steps, used by the
+// standalone routers below AND by `nn::vit`'s fused MoE layers — so the
+// subtle buffer/priority semantics can never diverge between the
+// reference routers and the model. All decision-step scratch (flat top-k
+// choice tables, sort orders, per-expert fill counts) comes from `ws`;
+// the sorts are the allocation-free in-place unstable sorts with a
+// total-order index tiebreak, so results are deterministic and the sort
+// *cost* the step-time benches measure is unchanged.
+
+/// Tokens-Choice decision: fill `kept` with `(token, expert, gate, pos)`
+/// for gate probs (t, n), top-k per token, capacity
+/// `ceil(cf·t·k/n).max(1)` per expert, BPR priority order when `bpr`.
+/// Returns the capacity used.
+pub fn tokens_choice_route_into(
+    probs: &Tensor,
+    top_k: usize,
+    capacity_factor: f32,
+    bpr: bool,
+    kept: &mut Vec<RouteEntry>,
+    ws: &mut Workspace,
+) -> usize {
+    let (t, n) = probs.dims2();
+    let cap = ((capacity_factor * t as f32 * top_k as f32 / n as f32).ceil()
+        as usize)
+        .max(1);
+    let k = top_k.min(n);
+
+    // Top-K experts per token by probability (partial selection sort —
+    // k is 1 or 2 in all experiments), stored flat: k entries per token.
+    let mut choice_e = ws.take_idx(t * k);
+    let mut choice_g = ws.take(t * k);
+    let mut idx = ws.take_idx(n);
+    for i in 0..t {
+        let row = probs.row(i);
+        for (j, v) in idx.iter_mut().enumerate() {
+            *v = j;
+        }
+        for sel in 0..k {
+            let mut best = sel;
+            for j in sel + 1..n {
+                if row[idx[j]] > row[idx[best]] {
+                    best = j;
+                }
+            }
+            idx.swap(sel, best);
+            choice_e[i * k + sel] = idx[sel];
+            choice_g[i * k + sel] = row[idx[sel]];
+        }
+    }
+
+    // Priority order: BPR sorts tokens by top-1 prob desc (ties by
+    // index); otherwise token order. This is the sort the paper calls
+    // "slow and typically not well suited for hardware accelerators".
+    let mut order = ws.take_idx(t);
+    for (i, v) in order.iter_mut().enumerate() {
+        *v = i;
+    }
+    if bpr {
+        order.sort_unstable_by(|&a, &b| {
+            choice_g[b * k]
+                .partial_cmp(&choice_g[a * k])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+    }
+
+    let mut used = ws.take_idx(n);
+    for u in used.iter_mut() {
+        *u = 0;
+    }
+    kept.clear();
+    for &tok in order.iter() {
+        for sel in 0..k {
+            let e = choice_e[tok * k + sel];
+            if used[e] < cap {
+                kept.push((tok, e, choice_g[tok * k + sel], used[e]));
+                used[e] += 1;
+            }
+        }
+    }
+    ws.give_idx(used);
+    ws.give_idx(order);
+    ws.give_idx(idx);
+    ws.give(choice_g);
+    ws.give_idx(choice_e);
+    cap
+}
+
+/// Experts-Choice decision: fill `kept` with `(token, expert, gate, pos)`
+/// for gate probs (t, n), grouped by expert in ascending order, each
+/// expert taking its top `ceil(cf·t/n).max(1).min(t)` tokens by gate.
+/// Returns the capacity used.
+pub fn experts_choice_route_into(
+    gates: &Tensor,
+    capacity_factor: f32,
+    kept: &mut Vec<RouteEntry>,
+    ws: &mut Workspace,
+) -> usize {
+    let (t, n) = gates.dims2();
+    let cap = ((capacity_factor * t as f32 / n as f32).ceil() as usize)
+        .max(1)
+        .min(t);
+    let mut idx = ws.take_idx(t);
+    kept.clear();
+    for e in 0..n {
+        // Sort token indices by this expert's gate, descending (ties by
+        // index: total order, so the unstable sort is deterministic).
+        for (j, v) in idx.iter_mut().enumerate() {
+            *v = j;
+        }
+        idx.sort_unstable_by(|&a, &b| {
+            gates.data[b * n + e]
+                .partial_cmp(&gates.data[a * n + e])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for (pos, &tok) in idx[..cap].iter().enumerate() {
+            kept.push((tok, e, gates.data[tok * n + e], pos));
+        }
+    }
+    ws.give_idx(idx);
+    cap
+}
 
 /// Per-expert MLP parameters: each expert i has w1 (d,h), b1 (h),
 /// w2 (h,d), b2 (d). Stored as one struct-of-vecs for cache-friendly

@@ -113,7 +113,10 @@ impl SoftMoe {
 
     /// Forward with an explicit workspace: all transients (normalized
     /// router inputs, slot buffers, GEMM pack panels) are pooled; only
-    /// the returned tensors are fresh allocations.
+    /// the returned tensors are fresh allocations. On the batched path
+    /// `ws` is a persistent pool worker's resident arena (see
+    /// `crate::threadpool`), so the pooling survives across batch items
+    /// and serve requests.
     pub fn forward_full_ws(&self, x: &Tensor, ws: &mut Workspace)
         -> SoftMoeOutput {
         let (m, d) = x.dims2();

@@ -4,7 +4,10 @@
 //!
 //! Deliberately implemented with real sorts and per-expert buffers, so the
 //! step-time benches expose the sort/top-k overhead the paper contrasts
-//! with Soft MoE's matmul-only routing (Fig. 6-right, Fig. 20/21).
+//! with Soft MoE's matmul-only routing (Fig. 6-right, Fig. 20/21). The
+//! sort *cost* is kept honest; the sort *buffers* are pooled through the
+//! workspace ([`TokensChoice::route_core`]) so the decision step performs
+//! zero steady-state allocations.
 //!
 //! Supports routing groups larger than one sequence (`route` takes the
 //! whole group's tokens): the paper's group-size experiments show that
@@ -12,7 +15,10 @@
 //! the buffer logic here does.
 
 use crate::moe::{ExpertParams, RoutingStats};
-use crate::tensor::{matmul, softmax_rows, with_workspace, Tensor, Workspace};
+use crate::tensor::{
+    matmul, matmul_into, softmax_rows, softmax_rows_inplace, with_workspace,
+    RouteEntry, Tensor, Workspace,
+};
 use crate::util::Rng;
 
 /// A Tokens Choice MoE layer.
@@ -59,57 +65,31 @@ impl TokensChoice {
             .max(1)
     }
 
+    /// Routing decision core: fill `kept` with `(token, expert, gate,
+    /// pos)` tuples for gate probs (t, n). Delegates to the shared
+    /// [`crate::moe::tokens_choice_route_into`] (one implementation for
+    /// this router and `nn::vit`'s fused layers); every decision-step
+    /// scratch buffer comes from `ws`, so repeated layer calls allocate
+    /// nothing. Returns the buffer capacity used.
+    pub fn route_core(&self, probs: &Tensor, kept: &mut Vec<RouteEntry>,
+                      ws: &mut Workspace) -> usize {
+        crate::moe::tokens_choice_route_into(
+            probs, self.top_k, self.capacity_factor, self.bpr, kept, ws)
+    }
+
     /// Compute the token→expert assignment for a group of `t` tokens.
     /// This is the part whose cost grows with expert count (sorting).
+    /// Standalone API: returns owned structures (the forward path uses
+    /// [`TokensChoice::route_core`] with pooled buffers instead).
     pub fn route(&self, x: &Tensor) -> (Assignment, Tensor) {
         let (t, _d) = x.dims2();
-        let n = self.num_experts();
-        let cap = self.capacity(t);
         let probs = softmax_rows(&matmul(x, &self.wg)); // (t, n)
-
-        // Top-K experts per token by probability (partial selection sort —
-        // k is 1 or 2 in all experiments).
-        let mut choices: Vec<Vec<(usize, f32)>> = Vec::with_capacity(t);
-        for i in 0..t {
-            let row = probs.row(i);
-            let mut idx: Vec<usize> = (0..n).collect();
-            let k = self.top_k.min(n);
-            // partial selection of the top-k
-            for sel in 0..k {
-                let mut best = sel;
-                for j in sel + 1..n {
-                    if row[idx[j]] > row[idx[best]] {
-                        best = j;
-                    }
-                }
-                idx.swap(sel, best);
-            }
-            choices.push(idx[..k].iter().map(|&e| (e, row[e])).collect());
-        }
-
-        // Priority order: BPR sorts tokens by max prob desc (stable by
-        // index); otherwise token order. This is the sort the paper calls
-        // "slow and typically not well suited for hardware accelerators".
-        let mut order: Vec<usize> = (0..t).collect();
-        if self.bpr {
-            order.sort_by(|&a, &b| {
-                let pa = choices[a][0].1;
-                let pb = choices[b][0].1;
-                pb.partial_cmp(&pa).unwrap().then(a.cmp(&b))
-            });
-        }
-
-        let mut used = vec![0usize; n];
         let mut kept = Vec::new();
+        let cap =
+            with_workspace(|ws| self.route_core(&probs, &mut kept, ws));
         let mut processed = vec![false; t];
-        for &tok in &order {
-            for &(e, gate) in &choices[tok] {
-                if used[e] < cap {
-                    kept.push((tok, e, gate, used[e]));
-                    used[e] += 1;
-                    processed[tok] = true;
-                }
-            }
+        for &(tok, _e, _g, _pos) in &kept {
+            processed[tok] = true;
         }
         let dropped = (0..t).filter(|&i| !processed[i]).collect();
         (Assignment { kept, capacity: cap, dropped }, probs)
@@ -125,23 +105,28 @@ impl TokensChoice {
         with_workspace(|ws| self.forward_with_stats_ws(x, ws))
     }
 
-    /// Forward with an explicit workspace: one reusable gather buffer and
-    /// one output buffer, processed expert-by-expert (instead of `n`
-    /// fresh capacity-sized tensors per call).
+    /// Forward with an explicit workspace: the routing decision buffers
+    /// (via [`TokensChoice::route_core`]), the gate-prob tensor, the kept
+    /// list, and one reusable gather/output buffer pair are all pooled —
+    /// processed expert-by-expert, zero allocations at steady state
+    /// beyond the returned output.
     pub fn forward_with_stats_ws(&self, x: &Tensor, ws: &mut Workspace)
         -> (Tensor, RoutingStats) {
         let (t, d) = x.dims2();
         let n = self.num_experts();
-        let (asg, _probs) = self.route(x);
+        let mut probs = ws.take_tensor(&[t, n]);
+        matmul_into(x, &self.wg, &mut probs.data, ws);
+        softmax_rows_inplace(&mut probs);
+        let mut kept = ws.take_route();
+        let cap = self.route_core(&probs, &mut kept, ws);
+        ws.give_tensor(probs);
 
-        let cap = asg.capacity;
         let mut y = Tensor::zeros(&[t, d]);
         let mut expert_load = vec![0.0f64; n];
         let mut token_weight = vec![0.0f64; t];
         // Group assignments by expert (one in-place sort) so each expert
         // is a single contiguous pass, not an O(n·|kept|) rescan. Pairs
         // (tok, e) are unique, so per-group order doesn't affect results.
-        let mut kept = asg.kept;
         kept.sort_unstable_by_key(|&(_, e, _, _)| e);
         let mut buf = ws.take_tensor(&[cap, d]);
         let mut out = ws.take_tensor(&[cap, d]);
@@ -173,9 +158,13 @@ impl TokensChoice {
         }
         ws.give_tensor(out);
         ws.give_tensor(buf);
+        ws.give_route(kept);
 
+        // A token was dropped iff no kept pair touched it — identical to
+        // the Assignment::dropped bookkeeping, without the list.
+        let dropped = token_weight.iter().filter(|&&w| w == 0.0).count();
         let stats = RoutingStats {
-            dropped_frac: asg.dropped.len() as f64 / t as f64,
+            dropped_frac: dropped as f64 / t as f64,
             expert_load,
             token_weight,
             slot_importance: vec![],
@@ -299,6 +288,49 @@ mod tests {
             drops.push(st.dropped_frac);
         }
         assert!(drops[2] >= drops[0], "drops {drops:?}");
+    }
+
+    #[test]
+    fn route_core_and_forward_ws_steady_state_no_allocs() {
+        // The decision-step buffers (top-k table, orders, fill counts,
+        // kept list) must come from the pool after warmup — closing the
+        // "Known limitations" per-layer-call allocations.
+        let (tc, x) = layer(32, 8, 8);
+        let probs = softmax_rows(&matmul(&x, &tc.wg));
+        let mut ws = Workspace::new();
+        let mut kept = ws.take_route();
+        tc.route_core(&probs, &mut kept, &mut ws);
+        ws.give_route(kept);
+        let warm = ws.fresh_allocs();
+        for _ in 0..5 {
+            let mut kept = ws.take_route();
+            tc.route_core(&probs, &mut kept, &mut ws);
+            ws.give_route(kept);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "route_core must not allocate at steady state");
+
+        let mut ws = Workspace::new();
+        tc.forward_with_stats_ws(&x, &mut ws);
+        let warm = ws.fresh_allocs();
+        for _ in 0..4 {
+            tc.forward_with_stats_ws(&x, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "forward_with_stats_ws must not allocate at steady state");
+    }
+
+    #[test]
+    fn route_wrapper_matches_core() {
+        let (mut tc, x) = layer(24, 8, 4);
+        tc.top_k = 2;
+        tc.capacity_factor = 0.75;
+        let (asg, probs) = tc.route(&x);
+        let mut ws = Workspace::new();
+        let mut kept = Vec::new();
+        let cap = tc.route_core(&probs, &mut kept, &mut ws);
+        assert_eq!(cap, asg.capacity);
+        assert_eq!(kept, asg.kept);
     }
 
     #[test]

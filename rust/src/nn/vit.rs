@@ -19,18 +19,82 @@ use crate::tensor::{
     matmul_bias_gelu_slice_into, matmul_bias_slice_into, matmul_into,
     matmul_nt, matmul_slice_into, matmul_tn, matmul_tn_into, softmax_cols,
     softmax_cols_inplace, softmax_rows, softmax_rows_inplace, with_workspace,
-    Tensor, Workspace,
+    RouteEntry, Tensor, Workspace,
 };
-use crate::threadpool::parallel_map;
+use crate::threadpool::parallel_map_ws;
 use crate::util::Rng;
 
 /// Named parameter storage; keys match the Python/HLO manifest exactly.
 pub type ParamStore = BTreeMap<String, Tensor>;
 
+/// Parameter keys of one block, interned once at model construction so
+/// the per-op lookup path never builds a key `String` (the per-op
+/// `format!` allocation flagged in docs/PERFORMANCE.md "Known
+/// limitations"). The strings match the Python/HLO manifest exactly.
+#[derive(Clone, Debug)]
+struct BlockKeys {
+    ln1_s: String,
+    ln1_b: String,
+    wq: String,
+    wq_b: String,
+    wk: String,
+    wk_b: String,
+    wv: String,
+    wv_b: String,
+    wo: String,
+    wo_b: String,
+    ln2_s: String,
+    ln2_b: String,
+    mlp_w1: String,
+    mlp_b1: String,
+    mlp_w2: String,
+    mlp_b2: String,
+    phi: String,
+    scale: String,
+    wg: String,
+    moe_w1: String,
+    moe_b1: String,
+    moe_w2: String,
+    moe_b2: String,
+}
+
+impl BlockKeys {
+    fn new(i: usize) -> Self {
+        let pre = format!("block_{i}");
+        Self {
+            ln1_s: format!("{pre}/ln1/s"),
+            ln1_b: format!("{pre}/ln1/b"),
+            wq: format!("{pre}/attn/wq"),
+            wq_b: format!("{pre}/attn/wq_b"),
+            wk: format!("{pre}/attn/wk"),
+            wk_b: format!("{pre}/attn/wk_b"),
+            wv: format!("{pre}/attn/wv"),
+            wv_b: format!("{pre}/attn/wv_b"),
+            wo: format!("{pre}/attn/wo"),
+            wo_b: format!("{pre}/attn/wo_b"),
+            ln2_s: format!("{pre}/ln2/s"),
+            ln2_b: format!("{pre}/ln2/b"),
+            mlp_w1: format!("{pre}/mlp/w1"),
+            mlp_b1: format!("{pre}/mlp/b1"),
+            mlp_w2: format!("{pre}/mlp/w2"),
+            mlp_b2: format!("{pre}/mlp/b2"),
+            phi: format!("{pre}/moe/phi"),
+            scale: format!("{pre}/moe/scale"),
+            wg: format!("{pre}/moe/wg"),
+            moe_w1: format!("{pre}/moe/w1"),
+            moe_b1: format!("{pre}/moe/b1"),
+            moe_w2: format!("{pre}/moe/w2"),
+            moe_b2: format!("{pre}/moe/b2"),
+        }
+    }
+}
+
 /// The native model: a config plus methods over a [`ParamStore`].
 #[derive(Clone, Debug)]
 pub struct VitModel {
     pub cfg: ModelConfig,
+    /// Interned per-block parameter keys (see [`BlockKeys`]).
+    keys: Vec<BlockKeys>,
 }
 
 // ---------------------------------------------------------------------------
@@ -89,7 +153,8 @@ pub struct ForwardOut {
 
 impl VitModel {
     pub fn new(cfg: ModelConfig) -> Self {
-        Self { cfg }
+        let keys = (0..cfg.depth).map(BlockKeys::new).collect();
+        Self { cfg, keys }
     }
 
     // -----------------------------------------------------------------------
@@ -111,42 +176,43 @@ impl VitModel {
                  Tensor::randn(&[cfg.tokens(), d], 0.02, &mut rng));
 
         for i in 0..cfg.depth {
-            let pre = format!("block_{i}");
-            p.insert(format!("{pre}/ln1/s"), Tensor::full(&[d], 1.0));
-            p.insert(format!("{pre}/ln1/b"), Tensor::zeros(&[d]));
-            for name in ["wq", "wk", "wv", "wo"] {
-                p.insert(format!("{pre}/attn/{name}"),
+            let bk = &self.keys[i];
+            p.insert(bk.ln1_s.clone(), Tensor::full(&[d], 1.0));
+            p.insert(bk.ln1_b.clone(), Tensor::zeros(&[d]));
+            for (w, b) in [(&bk.wq, &bk.wq_b), (&bk.wk, &bk.wk_b),
+                           (&bk.wv, &bk.wv_b), (&bk.wo, &bk.wo_b)] {
+                p.insert(w.clone(),
                          Tensor::randn(&[d, d], lecun(d), &mut rng));
-                p.insert(format!("{pre}/attn/{name}_b"), Tensor::zeros(&[d]));
+                p.insert(b.clone(), Tensor::zeros(&[d]));
             }
-            p.insert(format!("{pre}/ln2/s"), Tensor::full(&[d], 1.0));
-            p.insert(format!("{pre}/ln2/b"), Tensor::zeros(&[d]));
+            p.insert(bk.ln2_s.clone(), Tensor::full(&[d], 1.0));
+            p.insert(bk.ln2_b.clone(), Tensor::zeros(&[d]));
 
             if cfg.moe_layers.contains(&i) && cfg.moe_type != MoeType::Dense {
                 let (n, sp, eh) =
                     (cfg.num_experts, cfg.slots_per_expert, cfg.expert_hidden);
                 if cfg.moe_type == MoeType::Soft {
-                    p.insert(format!("{pre}/moe/phi"),
+                    p.insert(bk.phi.clone(),
                              Tensor::randn(&[d, n, sp], lecun(d), &mut rng));
-                    p.insert(format!("{pre}/moe/scale"), Tensor::scalar(1.0));
+                    p.insert(bk.scale.clone(), Tensor::scalar(1.0));
                 } else {
-                    p.insert(format!("{pre}/moe/wg"),
+                    p.insert(bk.wg.clone(),
                              Tensor::randn(&[d, n], lecun(d), &mut rng));
                 }
-                p.insert(format!("{pre}/moe/w1"),
+                p.insert(bk.moe_w1.clone(),
                          Tensor::randn(&[n, d, eh], lecun(d), &mut rng));
-                p.insert(format!("{pre}/moe/b1"), Tensor::zeros(&[n, eh]));
-                p.insert(format!("{pre}/moe/w2"),
+                p.insert(bk.moe_b1.clone(), Tensor::zeros(&[n, eh]));
+                p.insert(bk.moe_w2.clone(),
                          Tensor::randn(&[n, eh, d], lecun(eh), &mut rng));
-                p.insert(format!("{pre}/moe/b2"), Tensor::zeros(&[n, d]));
+                p.insert(bk.moe_b2.clone(), Tensor::zeros(&[n, d]));
             } else {
                 let h = cfg.mlp_dim;
-                p.insert(format!("{pre}/mlp/w1"),
+                p.insert(bk.mlp_w1.clone(),
                          Tensor::randn(&[d, h], lecun(d), &mut rng));
-                p.insert(format!("{pre}/mlp/b1"), Tensor::zeros(&[h]));
-                p.insert(format!("{pre}/mlp/w2"),
+                p.insert(bk.mlp_b1.clone(), Tensor::zeros(&[h]));
+                p.insert(bk.mlp_w2.clone(),
                          Tensor::randn(&[h, d], lecun(h), &mut rng));
-                p.insert(format!("{pre}/mlp/b2"), Tensor::zeros(&[d]));
+                p.insert(bk.mlp_b2.clone(), Tensor::zeros(&[d]));
             }
         }
 
@@ -218,16 +284,17 @@ impl VitModel {
         p.get(k).unwrap_or_else(|| panic!("missing param '{k}'"))
     }
 
-    fn attn_params<'a>(&self, p: &'a ParamStore, pre: &str) -> AttnParams<'a> {
+    fn attn_params<'a>(&self, p: &'a ParamStore, bk: &BlockKeys)
+        -> AttnParams<'a> {
         AttnParams {
-            wq: self.get(p, &format!("{pre}/attn/wq")),
-            bq: &self.get(p, &format!("{pre}/attn/wq_b")).data,
-            wk: self.get(p, &format!("{pre}/attn/wk")),
-            bk: &self.get(p, &format!("{pre}/attn/wk_b")).data,
-            wv: self.get(p, &format!("{pre}/attn/wv")),
-            bv: &self.get(p, &format!("{pre}/attn/wv_b")).data,
-            wo: self.get(p, &format!("{pre}/attn/wo")),
-            bo: &self.get(p, &format!("{pre}/attn/wo_b")).data,
+            wq: self.get(p, &bk.wq),
+            bq: &self.get(p, &bk.wq_b).data,
+            wk: self.get(p, &bk.wk),
+            bk: &self.get(p, &bk.wk_b).data,
+            wv: self.get(p, &bk.wv),
+            bv: &self.get(p, &bk.wv_b).data,
+            wo: self.get(p, &bk.wo),
+            bo: &self.get(p, &bk.wo_b).data,
             heads: self.cfg.heads,
         }
     }
@@ -246,45 +313,43 @@ impl VitModel {
         stacked.data[e * b..(e + 1) * b].to_vec()
     }
 
-    fn moe_fwd(&self, p: &ParamStore, pre: &str, x: &Tensor) -> (Tensor, MoeCache) {
+    fn moe_fwd(&self, p: &ParamStore, bk: &BlockKeys, x: &Tensor)
+        -> (Tensor, MoeCache) {
         let cfg = &self.cfg;
-        if p.contains_key(&format!("{pre}/mlp/w1")) {
+        if p.contains_key(&bk.mlp_w1) {
             let (y, cache) = mlp_fwd(
                 x,
-                self.get(p, &format!("{pre}/mlp/w1")),
-                &self.get(p, &format!("{pre}/mlp/b1")).data,
-                self.get(p, &format!("{pre}/mlp/w2")),
-                &self.get(p, &format!("{pre}/mlp/b2")).data,
+                self.get(p, &bk.mlp_w1),
+                &self.get(p, &bk.mlp_b1).data,
+                self.get(p, &bk.mlp_w2),
+                &self.get(p, &bk.mlp_b2).data,
             );
             return (y, MoeCache::Dense { cache });
         }
         match cfg.moe_type {
-            MoeType::Soft => self.soft_moe_fwd(p, pre, x),
+            MoeType::Soft => self.soft_moe_fwd(p, bk, x),
             MoeType::TokensChoice | MoeType::ExpertsChoice => {
-                self.sparse_moe_fwd(p, pre, x)
+                self.sparse_moe_fwd(p, bk, x)
             }
             MoeType::Dense => unreachable!("dense handled above"),
         }
     }
 
-    fn soft_moe_fwd(&self, p: &ParamStore, pre: &str, x: &Tensor)
+    fn soft_moe_fwd(&self, p: &ParamStore, bk: &BlockKeys, x: &Tensor)
         -> (Tensor, MoeCache) {
         let cfg = &self.cfg;
-        let scale = self.get(p, &format!("{pre}/moe/scale")).data[0];
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let b1 = self.get(p, &format!("{pre}/moe/b1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
-        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        let scale = self.get(p, &bk.scale).data[0];
+        let w1 = self.get(p, &bk.moe_w1);
+        let b1 = self.get(p, &bk.moe_b1);
+        let w2 = self.get(p, &bk.moe_w2);
+        let b2 = self.get(p, &bk.moe_b2);
         let (m, d) = x.dims2();
         let n = cfg.num_experts;
         let sp = cfg.slots_per_expert;
         let s = n * sp;
         // Manifest layout is (d, n, p); row-major flattening to (d, n*p)
         // is metadata-only.
-        let phi = &self
-            .get(p, &format!("{pre}/moe/phi"))
-            .clone()
-            .reshape(&[d, s]);
+        let phi = &self.get(p, &bk.phi).clone().reshape(&[d, s]);
 
         let logits = if cfg.normalize_router {
             let xn = l2_normalize_rows(x);
@@ -332,86 +397,42 @@ impl VitModel {
         )
     }
 
-    /// Routing decision from gate probs (t, n): identical semantics to
-    /// moe::{tokens,experts}_choice and ref.py. Shared by the training
+    /// Routing decision from gate probs (t, n): delegates to the shared
+    /// decision cores in `crate::moe`, so the semantics can never diverge
+    /// from the standalone routers (and ref.py). Shared by the training
     /// forward (which caches it for backward) and the inference path.
-    fn sparse_route(&self, probs: &Tensor, t: usize)
-        -> (Vec<(usize, usize, f32, usize)>, usize) {
+    /// Fills `kept`; all decision-step scratch (top-k choice tables, sort
+    /// orders, fill counts) is pooled through `ws` — no per-layer-call
+    /// index allocations. Returns the buffer capacity used.
+    fn sparse_route_into(&self, probs: &Tensor, t: usize,
+                         kept: &mut Vec<RouteEntry>, ws: &mut Workspace)
+        -> usize {
         let cfg = &self.cfg;
-        let n = cfg.num_experts;
+        debug_assert_eq!(probs.dims2(), (t, cfg.num_experts));
         match cfg.moe_type {
-            MoeType::TokensChoice => {
-                let k = cfg.top_k;
-                let cap = ((cfg.capacity_factor * t as f32 * k as f32
-                    / n as f32).ceil() as usize).max(1);
-                // top-k choices per token
-                let mut choices: Vec<Vec<(usize, f32)>> = Vec::with_capacity(t);
-                for i in 0..t {
-                    let row = probs.row(i);
-                    let mut idx: Vec<usize> = (0..n).collect();
-                    for sel in 0..k.min(n) {
-                        let mut best = sel;
-                        for j in sel + 1..n {
-                            if row[idx[j]] > row[idx[best]] {
-                                best = j;
-                            }
-                        }
-                        idx.swap(sel, best);
-                    }
-                    choices.push(idx[..k.min(n)].iter()
-                                 .map(|&e| (e, row[e])).collect());
-                }
-                let mut order: Vec<usize> = (0..t).collect();
-                if cfg.bpr {
-                    order.sort_by(|&a, &b| {
-                        choices[b][0].1.partial_cmp(&choices[a][0].1)
-                            .unwrap().then(a.cmp(&b))
-                    });
-                }
-                let mut used = vec![0usize; n];
-                let mut kept = Vec::new();
-                for &tok in &order {
-                    for &(e, gate) in &choices[tok] {
-                        if used[e] < cap {
-                            kept.push((tok, e, gate, used[e]));
-                            used[e] += 1;
-                        }
-                    }
-                }
-                (kept, cap)
-            }
-            MoeType::ExpertsChoice => {
-                let cap = ((cfg.capacity_factor * t as f32 / n as f32).ceil()
-                    as usize).max(1).min(t);
-                let mut kept = Vec::new();
-                for e in 0..n {
-                    let mut idx: Vec<usize> = (0..t).collect();
-                    idx.sort_by(|&a, &b| {
-                        probs.data[b * n + e].partial_cmp(&probs.data[a * n + e])
-                            .unwrap().then(a.cmp(&b))
-                    });
-                    for (pos, &tok) in idx[..cap].iter().enumerate() {
-                        kept.push((tok, e, probs.data[tok * n + e], pos));
-                    }
-                }
-                (kept, cap)
-            }
+            MoeType::TokensChoice => crate::moe::tokens_choice_route_into(
+                probs, cfg.top_k, cfg.capacity_factor, cfg.bpr, kept, ws),
+            MoeType::ExpertsChoice => crate::moe::experts_choice_route_into(
+                probs, cfg.capacity_factor, kept, ws),
             _ => unreachable!(),
         }
     }
 
-    fn sparse_moe_fwd(&self, p: &ParamStore, pre: &str, x: &Tensor)
+    fn sparse_moe_fwd(&self, p: &ParamStore, bk: &BlockKeys, x: &Tensor)
         -> (Tensor, MoeCache) {
         let cfg = &self.cfg;
-        let wg = self.get(p, &format!("{pre}/moe/wg"));
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let b1 = self.get(p, &format!("{pre}/moe/b1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
-        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        let wg = self.get(p, &bk.wg);
+        let w1 = self.get(p, &bk.moe_w1);
+        let b1 = self.get(p, &bk.moe_b1);
+        let w2 = self.get(p, &bk.moe_w2);
+        let b2 = self.get(p, &bk.moe_b2);
         let (t, d) = x.dims2();
         let n = cfg.num_experts;
         let probs = softmax_rows(&matmul(x, wg));
-        let (kept, capacity) = self.sparse_route(&probs, t);
+        let mut kept = Vec::new();
+        let capacity = with_workspace(|ws| {
+            self.sparse_route_into(&probs, t, &mut kept, ws)
+        });
 
         // Gather -> expert MLPs -> scatter.
         let mut buffers = vec![Tensor::zeros(&[capacity, d]); n];
@@ -457,40 +478,40 @@ impl VitModel {
     // accumulation order), parity-tested in `forward_infer_matches_item`.
     // -----------------------------------------------------------------------
 
-    fn moe_infer_into(&self, p: &ParamStore, pre: &str, x: &Tensor,
+    fn moe_infer_into(&self, p: &ParamStore, bk: &BlockKeys, x: &Tensor,
                       out: &mut [f32], ws: &mut Workspace) {
-        if p.contains_key(&format!("{pre}/mlp/w1")) {
+        if p.contains_key(&bk.mlp_w1) {
             mlp_infer_into(
                 x,
-                self.get(p, &format!("{pre}/mlp/w1")),
-                &self.get(p, &format!("{pre}/mlp/b1")).data,
-                self.get(p, &format!("{pre}/mlp/w2")),
-                &self.get(p, &format!("{pre}/mlp/b2")).data,
+                self.get(p, &bk.mlp_w1),
+                &self.get(p, &bk.mlp_b1).data,
+                self.get(p, &bk.mlp_w2),
+                &self.get(p, &bk.mlp_b2).data,
                 out,
                 ws,
             );
             return;
         }
         match self.cfg.moe_type {
-            MoeType::Soft => self.soft_moe_infer_into(p, pre, x, out, ws),
+            MoeType::Soft => self.soft_moe_infer_into(p, bk, x, out, ws),
             MoeType::TokensChoice | MoeType::ExpertsChoice => {
-                self.sparse_moe_infer_into(p, pre, x, out, ws)
+                self.sparse_moe_infer_into(p, bk, x, out, ws)
             }
             MoeType::Dense => unreachable!("dense handled above"),
         }
     }
 
-    fn soft_moe_infer_into(&self, p: &ParamStore, pre: &str, x: &Tensor,
+    fn soft_moe_infer_into(&self, p: &ParamStore, bk: &BlockKeys, x: &Tensor,
                            out: &mut [f32], ws: &mut Workspace) {
         let cfg = &self.cfg;
-        let scale = self.get(p, &format!("{pre}/moe/scale")).data[0];
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let b1 = self.get(p, &format!("{pre}/moe/b1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
-        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        let scale = self.get(p, &bk.scale).data[0];
+        let w1 = self.get(p, &bk.moe_w1);
+        let b1 = self.get(p, &bk.moe_b1);
+        let w2 = self.get(p, &bk.moe_w2);
+        let b2 = self.get(p, &bk.moe_b2);
         // (d, n, p) row-major flattens to (d, s) without copying: the
         // slice GEMM variants address it directly.
-        let phi = self.get(p, &format!("{pre}/moe/phi"));
+        let phi = self.get(p, &bk.phi);
         let (m, d) = x.dims2();
         let n = cfg.num_experts;
         let sp = cfg.slots_per_expert;
@@ -591,14 +612,15 @@ impl VitModel {
         ws.give_tensor(logits);
     }
 
-    fn sparse_moe_infer_into(&self, p: &ParamStore, pre: &str, x: &Tensor,
-                             out: &mut [f32], ws: &mut Workspace) {
+    fn sparse_moe_infer_into(&self, p: &ParamStore, bk: &BlockKeys,
+                             x: &Tensor, out: &mut [f32],
+                             ws: &mut Workspace) {
         let cfg = &self.cfg;
-        let wg = self.get(p, &format!("{pre}/moe/wg"));
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let b1 = self.get(p, &format!("{pre}/moe/b1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
-        let b2 = self.get(p, &format!("{pre}/moe/b2"));
+        let wg = self.get(p, &bk.wg);
+        let w1 = self.get(p, &bk.moe_w1);
+        let b1 = self.get(p, &bk.moe_b1);
+        let w2 = self.get(p, &bk.moe_w2);
+        let b2 = self.get(p, &bk.moe_b2);
         let (t, d) = x.dims2();
         let n = cfg.num_experts;
         let eh = cfg.expert_hidden;
@@ -606,7 +628,8 @@ impl VitModel {
         let mut probs = ws.take_tensor(&[t, n]);
         matmul_into(x, wg, &mut probs.data, ws);
         softmax_rows_inplace(&mut probs);
-        let (mut kept, cap) = self.sparse_route(&probs, t);
+        let mut kept = ws.take_route();
+        let cap = self.sparse_route_into(&probs, t, &mut kept, ws);
         ws.give_tensor(probs);
 
         for v in out.iter_mut() {
@@ -648,6 +671,7 @@ impl VitModel {
         ws.give_tensor(ob);
         ws.give_tensor(ge);
         ws.give_tensor(buf);
+        ws.give_route(kept);
     }
 
     /// Inference-only forward for one item: no caches; every transient
@@ -670,23 +694,23 @@ impl VitModel {
         let mut h = ws.take_tensor(&[m, d]);
         let mut branch = ws.take_tensor(&[m, d]);
         for i in 0..cfg.depth {
-            let pre = format!("block_{i}");
+            let bk = &self.keys[i];
             layernorm_into(
                 &x,
-                &self.get(p, &format!("{pre}/ln1/s")).data,
-                &self.get(p, &format!("{pre}/ln1/b")).data,
+                &self.get(p, &bk.ln1_s).data,
+                &self.get(p, &bk.ln1_b).data,
                 &mut h.data,
             );
-            let ap = self.attn_params(p, &pre);
+            let ap = self.attn_params(p, bk);
             attention_infer_into(&h, &ap, &mut branch.data, ws);
             x.add_inplace(&branch);
             layernorm_into(
                 &x,
-                &self.get(p, &format!("{pre}/ln2/s")).data,
-                &self.get(p, &format!("{pre}/ln2/b")).data,
+                &self.get(p, &bk.ln2_s).data,
+                &self.get(p, &bk.ln2_b).data,
                 &mut h.data,
             );
-            self.moe_infer_into(p, &pre, &h, &mut branch.data, ws);
+            self.moe_infer_into(p, bk, &h, &mut branch.data, ws);
             x.add_inplace(&branch);
         }
 
@@ -718,23 +742,23 @@ impl VitModel {
 
         let mut blocks = Vec::with_capacity(cfg.depth);
         for i in 0..cfg.depth {
-            let pre = format!("block_{i}");
+            let bk = &self.keys[i];
             let ln1_in = x.clone();
             let (h1, ln1) = layernorm_fwd(
                 &x,
-                &self.get(p, &format!("{pre}/ln1/s")).data,
-                &self.get(p, &format!("{pre}/ln1/b")).data,
+                &self.get(p, &bk.ln1_s).data,
+                &self.get(p, &bk.ln1_b).data,
             );
-            let ap = self.attn_params(p, &pre);
+            let ap = self.attn_params(p, bk);
             let (a, attn) = attention_fwd(&h1, &ap);
             x.add_inplace(&a);
             let ln2_in = x.clone();
             let (h2, ln2) = layernorm_fwd(
                 &x,
-                &self.get(p, &format!("{pre}/ln2/s")).data,
-                &self.get(p, &format!("{pre}/ln2/b")).data,
+                &self.get(p, &bk.ln2_s).data,
+                &self.get(p, &bk.ln2_b).data,
             );
-            let (mo, moe) = self.moe_fwd(p, &pre, &h2);
+            let (mo, moe) = self.moe_fwd(p, bk, &h2);
             x.add_inplace(&mo);
             blocks.push(BlockCache { ln1_in, ln1, attn, ln2_in, ln2, moe });
         }
@@ -759,22 +783,23 @@ impl VitModel {
 
     /// Batched forward. `images.shape == [B, H, W, C]`.
     ///
-    /// Uses the cache-free inference path. Items are data-parallel; the
-    /// parallelism budget (see `threadpool`) automatically gives the
-    /// threads to the items when b > 1 and to the per-item GEMMs when
-    /// b == 1 — never both. Scratch pooling: for b == 1 the caller
-    /// thread's workspace persists across calls (zero steady-state
-    /// allocations); for b > 1 each scoped worker's workspace is reused
-    /// across the items it processes but dropped at batch end (a
-    /// persistent worker pool is a ROADMAP follow-up).
+    /// Uses the cache-free inference path. Items are data-parallel on the
+    /// persistent worker pool; the parallelism budget (see `threadpool`)
+    /// automatically gives the threads to the items when b > 1 and to the
+    /// per-item GEMMs when b == 1 — never both. Scratch pooling: every
+    /// executing thread (pool workers and the caller) hands each item its
+    /// resident workspace, which survives across batch items, across
+    /// calls, and across serve requests — so steady-state forwards at any
+    /// batch size perform zero thread spawns and zero workspace heap
+    /// allocations (asserted in `rust/tests/pool_steady_state.rs`).
     pub fn forward(&self, p: &ParamStore, images: &Tensor) -> ForwardOut {
         let b = images.shape[0];
         let c = self.cfg.num_classes;
         let d = self.cfg.dim;
         let mut logits = Tensor::zeros(&[b, c]);
         let mut features = Tensor::zeros(&[b, d]);
-        let results: Vec<(Vec<f32>, Vec<f32>)> = parallel_map(b, |i| {
-            with_workspace(|ws| self.forward_item_infer(p, images, i, ws))
+        let results: Vec<(Vec<f32>, Vec<f32>)> = parallel_map_ws(b, |i, ws| {
+            self.forward_item_infer(p, images, i, ws)
         });
         for (i, (l, f)) in results.into_iter().enumerate() {
             logits.row_mut(i).copy_from_slice(&l);
@@ -798,24 +823,24 @@ impl VitModel {
         );
         x.add_inplace(self.get(p, "pos_embed"));
         for i in 0..=layer {
-            let pre = format!("block_{i}");
+            let bk = &self.keys[i];
             let (h1, _) = layernorm_fwd(
                 &x,
-                &self.get(p, &format!("{pre}/ln1/s")).data,
-                &self.get(p, &format!("{pre}/ln1/b")).data,
+                &self.get(p, &bk.ln1_s).data,
+                &self.get(p, &bk.ln1_b).data,
             );
-            let ap = self.attn_params(p, &pre);
+            let ap = self.attn_params(p, bk);
             let (a, _) = attention_fwd(&h1, &ap);
             x.add_inplace(&a);
             let (h2, _) = layernorm_fwd(
                 &x,
-                &self.get(p, &format!("{pre}/ln2/s")).data,
-                &self.get(p, &format!("{pre}/ln2/b")).data,
+                &self.get(p, &bk.ln2_s).data,
+                &self.get(p, &bk.ln2_b).data,
             );
             if i == layer {
                 return h2;
             }
-            let (mo, _) = self.moe_fwd(p, &pre, &h2);
+            let (mo, _) = self.moe_fwd(p, bk, &h2);
             x.add_inplace(&mo);
         }
         unreachable!()
@@ -919,39 +944,35 @@ impl VitModel {
 
         // Blocks in reverse.
         for i in (0..cfg.depth).rev() {
-            let pre = format!("block_{i}");
+            let bk = &self.keys[i];
             let bc = &cache.blocks[i];
 
             // x_out = x_mid + moe(ln2(x_mid))
             let dmoe_out = dx.clone(); // branch grad
-            let dh2 = self.moe_bwd(p, &pre, &bc.moe, &dmoe_out, grads);
+            let dh2 = self.moe_bwd(p, bk, &bc.moe, &dmoe_out, grads);
             let (dx_ln2, ds2, db2) = layernorm_bwd(
-                &bc.ln2, &self.get(p, &format!("{pre}/ln2/s")).data, &dh2);
-            accumulate(grads, &format!("{pre}/ln2/s"), Tensor::from_vec(&[d], ds2));
-            accumulate(grads, &format!("{pre}/ln2/b"), Tensor::from_vec(&[d], db2));
+                &bc.ln2, &self.get(p, &bk.ln2_s).data, &dh2);
+            accumulate(grads, &bk.ln2_s, Tensor::from_vec(&[d], ds2));
+            accumulate(grads, &bk.ln2_b, Tensor::from_vec(&[d], db2));
             dx.add_inplace(&dx_ln2);
             let _ = &bc.ln2_in;
 
             // x_mid = x_in + attn(ln1(x_in))
             let dattn_out = dx.clone();
-            let ap = self.attn_params(p, &pre);
+            let ap = self.attn_params(p, bk);
             let ag = attention_bwd(&bc.attn, &ap, &dattn_out);
-            accumulate(grads, &format!("{pre}/attn/wq"), ag.dwq);
-            accumulate(grads, &format!("{pre}/attn/wq_b"),
-                       Tensor::from_vec(&[d], ag.dbq));
-            accumulate(grads, &format!("{pre}/attn/wk"), ag.dwk);
-            accumulate(grads, &format!("{pre}/attn/wk_b"),
-                       Tensor::from_vec(&[d], ag.dbk));
-            accumulate(grads, &format!("{pre}/attn/wv"), ag.dwv);
-            accumulate(grads, &format!("{pre}/attn/wv_b"),
-                       Tensor::from_vec(&[d], ag.dbv));
-            accumulate(grads, &format!("{pre}/attn/wo"), ag.dwo);
-            accumulate(grads, &format!("{pre}/attn/wo_b"),
-                       Tensor::from_vec(&[d], ag.dbo));
+            accumulate(grads, &bk.wq, ag.dwq);
+            accumulate(grads, &bk.wq_b, Tensor::from_vec(&[d], ag.dbq));
+            accumulate(grads, &bk.wk, ag.dwk);
+            accumulate(grads, &bk.wk_b, Tensor::from_vec(&[d], ag.dbk));
+            accumulate(grads, &bk.wv, ag.dwv);
+            accumulate(grads, &bk.wv_b, Tensor::from_vec(&[d], ag.dbv));
+            accumulate(grads, &bk.wo, ag.dwo);
+            accumulate(grads, &bk.wo_b, Tensor::from_vec(&[d], ag.dbo));
             let (dx_ln1, ds1, db1) = layernorm_bwd(
-                &bc.ln1, &self.get(p, &format!("{pre}/ln1/s")).data, &ag.dx);
-            accumulate(grads, &format!("{pre}/ln1/s"), Tensor::from_vec(&[d], ds1));
-            accumulate(grads, &format!("{pre}/ln1/b"), Tensor::from_vec(&[d], db1));
+                &bc.ln1, &self.get(p, &bk.ln1_s).data, &ag.dx);
+            accumulate(grads, &bk.ln1_s, Tensor::from_vec(&[d], ds1));
+            accumulate(grads, &bk.ln1_b, Tensor::from_vec(&[d], db1));
             dx.add_inplace(&dx_ln1);
             let _ = &bc.ln1_in;
         }
@@ -965,48 +986,45 @@ impl VitModel {
     fn moe_bwd(
         &self,
         p: &ParamStore,
-        pre: &str,
+        bk: &BlockKeys,
         cache: &MoeCache,
         dy: &Tensor,
         grads: &mut Grads,
     ) -> Tensor {
         match cache {
             MoeCache::Dense { cache } => {
-                let w1 = self.get(p, &format!("{pre}/mlp/w1"));
-                let w2 = self.get(p, &format!("{pre}/mlp/w2"));
+                let w1 = self.get(p, &bk.mlp_w1);
+                let w2 = self.get(p, &bk.mlp_w2);
                 let (dx, dw1, db1, dw2, db2) = mlp_bwd(cache, w1, w2, dy);
-                accumulate(grads, &format!("{pre}/mlp/w1"), dw1);
-                accumulate(grads, &format!("{pre}/mlp/b1"),
+                accumulate(grads, &bk.mlp_w1, dw1);
+                accumulate(grads, &bk.mlp_b1,
                            Tensor::from_vec(&[w1.shape[1]], db1));
-                accumulate(grads, &format!("{pre}/mlp/w2"), dw2);
-                accumulate(grads, &format!("{pre}/mlp/b2"),
+                accumulate(grads, &bk.mlp_w2, dw2);
+                accumulate(grads, &bk.mlp_b2,
                            Tensor::from_vec(&[w2.shape[1]], db2));
                 dx
             }
-            MoeCache::Soft(sc) => self.soft_moe_bwd(p, pre, sc, dy, grads),
-            MoeCache::Sparse(sc) => self.sparse_moe_bwd(p, pre, sc, dy, grads),
+            MoeCache::Soft(sc) => self.soft_moe_bwd(p, bk, sc, dy, grads),
+            MoeCache::Sparse(sc) => self.sparse_moe_bwd(p, bk, sc, dy, grads),
         }
     }
 
     fn soft_moe_bwd(
         &self,
         p: &ParamStore,
-        pre: &str,
+        bk: &BlockKeys,
         sc: &SoftCache,
         dy: &Tensor,
         grads: &mut Grads,
     ) -> Tensor {
         let cfg = &self.cfg;
-        let scale = self.get(p, &format!("{pre}/moe/scale")).data[0];
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
+        let scale = self.get(p, &bk.scale).data[0];
+        let w1 = self.get(p, &bk.moe_w1);
+        let w2 = self.get(p, &bk.moe_w2);
         let (n, sp) = (cfg.num_experts, cfg.slots_per_expert);
         let d = cfg.dim;
-        let phi_shape = self.get(p, &format!("{pre}/moe/phi")).shape.clone();
-        let phi = &self
-            .get(p, &format!("{pre}/moe/phi"))
-            .clone()
-            .reshape(&[d, n * sp]);
+        let phi_shape = self.get(p, &bk.phi).shape.clone();
+        let phi = &self.get(p, &bk.phi).clone().reshape(&[d, n * sp]);
         let eh = cfg.expert_hidden;
 
         // y = C @ Ys
@@ -1033,10 +1051,10 @@ impl VitModel {
             dw2.data[e * eh * d..(e + 1) * eh * d].copy_from_slice(&dw2e.data);
             db2.data[e * d..(e + 1) * d].copy_from_slice(&db2e);
         }
-        accumulate(grads, &format!("{pre}/moe/w1"), dw1);
-        accumulate(grads, &format!("{pre}/moe/b1"), db1);
-        accumulate(grads, &format!("{pre}/moe/w2"), dw2);
-        accumulate(grads, &format!("{pre}/moe/b2"), db2);
+        accumulate(grads, &bk.moe_w1, dw1);
+        accumulate(grads, &bk.moe_b1, db1);
+        accumulate(grads, &bk.moe_w2, dw2);
+        accumulate(grads, &bk.moe_b2, db2);
 
         // Xs = Dᵀ x  =>  dD_{ij} = Σ_d x_{id} dXs_{jd} = (x @ dXsᵀ)_{ij},
         // and dx += D @ dXs.
@@ -1066,16 +1084,14 @@ impl VitModel {
                 .zip(&phin_unit.data)
                 .map(|(a, b)| a * b)
                 .sum();
-            accumulate(grads, &format!("{pre}/moe/scale"),
-                       Tensor::scalar(dscale));
+            accumulate(grads, &bk.scale, Tensor::scalar(dscale));
             let dphi = l2norm_cols_bwd(phi, &dphin.scale(scale));
-            accumulate(grads, &format!("{pre}/moe/phi"),
-                       dphi.reshape(&phi_shape));
+            accumulate(grads, &bk.phi, dphi.reshape(&phi_shape));
             dx.add_inplace(&l2norm_rows_bwd(&sc.x, &dxn));
         } else {
-            accumulate(grads, &format!("{pre}/moe/phi"),
+            accumulate(grads, &bk.phi,
                        matmul_tn(&sc.x, &dl).reshape(&phi_shape));
-            accumulate(grads, &format!("{pre}/moe/scale"), Tensor::scalar(0.0));
+            accumulate(grads, &bk.scale, Tensor::scalar(0.0));
             dx.add_inplace(&matmul_nt(&dl, phi));
         }
         dx
@@ -1084,15 +1100,15 @@ impl VitModel {
     fn sparse_moe_bwd(
         &self,
         p: &ParamStore,
-        pre: &str,
+        bk: &BlockKeys,
         sc: &SparseCache,
         dy: &Tensor,
         grads: &mut Grads,
     ) -> Tensor {
         let cfg = &self.cfg;
-        let wg = self.get(p, &format!("{pre}/moe/wg"));
-        let w1 = self.get(p, &format!("{pre}/moe/w1"));
-        let w2 = self.get(p, &format!("{pre}/moe/w2"));
+        let wg = self.get(p, &bk.wg);
+        let w1 = self.get(p, &bk.moe_w1);
+        let w2 = self.get(p, &bk.moe_w2);
         let (t, d) = sc.x.dims2();
         let n = cfg.num_experts;
         let eh = cfg.expert_hidden;
@@ -1108,8 +1124,7 @@ impl VitModel {
             // so recompute the row cheaply: y_row = g_row @ w2 + b2.
             let g_row = &sc.expert_caches[e].g.data[pos * eh..(pos + 1) * eh];
             let w2e = Self::expert_mat(w2, e);
-            let b2e = Self::expert_vec(
-                self.get(p, &format!("{pre}/moe/b2")), e);
+            let b2e = Self::expert_vec(self.get(p, &bk.moe_b2), e);
             let mut out_row = b2e;
             for (h, &gv) in g_row.iter().enumerate() {
                 let wrow = &w2e.data[h * d..(h + 1) * d];
@@ -1155,14 +1170,14 @@ impl VitModel {
                 }
             }
         }
-        accumulate(grads, &format!("{pre}/moe/w1"), dw1);
-        accumulate(grads, &format!("{pre}/moe/b1"), db1);
-        accumulate(grads, &format!("{pre}/moe/w2"), dw2);
-        accumulate(grads, &format!("{pre}/moe/b2"), db2);
+        accumulate(grads, &bk.moe_w1, dw1);
+        accumulate(grads, &bk.moe_b1, db1);
+        accumulate(grads, &bk.moe_w2, dw2);
+        accumulate(grads, &bk.moe_b2, db2);
 
         // Router: probs = softmax(x @ wg) rows.
         let dlogits = softmax_rows_bwd(&sc.probs, &dprobs);
-        accumulate(grads, &format!("{pre}/moe/wg"), matmul_tn(&sc.x, &dlogits));
+        accumulate(grads, &bk.wg, matmul_tn(&sc.x, &dlogits));
         dx.add_inplace(&matmul_nt(&dlogits, wg));
         dx
     }

@@ -148,12 +148,16 @@ impl Server {
     /// `threadpool::parallel_depth`): padded batches > 1 parallelize over
     /// items inside the backend, single-item batches hand the threads to
     /// the GEMM kernel instead — the budget rule prevents the two levels
-    /// from oversubscribing each other. For single-item batches the
-    /// executor thread's own workspace persists across requests, so that
-    /// steady state allocates nothing per op; batch > 1 workers are
-    /// currently transient (`thread::scope`), so their scratch pools
-    /// live only for one batch — see the ROADMAP item on a persistent
-    /// worker pool.
+    /// from oversubscribing each other. Scratch pooling is resident at
+    /// every batch size: the executor thread's own workspace persists
+    /// across requests, and batch > 1 items run on the persistent worker
+    /// pool whose per-worker workspaces survive across batches and
+    /// requests too — steady state performs zero thread spawns and zero
+    /// workspace allocations (see `rust/tests/pool_steady_state.rs`).
+    /// The pool is prewarmed below so the one-time worker *spawn* cost
+    /// never lands on a request; the first few batches still warm each
+    /// worker's buffer pool (workspace warmup needs model-shaped work,
+    /// which the server only has once requests arrive).
     pub fn run(
         &self,
         backend: &mut dyn Backend,
@@ -166,6 +170,7 @@ impl Server {
             "serve executor must own the parallelism budget (don't call \
              Server::run from inside a parallel region)"
         );
+        crate::threadpool::prewarm();
         let mut served = 0usize;
         // Reusable padded input buffer: zero allocations in the hot loop
         // beyond what the backend itself does.

@@ -17,6 +17,7 @@
 //! * L2-norm eps = 1e-6.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::threadpool::parallel_for;
 use crate::util::Rng;
@@ -209,17 +210,41 @@ impl Tensor {
 // Workspace — reusable scratch arena for the hot path.
 // ---------------------------------------------------------------------------
 
-/// A free-list of reusable f32 buffers. The steady-state forward path
-/// takes every transient buffer (GEMM pack panels, attention head slices,
-/// softmax column stats, MoE slot buffers) from a workspace and gives it
-/// back, so after warmup no per-op heap allocation happens.
+/// Process-wide count of fresh workspace buffer allocations (any pool,
+/// any thread). Steady-state hot paths must stop increasing this after
+/// warmup — asserted across batch>1 forwards by
+/// `rust/tests/pool_steady_state.rs` (the per-instance
+/// [`Workspace::fresh_allocs`] covers single-workspace tests).
+static TOTAL_FRESH_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// Fresh workspace allocations performed so far, process-wide.
+pub fn total_fresh_allocs() -> usize {
+    TOTAL_FRESH_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// One kept routing decision of a sparse router:
+/// `(token, expert, gate, position-in-expert-buffer)`. Pooled via
+/// [`Workspace::take_route`] so the routers' decision step stops
+/// allocating per layer call.
+pub type RouteEntry = (usize, usize, f32, usize);
+
+/// A free-list of reusable buffers. The steady-state forward path takes
+/// every transient buffer — GEMM pack panels, attention head slices,
+/// softmax column stats, MoE slot buffers, and the sparse routers'
+/// decision-step scratch (top-k choice tables, sort orders, fill counts,
+/// kept lists) — from a workspace and gives it back, so after warmup no
+/// per-op heap allocation happens.
 ///
 /// Not thread-safe by design: one workspace per thread. Use
 /// [`with_workspace`] for the calling thread's own arena, or thread an
 /// explicit `&mut Workspace` through a call chain (the inference fast
-/// path does the latter so allocation behavior is testable).
+/// path does the latter so allocation behavior is testable). Persistent
+/// pool workers (`crate::threadpool`) keep their thread-local arena alive
+/// across batches and serve requests, so both routes are resident.
 pub struct Workspace {
     free: Vec<Vec<f32>>,
+    free_idx: Vec<Vec<usize>>,
+    free_route: Vec<Vec<RouteEntry>>,
     allocs: usize,
 }
 
@@ -231,7 +256,46 @@ impl Default for Workspace {
 
 impl Workspace {
     pub fn new() -> Self {
-        Self { free: Vec::new(), allocs: 0 }
+        Self {
+            free: Vec::new(),
+            free_idx: Vec::new(),
+            free_route: Vec::new(),
+            allocs: 0,
+        }
+    }
+
+    fn count_fresh(&mut self) {
+        self.allocs += 1;
+        TOTAL_FRESH_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Best-fit take from one free list: the smallest pooled buffer whose
+    /// capacity covers `n` (so big panels don't get burned on tiny
+    /// column-stat vectors), resized to length `n`. `None` means the
+    /// caller must allocate fresh. One implementation serves the f32 and
+    /// index pools so the policy cannot diverge.
+    fn best_fit<T: Clone + Default>(pool: &mut Vec<Vec<T>>, n: usize)
+        -> Option<Vec<T>> {
+        let mut best: Option<usize> = None;
+        for (i, b) in pool.iter().enumerate() {
+            if b.capacity() >= n
+                && best.map_or(true, |j: usize| {
+                    b.capacity() < pool[j].capacity()
+                })
+            {
+                best = Some(i);
+            }
+        }
+        best.map(|i| {
+            let mut b = pool.swap_remove(i);
+            if b.len() < n {
+                // Within capacity: never reallocates.
+                b.resize(n, T::default());
+            } else {
+                b.truncate(n);
+            }
+            b
+        })
     }
 
     /// Number of fresh heap allocations this workspace has performed.
@@ -255,30 +319,68 @@ impl Workspace {
     /// buffer per op; use [`Workspace::take_zeroed`] when the caller
     /// accumulates into the buffer.
     pub fn take(&mut self, n: usize) -> Vec<f32> {
+        match Self::best_fit(&mut self.free, n) {
+            Some(b) => b,
+            None => {
+                self.count_fresh();
+                vec![0.0; n]
+            }
+        }
+    }
+
+    /// Take an index buffer of length `n` with unspecified contents (the
+    /// routers overwrite every slot they read). Same best-fit reuse
+    /// discipline as [`Workspace::take`].
+    pub fn take_idx(&mut self, n: usize) -> Vec<usize> {
+        match Self::best_fit(&mut self.free_idx, n) {
+            Some(b) => b,
+            None => {
+                self.count_fresh();
+                vec![0; n]
+            }
+        }
+    }
+
+    /// Return an index buffer to the pool.
+    pub fn give_idx(&mut self, buf: Vec<usize>) {
+        if buf.capacity() > 0 {
+            self.free_idx.push(buf);
+        }
+    }
+
+    /// Take an empty routing-decision list (capacity reused across layer
+    /// calls; callers push their kept `(token, expert, gate, pos)`
+    /// entries into it).
+    pub fn take_route(&mut self) -> Vec<RouteEntry> {
         let mut best: Option<usize> = None;
-        for (i, b) in self.free.iter().enumerate() {
-            if b.capacity() >= n
-                && best.map_or(true, |j: usize| {
-                    b.capacity() < self.free[j].capacity()
-                })
-            {
+        for (i, b) in self.free_route.iter().enumerate() {
+            // Largest capacity first: kept lists all have similar sizes,
+            // so handing out the biggest minimizes regrowth.
+            if best.map_or(true, |j: usize| {
+                b.capacity() > self.free_route[j].capacity()
+            }) {
                 best = Some(i);
             }
         }
         match best {
             Some(i) => {
-                let mut b = self.free.swap_remove(i);
-                if b.len() < n {
-                    b.resize(n, 0.0);
-                } else {
-                    b.truncate(n);
-                }
+                let mut b = self.free_route.swap_remove(i);
+                b.clear();
                 b
             }
             None => {
-                self.allocs += 1;
-                vec![0.0; n]
+                self.count_fresh();
+                Vec::new()
             }
+        }
+    }
+
+    /// Return a routing-decision list to the pool. Capacity-0 lists are
+    /// dropped (pooling them would fake a hit while the caller's pushes
+    /// allocate anyway — same guard as [`Workspace::give`]).
+    pub fn give_route(&mut self, buf: Vec<RouteEntry>) {
+        if buf.capacity() > 0 {
+            self.free_route.push(buf);
         }
     }
 
@@ -314,6 +416,8 @@ impl Workspace {
     fn absorb(&mut self, mut other: Workspace) {
         self.allocs += other.allocs;
         self.free.append(&mut other.free);
+        self.free_idx.append(&mut other.free_idx);
+        self.free_route.append(&mut other.free_route);
     }
 }
 
@@ -633,7 +737,9 @@ fn gemm_driver(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
         gemm_rows(a, k, &bp, k, n, 0..m, out, ep);
     } else {
         // MR-aligned row chunks; each thread owns disjoint output rows.
-        let threads = crate::threadpool::default_threads();
+        // pool_threads() is the pool's cached size (no env read per GEMM,
+        // and always consistent with the threads that will actually run).
+        let threads = crate::threadpool::pool_threads();
         let rows_per = div_up(div_up(m, threads * 4), MR) * MR;
         let nchunks = div_up(m, rows_per);
         let out_ptr = SendPtr(out.as_mut_ptr());
@@ -1193,6 +1299,44 @@ mod tests {
         ws.give(bz);
         let _b3 = ws.take(200); // too big for the pooled one: fresh alloc
         assert_eq!(ws.fresh_allocs(), 2);
+    }
+
+    #[test]
+    fn workspace_idx_and_route_pools_reuse() {
+        let mut ws = Workspace::new();
+        let mut idx = ws.take_idx(64);
+        assert_eq!(idx.len(), 64);
+        idx[0] = 7; // dirty
+        ws.give_idx(idx);
+        let base = ws.fresh_allocs();
+        let i2 = ws.take_idx(32); // fits the pooled capacity
+        assert_eq!(i2.len(), 32);
+        assert_eq!(ws.fresh_allocs(), base, "idx pool must reuse");
+        ws.give_idx(i2);
+
+        let mut kept = ws.take_route();
+        for i in 0..100 {
+            kept.push((i, 0, 0.5, i));
+        }
+        ws.give_route(kept);
+        let base = ws.fresh_allocs();
+        let k2 = ws.take_route();
+        assert!(k2.is_empty(), "pooled route lists come back cleared");
+        assert!(k2.capacity() >= 100, "capacity survives the round-trip");
+        assert_eq!(ws.fresh_allocs(), base, "route pool must reuse");
+        ws.give_route(k2);
+    }
+
+    #[test]
+    fn global_fresh_counter_tracks_fresh_allocs() {
+        // Monotone and incremented by fresh takes (exact totals are
+        // asserted only in the single-test pool_steady_state binary —
+        // other tests in this binary allocate concurrently).
+        let before = total_fresh_allocs();
+        let mut ws = Workspace::new();
+        let b = ws.take(10);
+        ws.give(b);
+        assert!(total_fresh_allocs() > before);
     }
 
     #[test]

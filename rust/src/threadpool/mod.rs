@@ -1,33 +1,71 @@
-//! Minimal scoped thread pool (no rayon offline).
+//! Persistent worker pool (no rayon offline).
 //!
-//! Two entry points cover every parallel need in the repo:
-//! * [`parallel_for`] — split `0..n` into chunks and run a closure per
-//!   chunk on a transient scope (used by the tensor matmul hot path and
-//!   the data generator);
-//! * [`ThreadPool`] — a long-lived pool with a job queue (used by the
-//!   inference server's worker pool).
+//! One long-lived, work-distributing pool backs every parallel region in
+//! the repo. Workers are spawned exactly once (first use), respect
+//! `SOFTMOE_THREADS`, optionally pin to cores (`SOFTMOE_PIN_CORES=1`),
+//! and each owns a resident [`crate::tensor::Workspace`] (its thread-local
+//! arena), so per-item scratch buffers survive across batch items and
+//! across serve requests — the zero-steady-state-allocation guarantee
+//! extends from batch=1 to batch>1 (asserted in
+//! `rust/tests/pool_steady_state.rs`).
+//!
+//! Entry points:
+//! * [`parallel_for`] / [`parallel_map`] — run `f(i)` over `0..n` with
+//!   chunk ranges handed out through a lock-light atomic cursor;
+//! * [`parallel_for_ws`] / [`parallel_map_ws`] — same, but each executing
+//!   thread also hands `f` its resident workspace;
+//! * [`run_on_each_worker`] — run a closure exactly once on every pool
+//!   worker (deterministic workspace warmup; used by the steady-state
+//!   tests).
+//!
+//! # Scheduling
+//!
+//! A parallel region publishes one [`Task`] (closure pointer + atomic
+//! cursor + chunk size) into a shared slot and wakes the workers; workers
+//! and the submitting thread then race the cursor for chunk ranges — the
+//! only cross-thread traffic inside the region is one `fetch_add` per
+//! chunk. The submitter participates and blocks until every worker has
+//! acknowledged the task, so borrowing stack data in `f` stays sound.
+//! Only one region runs at a time (a second root-level `parallel_for`
+//! that arrives while the pool is busy degrades to serial on its caller,
+//! which is exactly what the parallelism budget would dictate anyway).
 //!
 //! # Parallelism budget
 //!
 //! Parallel regions must not fight each other: when `Vit::forward`
-//! parallelizes over batch items, the per-item GEMMs must NOT also spawn
-//! threads (oversubscription ruins both). The rule is **one level of
+//! parallelizes over batch items, the per-item GEMMs must NOT also go
+//! parallel (oversubscription ruins both). The rule is **one level of
 //! parallelism**: either the outer loop gets the threads or the inner
 //! GEMM does, never both. This is enforced with a thread-local depth
 //! counter — [`parallel_for`] runs serially whenever the calling thread
-//! is already inside a parallel region (see [`parallel_depth`]). Callers
-//! therefore never need to coordinate manually: batch loops parallelize
-//! and their inner matmuls degrade to the serial kernel automatically,
-//! while a batch of one leaves the GEMM free to use every core.
+//! is already inside a parallel region (see [`parallel_depth`]). Pool
+//! workers live at depth 1 permanently; the submitter raises its depth
+//! for the duration of the region (restored panic-safely). Callers never
+//! coordinate manually: batch loops parallelize and their inner matmuls
+//! degrade to the serial kernel automatically, while a batch of one
+//! leaves the GEMM free to use every core.
+//!
+//! # Panics
+//!
+//! A panic in `f` on a worker is contained (the worker survives and the
+//! pool stays usable); after all workers finish, the submitting call
+//! panics with a summary message. A panic in the submitter's own chunk
+//! propagates with its original payload — in both cases the submitter
+//! first waits for every worker to leave the region, so no worker ever
+//! touches a dead stack frame, and the depth counter is restored on
+//! unwind.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 use std::thread;
 
-/// Number of worker threads to use: respects `SOFTMOE_THREADS`, defaults
-/// to available parallelism capped at 16.
+use crate::tensor::{with_workspace, Workspace};
+
+/// Number of threads the pool uses (workers + the submitting thread):
+/// respects `SOFTMOE_THREADS`, defaults to available parallelism capped
+/// at 16. Read once at pool creation; also used by the GEMM row-chunker.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("SOFTMOE_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
@@ -43,7 +81,7 @@ thread_local! {
 }
 
 /// Current parallel-region nesting depth on the calling thread (0 at the
-/// root). Worker closures run by [`parallel_for`] observe depth >= 1.
+/// root). Closures run on pool workers observe depth >= 1.
 pub fn parallel_depth() -> usize {
     PAR_DEPTH.with(|c| c.get())
 }
@@ -54,6 +92,26 @@ pub fn parallelism_available() -> bool {
     parallel_depth() == 0
 }
 
+/// RAII bump of the thread-local depth; restored on drop (unwind-safe).
+struct DepthGuard(usize);
+
+impl DepthGuard {
+    fn enter() -> Self {
+        let prev = PAR_DEPTH.with(|c| {
+            let p = c.get();
+            c.set(p + 1);
+            p
+        });
+        DepthGuard(prev)
+    }
+}
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        PAR_DEPTH.with(|c| c.set(self.0));
+    }
+}
+
 /// Run `f` with inner parallelism disabled on the calling thread: any
 /// `parallel_for` inside `f` runs serially. Used by callers that manage
 /// their own thread budget (e.g. the serve executor pinning the model to
@@ -62,61 +120,370 @@ pub fn parallelism_available() -> bool {
 /// Panic-safe: the previous depth is restored on unwind too, so a
 /// caught panic inside `f` cannot permanently serialize the thread.
 pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
-    struct DepthGuard(usize);
-    impl Drop for DepthGuard {
-        fn drop(&mut self) {
-            PAR_DEPTH.with(|c| c.set(self.0));
-        }
-    }
-    let prev = PAR_DEPTH.with(|c| {
-        let p = c.get();
-        c.set(p + 1);
-        p
-    });
-    let _guard = DepthGuard(prev);
+    let _guard = DepthGuard::enter();
     f()
 }
 
-/// Run `f(i)` for every `i` in `0..n`, work-stealing via an atomic cursor.
-/// `f` must be `Sync`; chunking keeps the atomic traffic negligible.
+// ---------------------------------------------------------------------------
+// The persistent pool
+// ---------------------------------------------------------------------------
+
+/// Total worker threads ever spawned by the persistent pool. Steady-state
+/// code paths must stop increasing this after first use — asserted by
+/// `rust/tests/pool_steady_state.rs`.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker-thread spawn counter (test hook for zero-spawn assertions).
+pub fn spawn_count() -> usize {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Lock that recovers from poisoning: a panicking submitter must not
+/// permanently serialize the pool (the protected state stays consistent —
+/// it is only a job slot / a submission token).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One published parallel region. Lives on the submitter's stack; valid
+/// until `remaining` reaches 0 (the submitter blocks on that before the
+/// frame can die, even when unwinding).
+struct Task {
+    /// Lifetime-erased closure; soundness per the struct doc above.
+    func: &'static (dyn Fn(usize) + Sync),
+    cursor: AtomicUsize,
+    n: usize,
+    chunk: usize,
+    /// `run_on_each_worker` mode: every worker takes exactly one index.
+    per_worker: bool,
+    /// Workers that have not yet finished with this task.
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+impl Task {
+    /// Execute this task's share of work on the calling thread.
+    fn run(&self) {
+        if self.per_worker {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i < self.n {
+                (self.func)(i);
+            }
+            return;
+        }
+        loop {
+            let start = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.n {
+                break;
+            }
+            for i in start..(start + self.chunk).min(self.n) {
+                (self.func)(i);
+            }
+        }
+    }
+}
+
+/// Raw task pointer blessed for the shared slot (validity is guaranteed
+/// by the submitter's completion wait).
+#[derive(Clone, Copy)]
+struct TaskPtr(*const Task);
+unsafe impl Send for TaskPtr {}
+
+struct SlotState {
+    /// Bumped once per published task; workers run each seq exactly once.
+    seq: u64,
+    task: Option<TaskPtr>,
+}
+
+struct PoolShared {
+    slot: Mutex<SlotState>,
+    /// Workers wait here for a new seq.
+    work_cv: Condvar,
+    /// The submitter waits here for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    /// Spawned worker threads (the submitter is thread `workers + 1`).
+    workers: usize,
+    /// Serializes regions; `parallel_for` only try-locks this (a busy
+    /// pool means another root region owns the threads — run serial).
+    submit: Mutex<()>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let threads = default_threads();
+        let workers = threads.saturating_sub(1);
+        let shared = Arc::new(PoolShared {
+            slot: Mutex::new(SlotState { seq: 0, task: None }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let pin = std::env::var("SOFTMOE_PIN_CORES")
+            .map(|v| !v.is_empty() && v != "0" && v != "false")
+            .unwrap_or(false);
+        let ncpu =
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            SPAWNED.fetch_add(1, Ordering::SeqCst);
+            thread::Builder::new()
+                .name(format!("softmoe-worker-{w}"))
+                .spawn(move || {
+                    // Core 0 is left to the submitter/serve executor.
+                    if pin && w + 1 < ncpu {
+                        pin_to_core(w + 1);
+                    }
+                    worker_main(&sh);
+                })
+                .expect("failed to spawn pool worker");
+        }
+        Pool { shared, workers, submit: Mutex::new(()) }
+    })
+}
+
+/// Spawn the pool's workers now (idempotent). Call before a latency-
+/// sensitive section (the serve executor does) so the one-time spawn cost
+/// never lands on a request.
+pub fn prewarm() {
+    let _ = pool();
+}
+
+/// Threads a root-level parallel region will use (workers + submitter).
+pub fn pool_threads() -> usize {
+    pool().workers + 1
+}
+
+fn worker_main(shared: &PoolShared) {
+    // Workers permanently live inside a parallel region: nested
+    // parallel_for calls from a job degrade to serial on the worker.
+    PAR_DEPTH.with(|c| c.set(1));
+    let mut last_seq = 0u64;
+    loop {
+        let task_ptr = {
+            let mut slot = lock(&shared.slot);
+            loop {
+                if slot.seq != last_seq {
+                    if let Some(tp) = slot.task {
+                        last_seq = slot.seq;
+                        break tp;
+                    }
+                    // Slot already cleared: skip this seq entirely.
+                    last_seq = slot.seq;
+                }
+                slot = match shared.work_cv.wait(slot) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        };
+        // Safety: the submitter keeps the Task alive until `remaining`
+        // hits 0, which happens strictly after this worker's ack below.
+        let task = unsafe { &*task_ptr.0 };
+        if panic::catch_unwind(AssertUnwindSafe(|| task.run())).is_err() {
+            task.panicked.store(true, Ordering::SeqCst);
+        }
+        if task.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last acknowledgement: wake the submitter. Taking the slot
+            // lock orders this notify against the submitter's predicate
+            // check, so the wakeup cannot be lost.
+            let _slot = lock(&shared.slot);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Waits (on drop) until every worker has acknowledged `task`, then
+/// clears the slot. A drop guard so the wait also happens when the
+/// submitter's own chunk execution unwinds.
+struct CompletionGuard<'a> {
+    shared: &'a PoolShared,
+    task: &'a Task,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut slot = lock(&self.shared.slot);
+        while self.task.remaining.load(Ordering::Acquire) != 0 {
+            slot = match self.shared.done_cv.wait(slot) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        slot.task = None;
+    }
+}
+
+/// Publish `task` and run the submitter's share; returns after every
+/// worker acknowledged. Caller must hold the submit lock.
+fn run_region(p: &'static Pool, task: &Task, submitter_participates: bool) {
+    debug_assert!(task.remaining.load(Ordering::SeqCst) == p.workers);
+    // Lifetime laundering happened in the caller; re-assert the contract:
+    // `task` outlives the region because CompletionGuard blocks below.
+    {
+        let mut slot = lock(&p.shared.slot);
+        slot.seq += 1;
+        slot.task = Some(TaskPtr(task));
+        p.shared.work_cv.notify_all();
+    }
+    let _done = CompletionGuard { shared: &p.shared, task };
+    if submitter_participates {
+        let _depth = DepthGuard::enter();
+        task.run();
+    }
+    // _done drops here: waits for all workers, then clears the slot.
+}
+
+/// Run `f(i)` for every `i` in `0..n` on the persistent pool, chunk
+/// ranges distributed via an atomic cursor. `f` must be `Sync`.
 ///
 /// Respects the parallelism budget: if the calling thread is already
 /// inside a parallel region, the loop runs serially on the caller (the
-/// outer region owns the threads).
+/// outer region owns the threads). Per-index results are identical
+/// regardless of thread count (each index runs exactly once).
 pub fn parallel_for<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let nested = parallel_depth() > 0;
-    let threads = if nested { 1 } else { default_threads().min(n.max(1)) };
-    if threads <= 1 || n <= 1 {
+    if n == 0 {
+        return;
+    }
+    if parallel_depth() > 0 || n == 1 {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let cursor = AtomicUsize::new(0);
+    let p = pool();
+    if p.workers == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    // One region at a time. A busy pool means another root region is
+    // running; its items already saturate the cores, so serial here is
+    // the budget-correct degradation (and avoids any deadlock shape).
+    let _submit = match p.submit.try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(g)) => g.into_inner(),
+        Err(TryLockError::WouldBlock) => {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+    };
+    let threads = (p.workers + 1).min(n);
     // Chunk size balances scheduling overhead and load balance.
     let chunk = (n / (threads * 4)).max(1);
-    thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                // Workers are inside a parallel region: inner
-                // parallel_for calls must degrade to serial.
-                PAR_DEPTH.with(|c| c.set(1));
-                loop {
-                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    for i in start..(start + chunk).min(n) {
-                        f(i);
-                    }
-                }
-            });
-        }
-    });
+    let f_obj: &(dyn Fn(usize) + Sync) = &f;
+    // Safety: the Task (and the closure it points to) outlive the region
+    // because run_region's CompletionGuard blocks until every worker has
+    // acknowledged, even on unwind.
+    let f_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute(f_obj) };
+    let task = Task {
+        func: f_static,
+        cursor: AtomicUsize::new(0),
+        n,
+        chunk,
+        per_worker: false,
+        remaining: AtomicUsize::new(p.workers),
+        panicked: AtomicBool::new(false),
+    };
+    run_region(p, &task, true);
+    if task.panicked.load(Ordering::SeqCst) {
+        panic!("parallel_for: closure panicked on a pool worker \
+                (worker survived; payload dropped)");
+    }
 }
+
+/// [`parallel_for`] where each executing thread also hands `f` its
+/// resident per-thread [`Workspace`] (the thread-local arena — pool
+/// workers keep theirs alive across batches and serve requests, so
+/// steady-state items allocate nothing).
+pub fn parallel_for_ws<F>(n: usize, f: F)
+where
+    F: Fn(usize, &mut Workspace) + Sync,
+{
+    parallel_for(n, |i| with_workspace(|ws| f(i, ws)));
+}
+
+/// Run `f` exactly once on every pool worker thread (not on the caller).
+/// The argument is a distinct value in `0..workers` handed out in wake
+/// order — NOT a stable worker identity; do not index per-worker state
+/// with it. Blocks until all workers ran `f`. Used to warm every
+/// worker's resident workspace deterministically; no-op when the pool has
+/// no workers (single-thread configs).
+pub fn run_on_each_worker<F>(f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let p = pool();
+    if p.workers == 0 {
+        return;
+    }
+    assert!(
+        parallelism_available(),
+        "run_on_each_worker must be called from the root of the budget"
+    );
+    let _submit = lock(&p.submit);
+    let f_obj: &(dyn Fn(usize) + Sync) = &f;
+    // Safety: as in parallel_for — the region completes before return.
+    let f_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute(f_obj) };
+    let task = Task {
+        func: f_static,
+        cursor: AtomicUsize::new(0),
+        n: p.workers,
+        chunk: 1,
+        per_worker: true,
+        remaining: AtomicUsize::new(p.workers),
+        panicked: AtomicBool::new(false),
+    };
+    run_region(p, &task, false);
+    if task.panicked.load(Ordering::SeqCst) {
+        panic!("run_on_each_worker: closure panicked on a pool worker");
+    }
+}
+
+/// Best-effort pin of the calling thread to `core` (Linux; no-op
+/// elsewhere or on failure). Gated behind `SOFTMOE_PIN_CORES=1`.
+#[cfg(target_os = "linux")]
+fn pin_to_core(core: usize) {
+    const SETSIZE: usize = 1024;
+    const WORDS: usize = SETSIZE / 64;
+    if core >= SETSIZE {
+        return;
+    }
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; WORDS],
+    }
+    extern "C" {
+        fn sched_setaffinity(
+            pid: i32,
+            cpusetsize: usize,
+            mask: *const CpuSet,
+        ) -> i32;
+    }
+    let mut set = CpuSet { bits: [0; WORDS] };
+    set.bits[core / 64] |= 1u64 << (core % 64);
+    let _ = unsafe {
+        sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set)
+    };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_core(_core: usize) {}
 
 /// Typed `SendPtr`: a raw pointer blessed for cross-thread use when the
 /// caller guarantees disjoint access per index (same pattern the tensor
@@ -136,7 +503,7 @@ impl<T> SendPtrT<T> {
 /// Map `f` over `0..n` in parallel collecting results in order.
 ///
 /// Results are written through disjoint raw-pointer slots (each index is
-/// written by exactly one worker) — no per-slot `Mutex`.
+/// written by exactly one thread) — no per-slot `Mutex`.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send + Default,
@@ -151,67 +518,28 @@ where
     out
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// A long-lived pool with an MPMC job queue. Workers exit when the pool is
-/// dropped. Panics in jobs are contained per-worker.
-pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<thread::JoinHandle<()>>,
+/// [`parallel_map`] with the resident per-thread workspace passed to `f`
+/// (the batched-inference hot path: `VitModel::forward`).
+pub fn parallel_map_ws<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default,
+    F: Fn(usize, &mut Workspace) -> T + Sync,
+{
+    let mut out: Vec<T> = (0..n).map(|_| T::default()).collect();
+    let ptr = SendPtrT(out.as_mut_ptr());
+    parallel_for_ws(n, |i, ws| unsafe {
+        *ptr.at(i) = f(i, ws);
+    });
+    out
 }
 
-impl ThreadPool {
-    pub fn new(threads: usize) -> Self {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..threads.max(1))
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break, // channel closed
-                    }
-                })
-            })
-            .collect();
-        Self { tx: Some(tx), handles }
-    }
-
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("workers gone");
-    }
-
-    pub fn len(&self) -> usize {
-        self.handles.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.handles.is_empty()
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
+// NOTE: the old mpsc job-queue `ThreadPool` was removed in the persistent-
+// pool rewrite — it had no callers anywhere in the crate; the data-parallel
+// entry points above cover every parallel need in the repo.
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn parallel_for_covers_all() {
@@ -241,7 +569,7 @@ mod tests {
 
     #[test]
     fn parallel_map_non_clone_values() {
-        // The SendPtr rewrite must not require Clone (only Default + Send).
+        // The SendPtr design must not require Clone (only Default + Send).
         let out = parallel_map(10, |i| vec![i; i]);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(v.len(), i);
@@ -249,13 +577,30 @@ mod tests {
     }
 
     #[test]
+    fn parallel_map_ws_hands_out_workspaces() {
+        let out = parallel_map_ws(64, |i, ws| {
+            let buf = ws.take(32);
+            let r = buf.len() + i;
+            ws.give(buf);
+            r
+        });
+        assert_eq!(out, (0..64).map(|i| 32 + i).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn nested_parallel_runs_serial_inner() {
-        // Inside a parallel region the inner loop must observe depth >= 1
-        // and therefore run on the calling worker thread.
+        // Nested parallel_for must cover every index exactly once and
+        // leave the root budget restored. (When the outer region really
+        // runs on the pool, its threads are at depth >= 1 and the inner
+        // loops degrade to serial; under cross-test pool contention the
+        // outer may itself degrade to serial at the root, which is the
+        // budget-correct behavior — so the assertion here is the
+        // functional contract, not the thread placement. Worker depth is
+        // asserted deterministically in
+        // `run_on_each_worker_visits_every_worker_once`.)
         let outer_hits = AtomicUsize::new(0);
         let inner_hits = AtomicUsize::new(0);
         parallel_for(8, |_| {
-            assert!(parallel_depth() >= 1, "worker must be inside a region");
             parallel_for(16, |_| {
                 inner_hits.fetch_add(1, Ordering::Relaxed);
             });
@@ -283,16 +628,63 @@ mod tests {
     }
 
     #[test]
-    fn pool_runs_jobs() {
-        let pool = ThreadPool::new(4);
-        let sum = Arc::new(AtomicU64::new(0));
-        for i in 0..100u64 {
-            let sum = Arc::clone(&sum);
-            pool.execute(move || {
-                sum.fetch_add(i, Ordering::Relaxed);
+    fn depth_restored_and_pool_alive_after_panic() {
+        // A closure panicking on whatever thread runs it must (a) surface
+        // as a panic to the submitter, (b) restore the caller's depth,
+        // (c) leave the pool usable — workers survive contained panics.
+        let result = panic::catch_unwind(|| {
+            parallel_for(64, |i| {
+                if i % 3 == 0 {
+                    panic!("boom");
+                }
             });
-        }
-        drop(pool); // joins workers
-        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        });
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        assert_eq!(parallel_depth(), 0, "depth must be restored");
+        assert!(parallelism_available());
+        let hits = AtomicUsize::new(0);
+        parallel_for(100, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100, "pool must survive");
     }
+
+    #[test]
+    fn run_on_each_worker_visits_every_worker_once() {
+        prewarm();
+        let hits = AtomicUsize::new(0);
+        run_on_each_worker(|_w| {
+            assert!(parallel_depth() >= 1, "runs on pool workers");
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), pool_threads() - 1);
+    }
+
+    #[test]
+    fn concurrent_root_regions_degrade_but_complete() {
+        // Two threads racing root-level parallel_fors: one may own the
+        // pool, the other falls back to serial — both must cover all
+        // indices.
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        thread::scope(|s| {
+            s.spawn(|| {
+                parallel_for(500, |_| {
+                    a.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+            s.spawn(|| {
+                parallel_for(500, |_| {
+                    b.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 500);
+        assert_eq!(b.load(Ordering::Relaxed), 500);
+    }
+
+    // NOTE: workspace-residency and zero-spawn/zero-alloc steady-state
+    // assertions live in `rust/tests/pool_steady_state.rs` (their own
+    // test binary), because they read process-global counters that
+    // concurrent tests in this binary would perturb.
 }

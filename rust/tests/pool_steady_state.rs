@@ -1,0 +1,112 @@
+//! Steady-state guarantees of the persistent worker pool: repeated
+//! batch>1 forwards must spawn **zero** new threads and perform **zero**
+//! fresh workspace heap allocations once warm — the acceptance criterion
+//! of the pool PR, extending the batch=1 zero-alloc guarantee
+//! (`forward_infer_steady_state_no_allocs`) to batched inference.
+//!
+//! This lives in its own test binary, with a single `#[test]`, because it
+//! asserts on process-global counters (`threadpool::spawn_count`,
+//! `tensor::total_fresh_allocs`) that concurrently running tests would
+//! perturb; cargo runs test binaries one at a time, so here the counters
+//! move only for the work below.
+
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::nn::VitModel;
+use softmoe::tensor::{total_fresh_allocs, with_workspace, Tensor};
+use softmoe::threadpool;
+use softmoe::util::Rng;
+
+fn tiny_cfg(moe: MoeType) -> ModelConfig {
+    ModelConfig {
+        image_size: 8,
+        patch_size: 4,
+        channels: 3,
+        dim: 16,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 24,
+        num_classes: 5,
+        moe_type: moe,
+        moe_layers: if moe == MoeType::Dense { vec![] } else { vec![1] },
+        num_experts: 3,
+        slots_per_expert: 2,
+        expert_hidden: 24,
+        ..ModelConfig::default()
+    }
+}
+
+fn rand_images(b: usize, cfg: &ModelConfig, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = b * cfg.image_size * cfg.image_size * cfg.channels;
+    Tensor::from_vec(
+        &[b, cfg.image_size, cfg.image_size, cfg.channels],
+        (0..n).map(|_| rng.uniform()).collect(),
+    )
+}
+
+#[test]
+fn batched_forward_steady_state_zero_spawns_zero_ws_allocs() {
+    threadpool::prewarm();
+    let batch = 8;
+    // Cover the Soft hot path and a sparse router (whose decision-step
+    // index buffers are pooled too).
+    for moe in [MoeType::Soft, MoeType::TokensChoice] {
+        let cfg = tiny_cfg(moe);
+        let model = VitModel::new(cfg.clone());
+        let p = model.init(1);
+        let imgs = rand_images(batch, &cfg, 2);
+
+        // Deterministic warmup: one full item forward on every pool
+        // worker's resident arena, and on this (submitter) thread — so
+        // every thread that can execute a batch item has a warm pool.
+        threadpool::run_on_each_worker(|_w| {
+            with_workspace(|ws| {
+                let _ = model.forward_item_infer(&p, &imgs, 0, ws);
+            });
+        });
+        with_workspace(|ws| {
+            let _ = model.forward_item_infer(&p, &imgs, 0, ws);
+        });
+        for _ in 0..3 {
+            let _ = model.forward(&p, &imgs);
+        }
+
+        let spawns = threadpool::spawn_count();
+        let allocs = total_fresh_allocs();
+        for _ in 0..5 {
+            let _ = model.forward(&p, &imgs);
+        }
+        assert_eq!(
+            threadpool::spawn_count(),
+            spawns,
+            "{moe:?}: steady-state batched forward spawned threads"
+        );
+        assert_eq!(
+            total_fresh_allocs(),
+            allocs,
+            "{moe:?}: steady-state batched forward allocated workspace \
+             buffers"
+        );
+    }
+
+    // And worker workspaces really are resident across regions: a warm
+    // take of an odd, large size must be served from the pool.
+    threadpool::run_on_each_worker(|_w| {
+        with_workspace(|ws| {
+            let b = ws.take(123_457);
+            ws.give(b);
+        });
+    });
+    let allocs = total_fresh_allocs();
+    threadpool::run_on_each_worker(|_w| {
+        with_workspace(|ws| {
+            let b = ws.take(123_457);
+            ws.give(b);
+        });
+    });
+    assert_eq!(
+        total_fresh_allocs(),
+        allocs,
+        "warm worker arenas must serve take() from their resident pool"
+    );
+}

@@ -1,16 +1,19 @@
 //! GEMM microbenchmark: GFLOP/s at the exact shapes the mu/ti/s presets
 //! hit on the native hot path (patch embed, attention projections and
-//! scores, MLP/expert layers, Soft MoE dispatch, backward dW).
+//! scores, MLP/expert layers, Soft MoE dispatch, backward dW), plus a
+//! per-kernel sweep (the dispatched ISA against the scalar fallback)
+//! and the grouped expert GEMM against the per-expert loop it replaced.
 //!
-//! Emits `reports/BENCH_GEMM.json` (machine-readable, with GFLOP/s per
-//! shape) so the perf trajectory can be tracked across PRs, plus the
-//! usual CSV.
+//! Emits `reports/BENCH_GEMM.json` (machine-readable, with the
+//! dispatched kernel/ISA, GFLOP/s per shape, and per-kernel GFLOP/s) so
+//! the perf trajectory can be tracked across PRs, plus the usual CSV.
 
 use softmoe::bench::{black_box, Bench};
 use softmoe::config::{ModelConfig, MoeType};
 use softmoe::json::Value;
 use softmoe::tensor::{
-    matmul_bias_gelu_into, matmul_into, matmul_nt_into, matmul_tn_into,
+    kernel, matmul_bias_gelu_into, matmul_bias_gelu_slice_into,
+    matmul_grouped_into, matmul_into, matmul_nt_into, matmul_tn_into,
     Tensor, Workspace,
 };
 use softmoe::util::Rng;
@@ -128,11 +131,88 @@ fn main() {
         rows.push(o);
     }
 
+    // Per-kernel sweep: one representative dense shape through every
+    // kernel available on this host, so the scalar-vs-SIMD ratio is on
+    // record next to the dispatched default.
+    println!("\n== per-kernel GFLOP/s (256x256x256) ==");
+    let mut kernel_rows: Vec<Value> = Vec::new();
+    {
+        let (m, k, n) = (256usize, 256usize, 256usize);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        for kern in kernel::available() {
+            let mean = kernel::with_kernel(kern.name(), || {
+                bench.run(&format!("kernel/{}", kern.name()), || {
+                    matmul_into(&a, &b, &mut out, &mut ws);
+                    black_box(&out);
+                })
+            });
+            let gflops = flops / mean / 1e9;
+            println!("    -> {:<8} {gflops:.2} GFLOP/s", kern.name());
+            let mut o = Value::obj();
+            o.set("kernel", Value::Str(kern.name().into()));
+            o.set("mean_ms", Value::Num(mean * 1e3));
+            o.set("gflops", Value::Num(gflops));
+            kernel_rows.push(o);
+        }
+    }
+
+    // Grouped expert GEMM vs the per-expert loop it replaced, at the
+    // "s" preset's Soft MoE expert shape (skinny per-expert rows, many
+    // experts — where per-call pack overhead dominates).
+    println!("\n== grouped expert GEMM vs per-expert loop ==");
+    let mut grouped_rows: Vec<Value> = Vec::new();
+    {
+        let cfg = ModelConfig::preset("s", MoeType::Soft).unwrap();
+        let (ng, sp, d, h) =
+            (cfg.num_experts, cfg.slots_per_expert, cfg.dim, cfg.expert_hidden);
+        let xs = Tensor::randn(&[ng * sp, d], 1.0, &mut rng);
+        let w1 = Tensor::randn(&[ng, d, h], 0.1, &mut rng);
+        let b1 = Tensor::randn(&[ng, h], 0.1, &mut rng);
+        let mut hid = vec![0.0f32; ng * sp * h];
+        let flops = 2.0 * (ng * sp) as f64 * d as f64 * h as f64;
+        let t_loop = bench.run("expert_mlp1/per_expert_loop", || {
+            for e in 0..ng {
+                let xe = xs.rows(e * sp, (e + 1) * sp);
+                matmul_bias_gelu_slice_into(
+                    &xe, &w1.data[e * d * h..(e + 1) * d * h], h,
+                    &b1.data[e * h..(e + 1) * h],
+                    &mut hid[e * sp * h..(e + 1) * sp * h], &mut ws);
+            }
+            black_box(&hid);
+        });
+        let t_grouped = bench.run("expert_mlp1/grouped", || {
+            matmul_grouped_into(&xs, &w1.data, Some(&b1.data), h, sp, None,
+                                true, &mut hid, &mut ws);
+            black_box(&hid);
+        });
+        println!(
+            "    -> loop {:.2} GFLOP/s, grouped {:.2} GFLOP/s ({:.2}x)",
+            flops / t_loop / 1e9,
+            flops / t_grouped / 1e9,
+            t_loop / t_grouped
+        );
+        let mut o = Value::obj();
+        o.set("experts", Value::Num(ng as f64));
+        o.set("slots_per_expert", Value::Num(sp as f64));
+        o.set("loop_ms", Value::Num(t_loop * 1e3));
+        o.set("grouped_ms", Value::Num(t_grouped * 1e3));
+        o.set("speedup", Value::Num(t_loop / t_grouped));
+        grouped_rows.push(o);
+    }
+
     let mut root = Value::obj();
     root.set("bench", Value::Str("gemm".into()));
     root.set("threads",
              Value::Num(softmoe::threadpool::default_threads() as f64));
+    // The dispatched ISA for the main results (per-kernel numbers have
+    // their own tags).
+    root.set("kernel", Value::Str(kernel::active_name().into()));
     root.set("results", Value::Arr(rows));
+    root.set("kernels", Value::Arr(kernel_rows));
+    root.set("grouped", Value::Arr(grouped_rows));
     let path = std::path::Path::new("reports/BENCH_GEMM.json");
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);

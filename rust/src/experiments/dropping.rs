@@ -171,17 +171,16 @@ fn copy_experts(
     d: usize,
     h: usize,
 ) {
-    let b1 = &params[&format!("{pre}/moe/b1")];
-    let w2 = &params[&format!("{pre}/moe/w2")];
-    let b2 = &params[&format!("{pre}/moe/b2")];
-    for e in 0..n {
-        experts.w1[e] =
-            Tensor::from_vec(&[d, h], w1.data[e * d * h..(e + 1) * d * h].to_vec());
-        experts.b1[e] = b1.data[e * h..(e + 1) * h].to_vec();
-        experts.w2[e] =
-            Tensor::from_vec(&[h, d], w2.data[e * h * d..(e + 1) * h * d].to_vec());
-        experts.b2[e] = b2.data[e * d..(e + 1) * d].to_vec();
-    }
+    // ExpertParams stores weights stacked in exactly the manifest layout
+    // ((n,d,h)/(n,h)/(n,h,d)/(n,d)), so the trained parameters copy over
+    // whole; reshape pins the expected dimensions.
+    experts.w1 = Tensor::from_vec(&[n, d, h], w1.data.clone());
+    experts.b1 =
+        Tensor::from_vec(&[n, h], params[&format!("{pre}/moe/b1")].data.clone());
+    experts.w2 = Tensor::from_vec(
+        &[n, h, d], params[&format!("{pre}/moe/w2")].data.clone());
+    experts.b2 =
+        Tensor::from_vec(&[n, d], params[&format!("{pre}/moe/b2")].data.clone());
 }
 
 fn eval_p1(

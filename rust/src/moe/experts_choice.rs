@@ -11,8 +11,8 @@
 
 use crate::moe::{ExpertParams, RoutingStats};
 use crate::tensor::{
-    matmul, matmul_into, softmax_rows, softmax_rows_inplace, with_workspace,
-    RouteEntry, Tensor, Workspace,
+    matmul, matmul_grouped_into, matmul_into, softmax_rows,
+    softmax_rows_inplace, with_workspace, RouteEntry, Tensor, Workspace,
 };
 use crate::util::Rng;
 
@@ -83,9 +83,10 @@ impl ExpertsChoice {
 
     /// Forward with an explicit workspace: the routing decision (via
     /// [`ExpertsChoice::route_core`]), the gate tensor, the kept list and
-    /// the per-expert gather/output buffers are all pooled and reused
-    /// across experts and across calls — zero allocations at steady
-    /// state beyond the returned output.
+    /// the cap-strided gather/hidden/output buffers are all pooled; the
+    /// expert MLPs run as one grouped GEMM per layer
+    /// ([`matmul_grouped_into`]) instead of `n` per-expert kernel calls.
+    /// Zero allocations at steady state beyond the returned output.
     pub fn forward_with_stats_ws(&self, x: &Tensor, ws: &mut Workspace)
         -> (Tensor, RoutingStats) {
         let (t, d) = x.dims2();
@@ -100,36 +101,36 @@ impl ExpertsChoice {
         let mut y = Tensor::zeros(&[t, d]);
         let mut expert_load = vec![0.0f64; n];
         let mut token_weight = vec![0.0f64; t];
-        let mut buf = ws.take_tensor(&[cap, d]);
-        let mut out = ws.take_tensor(&[cap, d]);
-        // `kept` is grouped by expert in ascending order by construction.
-        let mut i0 = 0usize;
-        while i0 < kept.len() {
-            let e = kept[i0].1;
-            let mut i1 = i0;
-            while i1 < kept.len() && kept[i1].1 == e {
-                i1 += 1;
+        // Gather every expert's picks into its cap-strided block (EC
+        // fills exactly `cap` rows per expert, so every row is
+        // overwritten), then run ALL expert MLPs as two grouped GEMMs —
+        // one kernel invocation per layer instead of n.
+        let h = self.experts.hidden();
+        let mut buf = ws.take_tensor(&[n * cap, d]);
+        for &(tok, e, _gate, pos) in kept.iter() {
+            buf.data[(e * cap + pos) * d..(e * cap + pos + 1) * d]
+                .copy_from_slice(x.row(tok));
+        }
+        let mut hid = ws.take_tensor(&[n * cap, h]);
+        let mut out = ws.take_tensor(&[n * cap, d]);
+        matmul_grouped_into(&buf, &self.experts.w1.data,
+                            Some(&self.experts.b1.data), h, cap, None, true,
+                            &mut hid.data, ws);
+        matmul_grouped_into(&hid, &self.experts.w2.data,
+                            Some(&self.experts.b2.data), d, cap, None, false,
+                            &mut out.data, ws);
+        // Scatter-add weighted outputs.
+        for &(tok, e, gate, pos) in kept.iter() {
+            let src = &out.data[(e * cap + pos) * d..(e * cap + pos + 1) * d];
+            let dst = &mut y.data[tok * d..(tok + 1) * d];
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += gate * s;
             }
-            let group = &kept[i0..i1];
-            // Gather the expert's buffer (every row is overwritten: EC
-            // fills exactly `cap` picks per expert).
-            for &(tok, _e, _gate, pos) in group {
-                buf.data[pos * d..(pos + 1) * d].copy_from_slice(x.row(tok));
-            }
-            self.experts.apply_into(e, &buf, &mut out.data, ws);
-            // Scatter-add weighted outputs.
-            for &(tok, _e, gate, pos) in group {
-                let src = &out.data[pos * d..(pos + 1) * d];
-                let dst = &mut y.data[tok * d..(tok + 1) * d];
-                for (o, s) in dst.iter_mut().zip(src) {
-                    *o += gate * s;
-                }
-                expert_load[e] += 1.0;
-                token_weight[tok] += 1.0;
-            }
-            i0 = i1;
+            expert_load[e] += 1.0;
+            token_weight[tok] += 1.0;
         }
         ws.give_tensor(out);
+        ws.give_tensor(hid);
         ws.give_tensor(buf);
         ws.give_route(kept);
 

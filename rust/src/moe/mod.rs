@@ -150,43 +150,82 @@ pub fn experts_choice_route_into(
     cap
 }
 
-/// Per-expert MLP parameters: each expert i has w1 (d,h), b1 (h),
-/// w2 (h,d), b2 (d). Stored as one struct-of-vecs for cache-friendly
-/// per-expert access.
+/// Per-expert MLP parameters, stored **stacked** (the manifest layout):
+/// w1 (n, d, h), b1 (n, h), w2 (n, h, d), b2 (n, d). One contiguous
+/// tensor per parameter, so the grouped expert GEMM
+/// ([`crate::tensor::matmul_grouped_into`]) can stream every expert's
+/// weights through one kernel invocation, and per-expert access is a
+/// slice — never a clone.
 #[derive(Clone, Debug)]
 pub struct ExpertParams {
-    pub w1: Vec<Tensor>,
-    pub b1: Vec<Vec<f32>>,
-    pub w2: Vec<Tensor>,
-    pub b2: Vec<Vec<f32>>,
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
 }
 
 impl ExpertParams {
     pub fn new(n: usize, d: usize, h: usize, rng: &mut Rng) -> Self {
-        let mut w1 = Vec::with_capacity(n);
-        let mut b1 = Vec::with_capacity(n);
-        let mut w2 = Vec::with_capacity(n);
-        let mut b2 = Vec::with_capacity(n);
+        let mut w1 = Tensor::zeros(&[n, d, h]);
+        let b1 = Tensor::zeros(&[n, h]);
+        let mut w2 = Tensor::zeros(&[n, h, d]);
+        let b2 = Tensor::zeros(&[n, d]);
         let s1 = 1.0 / (d as f32).sqrt();
         let s2 = 1.0 / (h as f32).sqrt();
+        // Same per-expert fold-in draw order as the old per-expert
+        // storage, so initializations are value-identical.
         for i in 0..n {
             let mut r = rng.fold_in(i as u64);
-            w1.push(Tensor::randn(&[d, h], s1, &mut r));
-            b1.push(vec![0.0; h]);
-            w2.push(Tensor::randn(&[h, d], s2, &mut r));
-            b2.push(vec![0.0; d]);
+            w1.data[i * d * h..(i + 1) * d * h]
+                .copy_from_slice(&r.normal_vec(d * h, s1));
+            w2.data[i * h * d..(i + 1) * h * d]
+                .copy_from_slice(&r.normal_vec(h * d, s2));
         }
         Self { w1, b1, w2, b2 }
     }
 
     pub fn num_experts(&self) -> usize {
-        self.w1.len()
+        self.w1.shape[0]
+    }
+
+    /// Hidden width of every expert MLP.
+    pub fn hidden(&self) -> usize {
+        self.w1.shape[2]
+    }
+
+    /// Output width of every expert MLP.
+    pub fn d_out(&self) -> usize {
+        self.w2.shape[2]
+    }
+
+    /// Expert `i`'s first-layer weight, a row-major (d, h) slice.
+    pub fn w1_of(&self, i: usize) -> &[f32] {
+        let sz = self.w1.shape[1] * self.w1.shape[2];
+        &self.w1.data[i * sz..(i + 1) * sz]
+    }
+
+    /// Expert `i`'s first-layer bias (h).
+    pub fn b1_of(&self, i: usize) -> &[f32] {
+        let h = self.b1.shape[1];
+        &self.b1.data[i * h..(i + 1) * h]
+    }
+
+    /// Expert `i`'s second-layer weight, a row-major (h, d) slice.
+    pub fn w2_of(&self, i: usize) -> &[f32] {
+        let sz = self.w2.shape[1] * self.w2.shape[2];
+        &self.w2.data[i * sz..(i + 1) * sz]
+    }
+
+    /// Expert `i`'s second-layer bias (d).
+    pub fn b2_of(&self, i: usize) -> &[f32] {
+        let d = self.b2.shape[1];
+        &self.b2.data[i * d..(i + 1) * d]
     }
 
     /// Apply expert `i`'s MLP to a (rows, d) tensor.
     pub fn apply(&self, i: usize, x: &Tensor) -> Tensor {
         let (r, _d) = x.dims2();
-        let mut out = Tensor::zeros(&[r, self.w2[i].shape[1]]);
+        let mut out = Tensor::zeros(&[r, self.d_out()]);
         with_workspace(|ws| self.apply_into(i, x, &mut out.data, ws));
         out
     }
@@ -196,16 +235,14 @@ impl ExpertParams {
     /// bias+GELU into its epilogue. Zero allocations at steady state.
     pub fn apply_into(&self, i: usize, x: &Tensor, out: &mut [f32],
                       ws: &mut Workspace) {
-        crate::nn::layers::mlp_infer_into(
-            x, &self.w1[i], &self.b1[i], &self.w2[i], &self.b2[i], out, ws);
+        crate::nn::layers::mlp_infer_slice_into(
+            x, self.w1_of(i), self.hidden(), self.b1_of(i), self.w2_of(i),
+            self.d_out(), self.b2_of(i), out, ws);
     }
 
     /// Parameter count (for FLOP/param accounting).
     pub fn param_count(&self) -> usize {
-        self.w1.iter().map(|t| t.numel()).sum::<usize>()
-            + self.b1.iter().map(|v| v.len()).sum::<usize>()
-            + self.w2.iter().map(|t| t.numel()).sum::<usize>()
-            + self.b2.iter().map(|v| v.len()).sum::<usize>()
+        self.w1.numel() + self.b1.numel() + self.w2.numel() + self.b2.numel()
     }
 }
 

@@ -14,9 +14,9 @@ use crate::config::MixMode;
 use crate::moe::{ExpertParams, RoutingStats};
 use crate::tensor::{
     l2_normalize_cols, l2_normalize_cols_inplace, l2_normalize_rows,
-    l2_normalize_rows_inplace, matmul, matmul_into, matmul_tn_into,
-    softmax_cols_inplace, softmax_rows_inplace, with_workspace, Tensor,
-    Workspace,
+    l2_normalize_rows_inplace, matmul, matmul_grouped_into, matmul_into,
+    matmul_tn_into, softmax_cols_inplace, softmax_rows_inplace,
+    with_workspace, Tensor, Workspace,
 };
 use crate::util::Rng;
 
@@ -122,7 +122,6 @@ impl SoftMoe {
         let (m, d) = x.dims2();
         let s = self.total_slots();
         let p = self.slots_per_expert;
-        let n = self.num_experts();
 
         // Router logits are only needed when some mix is actually Soft
         // (the fixed-routing ablations ignore them; the pooled tensor's
@@ -164,15 +163,20 @@ impl SoftMoe {
         } else {
             matmul_tn_into(&dispatch, x, &mut xs.data, ws);
         }
-        // Per-expert MLP on its slot group.
+        // Per-expert MLPs as TWO grouped GEMMs over all experts at once
+        // (expert e owns slot rows e·p..(e+1)·p of xs): one pack pass +
+        // one parallel region per layer instead of n serial kernel
+        // calls, and no per-expert gather copy.
+        let h = self.experts.hidden();
         let mut ys = ws.take_tensor(&[s, d]);
-        let mut xe = ws.take_tensor(&[p, d]);
-        for e in 0..n {
-            xe.data.copy_from_slice(&xs.data[e * p * d..(e + 1) * p * d]);
-            self.experts.apply_into(
-                e, &xe, &mut ys.data[e * p * d..(e + 1) * p * d], ws);
-        }
-        ws.give_tensor(xe);
+        let mut hid = ws.take_tensor(&[s, h]);
+        matmul_grouped_into(&xs, &self.experts.w1.data,
+                            Some(&self.experts.b1.data), h, p, None, true,
+                            &mut hid.data, ws);
+        matmul_grouped_into(&hid, &self.experts.w2.data,
+                            Some(&self.experts.b2.data), d, p, None, false,
+                            &mut ys.data, ws);
+        ws.give_tensor(hid);
         ws.give_tensor(xs);
         // Y = C Ỹ : (m, d); Identity combine is again a copy.
         let mut y = Tensor::zeros(&[m, d]);

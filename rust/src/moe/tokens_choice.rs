@@ -16,8 +16,8 @@
 
 use crate::moe::{ExpertParams, RoutingStats};
 use crate::tensor::{
-    matmul, matmul_into, softmax_rows, softmax_rows_inplace, with_workspace,
-    RouteEntry, Tensor, Workspace,
+    matmul, matmul_grouped_into, matmul_into, softmax_rows,
+    softmax_rows_inplace, with_workspace, RouteEntry, Tensor, Workspace,
 };
 use crate::util::Rng;
 
@@ -107,9 +107,10 @@ impl TokensChoice {
 
     /// Forward with an explicit workspace: the routing decision buffers
     /// (via [`TokensChoice::route_core`]), the gate-prob tensor, the kept
-    /// list, and one reusable gather/output buffer pair are all pooled —
-    /// processed expert-by-expert, zero allocations at steady state
-    /// beyond the returned output.
+    /// list, and the cap-strided gather/hidden/output buffers are all
+    /// pooled; the expert MLPs run as one grouped GEMM per layer
+    /// ([`matmul_grouped_into`]) instead of `n` per-expert kernel calls.
+    /// Zero allocations at steady state beyond the returned output.
     pub fn forward_with_stats_ws(&self, x: &Tensor, ws: &mut Workspace)
         -> (Tensor, RoutingStats) {
         let (t, d) = x.dims2();
@@ -124,40 +125,44 @@ impl TokensChoice {
         let mut y = Tensor::zeros(&[t, d]);
         let mut expert_load = vec![0.0f64; n];
         let mut token_weight = vec![0.0f64; t];
-        // Group assignments by expert (one in-place sort) so each expert
-        // is a single contiguous pass, not an O(n·|kept|) rescan. Pairs
-        // (tok, e) are unique, so per-group order doesn't affect results.
-        kept.sort_unstable_by_key(|&(_, e, _, _)| e);
-        let mut buf = ws.take_tensor(&[cap, d]);
-        let mut out = ws.take_tensor(&[cap, d]);
-        let mut i0 = 0usize;
-        while i0 < kept.len() {
-            let e = kept[i0].1;
-            let mut i1 = i0;
-            while i1 < kept.len() && kept[i1].1 == e {
-                i1 += 1;
+        // Gather every expert's buffer at its cap-strided block (kept
+        // positions are contiguous from 0 per expert), then run ALL
+        // expert MLPs as two grouped GEMMs — one kernel invocation per
+        // layer instead of n, no per-expert grouping sort. Stale rows
+        // beyond an expert's fill are neither computed nor read back.
+        let h = self.experts.hidden();
+        let mut fills = ws.take_idx(n);
+        for f in fills.iter_mut() {
+            *f = 0;
+        }
+        let mut buf = ws.take_tensor(&[n * cap, d]);
+        for &(tok, e, _gate, pos) in kept.iter() {
+            buf.data[(e * cap + pos) * d..(e * cap + pos + 1) * d]
+                .copy_from_slice(x.row(tok));
+            fills[e] += 1;
+        }
+        let mut hid = ws.take_tensor(&[n * cap, h]);
+        let mut out = ws.take_tensor(&[n * cap, d]);
+        matmul_grouped_into(&buf, &self.experts.w1.data,
+                            Some(&self.experts.b1.data), h, cap,
+                            Some(&fills), true, &mut hid.data, ws);
+        matmul_grouped_into(&hid, &self.experts.w2.data,
+                            Some(&self.experts.b2.data), d, cap,
+                            Some(&fills), false, &mut out.data, ws);
+        // Scatter back with gate weights.
+        for &(tok, e, gate, pos) in kept.iter() {
+            let src = &out.data[(e * cap + pos) * d..(e * cap + pos + 1) * d];
+            let dst = &mut y.data[tok * d..(tok + 1) * d];
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += gate * s;
             }
-            let group = &kept[i0..i1];
-            // Gather this expert's buffer (stale rows beyond its fill are
-            // never read back: the scatter only visits kept positions).
-            for &(tok, _e, _gate, pos) in group {
-                buf.data[pos * d..(pos + 1) * d].copy_from_slice(x.row(tok));
-            }
-            self.experts.apply_into(e, &buf, &mut out.data, ws);
-            // Scatter back with gate weights.
-            for &(tok, _e, gate, pos) in group {
-                let src = &out.data[pos * d..(pos + 1) * d];
-                let dst = &mut y.data[tok * d..(tok + 1) * d];
-                for (o, s) in dst.iter_mut().zip(src) {
-                    *o += gate * s;
-                }
-                expert_load[e] += 1.0;
-                token_weight[tok] += 1.0;
-            }
-            i0 = i1;
+            expert_load[e] += 1.0;
+            token_weight[tok] += 1.0;
         }
         ws.give_tensor(out);
+        ws.give_tensor(hid);
         ws.give_tensor(buf);
+        ws.give_idx(fills);
         ws.give_route(kept);
 
         // A token was dropped iff no kept pair touched it — identical to

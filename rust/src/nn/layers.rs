@@ -7,8 +7,9 @@
 
 use crate::tensor::{
     dot, gelu, gelu_grad, layernorm, matmul, matmul_bias, matmul_bias_gelu_into,
-    matmul_bias_into, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
-    softmax_inplace, softmax_rows, Tensor, Workspace, L2_EPS, LN_EPS,
+    matmul_bias_gelu_slice_into, matmul_bias_into, matmul_bias_slice_into,
+    matmul_into, matmul_nt, matmul_nt_into, matmul_tn, softmax_inplace,
+    softmax_rows, Tensor, Workspace, L2_EPS, LN_EPS,
 };
 
 // ---------------------------------------------------------------------------
@@ -83,6 +84,21 @@ pub fn mlp_infer_into(x: &Tensor, w1: &Tensor, b1: &[f32], w2: &Tensor,
     let mut g = ws.take_tensor(&[r, h]);
     matmul_bias_gelu_into(x, w1, b1, &mut g.data, ws);
     matmul_bias_into(&g, w2, b2, out, ws);
+    ws.give_tensor(g);
+}
+
+/// [`mlp_infer_into`] over raw weight slices: w1 is a row-major (d, h)
+/// slice, w2 a row-major (h, d_out) slice — the form stacked expert
+/// parameters come in ([`crate::moe::ExpertParams`], the (n, d, h)
+/// ParamStore tensors), addressed without cloning a sub-matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_infer_slice_into(x: &Tensor, w1: &[f32], h: usize, b1: &[f32],
+                            w2: &[f32], d_out: usize, b2: &[f32],
+                            out: &mut [f32], ws: &mut Workspace) {
+    let (r, _d) = x.dims2();
+    let mut g = ws.take_tensor(&[r, h]);
+    matmul_bias_gelu_slice_into(x, w1, h, b1, &mut g.data, ws);
+    matmul_bias_slice_into(&g, w2, d_out, b2, out, ws);
     ws.give_tensor(g);
 }
 

@@ -15,11 +15,10 @@ use crate::nn::layers::*;
 use crate::nn::{accumulate, Grads};
 use crate::tensor::{
     l2_normalize_cols, l2_normalize_cols_inplace, l2_normalize_rows,
-    l2_normalize_rows_inplace, layernorm_into, matmul,
-    matmul_bias_gelu_slice_into, matmul_bias_slice_into, matmul_into,
-    matmul_nt, matmul_slice_into, matmul_tn, matmul_tn_into, softmax_cols,
-    softmax_cols_inplace, softmax_rows, softmax_rows_inplace, with_workspace,
-    RouteEntry, Tensor, Workspace,
+    l2_normalize_rows_inplace, layernorm_into, matmul, matmul_grouped_into,
+    matmul_into, matmul_nt, matmul_slice_into, matmul_tn, matmul_tn_into,
+    softmax_cols, softmax_cols_inplace, softmax_rows, softmax_rows_inplace,
+    with_workspace, RouteEntry, Tensor, Workspace,
 };
 use crate::threadpool::parallel_map_ws;
 use crate::util::Rng;
@@ -566,24 +565,17 @@ impl VitModel {
             }
         }
 
-        // Per-expert MLPs on their slot groups (stacked weights addressed
-        // as slices — no per-expert clone).
+        // Per-expert MLPs as TWO grouped GEMMs over the stacked weights
+        // (expert e owns slot rows e·sp..(e+1)·sp of xs): one pack pass
+        // + one parallel region per layer instead of n serial kernel
+        // calls, and no per-expert gather copy.
         let mut ys = ws.take_tensor(&[s, d]);
-        let mut xe = ws.take_tensor(&[sp, d]);
-        let mut ge = ws.take_tensor(&[sp, eh]);
-        for e in 0..n {
-            xe.data.copy_from_slice(&xs.data[e * sp * d..(e + 1) * sp * d]);
-            let w1e = &w1.data[e * d * eh..(e + 1) * d * eh];
-            let b1e = &b1.data[e * eh..(e + 1) * eh];
-            let w2e = &w2.data[e * eh * d..(e + 1) * eh * d];
-            let b2e = &b2.data[e * d..(e + 1) * d];
-            matmul_bias_gelu_slice_into(&xe, w1e, eh, b1e, &mut ge.data, ws);
-            matmul_bias_slice_into(
-                &ge, w2e, d, b2e,
-                &mut ys.data[e * sp * d..(e + 1) * sp * d], ws);
-        }
+        let mut ge = ws.take_tensor(&[s, eh]);
+        matmul_grouped_into(&xs, &w1.data, Some(&b1.data), eh, sp, None,
+                            true, &mut ge.data, ws);
+        matmul_grouped_into(&ge, &w2.data, Some(&b2.data), d, sp, None,
+                            false, &mut ys.data, ws);
         ws.give_tensor(ge);
-        ws.give_tensor(xe);
         ws.give_tensor(xs);
 
         // Y = C Ỹ.
@@ -635,42 +627,39 @@ impl VitModel {
         for v in out.iter_mut() {
             *v = 0.0;
         }
-        // Group by expert with one in-place sort (single pass per expert
-        // instead of rescanning `kept` n times). (tok, e) pairs are
-        // unique, so per-group order doesn't affect the scatter-add.
-        kept.sort_unstable_by_key(|&(_, e, _, _)| e);
-        let mut buf = ws.take_tensor(&[cap, d]);
-        let mut ge = ws.take_tensor(&[cap, eh]);
-        let mut ob = ws.take_tensor(&[cap, d]);
-        let mut i0 = 0usize;
-        while i0 < kept.len() {
-            let e = kept[i0].1;
-            let mut i1 = i0;
-            while i1 < kept.len() && kept[i1].1 == e {
-                i1 += 1;
+        // Gather every expert's picks into its cap-strided block (kept
+        // positions are contiguous from 0 per expert), then run ALL
+        // expert MLPs as two grouped GEMMs over the stacked weights —
+        // one kernel invocation per layer instead of n, and no grouping
+        // sort. Stale rows beyond an expert's fill are neither computed
+        // nor read back.
+        let mut fills = ws.take_idx(n);
+        for f in fills.iter_mut() {
+            *f = 0;
+        }
+        let mut buf = ws.take_tensor(&[n * cap, d]);
+        for &(tok, e, _g, pos) in kept.iter() {
+            buf.data[(e * cap + pos) * d..(e * cap + pos + 1) * d]
+                .copy_from_slice(x.row(tok));
+            fills[e] += 1;
+        }
+        let mut ge = ws.take_tensor(&[n * cap, eh]);
+        let mut ob = ws.take_tensor(&[n * cap, d]);
+        matmul_grouped_into(&buf, &w1.data, Some(&b1.data), eh, cap,
+                            Some(&fills), true, &mut ge.data, ws);
+        matmul_grouped_into(&ge, &w2.data, Some(&b2.data), d, cap,
+                            Some(&fills), false, &mut ob.data, ws);
+        for &(tok, e, gate, pos) in kept.iter() {
+            let src = &ob.data[(e * cap + pos) * d..(e * cap + pos + 1) * d];
+            let dst = &mut out[tok * d..(tok + 1) * d];
+            for (o, sv) in dst.iter_mut().zip(src) {
+                *o += gate * sv;
             }
-            let group = &kept[i0..i1];
-            for &(tok, _e, _g, pos) in group {
-                buf.data[pos * d..(pos + 1) * d].copy_from_slice(x.row(tok));
-            }
-            let w1e = &w1.data[e * d * eh..(e + 1) * d * eh];
-            let b1e = &b1.data[e * eh..(e + 1) * eh];
-            let w2e = &w2.data[e * eh * d..(e + 1) * eh * d];
-            let b2e = &b2.data[e * d..(e + 1) * d];
-            matmul_bias_gelu_slice_into(&buf, w1e, eh, b1e, &mut ge.data, ws);
-            matmul_bias_slice_into(&ge, w2e, d, b2e, &mut ob.data, ws);
-            for &(tok, _e, gate, pos) in group {
-                let src = &ob.data[pos * d..(pos + 1) * d];
-                let dst = &mut out[tok * d..(tok + 1) * d];
-                for (o, sv) in dst.iter_mut().zip(src) {
-                    *o += gate * sv;
-                }
-            }
-            i0 = i1;
         }
         ws.give_tensor(ob);
         ws.give_tensor(ge);
         ws.give_tensor(buf);
+        ws.give_idx(fills);
         ws.give_route(kept);
     }
 

@@ -171,6 +171,10 @@ impl Server {
              Server::run from inside a parallel region)"
         );
         crate::threadpool::prewarm();
+        // Under SOFTMOE_PIN_CORES=1 the pool pins worker i to core i+1;
+        // pin this executor thread to the core they leave free so it
+        // stops migrating across the workers' cores mid-request.
+        crate::threadpool::pin_executor_thread();
         let mut served = 0usize;
         // Reusable padded input buffer: zero allocations in the hot loop
         // beyond what the backend itself does.

@@ -1,0 +1,524 @@
+//! GEMM microkernels with runtime CPU dispatch.
+//!
+//! The packed-panel GEMM driver in `tensor` (see the "Matmul family"
+//! section there) funnels every tile through one microkernel call:
+//! accumulate an mr×nr tile of C against a zero-padded kb×NR packed B
+//! panel. This module owns that call: a portable scalar kernel (the
+//! autovectorized 4×16 tile from the original implementation), an
+//! explicit AVX2+FMA 6×16 kernel for x86_64, and an explicit NEON 4×16
+//! kernel for aarch64, selected **once** at startup (the persistent
+//! worker pool warms the choice when it spawns) and cached in a
+//! [`Kernel`] vtable. `matmul`/`_tn`/`_nt`, every fused bias / bias+GELU
+//! epilogue, and the grouped expert GEMM all route through the same
+//! dispatch because they all land in `gemm_rows`.
+//!
+//! Selection order:
+//! 1. `SOFTMOE_KERNEL=scalar|avx2|neon` forces a kernel (panics if the
+//!    named kernel is not available on this host; empty or `auto` means
+//!    autodetect). This is how CI exercises the portable fallback on
+//!    hosts that would otherwise always take the SIMD path.
+//! 2. x86_64 with runtime-detected AVX2+FMA → the 6×16 AVX2 kernel.
+//! 3. aarch64 → the 4×16 NEON kernel (NEON is baseline on aarch64).
+//! 4. Otherwise → the scalar kernel.
+//!
+//! [`with_kernel`] additionally forces a kernel for the calling thread
+//! (tests use it for parity checks). The GEMM drivers resolve the kernel
+//! once per call on the submitting thread and hand the resolved
+//! reference to the pool workers, so one GEMM never mixes kernels.
+//!
+//! # Numerics
+//!
+//! All kernels accumulate every output element over k in ascending
+//! order, so results are deterministic and independent of the thread
+//! count for a given kernel. The SIMD kernels use fused multiply-add
+//! (one rounding per step) where the scalar kernel rounds the product
+//! and the sum separately — so SIMD and scalar results may differ by
+//! ~1 ULP per accumulation step. The parity tests in
+//! `rust/tests/kernel_dispatch.rs` bound this against an f64 reference.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use super::NR;
+
+/// Microkernel signature shared by every implementation: accumulate the
+/// mr×nr tile `c[(r)*ldc + j]` (pre-initialized by the epilogue) with A
+/// rows `a[(r)*lda + kk]` against the packed kb×NR panel `bp`.
+///
+/// # Safety
+/// The caller must guarantee (a) the CPU features the kernel was
+/// compiled for are present — the dispatch layer only hands out kernels
+/// it detected — and (b) the slice contract: `mr <= Kernel::mr`,
+/// `nr <= NR`, `bp.len() >= kb * NR`, `a` covers `(mr-1)*lda + kb`
+/// elements and `c` covers `(mr-1)*ldc + nr`.
+pub(crate) type MicroFn = unsafe fn(
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    kb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+);
+
+/// One dispatchable microkernel: its name (the `SOFTMOE_KERNEL` value),
+/// its register-tile height, and the tile function itself. `NR` is
+/// shared by all kernels (the packed-B layout never changes; only the
+/// tile height varies with the register file).
+pub struct Kernel {
+    name: &'static str,
+    pub(crate) mr: usize,
+    pub(crate) micro: MicroFn,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Register-tile height (rows accumulated per microkernel call).
+    pub fn tile_rows(&self) -> usize {
+        self.mr
+    }
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Kernel({}, {}x{NR})", self.name, self.mr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar kernel (portable fallback; LLVM autovectorizes the 16-wide row)
+// ---------------------------------------------------------------------------
+
+/// Scalar register-tile height.
+const SCALAR_MR: usize = 4;
+
+/// The portable register-tiled microkernel: with const bounds on the
+/// full-tile path, LLVM keeps the 4×16 accumulator in registers and
+/// vectorizes the 16-wide row update.
+#[inline(always)]
+fn microkernel_scalar(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+                      c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+    let mut acc = [[0.0f32; NR]; SCALAR_MR];
+    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+        for (j, v) in accr.iter_mut().enumerate().take(nr) {
+            *v = c[r * ldc + j];
+        }
+    }
+    if mr == SCALAR_MR && nr == NR {
+        // Full tile: const bounds let LLVM keep the tile in registers.
+        for kk in 0..kb {
+            let bw = &bp[kk * NR..(kk + 1) * NR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = a[r * lda + kk];
+                for (j, v) in accr.iter_mut().enumerate() {
+                    *v += av * bw[j];
+                }
+            }
+        }
+    } else {
+        for kk in 0..kb {
+            let bw = &bp[kk * NR..(kk + 1) * NR];
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = a[r * lda + kk];
+                for (j, v) in accr.iter_mut().enumerate().take(nr) {
+                    *v += av * bw[j];
+                }
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        for (j, v) in accr.iter().enumerate().take(nr) {
+            c[r * ldc + j] = *v;
+        }
+    }
+}
+
+/// Vtable entry shim (`unsafe fn` item so it coerces to [`MicroFn`]).
+///
+/// # Safety
+/// Only the slice contract of [`MicroFn`] (the scalar kernel needs no
+/// CPU features).
+unsafe fn scalar_entry(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+                       c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+    microkernel_scalar(a, lda, bp, kb, c, ldc, mr, nr);
+}
+
+static SCALAR_KERNEL: Kernel =
+    Kernel { name: "scalar", mr: SCALAR_MR, micro: scalar_entry };
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernel (x86_64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    use super::NR;
+
+    /// 6 rows × two 8-lane vectors: a 6×16 f32 tile held in 12 of the 16
+    /// YMM registers, leaving 2 to stream the B panel and 1 to broadcast
+    /// the A element.
+    pub const MR: usize = 6;
+
+    /// Vtable entry shim with the shared microkernel signature.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA via runtime detection (the
+    /// dispatch layer only hands this kernel out after
+    /// `is_x86_feature_detected!`) and uphold the [`super::MicroFn`]
+    /// slice contract with `mr <= 6`.
+    pub unsafe fn entry(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+                        c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+        micro(a, lda, bp, kb, c, ldc, mr, nr)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn micro(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+                    c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+        debug_assert!(0 < mr && mr <= MR && 0 < nr && nr <= NR);
+        debug_assert!(bp.len() >= kb * NR);
+        let ap = a.as_ptr();
+        let bpp = bp.as_ptr();
+        if mr == MR && nr == NR {
+            // Full tile: 12 resident accumulators, row loop fully
+            // unrolled (const bound).
+            let cp = c.as_mut_ptr();
+            let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                accr[0] = _mm256_loadu_ps(cp.add(r * ldc));
+                accr[1] = _mm256_loadu_ps(cp.add(r * ldc + 8));
+            }
+            for kk in 0..kb {
+                let b0 = _mm256_loadu_ps(bpp.add(kk * NR));
+                let b1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*ap.add(r * lda + kk));
+                    accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+                    accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                _mm256_storeu_ps(cp.add(r * ldc), accr[0]);
+                _mm256_storeu_ps(cp.add(r * ldc + 8), accr[1]);
+            }
+            return;
+        }
+        // Ragged edge tile. The FMA sequence per (row, lane) is the same
+        // as the full path, so in-range lanes are bit-identical to it;
+        // lanes >= nr compute on the panel's zero padding (and the zeros
+        // `tmp` keeps outside ..nr) and are never stored back.
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        let mut tmp = [0.0f32; NR];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            tmp[..nr].copy_from_slice(&c[r * ldc..r * ldc + nr]);
+            accr[0] = _mm256_loadu_ps(tmp.as_ptr());
+            accr[1] = _mm256_loadu_ps(tmp.as_ptr().add(8));
+        }
+        for kk in 0..kb {
+            let b0 = _mm256_loadu_ps(bpp.add(kk * NR));
+            let b1 = _mm256_loadu_ps(bpp.add(kk * NR + 8));
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = _mm256_set1_ps(*ap.add(r * lda + kk));
+                accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+        for (r, accr) in acc.iter().enumerate().take(mr) {
+            _mm256_storeu_ps(tmp.as_mut_ptr(), accr[0]);
+            _mm256_storeu_ps(tmp.as_mut_ptr().add(8), accr[1]);
+            c[r * ldc..r * ldc + nr].copy_from_slice(&tmp[..nr]);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_KERNEL: Kernel =
+    Kernel { name: "avx2", mr: avx2::MR, micro: avx2::entry };
+
+// ---------------------------------------------------------------------------
+// NEON kernel (aarch64; NEON is baseline there)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    use super::NR;
+
+    /// 4 rows × four 4-lane vectors: a 4×16 f32 tile in 16 of the 32
+    /// NEON registers, leaving plenty for the B panel and broadcasts.
+    pub const MR: usize = 4;
+
+    /// Vtable entry shim with the shared microkernel signature.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; only the [`super::MicroFn`] slice
+    /// contract (with `mr <= 4`) must hold.
+    pub unsafe fn entry(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+                        c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+        micro(a, lda, bp, kb, c, ldc, mr, nr)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn micro(a: &[f32], lda: usize, bp: &[f32], kb: usize,
+                    c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+        debug_assert!(0 < mr && mr <= MR && 0 < nr && nr <= NR);
+        debug_assert!(bp.len() >= kb * NR);
+        let ap = a.as_ptr();
+        let bpp = bp.as_ptr();
+        if mr == MR && nr == NR {
+            let cp = c.as_mut_ptr();
+            let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                for (v, vec) in accr.iter_mut().enumerate() {
+                    *vec = vld1q_f32(cp.add(r * ldc + 4 * v));
+                }
+            }
+            for kk in 0..kb {
+                let b0 = vld1q_f32(bpp.add(kk * NR));
+                let b1 = vld1q_f32(bpp.add(kk * NR + 4));
+                let b2 = vld1q_f32(bpp.add(kk * NR + 8));
+                let b3 = vld1q_f32(bpp.add(kk * NR + 12));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f32(*ap.add(r * lda + kk));
+                    accr[0] = vfmaq_f32(accr[0], av, b0);
+                    accr[1] = vfmaq_f32(accr[1], av, b1);
+                    accr[2] = vfmaq_f32(accr[2], av, b2);
+                    accr[3] = vfmaq_f32(accr[3], av, b3);
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                for (v, vec) in accr.iter().enumerate() {
+                    vst1q_f32(cp.add(r * ldc + 4 * v), *vec);
+                }
+            }
+            return;
+        }
+        // Ragged edge tile: same FMA order per (row, lane) as the full
+        // path; out-of-range lanes see the panel's zero padding and are
+        // never stored.
+        let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+        let mut tmp = [0.0f32; NR];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            tmp[..nr].copy_from_slice(&c[r * ldc..r * ldc + nr]);
+            for (v, vec) in accr.iter_mut().enumerate() {
+                *vec = vld1q_f32(tmp.as_ptr().add(4 * v));
+            }
+        }
+        for kk in 0..kb {
+            let b0 = vld1q_f32(bpp.add(kk * NR));
+            let b1 = vld1q_f32(bpp.add(kk * NR + 4));
+            let b2 = vld1q_f32(bpp.add(kk * NR + 8));
+            let b3 = vld1q_f32(bpp.add(kk * NR + 12));
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = vdupq_n_f32(*ap.add(r * lda + kk));
+                accr[0] = vfmaq_f32(accr[0], av, b0);
+                accr[1] = vfmaq_f32(accr[1], av, b1);
+                accr[2] = vfmaq_f32(accr[2], av, b2);
+                accr[3] = vfmaq_f32(accr[3], av, b3);
+            }
+        }
+        for (r, accr) in acc.iter().enumerate().take(mr) {
+            for (v, vec) in accr.iter().enumerate() {
+                vst1q_f32(tmp.as_mut_ptr().add(4 * v), *vec);
+            }
+            c[r * ldc..r * ldc + nr].copy_from_slice(&tmp[..nr]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+static NEON_KERNEL: Kernel =
+    Kernel { name: "neon", mr: neon::MR, micro: neon::entry };
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Kernels usable on this host: always the scalar fallback, plus the
+/// SIMD kernel the running CPU supports.
+pub fn available() -> Vec<&'static Kernel> {
+    let mut v: Vec<&'static Kernel> = vec![&SCALAR_KERNEL];
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        v.push(&AVX2_KERNEL);
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(&NEON_KERNEL);
+    v
+}
+
+fn available_names() -> Vec<&'static str> {
+    available().iter().map(|k| k.name()).collect()
+}
+
+/// Look up an available kernel by its `SOFTMOE_KERNEL` name.
+pub fn by_name(name: &str) -> Option<&'static Kernel> {
+    available().into_iter().find(|k| k.name() == name)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best() -> &'static Kernel {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        &AVX2_KERNEL
+    } else {
+        &SCALAR_KERNEL
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn best() -> &'static Kernel {
+    &NEON_KERNEL
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn best() -> &'static Kernel {
+    &SCALAR_KERNEL
+}
+
+/// The `SOFTMOE_KERNEL` override currently in effect, if any (unset,
+/// empty, and `auto` all mean autodetect). The one parser of the
+/// override grammar — dispatch and the tests that assert the override
+/// is honored both call it, so they cannot diverge.
+pub fn env_override() -> Option<String> {
+    match std::env::var("SOFTMOE_KERNEL") {
+        Ok(v) if !v.is_empty() && v != "auto" => Some(v),
+        _ => None,
+    }
+}
+
+fn select() -> &'static Kernel {
+    match env_override() {
+        Some(v) => by_name(&v).unwrap_or_else(|| {
+            panic!(
+                "SOFTMOE_KERNEL={v} is not available on this host \
+                 (available: {:?})",
+                available_names()
+            )
+        }),
+        None => best(),
+    }
+}
+
+static ACTIVE: OnceLock<&'static Kernel> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread forced kernel (test hook; see [`with_kernel`]).
+    static FORCED: Cell<Option<&'static Kernel>> = const { Cell::new(None) };
+}
+
+/// The dispatched kernel: the calling thread's forced kernel if inside
+/// [`with_kernel`], else the process-wide selection (detected once, then
+/// cached). The GEMM drivers call this once per GEMM on the submitting
+/// thread and pass the resolved kernel into the parallel region, so pool
+/// workers always use the submitter's kernel.
+pub fn active() -> &'static Kernel {
+    if let Some(k) = FORCED.with(|c| c.get()) {
+        return k;
+    }
+    ACTIVE.get_or_init(select)
+}
+
+/// Name of the dispatched kernel (bench/report convenience).
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+/// Warm the process-wide kernel selection (idempotent). The persistent
+/// worker pool calls this when it spawns so the detect-and-cache step
+/// never lands inside a timed region.
+pub fn init() {
+    let _ = ACTIVE.get_or_init(select);
+}
+
+/// Run `f` with the GEMM kernel forced to `name` on the calling thread
+/// (restored on exit, panic-safe). Panics if `name` is not available on
+/// this host — use [`available`] to enumerate. Because the GEMM drivers
+/// resolve the kernel on the submitting thread, parallel row chunks
+/// spawned inside `f` also use the forced kernel.
+pub fn with_kernel<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    let kern = by_name(name).unwrap_or_else(|| {
+        panic!(
+            "kernel '{name}' is not available on this host \
+             (available: {:?})",
+            available_names()
+        )
+    });
+    struct Restore(Option<&'static Kernel>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.with(|c| c.set(self.0));
+        }
+    }
+    let prev = FORCED.with(|c| c.replace(Some(kern)));
+    let _guard = Restore(prev);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available() {
+        let names = available_names();
+        assert!(names.contains(&"scalar"));
+        assert!(by_name("scalar").is_some());
+        assert!(by_name("no-such-kernel").is_none());
+    }
+
+    #[test]
+    fn active_is_available() {
+        let k = active();
+        assert!(available_names().contains(&k.name()));
+        assert!(k.tile_rows() >= 1);
+    }
+
+    #[test]
+    fn with_kernel_forces_and_restores() {
+        let outer = active().name();
+        with_kernel("scalar", || {
+            assert_eq!(active().name(), "scalar");
+            // Nested forcing restores to the outer forced kernel.
+            with_kernel("scalar", || {
+                assert_eq!(active().name(), "scalar");
+            });
+            assert_eq!(active().name(), "scalar");
+        });
+        assert_eq!(active().name(), outer);
+    }
+
+    #[test]
+    fn with_kernel_restores_on_panic() {
+        let outer = active().name();
+        let r = std::panic::catch_unwind(|| {
+            with_kernel("scalar", || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert_eq!(active().name(), outer);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_kernel_rejects_unknown() {
+        with_kernel("quantum", || {});
+    }
+
+    #[test]
+    fn env_override_is_honored() {
+        // Under the CI fallback leg (SOFTMOE_KERNEL=scalar) this pins the
+        // process-wide selection; with the var unset it is a no-op check
+        // that autodetection picked an available kernel. (No with_kernel
+        // force is active on this test's thread, so active() is the
+        // process-wide selection.)
+        match env_override() {
+            Some(v) => assert_eq!(active().name(), v),
+            None => assert!(available_names().contains(&active().name())),
+        }
+    }
+}

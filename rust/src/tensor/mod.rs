@@ -2,12 +2,15 @@
 //!
 //! Not a general autodiff framework: a deliberate, small, fast numeric
 //! core. The matmul family is built on one cache-blocked, register-tiled
-//! GEMM microkernel (see the "Matmul family" section below): B is packed
-//! once per call into NR-wide panels, the kernel accumulates an MR×NR
-//! (4×16) tile in registers, and row blocks go to the thread pool for all
-//! three layouts (NN, TN, NT). Fused epilogues (bias, bias+GELU) avoid
-//! extra passes over the output, and a reusable [`Workspace`] arena keeps
-//! the steady-state forward path free of per-op heap allocations.
+//! GEMM driver (see the "Matmul family" section below): B is packed once
+//! per call into NR-wide panels, a runtime-dispatched microkernel
+//! ([`kernel`]: AVX2+FMA 6×16, NEON 4×16, or autovectorized scalar 4×16)
+//! accumulates the register tile, and row blocks go to the thread pool
+//! for all three layouts (NN, TN, NT). Fused epilogues (bias, bias+GELU)
+//! avoid extra passes over the output, [`matmul_grouped_into`] runs the
+//! per-expert MLP GEMMs of every MoE variant as one packed pass + one
+//! parallel region, and a reusable [`Workspace`] arena keeps the
+//! steady-state forward path free of per-op heap allocations.
 //!
 //! Numerical contract with `python/compile/model.py` (parity-tested in
 //! `rust/tests/runtime_hlo.rs`):
@@ -21,6 +24,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::threadpool::parallel_for;
 use crate::util::Rng;
+
+pub mod kernel;
 
 pub const LN_EPS: f32 = 1e-6;
 pub const L2_EPS: f32 = 1e-6;
@@ -464,16 +469,24 @@ pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
 // * B is packed once per call into column panels of width NR; panels are
 //   laid out k-block-major (KC rows per block) so the kernel streams a
 //   kb×NR panel that stays in L1.
-// * The microkernel holds an MR×NR (4×16) accumulator tile in registers
-//   and performs rank-1 updates over the k block — with MR/NR const,
-//   LLVM vectorizes the 16-wide row FMA.
-// * Rows are split into MR-aligned chunks across the thread pool for all
-//   three layouts (the old code ran TN serial; TN carries the entire
-//   backward pass). Per-row results are bit-identical regardless of the
-//   thread count because each output row is always accumulated in the
-//   same order.
+// * The microkernel holds an mr×NR accumulator tile in registers and
+//   performs rank-1 updates over the k block. The tile function is
+//   runtime-dispatched (see `tensor::kernel`): explicit AVX2+FMA 6×16
+//   on x86_64, explicit NEON 4×16 on aarch64, autovectorized scalar
+//   4×16 as the portable fallback. The kernel is resolved once per GEMM
+//   on the submitting thread and handed to the row-chunk workers, so a
+//   single GEMM never mixes kernels.
+// * Rows are split into tile-height-aligned chunks across the thread
+//   pool for all three layouts (the old code ran TN serial; TN carries
+//   the entire backward pass). Per-row results are bit-identical
+//   regardless of the thread count because each output row is always
+//   accumulated in the same order.
 // * Epilogues (bias init, GELU) are fused into the row-chunk pass, so
 //   `linear` and the expert MLP first layer never re-traverse C.
+// * `matmul_grouped_into` runs many per-expert sub-GEMMs sharing one
+//   activation matrix as ONE pack pass + ONE parallel region over
+//   (group × row-chunk) tiles — the per-expert MLP path of all three
+//   MoE variants, where per-call overhead dominates at skinny shapes.
 //
 // There is deliberately NO `if a == 0.0 { skip }` branch in the inner
 // loops: it pessimizes the dense common case (branch per element). The
@@ -481,9 +494,10 @@ pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
 // structurally sparse (one-hot Identity dispatch in `moe::soft`).
 // ---------------------------------------------------------------------------
 
-/// Register microtile rows.
-const MR: usize = 4;
-/// Register microtile columns (two 8-lane AVX vectors per row).
+/// Register microtile columns, shared by every kernel (two 8-lane AVX
+/// vectors / four 4-lane NEON vectors per row). The packed-B layout is
+/// NR-wide regardless of which kernel consumes it; only the tile height
+/// (`kernel::Kernel::tile_rows`) varies per kernel.
 const NR: usize = 16;
 /// k-dimension cache block: KC·NR·4B = 16 KiB per packed panel (L1-sized).
 const KC: usize = 256;
@@ -550,47 +564,6 @@ fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     }
 }
 
-/// The register-tiled microkernel: accumulate an mr×nr tile of C
-/// (`c[(r)*ldc + j]`) with A rows `a[(r)*lda + kk]` against a packed
-/// kb×NR panel. `mr <= MR`, `nr <= NR`.
-#[inline(always)]
-fn microkernel(a: &[f32], lda: usize, bp: &[f32], kb: usize,
-               c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for r in 0..mr {
-        for j in 0..nr {
-            acc[r][j] = c[r * ldc + j];
-        }
-    }
-    if mr == MR && nr == NR {
-        // Full tile: const bounds let LLVM keep the tile in registers.
-        for kk in 0..kb {
-            let bw = &bp[kk * NR..(kk + 1) * NR];
-            for r in 0..MR {
-                let av = a[r * lda + kk];
-                for j in 0..NR {
-                    acc[r][j] += av * bw[j];
-                }
-            }
-        }
-    } else {
-        for kk in 0..kb {
-            let bw = &bp[kk * NR..(kk + 1) * NR];
-            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
-                let av = a[r * lda + kk];
-                for (j, av_acc) in accr.iter_mut().enumerate().take(nr) {
-                    *av_acc += av * bw[j];
-                }
-            }
-        }
-    }
-    for r in 0..mr {
-        for j in 0..nr {
-            c[r * ldc + j] = acc[r][j];
-        }
-    }
-}
-
 /// GEMM epilogue selector.
 #[derive(Clone, Copy)]
 enum Epilogue<'a> {
@@ -616,14 +589,16 @@ impl<'a> Epilogue<'a> {
 }
 
 /// Process output rows `rows` of C into `out_rows` (a dense slice holding
-/// exactly those rows): bias/zero init, k-blocked panel accumulation,
-/// optional fused GELU. `a` is the full contiguous (m, lda) A matrix.
+/// exactly those rows): bias/zero init, k-blocked panel accumulation
+/// through the dispatched microkernel `kern`, optional fused GELU. `a`
+/// is the full contiguous (m, lda) A matrix.
 fn gemm_rows(a: &[f32], lda: usize, bp: &[f32], k: usize, n: usize,
              rows: std::ops::Range<usize>, out_rows: &mut [f32],
-             ep: Epilogue) {
+             ep: Epilogue, kern: &kernel::Kernel) {
     let nrows = rows.len();
     debug_assert_eq!(out_rows.len(), nrows * n);
     let npanels = div_up(n, NR);
+    let mr_max = kern.mr;
     match ep.bias() {
         Some(bv) => {
             for r in 0..nrows {
@@ -642,22 +617,53 @@ fn gemm_rows(a: &[f32], lda: usize, bp: &[f32], k: usize, n: usize,
         let kb = KC.min(k - k0);
         let mut i0 = 0usize;
         while i0 < nrows {
-            let mr = MR.min(nrows - i0);
+            let mr = mr_max.min(nrows - i0);
             let abase = &a[(rows.start + i0) * lda + k0..];
             for p in 0..npanels {
                 let j0 = p * NR;
                 let nr = NR.min(n - j0);
                 let bpp = &bp[off_block + p * kb * NR..];
                 let c = &mut out_rows[i0 * n + j0..];
-                microkernel(abase, lda, bpp, kb, c, n, mr, nr);
+                // Safety: `kern` came from the dispatch layer (CPU
+                // features verified at selection) and the slice/shape
+                // contract of `kernel::MicroFn` holds by construction
+                // of the blocking loops above.
+                unsafe { (kern.micro)(abase, lda, bpp, kb, c, n, mr, nr) };
             }
-            i0 += MR;
+            i0 += mr_max;
         }
         off_block += npanels * kb * NR;
         k0 += kb;
     }
     if ep.wants_gelu() {
         for v in out_rows.iter_mut() {
+            *v = gelu(*v);
+        }
+    }
+}
+
+/// Complete small-problem GEMM: epilogue init (bias rows or zeros),
+/// direct accumulation via [`gemm_small`], trailing fused GELU. The one
+/// implementation of the below-`SMALL_FLOPS` path, shared by the single
+/// GEMM driver and the grouped driver so the epilogue semantics cannot
+/// diverge.
+fn gemm_small_ep(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
+                 rs: usize, cs: usize, out: &mut [f32], ep: Epilogue) {
+    match ep.bias() {
+        Some(bv) => {
+            for r in 0..m {
+                out[r * n..(r + 1) * n].copy_from_slice(bv);
+            }
+        }
+        None => {
+            for v in out.iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+    gemm_small(m, n, k, a, b, rs, cs, out);
+    if ep.wants_gelu() {
+        for v in out.iter_mut() {
             *v = gelu(*v);
         }
     }
@@ -704,28 +710,15 @@ fn gemm_driver(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
     }
     let flops = 2 * m * n * k;
     if k == 0 || flops < SMALL_FLOPS {
-        // Init + direct accumulation; packing would cost more than it saves.
-        match ep.bias() {
-            Some(bv) => {
-                for r in 0..m {
-                    out[r * n..(r + 1) * n].copy_from_slice(bv);
-                }
-            }
-            None => {
-                for v in out.iter_mut() {
-                    *v = 0.0;
-                }
-            }
-        }
-        gemm_small(m, n, k, a, b, rs_b, cs_b, out);
-        if ep.wants_gelu() {
-            for v in out.iter_mut() {
-                *v = gelu(*v);
-            }
-        }
+        // Direct accumulation; packing would cost more than it saves.
+        gemm_small_ep(m, n, k, a, b, rs_b, cs_b, out, ep);
         return;
     }
 
+    // Resolve the microkernel once on the submitting thread; the row
+    // chunks below inherit it (one GEMM never mixes kernels even if a
+    // worker's own dispatch would differ).
+    let kern = kernel::active();
     let npanels = div_up(n, NR);
     let bp = {
         let mut bp = ws.take(k * npanels * NR);
@@ -734,13 +727,14 @@ fn gemm_driver(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
     };
 
     if flops < PAR_FLOPS || !crate::threadpool::parallelism_available() {
-        gemm_rows(a, k, &bp, k, n, 0..m, out, ep);
+        gemm_rows(a, k, &bp, k, n, 0..m, out, ep, kern);
     } else {
-        // MR-aligned row chunks; each thread owns disjoint output rows.
-        // pool_threads() is the pool's cached size (no env read per GEMM,
-        // and always consistent with the threads that will actually run).
+        // Tile-height-aligned row chunks; each thread owns disjoint
+        // output rows. pool_threads() is the pool's cached size (no env
+        // read per GEMM, and always consistent with the threads that
+        // will actually run).
         let threads = crate::threadpool::pool_threads();
-        let rows_per = div_up(div_up(m, threads * 4), MR) * MR;
+        let rows_per = div_up(div_up(m, threads * 4), kern.mr) * kern.mr;
         let nchunks = div_up(m, rows_per);
         let out_ptr = SendPtr(out.as_mut_ptr());
         let bp_ref: &[f32] = &bp;
@@ -748,7 +742,7 @@ fn gemm_driver(m: usize, n: usize, k: usize, a: &[f32], b: &[f32],
             let r0 = c * rows_per;
             let r1 = (r0 + rows_per).min(m);
             let slice = unsafe { out_ptr.slice(r0 * n, (r1 - r0) * n) };
-            gemm_rows(a, k, bp_ref, k, n, r0..r1, slice, ep);
+            gemm_rows(a, k, bp_ref, k, n, r0..r1, slice, ep, kern);
         });
     }
     ws.give(bp);
@@ -915,6 +909,173 @@ pub fn matmul_bias_gelu_slice_into(a: &Tensor, b: &[f32], n: usize,
     assert_eq!(bias.len(), n);
     assert_eq!(out.len(), m * n);
     gemm_driver(m, n, k, &a.data, b, n, 1, out, Epilogue::BiasGelu(bias), ws);
+}
+
+// ---------------------------------------------------------------------------
+// Grouped GEMM — the per-expert MLP path of all three MoE variants.
+// ---------------------------------------------------------------------------
+
+/// Grouped fused GEMM over expert sub-problems sharing one activation
+/// matrix.
+///
+/// `a` is (n_groups·stride, k) row-major; group `g` owns rows
+/// `[g·stride, g·stride + rows_g)` where `rows_g = rows[g]` (or `stride`
+/// for every group when `rows` is `None`). Its weight matrix is the
+/// row-major (k, n) slice `b_stacked[g·k·n ..]` and its bias the
+/// length-n slice `bias_stacked[g·n ..]`. For every group this computes
+///
+/// ```text
+/// out[row block g] = act(A[row block g] · B_g + bias_g)
+/// ```
+///
+/// with `act` = GELU when `apply_gelu` (requires a bias), identity
+/// otherwise, writing into the same row indexing of `out`
+/// (n_groups·stride, n). Rows past `rows_g` in a group's block (stale
+/// gather slots in the sparse routers) are neither read nor written.
+///
+/// This replaces `n_groups` separate kernel calls with ONE pack pass
+/// over all weight matrices and ONE parallel region over
+/// (group × row-chunk) tiles: at the skinny per-expert shapes (rows_g =
+/// slots per expert, or a router's buffer fill) the per-call pack and
+/// region-publish overhead dominates, and a single region wakes the
+/// pool once instead of n times. All scratch (packed panels, pack
+/// offsets, chunk prefix) comes from `ws` — zero allocations at steady
+/// state. Per-element accumulation order is fixed (ascending k), so
+/// results are deterministic and identical between the serial and
+/// parallel paths for a given dispatched kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_grouped_into(
+    a: &Tensor,
+    b_stacked: &[f32],
+    bias_stacked: Option<&[f32]>,
+    n: usize,
+    stride: usize,
+    rows: Option<&[usize]>,
+    apply_gelu: bool,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (rows_total, k) = a.dims2();
+    assert!(n > 0 && k > 0 && stride > 0,
+            "grouped GEMM needs positive k ({k}), n ({n}), stride ({stride})");
+    assert_eq!(b_stacked.len() % (k * n), 0,
+               "stacked B len {} not a multiple of {k}x{n}", b_stacked.len());
+    let ng = b_stacked.len() / (k * n);
+    assert_eq!(rows_total, ng * stride,
+               "A rows {rows_total} vs {ng} groups x stride {stride}");
+    assert_eq!(out.len(), rows_total * n);
+    if let Some(b) = bias_stacked {
+        assert_eq!(b.len(), ng * n, "stacked bias len {} vs {ng}x{n}", b.len());
+    }
+    if let Some(r) = rows {
+        assert_eq!(r.len(), ng);
+        assert!(r.iter().all(|&rg| rg <= stride),
+                "group rows exceed stride {stride}");
+    }
+    assert!(!apply_gelu || bias_stacked.is_some(),
+            "the GELU epilogue requires a bias");
+
+    let rows_of = move |g: usize| rows.map_or(stride, |r| r[g]);
+    let active_rows: usize = (0..ng).map(rows_of).sum();
+    if active_rows == 0 {
+        return;
+    }
+    let ep_of = move |g: usize| match bias_stacked {
+        None => Epilogue::None,
+        Some(b) => {
+            let bg = &b[g * n..(g + 1) * n];
+            if apply_gelu {
+                Epilogue::BiasGelu(bg)
+            } else {
+                Epilogue::Bias(bg)
+            }
+        }
+    };
+
+    let flops = 2 * active_rows * n * k;
+    if flops < SMALL_FLOPS {
+        // Direct strided loops per group; packing would cost more than
+        // it saves (same threshold and epilogue path as the single-GEMM
+        // driver).
+        for g in 0..ng {
+            let m_g = rows_of(g);
+            if m_g == 0 {
+                continue;
+            }
+            let r0 = g * stride;
+            gemm_small_ep(m_g, n, k, &a.data[r0 * k..],
+                          &b_stacked[g * k * n..(g + 1) * k * n], n, 1,
+                          &mut out[r0 * n..(r0 + m_g) * n], ep_of(g));
+        }
+        return;
+    }
+
+    let kern = kernel::active();
+    // Pack every active group's weights once into one arena buffer.
+    let npanels = div_up(n, NR);
+    let panel = k * npanels * NR;
+    let nactive = (0..ng).filter(|&g| rows_of(g) > 0).count();
+    let mut bp = ws.take(nactive * panel);
+    let mut pack_off = ws.take_idx(ng);
+    {
+        let mut off = 0usize;
+        for g in 0..ng {
+            pack_off[g] = off;
+            if rows_of(g) == 0 {
+                continue;
+            }
+            pack_b(&b_stacked[g * k * n..(g + 1) * k * n], n, 1, k, n,
+                   &mut bp[off..off + panel]);
+            off += panel;
+        }
+    }
+
+    if flops < PAR_FLOPS || !crate::threadpool::parallelism_available() {
+        for g in 0..ng {
+            let m_g = rows_of(g);
+            if m_g == 0 {
+                continue;
+            }
+            let r0 = g * stride;
+            gemm_rows(&a.data, k, &bp[pack_off[g]..], k, n, r0..r0 + m_g,
+                      &mut out[r0 * n..(r0 + m_g) * n], ep_of(g), kern);
+        }
+    } else {
+        // ONE region over (group × row-chunk) tiles. Chunk boundaries
+        // are tile-height-aligned from each group's base row, so the
+        // parallel split is bit-identical to the serial loop above.
+        let threads = crate::threadpool::pool_threads();
+        let rows_per =
+            div_up(div_up(active_rows, threads * 4), kern.mr) * kern.mr;
+        let mut chunk_start = ws.take_idx(ng + 1);
+        let mut acc = 0usize;
+        for g in 0..ng {
+            chunk_start[g] = acc;
+            acc += div_up(rows_of(g), rows_per);
+        }
+        chunk_start[ng] = acc;
+        let nchunks = acc;
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let bp_ref: &[f32] = &bp;
+        let off_ref: &[usize] = &pack_off;
+        let cs_ref: &[usize] = &chunk_start;
+        parallel_for(nchunks, |c| {
+            // Owning group: last prefix entry <= c (empty groups share a
+            // prefix value with their successor and are skipped by the
+            // partition point landing past them).
+            let g = cs_ref[..ng].partition_point(|&s| s <= c) - 1;
+            let local = c - cs_ref[g];
+            let m_g = rows_of(g);
+            let r0 = g * stride + local * rows_per;
+            let r1 = (g * stride + m_g).min(r0 + rows_per);
+            let slice = unsafe { out_ptr.slice(r0 * n, (r1 - r0) * n) };
+            gemm_rows(&a.data, k, &bp_ref[off_ref[g]..], k, n, r0..r1,
+                      slice, ep_of(g), kern);
+        });
+        ws.give_idx(chunk_start);
+    }
+    ws.give_idx(pack_off);
+    ws.give(bp);
 }
 
 struct SendPtr(*mut f32);
@@ -1252,6 +1413,126 @@ mod tests {
             let unfused_g = unfused.map(gelu);
             assert!(fused_g.max_diff(&unfused_g) < 1e-5, "gelu ({m},{k},{n})");
         }
+    }
+
+    #[test]
+    fn grouped_matmul_matches_per_group_calls() {
+        // Uniform groups (the Soft MoE expert shape): every epilogue,
+        // shapes covering ragged tiles, the KC boundary, and the
+        // packed/parallel paths.
+        let mut rng = Rng::new(20);
+        let mut ws = Workspace::new();
+        for &(ng, stride, k, n) in &[
+            (3usize, 2usize, 8usize, 12usize), // tiny (direct path)
+            (5, 4, 33, 17),                    // ragged mr/nr edge tiles
+            (4, 40, 300, 48),                  // crosses KC, parallel path
+        ] {
+            let a = Tensor::randn(&[ng * stride, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[ng, k, n], 1.0, &mut rng);
+            let bias = Tensor::randn(&[ng, n], 0.5, &mut rng);
+            let tol = 1e-4 * (k as f32);
+            for (gelu_ep, with_bias) in
+                [(false, false), (false, true), (true, true)] {
+                let bs = if with_bias { Some(&bias.data[..]) } else { None };
+                let mut got = vec![0.0f32; ng * stride * n];
+                matmul_grouped_into(&a, &b.data, bs, n, stride, None,
+                                    gelu_ep, &mut got, &mut ws);
+                let mut want = vec![0.0f32; ng * stride * n];
+                for g in 0..ng {
+                    let ag = a.rows(g * stride, (g + 1) * stride);
+                    let bg = &b.data[g * k * n..(g + 1) * k * n];
+                    let og = &mut want[g * stride * n..(g + 1) * stride * n];
+                    match (gelu_ep, with_bias) {
+                        (true, _) => matmul_bias_gelu_slice_into(
+                            &ag, bg, n, &bias.data[g * n..(g + 1) * n], og,
+                            &mut ws),
+                        (false, true) => matmul_bias_slice_into(
+                            &ag, bg, n, &bias.data[g * n..(g + 1) * n], og,
+                            &mut ws),
+                        (false, false) => {
+                            matmul_slice_into(&ag, bg, n, og, &mut ws)
+                        }
+                    }
+                }
+                for (x, y) in got.iter().zip(&want) {
+                    assert!((x - y).abs() < tol,
+                            "({ng},{stride},{k},{n}) gelu={gelu_ep} \
+                             bias={with_bias}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_matmul_variable_rows_skips_inactive() {
+        // Sparse-router shape: per-group fills below the stride, empty
+        // groups. Rows past a group's fill must be neither read (stale
+        // gather slots hold NaN here) nor written (sentinel survives).
+        let mut rng = Rng::new(21);
+        let mut ws = Workspace::new();
+        // Sized so the packed-kernel path runs (active flops above the
+        // direct-loop threshold) with ragged edge tiles in both dims.
+        let (ng, stride, k, n) = (4usize, 4usize, 65usize, 40usize);
+        let rows = [3usize, 0, 4, 1];
+        let mut a = Tensor::randn(&[ng * stride, k], 1.0, &mut rng);
+        for g in 0..ng {
+            for r in rows[g]..stride {
+                for v in a.row_mut(g * stride + r) {
+                    *v = f32::NAN; // stale slots must never be read
+                }
+            }
+        }
+        let b = Tensor::randn(&[ng, k, n], 1.0, &mut rng);
+        let bias = Tensor::randn(&[ng, n], 0.5, &mut rng);
+        let mut got = vec![7.5f32; ng * stride * n];
+        matmul_grouped_into(&a, &b.data, Some(&bias.data), n, stride,
+                            Some(&rows), true, &mut got, &mut ws);
+        let tol = 1e-4 * (k as f32);
+        for g in 0..ng {
+            for r in 0..stride {
+                let orow = &got[(g * stride + r) * n..(g * stride + r + 1) * n];
+                if r < rows[g] {
+                    let ar = a.rows(g * stride + r, g * stride + r + 1);
+                    let mut want = vec![0.0f32; n];
+                    matmul_bias_gelu_slice_into(
+                        &ar, &b.data[g * k * n..(g + 1) * k * n], n,
+                        &bias.data[g * n..(g + 1) * n], &mut want, &mut ws);
+                    for (x, y) in orow.iter().zip(&want) {
+                        assert!((x - y).abs() < tol, "g{g} r{r}: {x} vs {y}");
+                    }
+                } else {
+                    assert!(orow.iter().all(|&v| v == 7.5),
+                            "g{g} r{r}: inactive row was written");
+                }
+            }
+        }
+        // All-empty: a no-op.
+        let mut untouched = vec![3.25f32; ng * stride * n];
+        matmul_grouped_into(&a, &b.data, Some(&bias.data), n, stride,
+                            Some(&[0, 0, 0, 0]), true, &mut untouched,
+                            &mut ws);
+        assert!(untouched.iter().all(|&v| v == 3.25));
+    }
+
+    #[test]
+    fn grouped_matmul_steady_state_no_allocs() {
+        let mut rng = Rng::new(22);
+        let mut ws = Workspace::new();
+        let (ng, stride, k, n) = (6usize, 4usize, 48usize, 32usize);
+        let a = Tensor::randn(&[ng * stride, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[ng, k, n], 1.0, &mut rng);
+        let bias = Tensor::randn(&[ng, n], 0.5, &mut rng);
+        let rows = [4usize, 2, 0, 4, 1, 3];
+        let mut out = vec![0.0f32; ng * stride * n];
+        matmul_grouped_into(&a, &b.data, Some(&bias.data), n, stride,
+                            Some(&rows), true, &mut out, &mut ws);
+        let warm = ws.fresh_allocs();
+        for _ in 0..5 {
+            matmul_grouped_into(&a, &b.data, Some(&bias.data), n, stride,
+                                Some(&rows), true, &mut out, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "steady-state grouped GEMM must not allocate");
     }
 
     #[test]

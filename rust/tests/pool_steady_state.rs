@@ -89,6 +89,32 @@ fn batched_forward_steady_state_zero_spawns_zero_ws_allocs() {
         );
     }
 
+    // Partial-region participation: a 2-chunk region needs exactly ONE
+    // worker ack (min(workers, chunks - 1)), no matter how many workers
+    // the pool has — surplus workers must skip via the claims counter
+    // instead of acking. Deterministic here because this binary runs no
+    // concurrent regions that could add acks. (Under the old
+    // full-participation protocol every region cost `workers` acks, so
+    // this assertion fails if claim-skipping regresses.)
+    let workers = threadpool::pool_threads() - 1;
+    if workers > 0 {
+        let rounds = 20;
+        let acks = threadpool::ack_count();
+        for _ in 0..rounds {
+            let hits = std::sync::atomic::AtomicUsize::new(0);
+            threadpool::parallel_for(2, |_| {
+                hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(std::sync::atomic::Ordering::Relaxed), 2);
+        }
+        assert_eq!(
+            threadpool::ack_count() - acks,
+            rounds,
+            "a 2-chunk region must cost exactly 1 worker ack \
+             (surplus workers skip), got more"
+        );
+    }
+
     // And worker workspaces really are resident across regions: a warm
     // take of an odd, large size must be served from the pool.
     threadpool::run_on_each_worker(|_w| {

@@ -13,8 +13,9 @@ use softmoe::config::{ModelConfig, MoeType};
 use softmoe::json::Value;
 use softmoe::tensor::{
     kernel, matmul_bias_gelu_into, matmul_bias_gelu_slice_into,
-    matmul_grouped_into, matmul_into, matmul_nt_into, matmul_tn_into,
-    Tensor, Workspace,
+    matmul_bias_into, matmul_bias_prepacked_into, matmul_grouped_into,
+    matmul_grouped_prepacked_into, matmul_into, matmul_nt_into,
+    matmul_tn_into, PackedPanels, Tensor, WeightDtype, Workspace,
 };
 use softmoe::util::Rng;
 
@@ -203,6 +204,91 @@ fn main() {
         grouped_rows.push(o);
     }
 
+    // Prepacked weights vs the per-call pack at the weight-GEMM preset
+    // shapes (the serve acceptance criterion: speedup > 1.0), plus bf16
+    // panel storage vs f32 (halved weight-side memory traffic).
+    println!("\n== prepacked weights vs per-call pack ==");
+    let mut prepacked_rows: Vec<Value> = Vec::new();
+    for size in sizes {
+        let cfg = ModelConfig::preset(size, MoeType::Soft).unwrap();
+        let m = cfg.tokens();
+        let d = cfg.dim;
+        let mlp = cfg.mlp_dim;
+        let pd = cfg.patch_dim();
+        for (name, k, n) in [("patch_embed", pd, d), ("attn_proj", d, d),
+                             ("mlp1", d, mlp), ("mlp2", mlp, d)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[k, n], 0.5, &mut rng);
+            let bias = vec![0.01f32; n];
+            let mut out = vec![0.0f32; m * n];
+            let t_repack =
+                bench.run(&format!("{size}/{name}/repack"), || {
+                    matmul_bias_into(&a, &w, &bias, &mut out, &mut ws);
+                    black_box(&out);
+                });
+            let wp = PackedPanels::pack(&w, WeightDtype::F32);
+            let t_pre =
+                bench.run(&format!("{size}/{name}/prepacked_f32"), || {
+                    matmul_bias_prepacked_into(&a, &wp, &bias, &mut out,
+                                               &mut ws);
+                    black_box(&out);
+                });
+            let wp16 = PackedPanels::pack(&w, WeightDtype::Bf16);
+            let t_b16 =
+                bench.run(&format!("{size}/{name}/prepacked_bf16"), || {
+                    matmul_bias_prepacked_into(&a, &wp16, &bias, &mut out,
+                                               &mut ws);
+                    black_box(&out);
+                });
+            println!(
+                "    -> {size}/{name}: repack/prepacked {:.2}x, \
+                 repack/bf16 {:.2}x",
+                t_repack / t_pre,
+                t_repack / t_b16
+            );
+            let mut o = Value::obj();
+            o.set("name", Value::Str(format!("{size}/{name}")));
+            o.set("m", Value::Num(m as f64));
+            o.set("k", Value::Num(k as f64));
+            o.set("n", Value::Num(n as f64));
+            o.set("repack_ms", Value::Num(t_repack * 1e3));
+            o.set("prepacked_f32_ms", Value::Num(t_pre * 1e3));
+            o.set("prepacked_bf16_ms", Value::Num(t_b16 * 1e3));
+            o.set("speedup", Value::Num(t_repack / t_pre));
+            o.set("bf16_speedup", Value::Num(t_repack / t_b16));
+            prepacked_rows.push(o);
+        }
+        // The grouped expert shape through the prepacked grouped driver.
+        let (ng, sp, eh) =
+            (cfg.num_experts, cfg.slots_per_expert, cfg.expert_hidden);
+        let xs = Tensor::randn(&[ng * sp, d], 1.0, &mut rng);
+        let w1 = Tensor::randn(&[ng, d, eh], 0.1, &mut rng);
+        let b1 = Tensor::randn(&[ng, eh], 0.1, &mut rng);
+        let mut hid = vec![0.0f32; ng * sp * eh];
+        let t_grouped =
+            bench.run(&format!("{size}/experts/grouped_repack"), || {
+                matmul_grouped_into(&xs, &w1.data, Some(&b1.data), eh, sp,
+                                    None, true, &mut hid, &mut ws);
+                black_box(&hid);
+            });
+        let w1p = PackedPanels::pack_grouped(&w1.data, d, eh,
+                                             WeightDtype::F32);
+        let t_gpre =
+            bench.run(&format!("{size}/experts/grouped_prepacked"), || {
+                matmul_grouped_prepacked_into(&xs, &w1p, Some(&b1.data), sp,
+                                              None, true, &mut hid, &mut ws);
+                black_box(&hid);
+            });
+        println!("    -> {size}/experts: grouped repack/prepacked {:.2}x",
+                 t_grouped / t_gpre);
+        let mut o = Value::obj();
+        o.set("name", Value::Str(format!("{size}/experts_grouped")));
+        o.set("repack_ms", Value::Num(t_grouped * 1e3));
+        o.set("prepacked_f32_ms", Value::Num(t_gpre * 1e3));
+        o.set("speedup", Value::Num(t_grouped / t_gpre));
+        prepacked_rows.push(o);
+    }
+
     let mut root = Value::obj();
     root.set("bench", Value::Str("gemm".into()));
     root.set("threads",
@@ -213,6 +299,7 @@ fn main() {
     root.set("results", Value::Arr(rows));
     root.set("kernels", Value::Arr(kernel_rows));
     root.set("grouped", Value::Arr(grouped_rows));
+    root.set("prepacked", Value::Arr(prepacked_rows));
     let path = std::path::Path::new("reports/BENCH_GEMM.json");
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);

@@ -8,12 +8,14 @@ use std::time::Duration;
 
 use softmoe::bench::{black_box, Bench};
 use softmoe::config::{Manifest, ModelConfig, MoeType};
+use softmoe::json::Value;
 use softmoe::metrics::Registry;
+use softmoe::nn::{PreparedModel, VitModel};
 use softmoe::runtime::native::NativeRuntime;
 use softmoe::runtime::pjrt::PjrtRuntime;
 use softmoe::runtime::Backend;
 use softmoe::serve::{BatchPolicy, Server};
-use softmoe::tensor::Tensor;
+use softmoe::tensor::{Tensor, WeightDtype};
 use softmoe::util::Rng;
 
 fn rand_images(b: usize, size: usize, seed: u64) -> Tensor {
@@ -49,6 +51,40 @@ fn main() {
             });
             println!("    -> {:.3} ms/img", t * 1e3 / 8.0);
         }
+    }
+
+    // --- Prepared (prepacked-weight) native inference: repack vs
+    // prepacked, and f32 vs bf16 panel storage, in tokens/s.
+    println!("\n== prepared-model inference (native soft, batch 8) ==");
+    let mut prepared_rows: Vec<Value> = Vec::new();
+    for size in sizes {
+        let cfg = ModelConfig::preset(size, MoeType::Soft).unwrap();
+        let model = VitModel::new(cfg.clone());
+        let params = model.init(0);
+        let images = rand_images(8, cfg.image_size, 3);
+        let tokens = (8 * cfg.tokens()) as f64;
+        let t_repack = bench.run(&format!("prepared/{size}/repack_b8"), || {
+            black_box(model.forward(&params, &images));
+        });
+        let mut row = Value::obj();
+        row.set("name", Value::Str(format!("soft_{size}/b8")));
+        row.set("repack_tokens_per_s", Value::Num(tokens / t_repack));
+        for dtype in [WeightDtype::F32, WeightDtype::Bf16] {
+            let prep = PreparedModel::new(&model, &params, dtype);
+            let t = bench.run(
+                &format!("prepared/{size}/{}_b8", dtype.name()), || {
+                    black_box(prep.forward(&images));
+                });
+            println!(
+                "    -> {size}/{}: {:.0} tokens/s ({:.2}x vs repack)",
+                dtype.name(), tokens / t, t_repack / t
+            );
+            row.set(&format!("{}_tokens_per_s", dtype.name()),
+                    Value::Num(tokens / t));
+            row.set(&format!("{}_speedup_vs_repack", dtype.name()),
+                    Value::Num(t_repack / t));
+        }
+        prepared_rows.push(row);
     }
 
     // --- PJRT: every model in the manifest at each compiled batch size.
@@ -127,7 +163,15 @@ fn main() {
     );
     let _ = bench.save_csv(std::path::Path::new(
         "reports/bench_inference.csv"));
-    // Machine-readable perf trajectory (tracked across PRs).
-    let _ = bench.save_json(std::path::Path::new(
-        "reports/BENCH_INFERENCE.json"));
+    // Machine-readable perf trajectory (tracked across PRs), including
+    // the prepacked f32-vs-bf16 tokens/s comparison.
+    let mut root = bench.to_json();
+    root.set("prepared", Value::Arr(prepared_rows));
+    let path = std::path::Path::new("reports/BENCH_INFERENCE.json");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(path, root.to_string()) {
+        eprintln!("could not write {path:?}: {e}");
+    }
 }

@@ -99,6 +99,9 @@ struct RegistryInner {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     histograms: BTreeMap<String, Histogram>,
+    /// Non-numeric facts (e.g. the prepacked weight dtype): last write
+    /// wins, emitted alongside counters/gauges in `to_json`.
+    labels: BTreeMap<String, String>,
 }
 
 impl Registry {
@@ -121,8 +124,22 @@ impl Registry {
         g.histograms.entry(name.to_string()).or_default().record(v);
     }
 
+    /// Record a non-numeric fact (e.g. `model/weight_dtype` = "bf16").
+    pub fn set_label(&self, name: &str, v: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.labels.insert(name.to_string(), v.to_string());
+    }
+
+    pub fn label(&self, name: &str) -> Option<String> {
+        self.inner.lock().unwrap().labels.get(name).cloned()
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
     }
 
     pub fn histogram(&self, name: &str) -> Option<Histogram> {
@@ -152,9 +169,14 @@ impl Registry {
                 ("max", Value::from(h.max())),
             ]));
         }
+        let mut labels = Value::obj();
+        for (k, v) in &g.labels {
+            labels.set(k, Value::Str(v.clone()));
+        }
         root.set("counters", counters);
         root.set("gauges", gauges);
         root.set("histograms", hists);
+        root.set("labels", labels);
         root
     }
 }
@@ -276,6 +298,20 @@ mod tests {
                    Some(2.0));
         assert_eq!(j.get("gauges").unwrap().get("g").unwrap().as_f64(),
                    Some(1.5));
+    }
+
+    #[test]
+    fn registry_labels_and_gauge_reads() {
+        let reg = Registry::new();
+        reg.set_label("model/weight_dtype", "bf16");
+        reg.set_label("model/weight_dtype", "f32"); // last write wins
+        reg.set_gauge("model/prepacked_bytes", 1024.0);
+        assert_eq!(reg.label("model/weight_dtype").as_deref(), Some("f32"));
+        assert_eq!(reg.label("missing"), None);
+        assert_eq!(reg.gauge("model/prepacked_bytes"), Some(1024.0));
+        assert_eq!(reg.gauge("missing"), None);
+        let j = reg.to_json();
+        assert!(j.get("labels").unwrap().get("model/weight_dtype").is_some());
     }
 
     #[test]

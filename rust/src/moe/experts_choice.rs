@@ -9,10 +9,11 @@
 //! ([`ExpertsChoice::route_core`]): zero decision-step allocations at
 //! steady state.
 
-use crate::moe::{ExpertParams, RoutingStats};
+use crate::moe::{ExpertParams, PreparedSparseRouter, RoutingStats};
 use crate::tensor::{
-    matmul, matmul_grouped_into, matmul_into, softmax_rows,
-    softmax_rows_inplace, with_workspace, RouteEntry, Tensor, Workspace,
+    matmul, matmul_grouped_into, matmul_into, matmul_prepacked_into,
+    softmax_rows, softmax_rows_inplace, with_workspace, RouteEntry, Tensor,
+    WeightDtype, Workspace,
 };
 use crate::util::Rng;
 
@@ -143,6 +144,49 @@ impl ExpertsChoice {
         };
         (y, stats)
     }
+
+    /// Prepack the gate matrix and expert weights for inference.
+    pub fn prepare(&self, dtype: WeightDtype) -> PreparedSparseRouter {
+        PreparedSparseRouter::new(&self.wg, &self.experts, dtype)
+    }
+
+    /// [`ExpertsChoice::forward_with_stats_ws`] over prepacked
+    /// parameters: the gate GEMM and both grouped expert GEMMs skip the
+    /// pack pass; the top-C selection reads the same gate values, so f32
+    /// prepacks keep the assignment — and the output — bit-identical.
+    /// The expert compute is the shared
+    /// [`crate::moe::sparse_experts_apply_prepacked`] step (EC fills
+    /// every slot, so the tracked fills equal `cap` for every expert).
+    pub fn forward_with_stats_prepacked_ws(&self, prep: &PreparedSparseRouter,
+                                           x: &Tensor, ws: &mut Workspace)
+        -> (Tensor, RoutingStats) {
+        let (t, d) = x.dims2();
+        let n = self.num_experts();
+        debug_assert_eq!(prep.experts.num_experts(), n);
+        let mut gates = ws.take_tensor(&[t, n]);
+        matmul_prepacked_into(x, &prep.wg, &mut gates.data, ws);
+        softmax_rows_inplace(&mut gates);
+        let mut kept = ws.take_route();
+        let cap = self.route_core(&gates, &mut kept, ws);
+        ws.give_tensor(gates);
+
+        let mut y = Tensor::zeros(&[t, d]);
+        let mut expert_load = vec![0.0f64; n];
+        let mut token_weight = vec![0.0f64; t];
+        crate::moe::sparse_experts_apply_prepacked(
+            x, &kept, cap, &prep.experts, &mut y.data,
+            Some((&mut expert_load, &mut token_weight)), ws);
+        ws.give_route(kept);
+
+        let dropped = token_weight.iter().filter(|&&w| w == 0.0).count();
+        let stats = RoutingStats {
+            dropped_frac: dropped as f64 / t as f64,
+            expert_load,
+            token_weight,
+            slot_importance: vec![],
+        };
+        (y, stats)
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +264,34 @@ mod tests {
         }
         assert_eq!(ws.fresh_allocs(), warm,
                    "forward_with_stats_ws must not allocate at steady state");
+    }
+
+    #[test]
+    fn prepacked_forward_bit_identical_f32() {
+        let (ec, x) = layer(32, 8, 8);
+        let prep = ec.prepare(WeightDtype::F32);
+        let mut ws = Workspace::new();
+        let (want, ws_stats) = ec.forward_with_stats_ws(&x, &mut ws);
+        let (got, p_stats) =
+            ec.forward_with_stats_prepacked_ws(&prep, &x, &mut ws);
+        assert_eq!(got.data, want.data);
+        assert_eq!(p_stats.dropped_frac, ws_stats.dropped_frac);
+        assert_eq!(p_stats.expert_load, ws_stats.expert_load);
+        assert_eq!(p_stats.token_weight, ws_stats.token_weight);
+    }
+
+    #[test]
+    fn prepacked_forward_steady_state_no_allocs() {
+        let (ec, x) = layer(32, 8, 8);
+        let prep = ec.prepare(WeightDtype::F32);
+        let mut ws = Workspace::new();
+        ec.forward_with_stats_prepacked_ws(&prep, &x, &mut ws);
+        let warm = ws.fresh_allocs();
+        for _ in 0..4 {
+            ec.forward_with_stats_prepacked_ws(&prep, &x, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "prepacked forward must not allocate at steady state");
     }
 
     #[test]

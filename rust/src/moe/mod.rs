@@ -14,11 +14,14 @@ pub mod stats;
 pub mod tokens_choice;
 
 pub use experts_choice::ExpertsChoice;
-pub use soft::SoftMoe;
+pub use soft::{PreparedSoftMoe, SoftMoe};
 pub use stats::RoutingStats;
 pub use tokens_choice::TokensChoice;
 
-use crate::tensor::{with_workspace, RouteEntry, Tensor, Workspace};
+use crate::tensor::{
+    matmul_grouped_prepacked_into, with_workspace, PackedPanels, RouteEntry,
+    Tensor, WeightDtype, Workspace,
+};
 use crate::util::Rng;
 
 // ---------------------------------------------------------------------------
@@ -244,6 +247,150 @@ impl ExpertParams {
     pub fn param_count(&self) -> usize {
         self.w1.numel() + self.b1.numel() + self.w2.numel() + self.b2.numel()
     }
+
+    /// Prepack both expert layers for inference ([`PreparedExperts`]).
+    pub fn prepare(&self, dtype: WeightDtype) -> PreparedExperts {
+        PreparedExperts::new(self, dtype)
+    }
+}
+
+/// The stacked expert MLP weights prepacked into grouped kernel panels
+/// (one group per expert, ready for
+/// [`crate::tensor::matmul_grouped_prepacked_into`]), biases owned.
+/// Built once at prepare time; the per-call grouped pack pass is gone.
+#[derive(Clone, Debug)]
+pub struct PreparedExperts {
+    pub w1: PackedPanels,
+    pub b1: Vec<f32>,
+    pub w2: PackedPanels,
+    pub b2: Vec<f32>,
+}
+
+impl PreparedExperts {
+    pub fn new(ep: &ExpertParams, dtype: WeightDtype) -> Self {
+        Self::from_stacked(&ep.w1, &ep.b1, &ep.w2, &ep.b2, dtype)
+    }
+
+    /// Prepack from raw stacked tensors in the manifest layout:
+    /// w1 (n, d, h), b1 (n, h), w2 (n, h, d_out), b2 (n, d_out) — the
+    /// form both [`ExpertParams`] and the `ParamStore` hold.
+    pub fn from_stacked(w1: &Tensor, b1: &Tensor, w2: &Tensor, b2: &Tensor,
+                        dtype: WeightDtype) -> Self {
+        assert_eq!(w1.rank(), 3, "stacked w1 must be (n, d, h)");
+        assert_eq!(w2.rank(), 3, "stacked w2 must be (n, h, d_out)");
+        let (d, h) = (w1.shape[1], w1.shape[2]);
+        let d_out = w2.shape[2];
+        assert_eq!(w2.shape[1], h, "w1/w2 hidden widths disagree");
+        Self {
+            w1: PackedPanels::pack_grouped(&w1.data, d, h, dtype),
+            b1: b1.data.clone(),
+            w2: PackedPanels::pack_grouped(&w2.data, h, d_out, dtype),
+            b2: b2.data.clone(),
+        }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.w1.groups()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.w1.n_cols()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.w2.n_cols()
+    }
+
+    pub fn dtype(&self) -> WeightDtype {
+        self.w1.dtype()
+    }
+
+    /// Bytes resident in the prepacked panels + biases.
+    pub fn resident_bytes(&self) -> usize {
+        self.w1.resident_bytes() + self.w2.resident_bytes()
+            + 4 * (self.b1.len() + self.b2.len())
+    }
+}
+
+/// A sparse router's inference parameters prepacked: the gate matrix and
+/// the grouped expert panels. Shared by [`TokensChoice`] and
+/// [`ExpertsChoice`] (their `prepare` methods build one).
+#[derive(Clone, Debug)]
+pub struct PreparedSparseRouter {
+    pub wg: PackedPanels,
+    pub experts: PreparedExperts,
+}
+
+impl PreparedSparseRouter {
+    pub fn new(wg: &Tensor, experts: &ExpertParams, dtype: WeightDtype)
+        -> Self {
+        Self {
+            wg: PackedPanels::pack(wg, dtype),
+            experts: PreparedExperts::new(experts, dtype),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.wg.resident_bytes() + self.experts.resident_bytes()
+    }
+}
+
+/// The shared expert-compute step of every prepacked sparse path —
+/// both routers' `forward_with_stats_prepacked_ws` AND
+/// `nn::PreparedModel`'s fused sparse layer: gather each kept token into
+/// its expert's cap-strided block, run ALL expert MLPs as two grouped
+/// prepacked GEMMs, and scatter the gate-weighted outputs into the
+/// **pre-zeroed** `y` (row-major (t, d)), accumulating load/weight stats
+/// when the caller wants them. One implementation so the three call
+/// sites cannot drift. Per-expert fills are always tracked (for
+/// Experts-Choice every fill equals `cap`, which makes
+/// `rows = Some(fills)` behave exactly like the `None` its
+/// pack-per-call forward passes — bit-identical).
+pub(crate) fn sparse_experts_apply_prepacked(
+    x: &Tensor,
+    kept: &[RouteEntry],
+    cap: usize,
+    experts: &PreparedExperts,
+    y: &mut [f32],
+    mut stats: Option<(&mut [f64], &mut [f64])>,
+    ws: &mut Workspace,
+) {
+    let (t, d) = x.dims2();
+    let n = experts.num_experts();
+    let h = experts.hidden();
+    debug_assert_eq!(experts.d_out(), d);
+    debug_assert_eq!(y.len(), t * d);
+    let mut fills = ws.take_idx(n);
+    for f in fills.iter_mut() {
+        *f = 0;
+    }
+    let mut buf = ws.take_tensor(&[n * cap, d]);
+    for &(tok, e, _gate, pos) in kept {
+        buf.data[(e * cap + pos) * d..(e * cap + pos + 1) * d]
+            .copy_from_slice(x.row(tok));
+        fills[e] += 1;
+    }
+    let mut hid = ws.take_tensor(&[n * cap, h]);
+    let mut out = ws.take_tensor(&[n * cap, d]);
+    matmul_grouped_prepacked_into(&buf, &experts.w1, Some(&experts.b1), cap,
+                                  Some(&fills), true, &mut hid.data, ws);
+    matmul_grouped_prepacked_into(&hid, &experts.w2, Some(&experts.b2), cap,
+                                  Some(&fills), false, &mut out.data, ws);
+    for &(tok, e, gate, pos) in kept {
+        let src = &out.data[(e * cap + pos) * d..(e * cap + pos + 1) * d];
+        let dst = &mut y[tok * d..(tok + 1) * d];
+        for (o, s) in dst.iter_mut().zip(src) {
+            *o += gate * s;
+        }
+        if let Some((load, weight)) = stats.as_mut() {
+            load[e] += 1.0;
+            weight[tok] += 1.0;
+        }
+    }
+    ws.give_tensor(out);
+    ws.give_tensor(hid);
+    ws.give_tensor(buf);
+    ws.give_idx(fills);
 }
 
 #[cfg(test)]
@@ -274,5 +421,19 @@ mod tests {
         let mut rng = Rng::new(2);
         let ep = ExpertParams::new(4, 8, 16, &mut rng);
         assert_eq!(ep.param_count(), 4 * (8 * 16 + 16 + 16 * 8 + 8));
+    }
+
+    #[test]
+    fn prepared_experts_shapes_and_bytes() {
+        let mut rng = Rng::new(3);
+        let ep = ExpertParams::new(4, 8, 16, &mut rng);
+        let f = ep.prepare(WeightDtype::F32);
+        assert_eq!(f.num_experts(), 4);
+        assert_eq!(f.hidden(), 16);
+        assert_eq!(f.d_out(), 8);
+        assert_eq!(f.dtype(), WeightDtype::F32);
+        let h = ep.prepare(WeightDtype::Bf16);
+        assert!(h.resident_bytes() < f.resident_bytes(),
+                "bf16 prepack must shrink the resident footprint");
     }
 }

@@ -11,12 +11,13 @@
 //! `bench_step_time` bench reproduces against the sparse routers.
 
 use crate::config::MixMode;
-use crate::moe::{ExpertParams, RoutingStats};
+use crate::moe::{ExpertParams, PreparedExperts, RoutingStats};
 use crate::tensor::{
     l2_normalize_cols, l2_normalize_cols_inplace, l2_normalize_rows,
-    l2_normalize_rows_inplace, matmul, matmul_grouped_into, matmul_into,
+    l2_normalize_rows_inplace, matmul, matmul_grouped_into,
+    matmul_grouped_prepacked_into, matmul_into, matmul_prepacked_into,
     matmul_tn_into, softmax_cols_inplace, softmax_rows_inplace,
-    with_workspace, Tensor, Workspace,
+    with_workspace, PackedPanels, Tensor, WeightDtype, Workspace,
 };
 use crate::util::Rng;
 
@@ -189,6 +190,81 @@ impl SoftMoe {
         SoftMoeOutput { y, dispatch, combine }
     }
 
+    /// Prepack this layer's inference parameters. When the router is
+    /// normalized, `scale·l2norm_cols(Φ)` is input-independent, so it is
+    /// folded in here once ([`pack_phi_for_inference`]) — the per-call
+    /// normalize+scale pass over Φ disappears along with the pack pass.
+    pub fn prepare(&self, dtype: WeightDtype) -> PreparedSoftMoe {
+        let (d, s) = self.phi.dims2();
+        PreparedSoftMoe {
+            phi: pack_phi_for_inference(&self.phi.data, d, s, self.scale,
+                                        self.normalize, dtype),
+            experts: self.experts.prepare(dtype),
+        }
+    }
+
+    /// [`SoftMoe::forward_full_ws`] over prepacked parameters: the router
+    /// GEMM and both grouped expert GEMMs skip the pack pass (and, when
+    /// normalized, the per-call Φ normalization). The dispatch/combine
+    /// math is unchanged; f32 prepacks are bit-identical.
+    pub fn forward_full_prepacked_ws(&self, prep: &PreparedSoftMoe,
+                                     x: &Tensor, ws: &mut Workspace)
+        -> SoftMoeOutput {
+        let (m, d) = x.dims2();
+        let s = self.total_slots();
+        let p = self.slots_per_expert;
+        debug_assert_eq!(prep.phi.k_rows(), d, "prepared Φ dims drifted");
+        debug_assert_eq!(prep.phi.n_cols(), s, "prepared Φ dims drifted");
+        debug_assert_eq!(prep.experts.num_experts(), self.num_experts());
+
+        let need_logits = self.dispatch_mode == MixMode::Soft
+            || self.combine_mode == MixMode::Soft;
+        let mut logits = ws.take_tensor(&[m, s]);
+        if need_logits {
+            if self.normalize {
+                let mut xn = ws.take_tensor(&[m, d]);
+                xn.data.copy_from_slice(&x.data);
+                l2_normalize_rows_inplace(&mut xn);
+                // Φ side already normalized+scaled at prepare time.
+                matmul_prepacked_into(&xn, &prep.phi, &mut logits.data, ws);
+                ws.give_tensor(xn);
+            } else {
+                matmul_prepacked_into(x, &prep.phi, &mut logits.data, ws);
+            }
+        }
+        let dispatch =
+            self.mix_weights_ws(&logits, self.dispatch_mode, true, ws);
+        let combine =
+            self.mix_weights_ws(&logits, self.combine_mode, false, ws);
+        ws.give_tensor(logits);
+
+        let mut xs = ws.take_tensor(&[s, d]);
+        if self.dispatch_mode == MixMode::Identity {
+            xs.data.copy_from_slice(&x.data);
+        } else {
+            matmul_tn_into(&dispatch, x, &mut xs.data, ws);
+        }
+        let h = self.experts.hidden();
+        let mut ys = ws.take_tensor(&[s, d]);
+        let mut hid = ws.take_tensor(&[s, h]);
+        matmul_grouped_prepacked_into(&xs, &prep.experts.w1,
+                                      Some(&prep.experts.b1), p, None, true,
+                                      &mut hid.data, ws);
+        matmul_grouped_prepacked_into(&hid, &prep.experts.w2,
+                                      Some(&prep.experts.b2), p, None, false,
+                                      &mut ys.data, ws);
+        ws.give_tensor(hid);
+        ws.give_tensor(xs);
+        let mut y = Tensor::zeros(&[m, d]);
+        if self.combine_mode == MixMode::Identity {
+            y.data.copy_from_slice(&ys.data);
+        } else {
+            matmul_into(&combine, &ys, &mut y.data, ws);
+        }
+        ws.give_tensor(ys);
+        SoftMoeOutput { y, dispatch, combine }
+    }
+
     /// Forward without keeping the weights.
     pub fn forward(&self, x: &Tensor) -> Tensor {
         self.forward_full(x).y
@@ -199,6 +275,43 @@ impl SoftMoe {
         let out = self.forward_full(x);
         RoutingStats::from_soft(&out.dispatch, &out.combine,
                                 self.slots_per_expert)
+    }
+}
+
+/// Prepare-time fold of the Soft MoE router matrix: Φ flattened
+/// row-major to (d, s) and — when the router normalizes — put through
+/// the EXACT op sequence of the per-call paths (copy, in-place column
+/// normalize, scale multiply) before packing. The one implementation
+/// behind both [`SoftMoe::prepare`] and `nn::PreparedModel`, so the f32
+/// bit-identity contract has a single maintenance point.
+pub(crate) fn pack_phi_for_inference(phi: &[f32], d: usize, s: usize,
+                                     scale: f32, normalize: bool,
+                                     dtype: WeightDtype) -> PackedPanels {
+    assert_eq!(phi.len(), d * s, "Φ len {} vs {d}x{s}", phi.len());
+    if normalize {
+        let mut t = Tensor::from_vec(&[d, s], phi.to_vec());
+        with_workspace(|ws| l2_normalize_cols_inplace(&mut t, ws));
+        for v in t.data.iter_mut() {
+            *v *= scale;
+        }
+        PackedPanels::pack(&t, dtype)
+    } else {
+        PackedPanels::pack_grouped(phi, d, s, dtype)
+    }
+}
+
+/// A [`SoftMoe`] layer's inference parameters prepacked: Φ (normalized
+/// and scaled at prepare time when the layer normalizes) plus the grouped
+/// expert panels. See [`SoftMoe::prepare`].
+#[derive(Clone, Debug)]
+pub struct PreparedSoftMoe {
+    pub phi: PackedPanels,
+    pub experts: PreparedExperts,
+}
+
+impl PreparedSoftMoe {
+    pub fn resident_bytes(&self) -> usize {
+        self.phi.resident_bytes() + self.experts.resident_bytes()
     }
 }
 
@@ -297,6 +410,82 @@ mod tests {
         for i in 1..6 {
             assert!(y.rows(0, 1).max_diff(&y.rows(i, i + 1)) < 1e-5);
         }
+    }
+
+    #[test]
+    fn prepacked_forward_bit_identical_f32() {
+        // Prepared-parameter forward must reproduce forward_full_ws
+        // exactly (f32 panels), for the normalized and unnormalized
+        // router and for the fixed-routing ablations.
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[10, 8], 1.0, &mut rng);
+        for (normalize, modes) in [
+            (true, (MixMode::Soft, MixMode::Soft)),
+            (false, (MixMode::Soft, MixMode::Soft)),
+            (true, (MixMode::Uniform, MixMode::Uniform)),
+            (true, (MixMode::Soft, MixMode::Uniform)),
+        ] {
+            let mut sm = SoftMoe::new(8, 4, 2, 16, &mut rng.fold_in(1));
+            sm.normalize = normalize;
+            sm.scale = 1.5;
+            sm.dispatch_mode = modes.0;
+            sm.combine_mode = modes.1;
+            let prep = sm.prepare(WeightDtype::F32);
+            let mut ws = Workspace::new();
+            let want = sm.forward_full_ws(&x, &mut ws);
+            let got = sm.forward_full_prepacked_ws(&prep, &x, &mut ws);
+            assert_eq!(got.y.data, want.y.data,
+                       "norm={normalize} modes={modes:?}");
+            assert_eq!(got.dispatch.data, want.dispatch.data);
+            assert_eq!(got.combine.data, want.combine.data);
+        }
+        // Identity routing (tokens == slots) exercises the copy paths.
+        let mut sm = SoftMoe::new(8, 4, 2, 16, &mut rng);
+        sm.dispatch_mode = MixMode::Identity;
+        sm.combine_mode = MixMode::Identity;
+        let x8 = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let prep = sm.prepare(WeightDtype::F32);
+        let mut ws = Workspace::new();
+        let want = sm.forward_full_ws(&x8, &mut ws);
+        let got = sm.forward_full_prepacked_ws(&prep, &x8, &mut ws);
+        assert_eq!(got.y.data, want.y.data, "identity");
+    }
+
+    #[test]
+    fn prepacked_bf16_close_and_smaller() {
+        let (sm, x) = layer(10, 8, 4, 2);
+        let f = sm.prepare(WeightDtype::F32);
+        let h = sm.prepare(WeightDtype::Bf16);
+        assert!(h.resident_bytes() < f.resident_bytes());
+        let mut ws = Workspace::new();
+        let want = sm.forward_full_ws(&x, &mut ws);
+        let got = sm.forward_full_prepacked_ws(&h, &x, &mut ws);
+        // bf16 rounds the weights by <= 2⁻⁸ relative; with O(10)-sized
+        // reductions the outputs stay within a small absolute band.
+        assert!(got.y.max_diff(&want.y) < 0.05,
+                "bf16 drift {}", got.y.max_diff(&want.y));
+        assert!(got.y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prepacked_steady_state_no_allocs() {
+        let (sm, x) = layer(10, 8, 4, 2);
+        let prep = sm.prepare(WeightDtype::F32);
+        let mut ws = Workspace::new();
+        let mut out = sm.forward_full_prepacked_ws(&prep, &x, &mut ws);
+        // The returned tensors are true allocations; recycle them so the
+        // steady state is observable.
+        ws.give_tensor(out.dispatch);
+        ws.give_tensor(out.combine);
+        let warm = ws.fresh_allocs();
+        for _ in 0..4 {
+            out = sm.forward_full_prepacked_ws(&prep, &x, &mut ws);
+            ws.give_tensor(out.dispatch);
+            ws.give_tensor(out.combine);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "prepacked soft forward must not allocate workspace \
+                    buffers at steady state");
     }
 
     #[test]

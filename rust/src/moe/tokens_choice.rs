@@ -14,10 +14,11 @@
 //! tokens *compete* across sequences inside a group, which is exactly what
 //! the buffer logic here does.
 
-use crate::moe::{ExpertParams, RoutingStats};
+use crate::moe::{ExpertParams, PreparedSparseRouter, RoutingStats};
 use crate::tensor::{
-    matmul, matmul_grouped_into, matmul_into, softmax_rows,
-    softmax_rows_inplace, with_workspace, RouteEntry, Tensor, Workspace,
+    matmul, matmul_grouped_into, matmul_into, matmul_prepacked_into,
+    softmax_rows, softmax_rows_inplace, with_workspace, RouteEntry, Tensor,
+    WeightDtype, Workspace,
 };
 use crate::util::Rng;
 
@@ -176,6 +177,48 @@ impl TokensChoice {
         };
         (y, stats)
     }
+
+    /// Prepack the gate matrix and expert weights for inference.
+    pub fn prepare(&self, dtype: WeightDtype) -> PreparedSparseRouter {
+        PreparedSparseRouter::new(&self.wg, &self.experts, dtype)
+    }
+
+    /// [`TokensChoice::forward_with_stats_ws`] over prepacked parameters:
+    /// the gate GEMM and both grouped expert GEMMs skip the pack pass.
+    /// Routing decisions read the same gate values, so f32 prepacks keep
+    /// the assignment — and the output — bit-identical. The expert
+    /// compute is the shared
+    /// [`crate::moe::sparse_experts_apply_prepacked`] step.
+    pub fn forward_with_stats_prepacked_ws(&self, prep: &PreparedSparseRouter,
+                                           x: &Tensor, ws: &mut Workspace)
+        -> (Tensor, RoutingStats) {
+        let (t, d) = x.dims2();
+        let n = self.num_experts();
+        debug_assert_eq!(prep.experts.num_experts(), n);
+        let mut probs = ws.take_tensor(&[t, n]);
+        matmul_prepacked_into(x, &prep.wg, &mut probs.data, ws);
+        softmax_rows_inplace(&mut probs);
+        let mut kept = ws.take_route();
+        let cap = self.route_core(&probs, &mut kept, ws);
+        ws.give_tensor(probs);
+
+        let mut y = Tensor::zeros(&[t, d]);
+        let mut expert_load = vec![0.0f64; n];
+        let mut token_weight = vec![0.0f64; t];
+        crate::moe::sparse_experts_apply_prepacked(
+            x, &kept, cap, &prep.experts, &mut y.data,
+            Some((&mut expert_load, &mut token_weight)), ws);
+        ws.give_route(kept);
+
+        let dropped = token_weight.iter().filter(|&&w| w == 0.0).count();
+        let stats = RoutingStats {
+            dropped_frac: dropped as f64 / t as f64,
+            expert_load,
+            token_weight,
+            slot_importance: vec![],
+        };
+        (y, stats)
+    }
 }
 
 #[cfg(test)]
@@ -323,6 +366,36 @@ mod tests {
         }
         assert_eq!(ws.fresh_allocs(), warm,
                    "forward_with_stats_ws must not allocate at steady state");
+    }
+
+    #[test]
+    fn prepacked_forward_bit_identical_f32() {
+        let (mut tc, x) = layer(32, 8, 8);
+        tc.top_k = 2;
+        tc.capacity_factor = 0.75;
+        let prep = tc.prepare(WeightDtype::F32);
+        let mut ws = Workspace::new();
+        let (want, ws_stats) = tc.forward_with_stats_ws(&x, &mut ws);
+        let (got, p_stats) =
+            tc.forward_with_stats_prepacked_ws(&prep, &x, &mut ws);
+        assert_eq!(got.data, want.data);
+        assert_eq!(p_stats.dropped_frac, ws_stats.dropped_frac);
+        assert_eq!(p_stats.expert_load, ws_stats.expert_load);
+        assert_eq!(p_stats.token_weight, ws_stats.token_weight);
+    }
+
+    #[test]
+    fn prepacked_forward_steady_state_no_allocs() {
+        let (tc, x) = layer(32, 8, 8);
+        let prep = tc.prepare(WeightDtype::F32);
+        let mut ws = Workspace::new();
+        tc.forward_with_stats_prepacked_ws(&prep, &x, &mut ws);
+        let warm = ws.fresh_allocs();
+        for _ in 0..4 {
+            tc.forward_with_stats_prepacked_ws(&prep, &x, &mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), warm,
+                   "prepacked forward must not allocate at steady state");
     }
 
     #[test]

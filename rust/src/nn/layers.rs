@@ -7,9 +7,11 @@
 
 use crate::tensor::{
     dot, gelu, gelu_grad, layernorm, matmul, matmul_bias, matmul_bias_gelu_into,
-    matmul_bias_gelu_slice_into, matmul_bias_into, matmul_bias_slice_into,
+    matmul_bias_gelu_prepacked_into, matmul_bias_gelu_slice_into,
+    matmul_bias_into, matmul_bias_prepacked_into, matmul_bias_slice_into,
     matmul_into, matmul_nt, matmul_nt_into, matmul_tn, softmax_inplace,
-    softmax_rows, Tensor, Workspace, L2_EPS, LN_EPS,
+    softmax_rows, PackedPanels, Tensor, WeightDtype, Workspace, L2_EPS,
+    LN_EPS,
 };
 
 // ---------------------------------------------------------------------------
@@ -31,6 +33,13 @@ pub fn linear_fwd(x: &Tensor, w: &Tensor, b: &[f32]) -> (Tensor, LinearCache) {
 pub fn linear_infer_into(x: &Tensor, w: &Tensor, b: &[f32], out: &mut [f32],
                          ws: &mut Workspace) {
     matmul_bias_into(x, w, b, out, ws);
+}
+
+/// [`linear_infer_into`] over a prepacked weight ([`PackedPanels`]):
+/// same fused bias epilogue, no per-call pack pass.
+pub fn linear_infer_prepacked_into(x: &Tensor, w: &PackedPanels, b: &[f32],
+                                   out: &mut [f32], ws: &mut Workspace) {
+    matmul_bias_prepacked_into(x, w, b, out, ws);
 }
 
 /// Returns (dX, dW, db).
@@ -99,6 +108,19 @@ pub fn mlp_infer_slice_into(x: &Tensor, w1: &[f32], h: usize, b1: &[f32],
     let mut g = ws.take_tensor(&[r, h]);
     matmul_bias_gelu_slice_into(x, w1, h, b1, &mut g.data, ws);
     matmul_bias_slice_into(&g, w2, d_out, b2, out, ws);
+    ws.give_tensor(g);
+}
+
+/// [`mlp_infer_into`] over prepacked weights: the two GEMMs skip the
+/// per-call pack pass; epilogues and scratch discipline are unchanged.
+pub fn mlp_infer_prepacked_into(x: &Tensor, w1: &PackedPanels, b1: &[f32],
+                                w2: &PackedPanels, b2: &[f32],
+                                out: &mut [f32], ws: &mut Workspace) {
+    let (r, _d) = x.dims2();
+    let h = w1.n_cols();
+    let mut g = ws.take_tensor(&[r, h]);
+    matmul_bias_gelu_prepacked_into(x, w1, b1, &mut g.data, ws);
+    matmul_bias_prepacked_into(&g, w2, b2, out, ws);
     ws.give_tensor(g);
 }
 
@@ -400,6 +422,95 @@ pub fn attention_infer_into(x: &Tensor, p: &AttnParams, out: &mut [f32],
     ws.give_tensor(q);
 }
 
+/// Attention projection weights prepacked for inference: the four (d, d)
+/// matrices in kernel panel layout, biases owned. Built once (model
+/// prepare time) from the same [`AttnParams`] the per-call path reads.
+pub struct AttnPrepacked {
+    pub wq: PackedPanels,
+    pub bq: Vec<f32>,
+    pub wk: PackedPanels,
+    pub bk: Vec<f32>,
+    pub wv: PackedPanels,
+    pub bv: Vec<f32>,
+    pub wo: PackedPanels,
+    pub bo: Vec<f32>,
+    pub heads: usize,
+}
+
+impl AttnPrepacked {
+    pub fn new(p: &AttnParams, dtype: WeightDtype) -> Self {
+        Self {
+            wq: PackedPanels::pack(p.wq, dtype),
+            bq: p.bq.to_vec(),
+            wk: PackedPanels::pack(p.wk, dtype),
+            bk: p.bk.to_vec(),
+            wv: PackedPanels::pack(p.wv, dtype),
+            bv: p.bv.to_vec(),
+            wo: PackedPanels::pack(p.wo, dtype),
+            bo: p.bo.to_vec(),
+            heads: p.heads,
+        }
+    }
+
+    /// Bytes resident in the prepacked projection panels + biases.
+    pub fn resident_bytes(&self) -> usize {
+        self.wq.resident_bytes()
+            + self.wk.resident_bytes()
+            + self.wv.resident_bytes()
+            + self.wo.resident_bytes()
+            + 4 * (self.bq.len() + self.bk.len() + self.bv.len()
+                   + self.bo.len())
+    }
+}
+
+/// [`attention_infer_into`] over prepacked projections: the four weight
+/// GEMMs skip the pack pass; the activation GEMMs (Q·Kᵀ, A·V) are
+/// input-dependent and unchanged. Same scratch discipline, zero heap
+/// allocations at steady state.
+pub fn attention_infer_prepacked_into(x: &Tensor, p: &AttnPrepacked,
+                                      out: &mut [f32], ws: &mut Workspace) {
+    let (m, d) = x.dims2();
+    let hd = d / p.heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut q = ws.take_tensor(&[m, d]);
+    let mut k = ws.take_tensor(&[m, d]);
+    let mut v = ws.take_tensor(&[m, d]);
+    matmul_bias_prepacked_into(x, &p.wq, &p.bq, &mut q.data, ws);
+    matmul_bias_prepacked_into(x, &p.wk, &p.bk, &mut k.data, ws);
+    matmul_bias_prepacked_into(x, &p.wv, &p.bv, &mut v.data, ws);
+    let mut o = ws.take_tensor(&[m, d]);
+    let mut qh = ws.take_tensor(&[m, hd]);
+    let mut kh = ws.take_tensor(&[m, hd]);
+    let mut vh = ws.take_tensor(&[m, hd]);
+    let mut oh = ws.take_tensor(&[m, hd]);
+    let mut a = ws.take_tensor(&[m, m]);
+    for h in 0..p.heads {
+        head_gather(&q, h, hd, &mut qh);
+        head_gather(&k, h, hd, &mut kh);
+        head_gather(&v, h, hd, &mut vh);
+        matmul_nt_into(&qh, &kh, &mut a.data, ws);
+        for i in 0..m {
+            let row = a.row_mut(i);
+            for val in row.iter_mut() {
+                *val *= scale;
+            }
+            softmax_inplace(row);
+        }
+        matmul_into(&a, &vh, &mut oh.data, ws);
+        head_write(&mut o, &oh, h, hd);
+    }
+    matmul_bias_prepacked_into(&o, &p.wo, &p.bo, out, ws);
+    ws.give_tensor(a);
+    ws.give_tensor(oh);
+    ws.give_tensor(vh);
+    ws.give_tensor(kh);
+    ws.give_tensor(qh);
+    ws.give_tensor(o);
+    ws.give_tensor(v);
+    ws.give_tensor(k);
+    ws.give_tensor(q);
+}
+
 pub struct AttnGrads {
     pub dx: Tensor,
     pub dwq: Tensor,
@@ -631,6 +742,51 @@ mod tests {
             let p2 = AttnParams { wo: ww, ..p };
             attention_fwd(&x, &p2).0
         }, &g.dwo, 8, 3e-2, 6);
+    }
+
+    #[test]
+    fn prepacked_infer_layers_bit_identical() {
+        // The prepacked linear/MLP/attention inference variants must
+        // reproduce the pack-per-call paths exactly for f32 panels.
+        let mut rng = Rng::new(40);
+        let x = Tensor::randn(&[9, 12], 1.0, &mut rng);
+        let w = Tensor::randn(&[12, 8], 0.5, &mut rng);
+        let b: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let mut ws = Workspace::new();
+
+        let wp = PackedPanels::pack(&w, WeightDtype::F32);
+        let mut want = vec![0.0f32; 9 * 8];
+        let mut got = vec![0.0f32; 9 * 8];
+        linear_infer_into(&x, &w, &b, &mut want, &mut ws);
+        linear_infer_prepacked_into(&x, &wp, &b, &mut got, &mut ws);
+        assert_eq!(got, want, "linear");
+
+        let w2 = Tensor::randn(&[8, 12], 0.5, &mut rng);
+        let b2: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let w2p = PackedPanels::pack(&w2, WeightDtype::F32);
+        let mut want = vec![0.0f32; 9 * 12];
+        let mut got = vec![0.0f32; 9 * 12];
+        mlp_infer_into(&x, &w, &b, &w2, &b2, &mut want, &mut ws);
+        mlp_infer_prepacked_into(&x, &wp, &b, &w2p, &b2, &mut got, &mut ws);
+        assert_eq!(got, want, "mlp");
+
+        let d = 8;
+        let xa = Tensor::randn(&[6, d], 1.0, &mut rng);
+        let mk = |rng: &mut Rng| Tensor::randn(&[d, d], 0.4, rng);
+        let (wq, wk, wv, wo) = (mk(&mut rng), mk(&mut rng), mk(&mut rng),
+                                mk(&mut rng));
+        let zeros = vec![0.0f32; d];
+        let p = AttnParams {
+            wq: &wq, bq: &zeros, wk: &wk, bk: &zeros,
+            wv: &wv, bv: &zeros, wo: &wo, bo: &zeros, heads: 2,
+        };
+        let pp = AttnPrepacked::new(&p, WeightDtype::F32);
+        assert!(pp.resident_bytes() > 0);
+        let mut want = vec![0.0f32; 6 * d];
+        let mut got = vec![0.0f32; 6 * d];
+        attention_infer_into(&xa, &p, &mut want, &mut ws);
+        attention_infer_prepacked_into(&xa, &pp, &mut got, &mut ws);
+        assert_eq!(got, want, "attention");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 pub mod layers;
 pub mod vit;
 
-pub use vit::{ParamStore, VitModel};
+pub use vit::{ParamStore, PreparedModel, VitModel};
 
 use crate::tensor::Tensor;
 

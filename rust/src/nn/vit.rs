@@ -11,14 +11,16 @@
 use std::collections::BTreeMap;
 
 use crate::config::{MixMode, ModelConfig, MoeType};
+use crate::moe::PreparedExperts;
 use crate::nn::layers::*;
 use crate::nn::{accumulate, Grads};
 use crate::tensor::{
     l2_normalize_cols, l2_normalize_cols_inplace, l2_normalize_rows,
     l2_normalize_rows_inplace, layernorm_into, matmul, matmul_grouped_into,
-    matmul_into, matmul_nt, matmul_slice_into, matmul_tn, matmul_tn_into,
+    matmul_grouped_prepacked_into, matmul_into, matmul_nt,
+    matmul_prepacked_into, matmul_slice_into, matmul_tn, matmul_tn_into,
     softmax_cols, softmax_cols_inplace, softmax_rows, softmax_rows_inplace,
-    with_workspace, RouteEntry, Tensor, Workspace,
+    with_workspace, PackedPanels, RouteEntry, Tensor, WeightDtype, Workspace,
 };
 use crate::threadpool::parallel_map_ws;
 use crate::util::Rng;
@@ -1172,6 +1174,369 @@ impl VitModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// PreparedModel — inference parameters prepacked once, streamed many times.
+// ---------------------------------------------------------------------------
+
+/// One block's prepacked MoE branch.
+enum PreparedMoeBlock {
+    Dense {
+        w1: PackedPanels,
+        b1: Vec<f32>,
+        w2: PackedPanels,
+        b2: Vec<f32>,
+    },
+    Soft {
+        /// Φ flattened to (d, s); when the router is normalized this is
+        /// already `scale·l2norm_cols(Φ)` (input-independent, folded in
+        /// at prepare time).
+        phi: PackedPanels,
+        experts: PreparedExperts,
+    },
+    Sparse {
+        wg: PackedPanels,
+        experts: PreparedExperts,
+    },
+}
+
+impl PreparedMoeBlock {
+    fn resident_bytes(&self) -> usize {
+        match self {
+            PreparedMoeBlock::Dense { w1, b1, w2, b2 } => {
+                w1.resident_bytes() + w2.resident_bytes()
+                    + 4 * (b1.len() + b2.len())
+            }
+            PreparedMoeBlock::Soft { phi, experts } => {
+                phi.resident_bytes() + experts.resident_bytes()
+            }
+            PreparedMoeBlock::Sparse { wg, experts } => {
+                wg.resident_bytes() + experts.resident_bytes()
+            }
+        }
+    }
+}
+
+struct PreparedBlock {
+    ln1_s: Vec<f32>,
+    ln1_b: Vec<f32>,
+    attn: AttnPrepacked,
+    ln2_s: Vec<f32>,
+    ln2_b: Vec<f32>,
+    moe: PreparedMoeBlock,
+}
+
+/// A [`VitModel`] + [`ParamStore`] snapshot prepared for serving: every
+/// weight matrix on the inference path — patch embed, the attention
+/// projections, dense MLPs, the stacked expert manifests, Soft MoE's Φ
+/// and the sparse gates, the classifier head — is pre-packed into the
+/// GEMM panel layout ([`PackedPanels`]), stored as f32 or bf16
+/// (`SOFTMOE_WEIGHT_DTYPE`), with LayerNorm/bias vectors owned alongside.
+///
+/// Built once (e.g. by `Server::run` at startup); the steady-state
+/// forward then performs **zero** pack passes over weights
+/// (`tensor::pack_passes`, asserted in `rust/tests/pool_steady_state.rs`)
+/// and, for f32 storage, is **bit-identical** to
+/// [`VitModel::forward_item_infer`] (asserted in
+/// `prepared_forward_matches_infer_exactly` and per kernel in
+/// `rust/tests/kernel_dispatch.rs`).
+pub struct PreparedModel {
+    /// Config + interned keys (routing decisions delegate to the model).
+    model: VitModel,
+    dtype: WeightDtype,
+    patch_w: PackedPanels,
+    patch_b: Vec<f32>,
+    pos_embed: Tensor,
+    blocks: Vec<PreparedBlock>,
+    lnf_s: Vec<f32>,
+    lnf_b: Vec<f32>,
+    head_w: PackedPanels,
+    head_b: Vec<f32>,
+}
+
+impl PreparedModel {
+    /// Prepack every inference parameter of `model` under `p`.
+    pub fn new(model: &VitModel, p: &ParamStore, dtype: WeightDtype) -> Self {
+        let cfg = &model.cfg;
+        let d = cfg.dim;
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        for i in 0..cfg.depth {
+            let bk = &model.keys[i];
+            let attn = AttnPrepacked::new(&model.attn_params(p, bk), dtype);
+            let moe = if p.contains_key(&bk.mlp_w1) {
+                PreparedMoeBlock::Dense {
+                    w1: PackedPanels::pack(model.get(p, &bk.mlp_w1), dtype),
+                    b1: model.get(p, &bk.mlp_b1).data.clone(),
+                    w2: PackedPanels::pack(model.get(p, &bk.mlp_w2), dtype),
+                    b2: model.get(p, &bk.mlp_b2).data.clone(),
+                }
+            } else {
+                let experts = PreparedExperts::from_stacked(
+                    model.get(p, &bk.moe_w1),
+                    model.get(p, &bk.moe_b1),
+                    model.get(p, &bk.moe_w2),
+                    model.get(p, &bk.moe_b2),
+                    dtype,
+                );
+                match cfg.moe_type {
+                    MoeType::Soft => {
+                        // (d, n, p) flattens row-major to (d, s); the
+                        // normalize+scale fold is the shared one (one
+                        // maintenance point for the bit-identity
+                        // contract — see soft::pack_phi_for_inference).
+                        let phi = model.get(p, &bk.phi);
+                        let scale = model.get(p, &bk.scale).data[0];
+                        let phi_panels =
+                            crate::moe::soft::pack_phi_for_inference(
+                                &phi.data, d, cfg.total_slots(), scale,
+                                cfg.normalize_router, dtype);
+                        PreparedMoeBlock::Soft { phi: phi_panels, experts }
+                    }
+                    MoeType::TokensChoice | MoeType::ExpertsChoice => {
+                        PreparedMoeBlock::Sparse {
+                            wg: PackedPanels::pack(model.get(p, &bk.wg),
+                                                   dtype),
+                            experts,
+                        }
+                    }
+                    MoeType::Dense => unreachable!("dense handled above"),
+                }
+            };
+            blocks.push(PreparedBlock {
+                ln1_s: model.get(p, &bk.ln1_s).data.clone(),
+                ln1_b: model.get(p, &bk.ln1_b).data.clone(),
+                attn,
+                ln2_s: model.get(p, &bk.ln2_s).data.clone(),
+                ln2_b: model.get(p, &bk.ln2_b).data.clone(),
+                moe,
+            });
+        }
+        Self {
+            model: model.clone(),
+            dtype,
+            patch_w: PackedPanels::pack(model.get(p, "patch_embed/w"), dtype),
+            patch_b: model.get(p, "patch_embed/b").data.clone(),
+            pos_embed: model.get(p, "pos_embed").clone(),
+            blocks,
+            lnf_s: model.get(p, "ln_f/s").data.clone(),
+            lnf_b: model.get(p, "ln_f/b").data.clone(),
+            head_w: PackedPanels::pack(model.get(p, "head/w"), dtype),
+            head_b: model.get(p, "head/b").data.clone(),
+        }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    pub fn dtype(&self) -> WeightDtype {
+        self.dtype
+    }
+
+    /// Bytes resident in the prepared representation (panel storage +
+    /// biases/LN vectors + the positional embedding) — the serve
+    /// memory-footprint gauge.
+    pub fn resident_bytes(&self) -> usize {
+        let mut total = self.patch_w.resident_bytes()
+            + self.head_w.resident_bytes()
+            + 4 * (self.patch_b.len() + self.head_b.len()
+                   + self.lnf_s.len() + self.lnf_b.len()
+                   + self.pos_embed.numel());
+        for b in &self.blocks {
+            total += b.attn.resident_bytes()
+                + b.moe.resident_bytes()
+                + 4 * (b.ln1_s.len() + b.ln1_b.len() + b.ln2_s.len()
+                       + b.ln2_b.len());
+        }
+        total
+    }
+
+    fn moe_infer_into(&self, blk: &PreparedBlock, x: &Tensor,
+                      out: &mut [f32], ws: &mut Workspace) {
+        match &blk.moe {
+            PreparedMoeBlock::Dense { w1, b1, w2, b2 } => {
+                mlp_infer_prepacked_into(x, w1, b1, w2, b2, out, ws);
+            }
+            PreparedMoeBlock::Soft { phi, experts } => {
+                self.soft_moe_infer_into(phi, experts, x, out, ws);
+            }
+            PreparedMoeBlock::Sparse { wg, experts } => {
+                self.sparse_moe_infer_into(wg, experts, x, out, ws);
+            }
+        }
+    }
+
+    /// Mirror of [`VitModel::soft_moe_infer_into`] over prepacked
+    /// parameters: no Φ normalization pass (folded in at prepare time),
+    /// no pack pass anywhere on the weight side.
+    fn soft_moe_infer_into(&self, phi: &PackedPanels,
+                           experts: &PreparedExperts, x: &Tensor,
+                           out: &mut [f32], ws: &mut Workspace) {
+        let cfg = &self.model.cfg;
+        let (m, d) = x.dims2();
+        let s = cfg.total_slots();
+        let sp = cfg.slots_per_expert;
+        let eh = cfg.expert_hidden;
+        debug_assert_eq!((phi.k_rows(), phi.n_cols()), (d, s));
+
+        let need_logits = cfg.dispatch_mode == MixMode::Soft
+            || cfg.combine_mode == MixMode::Soft;
+        let mut logits = ws.take_tensor(&[m, s]);
+        if need_logits {
+            if cfg.normalize_router {
+                let mut xn = ws.take_tensor(&[m, d]);
+                xn.data.copy_from_slice(&x.data);
+                l2_normalize_rows_inplace(&mut xn);
+                matmul_prepacked_into(&xn, phi, &mut logits.data, ws);
+                ws.give_tensor(xn);
+            } else {
+                matmul_prepacked_into(x, phi, &mut logits.data, ws);
+            }
+        }
+
+        let mut xs = ws.take_tensor(&[s, d]);
+        match cfg.dispatch_mode {
+            MixMode::Identity => {
+                assert_eq!(m, s, "identity routing requires m == slots");
+                xs.data.copy_from_slice(&x.data);
+            }
+            MixMode::Uniform => {
+                let mut disp = ws.take_tensor(&[m, s]);
+                for v in disp.data.iter_mut() {
+                    *v = 1.0 / m as f32;
+                }
+                matmul_tn_into(&disp, x, &mut xs.data, ws);
+                ws.give_tensor(disp);
+            }
+            MixMode::Soft => {
+                let mut disp = ws.take_tensor(&[m, s]);
+                disp.data.copy_from_slice(&logits.data);
+                softmax_cols_inplace(&mut disp, ws);
+                matmul_tn_into(&disp, x, &mut xs.data, ws);
+                ws.give_tensor(disp);
+            }
+        }
+
+        let mut ys = ws.take_tensor(&[s, d]);
+        let mut ge = ws.take_tensor(&[s, eh]);
+        matmul_grouped_prepacked_into(&xs, &experts.w1, Some(&experts.b1),
+                                      sp, None, true, &mut ge.data, ws);
+        matmul_grouped_prepacked_into(&ge, &experts.w2, Some(&experts.b2),
+                                      sp, None, false, &mut ys.data, ws);
+        ws.give_tensor(ge);
+        ws.give_tensor(xs);
+
+        match cfg.combine_mode {
+            MixMode::Identity => {
+                assert_eq!(m, s, "identity routing requires m == slots");
+                out.copy_from_slice(&ys.data);
+            }
+            MixMode::Uniform => {
+                let mut comb = ws.take_tensor(&[m, s]);
+                for v in comb.data.iter_mut() {
+                    *v = 1.0 / s as f32;
+                }
+                matmul_into(&comb, &ys, out, ws);
+                ws.give_tensor(comb);
+            }
+            MixMode::Soft => {
+                let mut comb = ws.take_tensor(&[m, s]);
+                comb.data.copy_from_slice(&logits.data);
+                softmax_rows_inplace(&mut comb);
+                matmul_into(&comb, &ys, out, ws);
+                ws.give_tensor(comb);
+            }
+        }
+        ws.give_tensor(ys);
+        ws.give_tensor(logits);
+    }
+
+    /// Mirror of [`VitModel::sparse_moe_infer_into`]: the routing
+    /// decision delegates to the same shared cores (identical kept
+    /// lists), and the expert compute is the shared
+    /// [`crate::moe::sparse_experts_apply_prepacked`] step — one
+    /// implementation for this layer and both standalone routers.
+    fn sparse_moe_infer_into(&self, wg: &PackedPanels,
+                             experts: &PreparedExperts, x: &Tensor,
+                             out: &mut [f32], ws: &mut Workspace) {
+        let cfg = &self.model.cfg;
+        let (t, _d) = x.dims2();
+        let n = cfg.num_experts;
+
+        let mut probs = ws.take_tensor(&[t, n]);
+        matmul_prepacked_into(x, wg, &mut probs.data, ws);
+        softmax_rows_inplace(&mut probs);
+        let mut kept = ws.take_route();
+        let cap = self.model.sparse_route_into(&probs, t, &mut kept, ws);
+        ws.give_tensor(probs);
+
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        crate::moe::sparse_experts_apply_prepacked(x, &kept, cap, experts,
+                                                   out, None, ws);
+        ws.give_route(kept);
+    }
+
+    /// Prepacked mirror of [`VitModel::forward_item_infer`]: no caches,
+    /// every transient from `ws`, zero weight pack passes. For f32
+    /// storage the outputs are bit-identical to the unprepared path.
+    pub fn forward_item_infer(&self, images: &Tensor, item: usize,
+                              ws: &mut Workspace) -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.model.cfg;
+        let m = cfg.tokens();
+        let d = cfg.dim;
+        let patches = self.model.patchify_item_ws(images, item, ws);
+        let mut x = ws.take_tensor(&[m, d]);
+        linear_infer_prepacked_into(&patches, &self.patch_w, &self.patch_b,
+                                    &mut x.data, ws);
+        ws.give_tensor(patches);
+        x.add_inplace(&self.pos_embed);
+
+        let mut h = ws.take_tensor(&[m, d]);
+        let mut branch = ws.take_tensor(&[m, d]);
+        for blk in &self.blocks {
+            layernorm_into(&x, &blk.ln1_s, &blk.ln1_b, &mut h.data);
+            attention_infer_prepacked_into(&h, &blk.attn, &mut branch.data,
+                                           ws);
+            x.add_inplace(&branch);
+            layernorm_into(&x, &blk.ln2_s, &blk.ln2_b, &mut h.data);
+            self.moe_infer_into(blk, &h, &mut branch.data, ws);
+            x.add_inplace(&branch);
+        }
+
+        layernorm_into(&x, &self.lnf_s, &self.lnf_b, &mut h.data);
+        let feats = h.mean_rows();
+        let mut ft = ws.take_tensor(&[1, d]);
+        ft.data.copy_from_slice(&feats);
+        let mut logits = vec![0.0f32; cfg.num_classes];
+        linear_infer_prepacked_into(&ft, &self.head_w, &self.head_b,
+                                    &mut logits, ws);
+        ws.give_tensor(ft);
+        ws.give_tensor(branch);
+        ws.give_tensor(h);
+        ws.give_tensor(x);
+        (logits, feats)
+    }
+
+    /// Batched prepacked forward — same item-parallel structure and
+    /// workspace residency as [`VitModel::forward`].
+    pub fn forward(&self, images: &Tensor) -> ForwardOut {
+        let b = images.shape[0];
+        let c = self.model.cfg.num_classes;
+        let d = self.model.cfg.dim;
+        let mut logits = Tensor::zeros(&[b, c]);
+        let mut features = Tensor::zeros(&[b, d]);
+        let results: Vec<(Vec<f32>, Vec<f32>)> = parallel_map_ws(b, |i, ws| {
+            self.forward_item_infer(images, i, ws)
+        });
+        for (i, (l, f)) in results.into_iter().enumerate() {
+            logits.row_mut(i).copy_from_slice(&l);
+            features.row_mut(i).copy_from_slice(&f);
+        }
+        ForwardOut { logits, features }
+    }
+}
+
 fn identity_mix(m: usize, s: usize) -> Tensor {
     assert_eq!(m, s, "identity routing requires m == slots");
     let mut t = Tensor::zeros(&[m, s]);
@@ -1312,6 +1677,120 @@ mod tests {
             }
             assert_eq!(ws.fresh_allocs(), warm,
                        "{moe:?}: steady-state forward allocated");
+        }
+    }
+
+    fn assert_prepared_matches_exactly(cfg: &ModelConfig, tag: &str) {
+        // Acceptance criterion: prepacked f32 inference is bit-identical
+        // to the pack-per-call path.
+        let model = VitModel::new(cfg.clone());
+        let p = model.init(0);
+        let prep = PreparedModel::new(&model, &p, WeightDtype::F32);
+        let imgs = rand_images(2, cfg, 1);
+        let mut ws = Workspace::new();
+        for item in 0..2 {
+            let (lw, fw) = model.forward_item_infer(&p, &imgs, item, &mut ws);
+            let (lp, fp) = prep.forward_item_infer(&imgs, item, &mut ws);
+            assert_eq!(lp, lw, "{tag} logits drifted (item {item})");
+            assert_eq!(fp, fw, "{tag} feats drifted (item {item})");
+        }
+    }
+
+    #[test]
+    fn prepared_forward_matches_infer_exactly() {
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                    MoeType::ExpertsChoice] {
+            let cfg = tiny_cfg(moe);
+            assert_prepared_matches_exactly(&cfg, &format!("{moe:?}"));
+        }
+    }
+
+    #[test]
+    fn prepared_forward_matches_infer_exactly_soft_ablations() {
+        let base = tiny_cfg(MoeType::Soft);
+
+        let mut unnorm = base.clone();
+        unnorm.normalize_router = false;
+        assert_prepared_matches_exactly(&unnorm, "soft/unnormalized");
+
+        let mut uniform = base.clone();
+        uniform.dispatch_mode = MixMode::Uniform;
+        uniform.combine_mode = MixMode::Uniform;
+        assert_prepared_matches_exactly(&uniform, "soft/uniform");
+
+        let mut ident = base.clone();
+        ident.num_experts = 2;
+        ident.slots_per_expert = 2;
+        ident.dispatch_mode = MixMode::Identity;
+        ident.combine_mode = MixMode::Identity;
+        assert_prepared_matches_exactly(&ident, "soft/identity");
+
+        let mut mixed = base.clone();
+        mixed.combine_mode = MixMode::Uniform;
+        assert_prepared_matches_exactly(&mixed, "soft/mixed");
+    }
+
+    #[test]
+    fn prepared_batched_forward_matches_model() {
+        let cfg = tiny_cfg(MoeType::Soft);
+        let model = VitModel::new(cfg.clone());
+        let p = model.init(2);
+        let prep = PreparedModel::new(&model, &p, WeightDtype::F32);
+        let imgs = rand_images(3, &cfg, 3);
+        let want = model.forward(&p, &imgs);
+        let got = prep.forward(&imgs);
+        assert_eq!(got.logits.data, want.logits.data);
+        assert_eq!(got.features.data, want.features.data);
+    }
+
+    #[test]
+    fn prepared_forward_steady_state_no_allocs() {
+        for moe in [MoeType::Dense, MoeType::Soft, MoeType::TokensChoice,
+                    MoeType::ExpertsChoice] {
+            let cfg = tiny_cfg(moe);
+            let model = VitModel::new(cfg.clone());
+            let p = model.init(1);
+            let prep = PreparedModel::new(&model, &p, WeightDtype::F32);
+            let imgs = rand_images(2, &cfg, 2);
+            let mut ws = Workspace::new();
+            for _ in 0..4 {
+                prep.forward_item_infer(&imgs, 0, &mut ws);
+                prep.forward_item_infer(&imgs, 1, &mut ws);
+            }
+            let warm = ws.fresh_allocs();
+            for _ in 0..3 {
+                prep.forward_item_infer(&imgs, 0, &mut ws);
+                prep.forward_item_infer(&imgs, 1, &mut ws);
+            }
+            assert_eq!(ws.fresh_allocs(), warm,
+                       "{moe:?}: steady-state prepared forward allocated");
+        }
+    }
+
+    #[test]
+    fn prepared_bf16_forward_close_and_smaller() {
+        for moe in [MoeType::Soft, MoeType::TokensChoice] {
+            let cfg = tiny_cfg(moe);
+            let model = VitModel::new(cfg.clone());
+            let p = model.init(0);
+            let f32p = PreparedModel::new(&model, &p, WeightDtype::F32);
+            let bf16p = PreparedModel::new(&model, &p, WeightDtype::Bf16);
+            assert!(bf16p.resident_bytes() < f32p.resident_bytes(),
+                    "{moe:?}: bf16 must shrink the resident footprint");
+            assert_eq!(bf16p.dtype(), WeightDtype::Bf16);
+            let imgs = rand_images(1, &cfg, 4);
+            let mut ws = Workspace::new();
+            let (lw, _) = model.forward_item_infer(&p, &imgs, 0, &mut ws);
+            let (lp, fp) = bf16p.forward_item_infer(&imgs, 0, &mut ws);
+            assert!(fp.iter().all(|v| v.is_finite()));
+            for (a, b) in lp.iter().zip(&lw) {
+                // bf16 rounds each weight by <= 2⁻⁸ relative; across this
+                // tiny model the logits stay within a small band. (The
+                // rigorous k-scaled bound is asserted at the GEMM level
+                // in rust/tests/kernel_dispatch.rs.)
+                assert!((a - b).abs() < 0.05,
+                        "{moe:?} bf16 logits drift: {a} vs {b}");
+            }
         }
     }
 

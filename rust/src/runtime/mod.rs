@@ -62,6 +62,27 @@ pub trait Backend {
     /// Initialize parameters from a seed.
     fn init(&mut self, seed: i32) -> Result<ParamStore>;
 
+    /// Build an inference-optimized **snapshot** of `params` (e.g. the
+    /// native engine's `nn::PreparedModel`: weights pre-packed into
+    /// kernel panel layout, f32 or bf16 per `SOFTMOE_WEIGHT_DTYPE`).
+    /// Subsequent [`Backend::forward`] calls passing the **same** store
+    /// object use it; a different store falls back to the unprepared
+    /// path, and [`Backend::train_step`] invalidates the snapshot (it
+    /// mutates parameters in place). Callers that mutate the store by
+    /// any other means — or drop it and reuse its address — must call
+    /// `prepare` again. Default: no-op (PJRT already holds device-side
+    /// parameters).
+    fn prepare(&mut self, _params: &ParamStore) -> Result<()> {
+        Ok(())
+    }
+
+    /// `(resident bytes, dtype name)` of the prepared representation
+    /// built by [`Backend::prepare`], if any — the serve observability
+    /// hook for model memory footprint.
+    fn prepared_footprint(&self) -> Option<(usize, &'static str)> {
+        None
+    }
+
     /// Batched forward: images (B, H, W, C) -> (logits (B, classes),
     /// features (B, d)). The backend may require B to match a compiled
     /// batch size (see `PjrtRuntime::fwd_batches`).

@@ -9,9 +9,9 @@
 use anyhow::Result;
 
 use crate::config::ModelConfig;
-use crate::nn::{ParamStore, VitModel};
+use crate::nn::{ParamStore, PreparedModel, VitModel};
 use crate::runtime::{Backend, StepOut, TrainState};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, WeightDtype};
 
 pub const ADAM_B1: f32 = 0.9;
 pub const ADAM_B2: f32 = 0.999;
@@ -49,13 +49,50 @@ pub fn adam_update(
 pub struct NativeRuntime {
     pub model: VitModel,
     label: String,
+    /// Prepacked inference parameters ([`Backend::prepare`]): a
+    /// snapshot of the store passed to `prepare`, plus a key identifying
+    /// that store. `forward` takes the prepared path only for the same
+    /// store (a different store falls back to the unprepared path) and
+    /// `train_step` drops the snapshot (it mutates the parameters in
+    /// place, so any snapshot is stale). Callers that mutate the store
+    /// by other means must call `prepare` again.
+    prepared: Option<PreparedModel>,
+    prepared_for: StoreKey,
+}
+
+/// Identity key for the store a prepared snapshot was built from: the
+/// map's address, its entry count, and the heap address of the first
+/// tensor's data. The extra discriminants guard against allocator
+/// address reuse (drop store A, allocate store B at the same address):
+/// a collision would need the map AND the first parameter buffer to land
+/// on the same freed addresses with the same entry count — and any
+/// mismatch just falls back to the safe unprepared path.
+type StoreKey = (usize, usize, usize);
+
+fn store_key(params: &ParamStore) -> StoreKey {
+    let first = params
+        .values()
+        .next()
+        .map_or(0, |t| t.data.as_ptr() as usize);
+    (params as *const ParamStore as usize, params.len(), first)
 }
 
 impl NativeRuntime {
     pub fn new(cfg: ModelConfig) -> Self {
         let label = format!("{}_{}d{}", cfg.moe_type.name(), cfg.num_experts,
                             cfg.dim);
-        Self { model: VitModel::new(cfg), label }
+        Self {
+            model: VitModel::new(cfg),
+            label,
+            prepared: None,
+            prepared_for: (0, 0, 0),
+        }
+    }
+
+    /// The prepacked parameters, if [`Backend::prepare`] ran (tests and
+    /// warmup paths use this to drive the exact serve-time code path).
+    pub fn prepared(&self) -> Option<&PreparedModel> {
+        self.prepared.as_ref()
     }
 }
 
@@ -68,8 +105,27 @@ impl Backend for NativeRuntime {
         Ok(self.model.init(seed as u64))
     }
 
+    fn prepare(&mut self, params: &ParamStore) -> Result<()> {
+        self.prepared = Some(PreparedModel::new(&self.model, params,
+                                                WeightDtype::from_env()));
+        self.prepared_for = store_key(params);
+        Ok(())
+    }
+
+    fn prepared_footprint(&self) -> Option<(usize, &'static str)> {
+        self.prepared
+            .as_ref()
+            .map(|p| (p.resident_bytes(), p.dtype().name()))
+    }
+
     fn forward(&mut self, params: &ParamStore, images: &Tensor)
         -> Result<(Tensor, Tensor)> {
+        if let Some(prep) = &self.prepared {
+            if self.prepared_for == store_key(params) {
+                let out = prep.forward(images);
+                return Ok((out.logits, out.features));
+            }
+        }
         let out = self.model.forward(params, images);
         Ok((out.logits, out.features))
     }
@@ -81,6 +137,11 @@ impl Backend for NativeRuntime {
         labels: &[i32],
         lr: f32,
     ) -> Result<StepOut> {
+        // Adam mutates the parameters IN PLACE (same store, same
+        // address), so any prepared snapshot is stale from here on —
+        // drop it or a later forward would read pre-update weights
+        // through the same-store check.
+        self.prepared = None;
         let labels_usize: Vec<usize> =
             labels.iter().map(|&l| l as usize).collect();
         let (loss, acc, grads) =
@@ -168,5 +229,59 @@ mod tests {
         let (logits, _) = be.forward(&params, &imgs).unwrap();
         let direct = VitModel::new(cfg).forward(&params, &imgs);
         assert!(logits.max_diff(&direct.logits) < 1e-6);
+    }
+
+    #[test]
+    fn prepare_binds_store_and_matches_prepared_model() {
+        // After prepare(), forward with the SAME store must take the
+        // prepacked path (compare against a PreparedModel built with the
+        // same env dtype — robust under the CI bf16 leg), while a
+        // different store must fall back to the unprepared path.
+        let cfg = tiny();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(7).unwrap();
+        let imgs = images(2, &cfg, 8);
+        assert!(be.prepared_footprint().is_none());
+        be.prepare(&params).unwrap();
+        let (bytes, dtype) = be.prepared_footprint().unwrap();
+        assert!(bytes > 0);
+        assert_eq!(dtype, crate::tensor::WeightDtype::from_env().name());
+
+        let model = VitModel::new(cfg.clone());
+        let want = PreparedModel::new(&model, &params,
+                                      crate::tensor::WeightDtype::from_env())
+            .forward(&imgs);
+        let (logits, feats) = be.forward(&params, &imgs).unwrap();
+        assert_eq!(logits.data, want.logits.data);
+        assert_eq!(feats.data, want.features.data);
+
+        // A different store: unprepared path, fresh weights.
+        let params2 = be.init(9).unwrap();
+        let (l2, _) = be.forward(&params2, &imgs).unwrap();
+        let direct = model.forward(&params2, &imgs);
+        assert_eq!(l2.data, direct.logits.data,
+                   "a different store must use the unprepared path");
+    }
+
+    #[test]
+    fn train_step_invalidates_prepared_snapshot() {
+        // Adam mutates state.params in place (same address), so the
+        // same-store check alone cannot catch staleness — train_step
+        // must drop the snapshot and the next forward must read the
+        // UPDATED weights.
+        let cfg = tiny();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(3).unwrap();
+        let mut state = TrainState::fresh(params);
+        be.prepare(&state.params).unwrap();
+        assert!(be.prepared_footprint().is_some());
+        let imgs = images(2, &cfg, 4);
+        be.train_step(&mut state, &imgs, &[0, 1], 1e-2).unwrap();
+        assert!(be.prepared_footprint().is_none(),
+                "train_step must drop the stale prepared snapshot");
+        let (logits, _) = be.forward(&state.params, &imgs).unwrap();
+        let direct = VitModel::new(cfg).forward(&state.params, &imgs);
+        assert_eq!(logits.data, direct.logits.data,
+                   "forward after training must read the updated weights");
     }
 }

@@ -175,6 +175,31 @@ impl Server {
         // pin this executor thread to the core they leave free so it
         // stops migrating across the workers' cores mid-request.
         crate::threadpool::pin_executor_thread();
+        // Prepacked-weight startup, BEFORE any request is served:
+        // 1. Build the backend's prepared parameter representation
+        //    (native: `nn::PreparedModel` — every weight pre-packed into
+        //    kernel panels, dtype per SOFTMOE_WEIGHT_DTYPE), so the hot
+        //    loop below never runs a weight pack pass.
+        // 2. Run one padded warm-up batch per compiled size so every
+        //    worker's resident workspace is sized with model-shaped work
+        //    and first-request latency reflects steady state. (Requests
+        //    already queued by clients just wait; none is consumed here.)
+        // Both are asserted by the serve section of
+        // `rust/tests/pool_steady_state.rs`.
+        backend.prepare(params)?;
+        if let Some((bytes, dtype)) = backend.prepared_footprint() {
+            metrics.set_gauge("model/prepacked_bytes", bytes as f64);
+            metrics.set_label("model/weight_dtype", dtype);
+        }
+        let mut shape = vec![0usize];
+        shape.extend_from_slice(&self.image_shape);
+        for &bsz in &self.policy.compiled_sizes {
+            shape[0] = bsz;
+            let images = Tensor::zeros(&shape);
+            let _ = backend.forward(params, &images)?;
+        }
+        metrics.inc("serve/warmup_batches",
+                    self.policy.compiled_sizes.len() as u64);
         let mut served = 0usize;
         // Reusable padded input buffer: zero allocations in the hot loop
         // beyond what the backend itself does.
@@ -319,6 +344,14 @@ mod tests {
         }
         assert_eq!(metrics.counter("serve/requests"), n_requests as u64);
         assert!(metrics.histogram("serve/latency_secs").unwrap().len() > 0);
+        // Prepacked-weight observability: run() built the PreparedModel
+        // before serving and registered its footprint.
+        assert!(metrics.gauge("model/prepacked_bytes").unwrap() > 0.0);
+        assert_eq!(
+            metrics.label("model/weight_dtype").as_deref(),
+            Some(crate::tensor::WeightDtype::from_env().name())
+        );
+        assert_eq!(metrics.counter("serve/warmup_batches"), 4);
     }
 
     #[test]

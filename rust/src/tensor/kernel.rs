@@ -460,6 +460,58 @@ pub fn with_kernel<R>(name: &str, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+// ---------------------------------------------------------------------------
+// bf16 panel codec — the pack-consumption side of prepacked weights
+// ---------------------------------------------------------------------------
+//
+// `tensor::PackedPanels` may store pre-packed B panels as bf16 (truncated
+// f32: 1 sign, 8 exponent, 7 mantissa bits) to halve the weight-side
+// memory traffic the GEMM streams per call. Compute stays f32: the
+// prepacked GEMM driver decodes one L1-sized panel at a time right before
+// the microkernel consumes it (`gemm_rows_bf16` in `tensor`), so the
+// microkernels themselves never change and every kernel in the fleet
+// works with either storage dtype.
+
+/// Decode one bf16 value (stored as the high 16 bits of an f32).
+#[inline]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// Encode an f32 to bf16 with round-to-nearest-even (the IEEE default).
+/// Values whose rounded magnitude exceeds the bf16 range become ±inf;
+/// NaNs stay NaN. Relative rounding error is at most 2⁻⁸ — the term the
+/// bf16 parity tests add to the accumulation error budget.
+#[inline]
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // Keep a quiet NaN; plain truncation could produce an inf
+        // pattern if the payload lived only in the low mantissa bits.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Decode a bf16 slice into f32 (the panel staging copy).
+#[inline]
+pub fn decode_bf16_slice(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &u) in dst.iter_mut().zip(src) {
+        *d = bf16_to_f32(u);
+    }
+}
+
+/// Encode an f32 slice into bf16 (the prepare-time pack step).
+#[inline]
+pub fn encode_bf16_slice(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(v);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -507,6 +559,47 @@ mod tests {
     #[should_panic]
     fn with_kernel_rejects_unknown() {
         with_kernel("quantum", || {});
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representable_values() {
+        // Values with <= 7 mantissa bits survive the trip untouched.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25, 256.0,
+                  1.0 / 128.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "{v}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::INFINITY)).is_infinite());
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1 + 1.5·2⁻⁷ sits halfway between 1 + 2⁻⁷ (odd mantissa) and
+        // 1 + 2·2⁻⁷ (even): ties go to even, i.e. up here.
+        let tie_up = f32::from_bits(0x3F81_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie_up)).to_bits(), 0x3F82_0000);
+        // 1 + 0.5·2⁻⁷ ties between 1.0 (even) and 1 + 2⁻⁷ (odd): to even,
+        // i.e. down to 1.0.
+        let tie_down = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie_down)), 1.0);
+        // Relative error of any rounding stays within 2⁻⁸.
+        for i in 0..200 {
+            let v = 0.37f32 + 0.013 * i as f32;
+            let r = bf16_to_f32(f32_to_bf16(v));
+            assert!((r - v).abs() <= v.abs() * (0.5f32).powi(8), "{v}");
+        }
+    }
+
+    #[test]
+    fn bf16_slice_codec_roundtrip() {
+        let src: Vec<f32> = (0..50).map(|i| 0.125 * i as f32 - 3.0).collect();
+        let mut enc = vec![0u16; 50];
+        encode_bf16_slice(&src, &mut enc);
+        let mut dec = vec![0f32; 50];
+        decode_bf16_slice(&enc, &mut dec);
+        for (a, b) in src.iter().zip(&dec) {
+            assert!((a - b).abs() <= a.abs() * (0.5f32).powi(8));
+        }
     }
 
     #[test]

@@ -20,10 +20,13 @@
 //! always pick SIMD.
 
 use softmoe::config::{ModelConfig, MoeType};
-use softmoe::nn::VitModel;
+use softmoe::nn::{PreparedModel, VitModel};
 use softmoe::tensor::{
-    kernel, matmul, matmul_bias, matmul_bias_gelu, matmul_grouped_into,
-    matmul_nt, matmul_tn, Tensor, Workspace,
+    kernel, matmul, matmul_bias, matmul_bias_gelu, matmul_bias_gelu_into,
+    matmul_bias_into, matmul_bias_prepacked_into, matmul_grouped_into,
+    matmul_grouped_prepacked_into, matmul_into, matmul_nt,
+    matmul_prepacked_into, matmul_tn, PackedPanels, Tensor, WeightDtype,
+    Workspace,
 };
 use softmoe::util::Rng;
 
@@ -224,6 +227,159 @@ fn model_forward_agrees_across_kernels() {
             assert!((x - y).abs() < 1e-3,
                     "{} feats drift: {x} vs {y}", kern.name());
         }
+    }
+}
+
+#[test]
+fn prepacked_f32_bit_identical_under_every_kernel() {
+    // The prepacked drivers must reproduce the pack-per-call drivers
+    // EXACTLY for f32 panels — same panel bytes, same small-GEMM
+    // threshold, same chunking — under every kernel the host supports,
+    // for every fused epilogue.
+    let mut rng = Rng::new(50);
+    let mut ws = Workspace::new();
+    for &(m, k, n) in SHAPES {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let w = PackedPanels::pack(&b, WeightDtype::F32);
+        for kern in kernel::available() {
+            kernel::with_kernel(kern.name(), || {
+                let mut want = vec![0.0f32; m * n];
+                let mut got = vec![0.0f32; m * n];
+                matmul_into(&a, &b, &mut want, &mut ws);
+                matmul_prepacked_into(&a, &w, &mut got, &mut ws);
+                assert_eq!(got, want, "{}:plain({m},{k},{n})", kern.name());
+                matmul_bias_into(&a, &b, &bias, &mut want, &mut ws);
+                matmul_bias_prepacked_into(&a, &w, &bias, &mut got, &mut ws);
+                assert_eq!(got, want, "{}:bias({m},{k},{n})", kern.name());
+                matmul_bias_gelu_into(&a, &b, &bias, &mut want, &mut ws);
+                softmoe::tensor::matmul_bias_gelu_prepacked_into(
+                    &a, &w, &bias, &mut got, &mut ws);
+                assert_eq!(got, want, "{}:gelu({m},{k},{n})", kern.name());
+            });
+        }
+    }
+}
+
+#[test]
+fn prepacked_grouped_bit_identical_under_every_kernel() {
+    // Same configurations as all_kernels_grouped_gemm (variable fills,
+    // an empty group, a KC-crossing k): the prepacked grouped driver vs
+    // the pack-per-call one, exact equality per kernel.
+    let mut rng = Rng::new(51);
+    let mut ws = Workspace::new();
+    for &(ng, stride, k, n) in
+        &[(3usize, 2usize, 9usize, 11usize), (4, 5, 67, 40), (3, 8, 300, 19)]
+    {
+        let rows: Vec<usize> = (0..ng).map(|g| g % (stride + 1)).collect();
+        let a = Tensor::randn(&[ng * stride, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[ng, k, n], 1.0, &mut rng);
+        let bias = Tensor::randn(&[ng, n], 0.5, &mut rng);
+        let w = PackedPanels::pack_grouped(&b.data, k, n, WeightDtype::F32);
+        for kern in kernel::available() {
+            kernel::with_kernel(kern.name(), || {
+                let mut want = vec![3.5f32; ng * stride * n];
+                let mut got = vec![3.5f32; ng * stride * n];
+                matmul_grouped_into(&a, &b.data, Some(&bias.data), n, stride,
+                                    Some(&rows), false, &mut want, &mut ws);
+                matmul_grouped_prepacked_into(&a, &w, Some(&bias.data),
+                                              stride, Some(&rows), false,
+                                              &mut got, &mut ws);
+                assert_eq!(got, want,
+                           "{}:grouped({ng},{stride},{k},{n})", kern.name());
+            });
+        }
+    }
+}
+
+#[test]
+fn prepacked_bf16_meets_error_budget_under_every_kernel() {
+    // bf16 panels round each weight once (relative error <= 2⁻⁸,
+    // round-to-nearest-even) and then accumulate in f32 exactly like the
+    // f32 path — so the budget is the usual k-scaled accumulation term
+    // plus one quantization term, both scaled by sum_k |a|·|b|.
+    let mut rng = Rng::new(52);
+    let mut ws = Workspace::new();
+    let bf16_u = (0.5f64).powi(8);
+    for &(m, k, n) in SHAPES {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let (want, mag) = reference(&a, &b);
+        let w = PackedPanels::pack(&b, WeightDtype::Bf16);
+        let scale =
+            2.0 * (k as f64 + 2.0) * f32::EPSILON as f64 + 2.0 * bf16_u;
+        for kern in kernel::available() {
+            kernel::with_kernel(kern.name(), || {
+                let mut got = vec![0.0f32; m * n];
+                matmul_prepacked_into(&a, &w, &mut got, &mut ws);
+                for (i, &g) in got.iter().enumerate() {
+                    let bound = scale * mag[i] + 1e-30;
+                    assert!(
+                        (g as f64 - want[i]).abs() <= bound,
+                        "{}:bf16({m},{k},{n})[{i}]: {g} vs {} (budget \
+                         {bound:e})",
+                        kern.name(), want[i]
+                    );
+                }
+                // And the bf16 path is EXACTLY a matmul over the rounded
+                // weights (decode order and accumulation are unchanged).
+                let b_rounded = b.map(|v| {
+                    kernel::bf16_to_f32(kernel::f32_to_bf16(v))
+                });
+                let mut exact = vec![0.0f32; m * n];
+                matmul_into(&a, &b_rounded, &mut exact, &mut ws);
+                assert_eq!(got, exact,
+                           "{}:bf16-exact({m},{k},{n})", kern.name());
+            });
+        }
+    }
+}
+
+#[test]
+fn prepared_model_forward_bit_identical_under_every_kernel() {
+    // End-to-end acceptance criterion: the PreparedModel (f32) forward
+    // reproduces the unprepared inference path exactly, under every
+    // kernel; the bf16 PreparedModel stays within a loose band of it.
+    let cfg = ModelConfig {
+        image_size: 8,
+        patch_size: 4,
+        channels: 3,
+        dim: 16,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 24,
+        num_classes: 5,
+        moe_type: MoeType::Soft,
+        moe_layers: vec![1],
+        num_experts: 3,
+        slots_per_expert: 2,
+        expert_hidden: 24,
+        ..ModelConfig::default()
+    };
+    let model = VitModel::new(cfg.clone());
+    let p = model.init(7);
+    let prep = PreparedModel::new(&model, &p, WeightDtype::F32);
+    let prep16 = PreparedModel::new(&model, &p, WeightDtype::Bf16);
+    let mut rng = Rng::new(8);
+    let npx = cfg.image_size * cfg.image_size * cfg.channels;
+    let imgs = Tensor::from_vec(
+        &[1, cfg.image_size, cfg.image_size, cfg.channels],
+        (0..npx).map(|_| rng.uniform()).collect(),
+    );
+    for kern in kernel::available() {
+        let mut ws = Workspace::new();
+        kernel::with_kernel(kern.name(), || {
+            let (lw, fw) = model.forward_item_infer(&p, &imgs, 0, &mut ws);
+            let (lp, fp) = prep.forward_item_infer(&imgs, 0, &mut ws);
+            assert_eq!(lp, lw, "{} prepared logits drifted", kern.name());
+            assert_eq!(fp, fw, "{} prepared feats drifted", kern.name());
+            let (l16, _) = prep16.forward_item_infer(&imgs, 0, &mut ws);
+            for (x, y) in l16.iter().zip(&lw) {
+                assert!((x - y).abs() < 0.05,
+                        "{} bf16 logits drift: {x} vs {y}", kern.name());
+            }
+        });
     }
 }
 

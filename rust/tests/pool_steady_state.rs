@@ -10,9 +10,16 @@
 //! perturb; cargo runs test binaries one at a time, so here the counters
 //! move only for the work below.
 
+use std::time::Duration;
+
 use softmoe::config::{ModelConfig, MoeType};
+use softmoe::metrics::Registry;
 use softmoe::nn::VitModel;
-use softmoe::tensor::{total_fresh_allocs, with_workspace, Tensor};
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::Backend;
+use softmoe::serve::{BatchPolicy, Server};
+use softmoe::tensor::{pack_passes, total_fresh_allocs, with_workspace,
+                      Tensor};
 use softmoe::threadpool;
 use softmoe::util::Rng;
 
@@ -135,4 +142,123 @@ fn batched_forward_steady_state_zero_spawns_zero_ws_allocs() {
         allocs,
         "warm worker arenas must serve take() from their resident pool"
     );
+
+    serve_steady_state_never_packs_or_allocates();
+}
+
+/// Serve acceptance criterion (PR 4): with the PreparedModel built at
+/// startup, the serve hot loop runs **zero** `pack_b` passes (weights are
+/// prepacked; at this model size the activation GEMMs stay below the
+/// packing threshold) and **zero** fresh workspace allocations once warm.
+/// Runs inside the single `#[test]` above so the process-global counters
+/// stay deterministic.
+fn serve_steady_state_never_packs_or_allocates() {
+    // Sized so the weight GEMMs (patch embed 16×48×32, attention
+    // projections 16×32×32, dense MLP 16×32×64) are ABOVE the direct
+    // small-GEMM threshold — the unprepared path would pack every one of
+    // them per item — while the activation GEMMs (QKᵀ 16×16×16, the MoE
+    // dispatch/combine at s = 2) stay below it.
+    let cfg = ModelConfig {
+        image_size: 16,
+        patch_size: 4,
+        channels: 3,
+        dim: 32,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 64,
+        num_classes: 4,
+        moe_type: MoeType::Soft,
+        moe_layers: vec![1],
+        num_experts: 2,
+        slots_per_expert: 1,
+        expert_hidden: 64,
+        ..ModelConfig::default()
+    };
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(0).unwrap();
+    let img: Vec<f32> = {
+        let mut rng = Rng::new(11);
+        (0..cfg.image_size * cfg.image_size * cfg.channels)
+            .map(|_| rng.uniform())
+            .collect()
+    };
+
+    // Deterministically warm every worker arena (and the executor
+    // thread's) on the exact prepared path the server will run — padded
+    // batches mean any subset of workers can pick up items, so every
+    // arena must be warm before the steady-state reads.
+    be.prepare(&params).unwrap();
+    {
+        let mut imgs4 = Tensor::zeros(&[4, cfg.image_size, cfg.image_size,
+                                        cfg.channels]);
+        for i in 0..4 {
+            let sz = img.len();
+            imgs4.data[i * sz..(i + 1) * sz].copy_from_slice(&img);
+        }
+        let prep = be.prepared().expect("prepare() must build the model");
+        threadpool::run_on_each_worker(|_w| {
+            with_workspace(|ws| {
+                let _ = prep.forward_item_infer(&imgs4, 0, ws);
+            });
+        });
+        with_workspace(|ws| {
+            let _ = prep.forward_item_infer(&imgs4, 0, ws);
+        });
+    }
+
+    let (server, client) = Server::new(
+        BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(1),
+            compiled_sizes: vec![4],
+        },
+        &[cfg.image_size, cfg.image_size, cfg.channels],
+    );
+    let metrics = Registry::new();
+    let warm = 4usize;
+    let steady = 6usize;
+    // The client thread reads the process-global counters between its
+    // warm and steady request groups; a response only arrives after the
+    // server fully executed that batch, so the reads bracket exactly the
+    // steady-state work.
+    let checker = std::thread::spawn(move || {
+        for _ in 0..warm {
+            client.submit(img.clone()).recv().unwrap();
+        }
+        let before = (pack_passes(), total_fresh_allocs(),
+                      threadpool::spawn_count());
+        for _ in 0..steady {
+            client.submit(img.clone()).recv().unwrap();
+        }
+        let after = (pack_passes(), total_fresh_allocs(),
+                     threadpool::spawn_count());
+        (before, after)
+    });
+    let served = server
+        .run(&mut be, &params, &metrics, Some(warm + steady))
+        .unwrap();
+    assert_eq!(served, warm + steady);
+    let ((p0, a0, s0), (p1, a1, s1)) = checker.join().unwrap();
+    assert_eq!(p1, p0,
+               "serve steady state ran a pack_b pass — prepacked weights \
+                must remove weight packing from the hot loop");
+    assert_eq!(a1, a0,
+               "serve steady state allocated fresh workspace buffers");
+    assert_eq!(s1, s0, "serve steady state spawned threads");
+    assert!(metrics.gauge("model/prepacked_bytes").unwrap() > 0.0,
+            "serve must register the prepacked footprint");
+
+    // Non-triviality: at this size the UNPREPARED path does pack (so the
+    // zero-delta assertion above has teeth).
+    let packs = pack_passes();
+    let mut img1 = Tensor::zeros(&[1, cfg.image_size, cfg.image_size,
+                                   cfg.channels]);
+    let mut rng = Rng::new(12);
+    for v in img1.data.iter_mut() {
+        *v = rng.uniform();
+    }
+    let _ = VitModel::new(cfg).forward(&params, &img1);
+    assert!(pack_passes() > packs,
+            "config regression: the unprepared forward should exceed the \
+             packing threshold here");
 }

@@ -16,7 +16,7 @@ use softmoe::runtime::pjrt::PjrtRuntime;
 use softmoe::runtime::Backend;
 use softmoe::serve::{BatchPolicy, Server};
 use softmoe::tensor::{Tensor, WeightDtype};
-use softmoe::util::Rng;
+use softmoe::util::{Rng, Stopwatch};
 
 fn rand_images(b: usize, size: usize, seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
@@ -86,6 +86,68 @@ fn main() {
         }
         prepared_rows.push(row);
     }
+
+    // --- Snapshot cold start: time-to-first-token from a ParamStore
+    // (full prepack) vs from a mmap'd .panels snapshot (zero pack
+    // passes, zero payload copy). One-shot timings by design — cold
+    // start happens once per boot, so we report the single-run wall
+    // clock rather than a steady-state mean.
+    println!("\n== snapshot cold start (native soft, prepack vs mmap) ==");
+    let mut snapshot_rows: Vec<Value> = Vec::new();
+    let snap_dir = std::env::temp_dir()
+        .join(format!("softmoe-bench-snap-{}", std::process::id()));
+    std::fs::create_dir_all(&snap_dir).unwrap();
+    for size in sizes {
+        let cfg = ModelConfig::preset(size, MoeType::Soft).unwrap();
+        let model = VitModel::new(cfg.clone());
+        let params = model.init(0);
+        let dtype = WeightDtype::from_env();
+        let images = rand_images(1, cfg.image_size, 9);
+
+        let sw = Stopwatch::start();
+        let prep = PreparedModel::new(&model, &params, dtype);
+        let prepack_secs = sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let _ = black_box(prep.forward(&images));
+        let prepack_first = prepack_secs + sw.elapsed_secs();
+
+        let file = snap_dir.join(format!("{size}.panels"));
+        let sw = Stopwatch::start();
+        prep.save_snapshot(&file).unwrap();
+        let save_secs = sw.elapsed_secs();
+
+        let sw = Stopwatch::start();
+        let loaded = PreparedModel::load_snapshot(&model, &file, dtype)
+            .unwrap();
+        let load_secs = sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let _ = black_box(loaded.forward(&images));
+        let load_first = load_secs + sw.elapsed_secs();
+
+        let file_bytes = std::fs::metadata(&file).unwrap().len();
+        println!(
+            "    -> {size}: prepack {:.2} ms vs snapshot load {:.2} ms \
+             ({:.1}x); cold-start-to-first-token {:.2} -> {:.2} ms \
+             (file {:.1} MiB, save {:.2} ms)",
+            prepack_secs * 1e3, load_secs * 1e3,
+            prepack_secs / load_secs.max(1e-9),
+            prepack_first * 1e3, load_first * 1e3,
+            file_bytes as f64 / (1024.0 * 1024.0), save_secs * 1e3
+        );
+        let mut row = Value::obj();
+        row.set("name", Value::Str(format!("soft_{size}")));
+        row.set("dtype", Value::Str(dtype.name().to_string()));
+        row.set("prepack_secs", Value::Num(prepack_secs));
+        row.set("snapshot_load_secs", Value::Num(load_secs));
+        row.set("snapshot_save_secs", Value::Num(save_secs));
+        row.set("cold_first_token_prepack_secs", Value::Num(prepack_first));
+        row.set("cold_first_token_snapshot_secs", Value::Num(load_first));
+        row.set("load_speedup", Value::Num(
+            prepack_secs / load_secs.max(1e-9)));
+        row.set("file_bytes", Value::from(file_bytes as usize));
+        snapshot_rows.push(row);
+    }
+    let _ = std::fs::remove_dir_all(&snap_dir);
 
     // --- PJRT: every model in the manifest at each compiled batch size.
     let dir = std::env::var("SOFTMOE_ARTIFACTS")
@@ -167,6 +229,7 @@ fn main() {
     // the prepacked f32-vs-bf16 tokens/s comparison.
     let mut root = bench.to_json();
     root.set("prepared", Value::Arr(prepared_rows));
+    root.set("snapshot", Value::Arr(snapshot_rows));
     let path = std::path::Path::new("reports/BENCH_INFERENCE.json");
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);

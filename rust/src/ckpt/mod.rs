@@ -6,8 +6,10 @@
 //! native engine and vice versa (used by the parity and inspection
 //! pipelines).
 
+pub mod snapshot;
+
 use std::fs;
-use std::io::{Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -16,35 +18,53 @@ use crate::json::{self, Value};
 use crate::nn::ParamStore;
 use crate::runtime::TrainState;
 use crate::tensor::Tensor;
+use crate::util;
 
 const MAGIC: &str = "softmoe-ckpt-v1";
 
-/// Save a ParamStore under `dir/name.{json,bin}`.
+/// Save a ParamStore under `dir/name.{json,bin}`. Tensor payloads go out
+/// as one bulk slice write each (the f32 data viewed as bytes — the file
+/// stays little-endian; big-endian hosts take a per-element conversion
+/// path), never an element-at-a-time extend.
 pub fn save_params(dir: &Path, name: &str, params: &ParamStore) -> Result<()> {
     fs::create_dir_all(dir)?;
     let mut header = Value::obj();
     header.set("magic", Value::from(MAGIC));
     let mut order = Vec::new();
-    let mut bin: Vec<u8> = Vec::new();
+    let mut total = 0usize;
     for (k, t) in params {
         let mut e = Value::obj();
         e.set("name", Value::from(k.as_str()));
         e.set("shape", Value::Arr(
             t.shape.iter().map(|&d| Value::from(d)).collect()));
         order.push(e);
-        for v in &t.data {
-            bin.extend_from_slice(&v.to_le_bytes());
-        }
+        total = total
+            .checked_add(t.data.len() * 4)
+            .context("checkpoint payload size overflow")?;
     }
     header.set("params", Value::Arr(order));
-    header.set("bytes", Value::from(bin.len()));
+    header.set("bytes", Value::from(total));
     fs::write(dir.join(format!("{name}.json")), header.to_string())?;
-    let mut f = fs::File::create(dir.join(format!("{name}.bin")))?;
-    f.write_all(&bin)?;
+    let mut w = BufWriter::new(
+        fs::File::create(dir.join(format!("{name}.bin")))?);
+    for (_k, t) in params {
+        #[cfg(target_endian = "little")]
+        w.write_all(util::f32s_as_bytes(&t.data))?;
+        #[cfg(not(target_endian = "little"))]
+        for v in &t.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
     Ok(())
 }
 
-/// Load a ParamStore saved by [`save_params`].
+/// Load a ParamStore saved by [`save_params`]. Each tensor's payload is
+/// read directly into its final buffer (one bulk `read_exact` per
+/// tensor — no intermediate whole-file `Vec<u8>`), and every tensor's
+/// shape·product is validated against the remaining payload before the
+/// read, so a truncated or shape-inconsistent file fails with a clean
+/// error naming the tensor instead of an index panic.
 pub fn load_params(dir: &Path, name: &str) -> Result<ParamStore> {
     let header_text = fs::read_to_string(dir.join(format!("{name}.json")))
         .with_context(|| format!("checkpoint {name} header"))?;
@@ -52,30 +72,68 @@ pub fn load_params(dir: &Path, name: &str) -> Result<ParamStore> {
     if header.req("magic")?.as_str() != Some(MAGIC) {
         bail!("bad checkpoint magic");
     }
-    let mut bin = Vec::new();
-    fs::File::open(dir.join(format!("{name}.bin")))?
-        .read_to_end(&mut bin)?;
-    if bin.len() != header.req("bytes")?.as_usize().context("bytes")? {
-        bail!("checkpoint payload size mismatch");
+    let declared = header.req("bytes")?.as_usize().context("bytes")?;
+    let mut f = fs::File::open(dir.join(format!("{name}.bin")))
+        .with_context(|| format!("checkpoint {name} payload"))?;
+    let file_len = f.metadata()?.len();
+    if file_len != declared as u64 {
+        bail!("checkpoint payload size mismatch: file {file_len} bytes, \
+               header declares {declared}");
     }
     let mut store = ParamStore::new();
     let mut off = 0usize;
     for e in header.req("params")?.as_arr().context("params")? {
-        let name = e.req("name")?.as_str().context("name")?.to_string();
+        let pname = e.req("name")?.as_str().context("name")?.to_string();
         let shape = e.req("shape")?.as_shape()?;
-        let n: usize = shape.iter().product();
-        let mut data = Vec::with_capacity(n);
-        for i in 0..n {
-            let b = &bin[off + i * 4..off + i * 4 + 4];
-            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| format!("'{pname}': shape overflow"))?;
+        let nbytes = n.checked_mul(4)
+            .with_context(|| format!("'{pname}': shape overflow"))?;
+        // checked_add: a forged shape must not wrap past the bound check.
+        let end = off.checked_add(nbytes)
+            .with_context(|| format!("'{pname}': payload offset overflow"))?;
+        if end > declared {
+            bail!(
+                "checkpoint payload too short for '{pname}': tensor needs \
+                 {nbytes} bytes at offset {off}, payload has {declared}"
+            );
         }
-        off += n * 4;
-        store.insert(name, Tensor::from_vec(&shape, data));
+        let mut data = vec![0.0f32; n];
+        f.read_exact(util::f32s_as_bytes_mut(&mut data))
+            .with_context(|| format!("'{pname}': payload read"))?;
+        #[cfg(not(target_endian = "little"))]
+        for v in data.iter_mut() {
+            *v = f32::from_bits(v.to_bits().swap_bytes());
+        }
+        off = end;
+        store.insert(pname, Tensor::from_vec(&shape, data));
     }
-    if off != bin.len() {
-        bail!("checkpoint payload has trailing bytes");
+    if off != declared {
+        bail!("checkpoint payload has trailing bytes: shapes cover {off} \
+               of {declared}");
     }
     Ok(store)
+}
+
+/// Order- and content-sensitive fingerprint of a `ParamStore` (names,
+/// shapes, payload bytes). Panel snapshots store it
+/// (`snapshot::write_snapshot`) and `Backend::prepare_from_snapshot`
+/// compares it against the store it is asked to serve, so a snapshot
+/// built from different parameter *values* — the classic
+/// retrained-checkpoint-stale-snapshot footgun — is rejected with a
+/// clean error instead of silently serving old weights.
+pub fn params_fingerprint(params: &ParamStore) -> u64 {
+    let mut f = snapshot::Fnv64::new();
+    for (k, t) in params {
+        f.update(k.as_bytes());
+        for &d in &t.shape {
+            f.update(&(d as u64).to_le_bytes());
+        }
+        f.update(util::f32s_as_bytes(&t.data));
+    }
+    f.finish()
 }
 
 /// Save the full train state (params + Adam moments + step).
@@ -167,5 +225,28 @@ mod tests {
     fn missing_checkpoint_errors() {
         let dir = tmpdir("missing");
         assert!(load_params(&dir, "nope").is_err());
+    }
+
+    #[test]
+    fn shape_payload_mismatch_rejected() {
+        let dir = tmpdir("shapemix");
+        save_params(&dir, "m", &sample_params(3)).unwrap();
+        // Grow the payload and patch the declared byte count to match:
+        // the per-tensor shape walk must still reject the file (the old
+        // loader only compared the total byte count).
+        let bin_path = dir.join("m.bin");
+        let mut data = fs::read(&bin_path).unwrap();
+        let old = data.len();
+        data.extend_from_slice(&[0u8; 8]);
+        fs::write(&bin_path, &data).unwrap();
+        let hdr_path = dir.join("m.json");
+        let hdr = fs::read_to_string(&hdr_path).unwrap();
+        let patched = hdr.replace(&format!("\"bytes\":{old}"),
+                                  &format!("\"bytes\":{}", old + 8));
+        assert_ne!(patched, hdr, "header must contain the byte count");
+        fs::write(&hdr_path, patched).unwrap();
+        let err = load_params(&dir, "m").unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+        fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,734 @@
+//! Panel-snapshot files: prepacked weights on disk, loaded by `mmap`.
+//!
+//! A `<name>.panels` file holds a [`nn::PreparedModel`]'s entire
+//! inference surface — every [`PackedPanels`] blob exactly as the GEMM
+//! kernels consume it, plus the f32 bias/LayerNorm/positional vectors —
+//! behind a validated header. Loading constructs `PackedPanels` as
+//! **zero-copy views borrowing the mapped region** (`util::Mmap` behind
+//! an `Arc`): no pack pass, no full-payload heap copy, no per-tensor
+//! re-layout. Cold start becomes "map + validate + wire up views"
+//! instead of "read everything, then re-pack everything".
+//!
+//! # File layout
+//!
+//! ```text
+//! [ 0..18)  magic  b"softmoe-panels-1\n\0"
+//! [18..22)  u32 LE header length H
+//! [22..22+H) header JSON (see below)
+//! ...       zero padding to the next 64-byte boundary = blob base
+//! [blob base..EOF) blob region: each entry's payload at its 64-byte-
+//!           aligned offset, zero padding in between
+//! ```
+//!
+//! Header JSON fields: `version` (1), `endian` ("little"/"big" — the
+//! blobs are raw native-endian element bytes, so a file only loads on a
+//! same-endian host), `dtype` ("f32"/"bf16" panel storage), `nr`/`kc`
+//! (the kernel panel layout the blobs were packed for —
+//! [`tensor::panel_layout`]; a mismatch means the panels would feed the
+//! microkernel garbage, so the loader rejects it), `blob_bytes`,
+//! `checksum` (FNV-1a 64 over the whole blob region, hex), and
+//! `entries`: `{name, kind: "panels"|"f32", k, n, groups | len, offset,
+//! bytes}` with offsets relative to the blob base.
+//!
+//! # Validation
+//!
+//! [`SnapshotFile::open`] rejects — with clean errors, never a panic —
+//! wrong magic, unknown version, endian mismatch, NR/KC mismatch,
+//! unknown dtype, truncated or oversized files (`blob base + blob_bytes`
+//! must equal the file length exactly), out-of-range or misaligned entry
+//! offsets, and blob corruption (checksum; skippable for
+//! lazy-page-in cold starts via `SOFTMOE_SNAPSHOT_VERIFY=0`, in which
+//! case header/shape/bounds validation still runs). Per-entry dims are
+//! then validated against the model by the typed getters. Callers treat
+//! any error as "fall back to pack-per-call" (`serve::Server::run`
+//! does).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::tensor::{panel_layout, PackedPanels, WeightDtype};
+use crate::util::{self, Mmap};
+
+/// File magic: format name + version byte + newline + NUL (18 bytes).
+pub const PANELS_MAGIC: &[u8; 18] = b"softmoe-panels-1\n\0";
+
+/// Marker in the error chain for rejections where the on-disk file
+/// itself is bad or out of date — truncation, blob corruption, a stale
+/// parameter fingerprint — as opposed to a *configuration* mismatch
+/// (wrong magic, dtype, kernel layout, different model shapes), where
+/// the file may be a perfectly valid artifact for someone else's
+/// configuration. `serve::Server::run` auto-rewrites a rejected
+/// snapshot only when this marker is present, so two differently
+/// configured servers sharing one `SOFTMOE_SNAPSHOT` path cannot
+/// flip-flop each other's files.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotFileInvalid;
+
+impl std::fmt::Display for SnapshotFileInvalid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "the snapshot file itself is invalid or out of date")
+    }
+}
+
+impl std::error::Error for SnapshotFileInvalid {}
+
+/// An error carrying the [`SnapshotFileInvalid`] marker under `msg`.
+pub(crate) fn file_invalid(msg: String) -> anyhow::Error {
+    anyhow::Error::new(SnapshotFileInvalid).context(msg)
+}
+const VERSION: usize = 1;
+/// Blob alignment: every entry payload starts on a 64-byte boundary so
+/// mapped f32/u16 views are always well-aligned (and cache-line-clean).
+const ALIGN: usize = 64;
+
+fn align_up(x: usize) -> usize {
+    (x + (ALIGN - 1)) & !(ALIGN - 1)
+}
+
+fn endian_name() -> &'static str {
+    if cfg!(target_endian = "little") {
+        "little"
+    } else {
+        "big"
+    }
+}
+
+fn dtype_name(d: WeightDtype) -> &'static str {
+    d.name()
+}
+
+fn dtype_parse(s: &str) -> Result<WeightDtype> {
+    match s {
+        "f32" => Ok(WeightDtype::F32),
+        "bf16" => Ok(WeightDtype::Bf16),
+        other => bail!("snapshot has unknown weight dtype '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checksum — FNV-1a 64 over 8-byte little-endian words (dependency-free,
+// streaming, boundary-agnostic). Word granularity keeps the default
+// verify pass a fast single read (~8× the byte-at-a-time loop) so it
+// doesn't dominate a cold start; a trailing partial word is zero-padded
+// at `finish` (stream lengths are validated separately, so padding
+// ambiguity cannot mask truncation).
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Fnv64 {
+    h: u64,
+    carry: [u8; 8],
+    carry_len: usize,
+}
+
+impl Fnv64 {
+    pub(crate) fn new() -> Self {
+        Self { h: 0xcbf2_9ce4_8422_2325, carry: [0; 8], carry_len: 0 }
+    }
+
+    #[inline]
+    fn mix(h: u64, w: u64) -> u64 {
+        (h ^ w).wrapping_mul(0x0000_0100_0000_01b3)
+    }
+
+    /// Feed bytes; chunk boundaries may fall anywhere (a partial word is
+    /// carried into the next call).
+    pub(crate) fn update(&mut self, mut bytes: &[u8]) {
+        let mut h = self.h;
+        if self.carry_len > 0 {
+            let take = (8 - self.carry_len).min(bytes.len());
+            self.carry[self.carry_len..self.carry_len + take]
+                .copy_from_slice(&bytes[..take]);
+            self.carry_len += take;
+            bytes = &bytes[take..];
+            if self.carry_len < 8 {
+                return;
+            }
+            h = Self::mix(h, u64::from_le_bytes(self.carry));
+            self.carry_len = 0;
+        }
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            h = Self::mix(h, u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        self.carry[..rem.len()].copy_from_slice(rem);
+        self.carry_len = rem.len();
+        self.h = h;
+    }
+
+    /// The digest so far (a trailing partial word is zero-padded; the
+    /// accumulator itself is not consumed).
+    pub(crate) fn finish(&self) -> u64 {
+        if self.carry_len == 0 {
+            self.h
+        } else {
+            let mut w = [0u8; 8];
+            w[..self.carry_len].copy_from_slice(&self.carry[..self.carry_len]);
+            Self::mix(self.h, u64::from_le_bytes(w))
+        }
+    }
+
+    pub(crate) fn hex(&self) -> String {
+        format!("{:016x}", self.finish())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// One entry to serialize: packed panels (the bulk, mapped back as views
+/// on load) or a plain f32 vector (biases, LayerNorm params, the
+/// positional embedding — small, copied on load).
+pub enum EntryRef<'a> {
+    Panels(&'a PackedPanels),
+    F32s(&'a [f32]),
+}
+
+impl EntryRef<'_> {
+    fn byte_len(&self) -> usize {
+        match self {
+            EntryRef::Panels(p) => p.panel_bytes().len(),
+            EntryRef::F32s(v) => v.len() * 4,
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            EntryRef::Panels(p) => p.panel_bytes(),
+            EntryRef::F32s(v) => util::f32s_as_bytes(v),
+        }
+    }
+}
+
+/// Write a snapshot holding `entries` (in order) with panel storage
+/// `dtype`. Every `Panels` entry must already be stored at `dtype` —
+/// the file has one dtype, validated at load. `params_fp` is the
+/// fingerprint of the `ParamStore` the panels were packed from
+/// ([`crate::ckpt::params_fingerprint`]); loaders compare it against
+/// the store they are asked to serve so a stale snapshot (retrained
+/// checkpoint, same file) is rejected instead of silently serving old
+/// weights.
+pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
+                      entries: &[(String, EntryRef<'_>)]) -> Result<()> {
+    // Pass 1: offsets + checksum over the exact bytes pass 2 will emit
+    // (payloads and inter-blob zero padding).
+    let mut metas = Vec::with_capacity(entries.len());
+    let mut sum = Fnv64::new();
+    let zeros = [0u8; ALIGN];
+    let mut off = 0usize;
+    for (name, e) in entries {
+        let bytes = e.byte_len();
+        if let EntryRef::Panels(p) = e {
+            if p.dtype() != dtype {
+                bail!("entry '{name}' is {} but the snapshot dtype is {}",
+                      dtype_name(p.dtype()), dtype_name(dtype));
+            }
+        }
+        metas.push((name.as_str(), off, bytes));
+        sum.update(e.bytes());
+        let padded = align_up(bytes);
+        sum.update(&zeros[..padded - bytes]);
+        off = off
+            .checked_add(padded)
+            .context("snapshot blob region size overflow")?;
+    }
+    let blob_bytes = off;
+
+    let mut header = Value::obj();
+    header.set("version", Value::from(VERSION));
+    header.set("endian", Value::from(endian_name()));
+    header.set("dtype", Value::from(dtype_name(dtype)));
+    let (nr, kc) = panel_layout();
+    header.set("nr", Value::from(nr));
+    header.set("kc", Value::from(kc));
+    header.set("blob_bytes", Value::from(blob_bytes));
+    header.set("checksum", Value::from(sum.hex()));
+    header.set("params_fp", Value::from(format!("{params_fp:016x}")));
+    let mut arr = Vec::with_capacity(entries.len());
+    for ((name, e), &(_, eoff, ebytes)) in entries.iter().zip(&metas) {
+        let mut v = Value::obj();
+        v.set("name", Value::from(name.as_str()));
+        v.set("offset", Value::from(eoff));
+        v.set("bytes", Value::from(ebytes));
+        match e {
+            EntryRef::Panels(p) => {
+                v.set("kind", Value::from("panels"));
+                v.set("k", Value::from(p.k_rows()));
+                v.set("n", Value::from(p.n_cols()));
+                v.set("groups", Value::from(p.groups()));
+            }
+            EntryRef::F32s(d) => {
+                v.set("kind", Value::from("f32"));
+                v.set("len", Value::from(d.len()));
+            }
+        }
+        arr.push(v);
+    }
+    header.set("entries", Value::Arr(arr));
+    let header_s = header.to_string();
+
+    // Pass 2: stream to a temp file in the target directory, then
+    // publish with an atomic rename. Readers that already mapped the old
+    // file keep their (old) inode intact — an in-place truncating write
+    // would SIGBUS them or hand them torn weights — and a crash
+    // mid-write can never leave a half-written file at the final path.
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = match path.file_name() {
+        Some(name) => path.with_file_name(format!(
+            "{}.tmp.{}", name.to_string_lossy(), std::process::id())),
+        None => bail!("snapshot path {path:?} has no file name"),
+    };
+    let write_all = || -> Result<()> {
+        let mut w = BufWriter::new(File::create(&tmp)
+            .with_context(|| format!("create snapshot temp {tmp:?}"))?);
+        w.write_all(PANELS_MAGIC)?;
+        w.write_all(&(header_s.len() as u32).to_le_bytes())?;
+        w.write_all(header_s.as_bytes())?;
+        let head_len = PANELS_MAGIC.len() + 4 + header_s.len();
+        w.write_all(&zeros[..align_up(head_len) - head_len])?;
+        for (_name, e) in entries {
+            let bytes = e.bytes();
+            w.write_all(bytes)?;
+            w.write_all(&zeros[..align_up(bytes.len()) - bytes.len()])?;
+        }
+        let f = w.into_inner()
+            .map_err(|e| anyhow::anyhow!("flush snapshot: {e}"))?;
+        // Durability before the rename: the publish must not point at
+        // data the kernel hasn't persisted yet.
+        f.sync_all()?;
+        Ok(())
+    };
+    if let Err(e) = write_all() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publish snapshot {path:?}"))
+        .inspect_err(|_| {
+            let _ = std::fs::remove_file(&tmp);
+        })?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EntryKind {
+    Panels,
+    F32s,
+}
+
+struct Entry {
+    kind: EntryKind,
+    /// (k, n, groups) for panels; (len, 0, 0) for f32 vectors.
+    dims: (usize, usize, usize),
+    /// Offset into the blob region (64-byte aligned).
+    offset: usize,
+    bytes: usize,
+}
+
+/// An open, header-validated snapshot. The typed getters validate each
+/// entry's dims against what the model expects and hand out zero-copy
+/// [`PackedPanels`] views / copied f32 vectors.
+pub struct SnapshotFile {
+    map: Arc<Mmap>,
+    dtype: WeightDtype,
+    params_fp: u64,
+    blob_base: usize,
+    entries: BTreeMap<String, Entry>,
+}
+
+impl SnapshotFile {
+    /// Map `path` and validate the header (see module docs for the
+    /// checks). Blob checksum verification is on unless
+    /// `SOFTMOE_SNAPSHOT_VERIFY=0`.
+    pub fn open(path: &Path) -> Result<SnapshotFile> {
+        let map = Arc::new(Mmap::open(path)
+            .with_context(|| format!("open snapshot {path:?}"))?);
+        let b = map.bytes();
+        let head_min = PANELS_MAGIC.len() + 4;
+        if b.len() < head_min {
+            return Err(file_invalid(format!(
+                "snapshot {path:?} is truncated ({} bytes)", b.len())));
+        }
+        if b[..PANELS_MAGIC.len()] != PANELS_MAGIC[..] {
+            bail!("snapshot {path:?} has wrong magic (not a panel \
+                   snapshot, or a different format version)");
+        }
+        let hlen = u32::from_le_bytes([
+            b[PANELS_MAGIC.len()],
+            b[PANELS_MAGIC.len() + 1],
+            b[PANELS_MAGIC.len() + 2],
+            b[PANELS_MAGIC.len() + 3],
+        ]) as usize;
+        if head_min + hlen > b.len() {
+            bail!("snapshot header (says {hlen} bytes) exceeds the file");
+        }
+        let header_s = std::str::from_utf8(&b[head_min..head_min + hlen])
+            .context("snapshot header is not UTF-8")?;
+        let header = json::parse(header_s).context("snapshot header JSON")?;
+
+        let version =
+            header.req("version")?.as_usize().context("version")?;
+        if version != VERSION {
+            bail!("snapshot version {version} (this build reads {VERSION})");
+        }
+        let endian = header.req("endian")?.as_str().context("endian")?;
+        if endian != endian_name() {
+            bail!("snapshot is {endian}-endian, host is {}-endian",
+                  endian_name());
+        }
+        let dtype =
+            dtype_parse(header.req("dtype")?.as_str().context("dtype")?)?;
+        let (nr, kc) = panel_layout();
+        let fnr = header.req("nr")?.as_usize().context("nr")?;
+        let fkc = header.req("kc")?.as_usize().context("kc")?;
+        if (fnr, fkc) != (nr, kc) {
+            bail!("snapshot packed for kernel layout NR={fnr}/KC={fkc}, \
+                   this build uses NR={nr}/KC={kc} — re-create it with \
+                   `softmoe snapshot`");
+        }
+        let blob_bytes =
+            header.req("blob_bytes")?.as_usize().context("blob_bytes")?;
+        let blob_base = align_up(head_min + hlen);
+        // checked_add: a forged blob_bytes must not wrap past the file
+        // length check (the no-panic contract covers hostile headers).
+        if blob_base.checked_add(blob_bytes) != Some(b.len()) {
+            return Err(file_invalid(format!(
+                "snapshot blob region mismatch: header declares \
+                 {blob_bytes} bytes at offset {blob_base}, file has {} — \
+                 truncated or corrupt",
+                b.len()
+            )));
+        }
+        let params_fp = u64::from_str_radix(
+            header.req("params_fp")?.as_str().context("params_fp")?, 16)
+            .context("params_fp is not a hex fingerprint")?;
+
+        let verify = std::env::var("SOFTMOE_SNAPSHOT_VERIFY")
+            .map_or(true, |v| v != "0");
+        if verify {
+            let want = header.req("checksum")?.as_str()
+                .context("checksum")?.to_string();
+            let mut sum = Fnv64::new();
+            sum.update(&b[blob_base..]);
+            if sum.hex() != want {
+                return Err(file_invalid(
+                    "snapshot blob checksum mismatch (file corrupt); set \
+                     SOFTMOE_SNAPSHOT_VERIFY=0 only to skip this check on \
+                     trusted files"
+                        .to_string(),
+                ));
+            }
+        }
+
+        let mut entries = BTreeMap::new();
+        for e in header.req("entries")?.as_arr().context("entries")? {
+            let name = e.req("name")?.as_str().context("name")?.to_string();
+            let offset = e.req("offset")?.as_usize().context("offset")?;
+            let bytes = e.req("bytes")?.as_usize().context("bytes")?;
+            if offset % ALIGN != 0 {
+                bail!("entry '{name}' offset {offset} is not {ALIGN}-byte \
+                       aligned");
+            }
+            let end = offset
+                .checked_add(bytes)
+                .with_context(|| format!("entry '{name}' range overflow"))?;
+            if end > blob_bytes {
+                bail!("entry '{name}' ({offset}+{bytes}) exceeds the blob \
+                       region ({blob_bytes} bytes)");
+            }
+            let kind = match e.req("kind")?.as_str().context("kind")? {
+                "panels" => EntryKind::Panels,
+                "f32" => EntryKind::F32s,
+                other => bail!("entry '{name}' has unknown kind '{other}'"),
+            };
+            let dims = match kind {
+                EntryKind::Panels => (
+                    e.req("k")?.as_usize().context("k")?,
+                    e.req("n")?.as_usize().context("n")?,
+                    e.req("groups")?.as_usize().context("groups")?,
+                ),
+                EntryKind::F32s => {
+                    (e.req("len")?.as_usize().context("len")?, 0, 0)
+                }
+            };
+            if entries.insert(name.clone(),
+                              Entry { kind, dims, offset, bytes })
+                .is_some()
+            {
+                bail!("duplicate snapshot entry '{name}'");
+            }
+        }
+        Ok(SnapshotFile { map, dtype, params_fp, blob_base, entries })
+    }
+
+    /// Panel storage dtype of every `panels` entry in this file.
+    pub fn dtype(&self) -> WeightDtype {
+        self.dtype
+    }
+
+    /// Fingerprint of the `ParamStore` this snapshot was packed from
+    /// (see [`crate::ckpt::params_fingerprint`]).
+    pub fn params_fp(&self) -> u64 {
+        self.params_fp
+    }
+
+    /// True when the file is backed by a live `mmap` (false on the
+    /// read-into-aligned-buffer fallback).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+
+    /// Number of entries in the file.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn entry(&self, name: &str, kind: EntryKind) -> Result<&Entry> {
+        let e = self.entries.get(name).with_context(|| {
+            format!("snapshot is missing entry '{name}' — wrong model \
+                     config for this file?")
+        })?;
+        if e.kind != kind {
+            bail!("snapshot entry '{name}' has the wrong kind");
+        }
+        Ok(e)
+    }
+
+    /// The packed panels stored under `name`, validated against the
+    /// model-expected dims, as a zero-copy view of the mapped region.
+    pub fn panels(&self, name: &str, k: usize, n: usize, groups: usize)
+        -> Result<PackedPanels> {
+        let e = self.entry(name, EntryKind::Panels)?;
+        if e.dims != (k, n, groups) {
+            bail!(
+                "snapshot entry '{name}' was packed for (k, n, groups) = \
+                 {:?}, the model expects ({k}, {n}, {groups})",
+                e.dims
+            );
+        }
+        let expect =
+            PackedPanels::expected_panel_bytes(k, n, groups, self.dtype);
+        if e.bytes != expect {
+            bail!("snapshot entry '{name}' holds {} bytes, {} panel \
+                   layout needs {expect}", e.bytes,
+                  dtype_name(self.dtype));
+        }
+        Ok(PackedPanels::from_mapped(k, n, groups, self.dtype, &self.map,
+                                     self.blob_base + e.offset, e.bytes))
+    }
+
+    /// The f32 vector stored under `name`, validated to length `len`
+    /// (copied out — these are the small bias/LN/positional vectors).
+    pub fn f32s(&self, name: &str, len: usize) -> Result<Vec<f32>> {
+        let e = self.entry(name, EntryKind::F32s)?;
+        if e.dims.0 != len {
+            bail!("snapshot entry '{name}' has length {}, the model \
+                   expects {len}", e.dims.0);
+        }
+        if e.bytes != len * 4 {
+            bail!("snapshot entry '{name}' byte length mismatch");
+        }
+        let start = self.blob_base + e.offset;
+        let mut v = vec![0.0f32; len];
+        util::f32s_as_bytes_mut(&mut v)
+            .copy_from_slice(&self.map.bytes()[start..start + e.bytes]);
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "softmoe-snap-unit-{tag}-{}.panels",
+            std::process::id()
+        ))
+    }
+
+    fn sample_entries(rng: &mut Rng, dtype: WeightDtype)
+        -> (PackedPanels, PackedPanels, Vec<f32>) {
+        // One big single matrix (above the raw-retention threshold), one
+        // grouped stack, one vector.
+        let big = Tensor::randn(&[300, 96], 1.0, rng);
+        let stacked = Tensor::randn(&[3, 24, 16], 1.0, rng);
+        (
+            PackedPanels::pack(&big, dtype),
+            PackedPanels::pack_grouped(&stacked.data, 24, 16, dtype),
+            rng.normal_vec(37, 1.0),
+        )
+    }
+
+    fn write_sample(path: &Path, dtype: WeightDtype)
+        -> (PackedPanels, PackedPanels, Vec<f32>) {
+        let mut rng = Rng::new(5);
+        let (a, b, v) = sample_entries(&mut rng, dtype);
+        {
+            let entries = vec![
+                ("w/a".to_string(), EntryRef::Panels(&a)),
+                ("w/b".to_string(), EntryRef::Panels(&b)),
+                ("bias".to_string(), EntryRef::F32s(&v)),
+            ];
+            write_snapshot(path, dtype, 0xDEAD_BEEF_0123_4567, &entries)
+                .unwrap();
+        }
+        (a, b, v)
+    }
+
+    #[test]
+    fn fnv_streaming_is_boundary_agnostic() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let mut whole = Fnv64::new();
+        whole.update(&data);
+        for splits in [vec![0usize], vec![1, 7, 500], vec![999],
+                       vec![3, 3, 3, 991]] {
+            let mut f = Fnv64::new();
+            let mut at = 0;
+            for s in splits {
+                f.update(&data[at..at + s]);
+                at += s;
+            }
+            f.update(&data[at..]);
+            assert_eq!(f.finish(), whole.finish());
+        }
+        // And a trailing partial word changes the digest.
+        let mut g = Fnv64::new();
+        g.update(&data[..997]);
+        assert_ne!(g.finish(), whole.finish());
+    }
+
+    #[test]
+    fn roundtrip_preserves_bytes_and_dims() {
+        for dtype in [WeightDtype::F32, WeightDtype::Bf16] {
+            let path = tmpfile(dtype.name());
+            let (a, b, v) = write_sample(&path, dtype);
+            let snap = SnapshotFile::open(&path).unwrap();
+            assert_eq!(snap.dtype(), dtype);
+            assert_eq!(snap.params_fp(), 0xDEAD_BEEF_0123_4567);
+            assert_eq!(snap.len(), 3);
+            let la = snap.panels("w/a", 300, 96, 1).unwrap();
+            let lb = snap.panels("w/b", 24, 16, 3).unwrap();
+            assert!(la.is_view() && lb.is_view());
+            assert_eq!(la.panel_bytes(), a.panel_bytes());
+            assert_eq!(lb.panel_bytes(), b.panel_bytes());
+            assert_eq!(snap.f32s("bias", 37).unwrap(), v);
+            // Shape/kind mismatches are clean errors.
+            assert!(snap.panels("w/a", 96, 300, 1).is_err());
+            assert!(snap.panels("bias", 37, 1, 1).is_err());
+            assert!(snap.f32s("w/a", 300 * 96).is_err());
+            assert!(snap.f32s("nope", 1).is_err());
+            drop((la, lb));
+            drop(snap);
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmpfile("magic");
+        write_sample(&path, WeightDtype::F32);
+        let mut data = std::fs::read(&path).unwrap();
+        data[0] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let err = SnapshotFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let path = tmpfile("trunc");
+        write_sample(&path, WeightDtype::F32);
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 16]).unwrap();
+        let err = SnapshotFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_blob_rejected_by_checksum() {
+        let path = tmpfile("corrupt");
+        write_sample(&path, WeightDtype::F32);
+        let mut data = std::fs::read(&path).unwrap();
+        let last = data.len() - 7;
+        data[last] ^= 0x55;
+        std::fs::write(&path, &data).unwrap();
+        let err = SnapshotFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Replace the first occurrence of `find` with the same-length
+    /// `replace` in raw bytes (header patching without disturbing the
+    /// binary blob region or any offsets).
+    fn patch(data: &[u8], find: &[u8], replace: &[u8]) -> Vec<u8> {
+        assert_eq!(find.len(), replace.len());
+        let pos = data
+            .windows(find.len())
+            .position(|w| w == find)
+            .unwrap_or_else(|| panic!("pattern {:?} not in file",
+                                      String::from_utf8_lossy(find)));
+        let mut out = data.to_vec();
+        out[pos..pos + replace.len()].copy_from_slice(replace);
+        out
+    }
+
+    #[test]
+    fn wrong_layout_and_dtype_rejected() {
+        let path = tmpfile("layout");
+        write_sample(&path, WeightDtype::F32);
+        let data = std::fs::read(&path).unwrap();
+        let (nr, kc) = panel_layout();
+
+        // NR patched to a same-length wrong value: offsets stay valid,
+        // the layout check must fire (before any blob validation).
+        let find = format!("\"nr\":{nr}");
+        let wrong = format!("\"nr\":{}", "6".repeat(find.len() - 5));
+        std::fs::write(&path,
+                       patch(&data, find.as_bytes(), wrong.as_bytes()))
+            .unwrap();
+        let err = SnapshotFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("kernel layout"), "{err:#}");
+
+        // Same for KC.
+        let find = format!("\"kc\":{kc}");
+        let wrong = format!("\"kc\":{}", "9".repeat(find.len() - 5));
+        std::fs::write(&path,
+                       patch(&data, find.as_bytes(), wrong.as_bytes()))
+            .unwrap();
+        let err = SnapshotFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("kernel layout"), "{err:#}");
+
+        // Unknown dtype name (same length as "f32").
+        std::fs::write(&path, patch(&data, b"\"dtype\":\"f32\"",
+                                    b"\"dtype\":\"f99\""))
+            .unwrap();
+        let err = SnapshotFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype"), "{err:#}");
+
+        std::fs::remove_file(&path).unwrap();
+    }
+}

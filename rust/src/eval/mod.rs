@@ -202,7 +202,7 @@ pub fn retrieval_recall_at_1(img_emb: &Tensor, txt_emb: &Tensor) -> (f64, f64) {
         }
         let col_best = (0..n)
             .max_by(|&a, &b| sim.data[a * n + i]
-                .partial_cmp(&sim.data[b * n + i]).unwrap())
+                .total_cmp(&sim.data[b * n + i]))
             .unwrap();
         if col_best == i {
             t2i += 1;

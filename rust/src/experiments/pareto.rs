@@ -83,9 +83,11 @@ fn summarize_pareto(table: &Table) {
             .iter()
             .filter(|r| r[idx_size] == size)
             .max_by(|a, b| {
-                a[idx_p1].parse::<f64>().unwrap()
-                    .partial_cmp(&b[idx_p1].parse::<f64>().unwrap())
-                    .unwrap()
+                // Unparseable cells sort lowest instead of panicking.
+                let p = |r: &[String]| {
+                    r[idx_p1].parse::<f64>().unwrap_or(f64::NEG_INFINITY)
+                };
+                p(a).total_cmp(&p(b))
             });
         if let Some(b) = best {
             println!("  [{size}] best router by p@1: {}", b[idx_routing]);

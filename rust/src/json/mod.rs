@@ -284,7 +284,8 @@ impl<'a> Parser<'a> {
                     let end = (start + len).min(self.bytes.len());
                     let s = std::str::from_utf8(&self.bytes[start..end])
                         .context("invalid UTF-8 in string")?;
-                    let ch = s.chars().next().unwrap();
+                    let ch = s.chars().next()
+                        .context("truncated UTF-8 sequence in string")?;
                     out.push(ch);
                     self.pos = start + ch.len_utf8();
                 }

@@ -4,6 +4,7 @@
 //!   train       train a model (PJRT artifacts or the native engine)
 //!   serve       run the batching inference server on synthetic traffic
 //!   eval        evaluate a checkpoint (p@1 + few-shot probe)
+//!   snapshot    convert a .json/.bin checkpoint to a .panels snapshot
 //!   experiment  run a paper experiment by id (see `experiment list`)
 //!   models      list AOT models available in the manifest
 //!   flops       print the analytic cost table for the model family
@@ -51,9 +52,16 @@ fn usage() {
          --steps N --batch N --ckpt-dir DIR\n  \
          serve       --model soft_s --backend pjrt|native --requests N\n  \
          eval        --model soft_s --ckpt-dir DIR --ckpt NAME\n  \
+         snapshot    --model soft_s --ckpt-dir DIR [--ckpt NAME] \
+         --out FILE.panels [--dtype f32|bf16]\n  \
          experiment  <id>|all|list [--steps N --quick]\n  \
          models      [--artifacts DIR]\n  \
-         flops       print the analytic cost table\n"
+         flops       print the analytic cost table\n\n\
+         `snapshot` prepacks a checkpoint's inference surface into the \
+         kernel panel layout\n\
+         and writes one mmap-able .panels file; `serve` loads it when \
+         SOFTMOE_SNAPSHOT is set\n\
+         (cold start then performs zero weight pack passes).\n"
     );
 }
 
@@ -62,6 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "serve" => cmd_serve(args),
         "eval" => cmd_eval(args),
+        "snapshot" => cmd_snapshot(args),
         "experiment" => cmd_experiment(args),
         "models" => cmd_models(args),
         "flops" => cmd_flops(),
@@ -92,27 +101,33 @@ fn make_backend(args: &Args) -> Result<(Box<dyn Backend>, ModelConfig)> {
             Ok((Box::new(rt), cfg))
         }
         "native" => {
-            // Prefer the manifest config when available for parity.
-            let dir = PathBuf::from(
-                args.str_or("artifacts",
-                            Manifest::default_dir().to_str().unwrap()));
-            let cfg = if let Ok(manifest) = Manifest::load(&dir) {
-                manifest.model(&model_name).map(|m| m.config.clone()).ok()
-            } else {
-                None
-            };
-            let cfg = match cfg {
-                Some(c) => c,
-                None => {
-                    let (moe, size) = model_name
-                        .rsplit_once('_')
-                        .context("model name must look like soft_s")?;
-                    ModelConfig::preset(size, MoeType::parse(moe)?)?
-                }
-            };
+            let cfg = native_model_config(args)?;
             Ok((Box::new(NativeRuntime::new(cfg.clone())), cfg))
         }
         other => bail!("unknown backend '{other}' (pjrt|native)"),
+    }
+}
+
+/// Resolve the native engine's model config: prefer the manifest entry
+/// (parity with the AOT path) when `artifacts/` exists, else derive from
+/// the `<moe>_<size>` preset grammar.
+fn native_model_config(args: &Args) -> Result<ModelConfig> {
+    let model_name = args.str_or("model", "soft_s");
+    let dir = PathBuf::from(
+        args.str_or("artifacts", Manifest::default_dir().to_str().unwrap()));
+    let cfg = if let Ok(manifest) = Manifest::load(&dir) {
+        manifest.model(&model_name).map(|m| m.config.clone()).ok()
+    } else {
+        None
+    };
+    match cfg {
+        Some(c) => Ok(c),
+        None => {
+            let (moe, size) = model_name
+                .rsplit_once('_')
+                .context("model name must look like soft_s")?;
+            ModelConfig::preset(size, MoeType::parse(moe)?)
+        }
     }
 }
 
@@ -248,6 +263,50 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let fs = eval::fewshot_probe(backend.as_mut(), &params, &data, 10, 4,
                                  batch)?;
     println!("synth p@1: {p1:.4}\nfew-shot (10-shot probe): {fs:.4}");
+    Ok(())
+}
+
+/// Convert a `.json`/`.bin` parameter checkpoint into a `.panels`
+/// snapshot: prepack the whole inference surface once, write it in the
+/// mmap-able snapshot format, and verify the result loads back cleanly.
+/// `serve` then boots from it (SOFTMOE_SNAPSHOT=FILE) with zero pack
+/// passes and no full-payload heap copy.
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    use softmoe::nn::{PreparedModel, VitModel};
+    use softmoe::tensor::WeightDtype;
+
+    let cfg = native_model_config(args)?;
+    let dir = PathBuf::from(args.req_str("ckpt-dir")?);
+    let name = args.str_or("ckpt", "latest");
+    let out = PathBuf::from(args.req_str("out")?);
+    let dtype = match args
+        .str_or("dtype", WeightDtype::from_env().name())
+        .as_str()
+    {
+        "f32" => WeightDtype::F32,
+        "bf16" => WeightDtype::Bf16,
+        other => bail!("--dtype={other}: expected f32|bf16"),
+    };
+
+    let params = ckpt::load_params(&dir, &format!("{name}.params"))?;
+    let model = VitModel::new(cfg);
+    let prep = PreparedModel::new(&model, &params, dtype);
+    prep.save_snapshot(&out)?;
+    // Round-trip verification: the file must map and validate with the
+    // exact dims this model expects before anyone trusts it at serve
+    // time.
+    let _ = PreparedModel::load_snapshot(&model, &out, dtype)
+        .context("snapshot verification reload")?;
+    let file_bytes = std::fs::metadata(&out)?.len();
+    println!(
+        "snapshot written: {} ({} on disk, {} resident, dtype {})\n\
+         serve from it with SOFTMOE_SNAPSHOT={}",
+        out.display(),
+        softmoe::util::human_count(file_bytes as f64),
+        softmoe::util::human_count(prep.resident_bytes() as f64),
+        dtype.name(),
+        out.display()
+    );
     Ok(())
 }
 

@@ -72,7 +72,7 @@ impl Histogram {
     /// samples, for k = 1..n (paper Fig. 27/28 machinery).
     pub fn cumulative_mass(&self) -> Vec<f64> {
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v.sort_by(|a, b| b.total_cmp(a));
         let total: f64 = v.iter().sum();
         let mut acc = 0.0;
         v.iter()

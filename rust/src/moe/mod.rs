@@ -271,6 +271,30 @@ impl PreparedExperts {
         Self::from_stacked(&ep.w1, &ep.b1, &ep.w2, &ep.b2, dtype)
     }
 
+    /// Assemble from already-built parts — the snapshot load path, where
+    /// the panels are zero-copy views of a mapped file
+    /// (`ckpt::snapshot`). Validates the cross-part shape contract the
+    /// packing constructors establish implicitly, so a mismatched
+    /// snapshot surfaces as a clean error rather than a GEMM assert.
+    pub fn from_panels(w1: PackedPanels, b1: Vec<f32>, w2: PackedPanels,
+                       b2: Vec<f32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(w1.groups() == w2.groups(),
+                        "expert panel group counts disagree: w1 {} vs w2 {}",
+                        w1.groups(), w2.groups());
+        anyhow::ensure!(w1.n_cols() == w2.k_rows(),
+                        "expert hidden widths disagree: w1 n={} vs w2 k={}",
+                        w1.n_cols(), w2.k_rows());
+        anyhow::ensure!(b1.len() == w1.groups() * w1.n_cols(),
+                        "stacked b1 len {} vs {} experts x hidden {}",
+                        b1.len(), w1.groups(), w1.n_cols());
+        anyhow::ensure!(b2.len() == w2.groups() * w2.n_cols(),
+                        "stacked b2 len {} vs {} experts x d_out {}",
+                        b2.len(), w2.groups(), w2.n_cols());
+        anyhow::ensure!(w1.dtype() == w2.dtype(),
+                        "expert panel dtypes disagree");
+        Ok(Self { w1, b1, w2, b2 })
+    }
+
     /// Prepack from raw stacked tensors in the manifest layout:
     /// w1 (n, d, h), b1 (n, h), w2 (n, h, d_out), b2 (n, d_out) — the
     /// form both [`ExpertParams`] and the `ParamStore` hold.
@@ -328,6 +352,17 @@ impl PreparedSparseRouter {
             wg: PackedPanels::pack(wg, dtype),
             experts: PreparedExperts::new(experts, dtype),
         }
+    }
+
+    /// Assemble from already-built parts (snapshot-loaded views — see
+    /// [`PreparedExperts::from_panels`]).
+    pub fn from_parts(wg: PackedPanels, experts: PreparedExperts)
+        -> anyhow::Result<Self> {
+        anyhow::ensure!(wg.groups() == 1, "the gate matrix is ungrouped");
+        anyhow::ensure!(wg.n_cols() == experts.num_experts(),
+                        "gate width {} vs {} experts", wg.n_cols(),
+                        experts.num_experts());
+        Ok(Self { wg, experts })
     }
 
     pub fn resident_bytes(&self) -> usize {

@@ -103,7 +103,7 @@ impl RoutingStats {
 /// cumulative fraction of the row's mass (Fig. 9-right / Fig. 27 metric).
 pub fn tokens_to_mass(weights: &[f32], target: f64) -> usize {
     let mut v: Vec<f64> = weights.iter().map(|&x| x as f64).collect();
-    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    v.sort_by(|a, b| b.total_cmp(a));
     let total: f64 = v.iter().sum();
     if total <= 0.0 {
         return v.len();

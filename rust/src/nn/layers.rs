@@ -586,7 +586,7 @@ pub fn softmax_xent(logits: &Tensor, labels: &[usize])
         let argmax = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         if argmax == label {

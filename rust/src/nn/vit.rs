@@ -9,9 +9,13 @@
 //! finite differences (`full_model_gradient_fd` below and proptests).
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
+use anyhow::{bail, Result};
+
+use crate::ckpt::snapshot::{write_snapshot, EntryRef, SnapshotFile};
 use crate::config::{MixMode, ModelConfig, MoeType};
-use crate::moe::PreparedExperts;
+use crate::moe::{PreparedExperts, PreparedSparseRouter};
 use crate::nn::layers::*;
 use crate::nn::{accumulate, Grads};
 use crate::tensor::{
@@ -1243,6 +1247,10 @@ pub struct PreparedModel {
     /// Config + interned keys (routing decisions delegate to the model).
     model: VitModel,
     dtype: WeightDtype,
+    /// Fingerprint of the `ParamStore` this surface was packed from
+    /// ([`crate::ckpt::params_fingerprint`]) — carried into snapshots so
+    /// a stale file cannot silently serve outdated weights.
+    params_fp: u64,
     patch_w: PackedPanels,
     patch_b: Vec<f32>,
     pos_embed: Tensor,
@@ -1313,6 +1321,7 @@ impl PreparedModel {
         Self {
             model: model.clone(),
             dtype,
+            params_fp: crate::ckpt::params_fingerprint(p),
             patch_w: PackedPanels::pack(model.get(p, "patch_embed/w"), dtype),
             patch_b: model.get(p, "patch_embed/b").data.clone(),
             pos_embed: model.get(p, "pos_embed").clone(),
@@ -1332,6 +1341,45 @@ impl PreparedModel {
         self.dtype
     }
 
+    /// Fingerprint of the `ParamStore` this surface was packed from
+    /// (see [`crate::ckpt::params_fingerprint`]). Snapshot loaders
+    /// compare it against the store they are asked to serve.
+    pub fn params_fingerprint(&self) -> u64 {
+        self.params_fp
+    }
+
+    /// True when every weight matrix is a zero-copy view of a mapped
+    /// snapshot ([`PreparedModel::load_snapshot`]) rather than owned
+    /// panel storage — the "no full-payload heap copy" contract,
+    /// asserted by the snapshot tests.
+    pub fn storage_is_view(&self) -> bool {
+        let mut all = self.patch_w.is_view() && self.head_w.is_view();
+        for b in &self.blocks {
+            all = all
+                && b.attn.wq.is_view()
+                && b.attn.wk.is_view()
+                && b.attn.wv.is_view()
+                && b.attn.wo.is_view();
+            all = all
+                && match &b.moe {
+                    PreparedMoeBlock::Dense { w1, w2, .. } => {
+                        w1.is_view() && w2.is_view()
+                    }
+                    PreparedMoeBlock::Soft { phi, experts } => {
+                        phi.is_view()
+                            && experts.w1.is_view()
+                            && experts.w2.is_view()
+                    }
+                    PreparedMoeBlock::Sparse { wg, experts } => {
+                        wg.is_view()
+                            && experts.w1.is_view()
+                            && experts.w2.is_view()
+                    }
+                };
+        }
+        all
+    }
+
     /// Bytes resident in the prepared representation (panel storage +
     /// biases/LN vectors + the positional embedding) — the serve
     /// memory-footprint gauge.
@@ -1348,6 +1396,163 @@ impl PreparedModel {
                        + b.ln2_b.len());
         }
         total
+    }
+
+    // -----------------------------------------------------------------------
+    // Panel snapshots — the prepared surface on disk, loaded by mmap.
+    // -----------------------------------------------------------------------
+
+    /// Write this prepared model to a `.panels` snapshot
+    /// (`ckpt::snapshot` format): every packed panel blob byte-exact as
+    /// the kernels consume it — including the folded Φ and the stacked
+    /// expert manifests — plus the f32 bias/LN/positional vectors.
+    /// [`PreparedModel::load_snapshot`] reverses this with zero pack
+    /// passes and zero panel copies.
+    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+        let mut entries: Vec<(String, EntryRef<'_>)> = Vec::new();
+        entries.push(("patch_embed/w".into(),
+                      EntryRef::Panels(&self.patch_w)));
+        entries.push(("patch_embed/b".into(),
+                      EntryRef::F32s(&self.patch_b)));
+        entries.push(("pos_embed".into(),
+                      EntryRef::F32s(&self.pos_embed.data)));
+        for (i, blk) in self.blocks.iter().enumerate() {
+            let bk = &self.model.keys[i];
+            entries.push((bk.ln1_s.clone(), EntryRef::F32s(&blk.ln1_s)));
+            entries.push((bk.ln1_b.clone(), EntryRef::F32s(&blk.ln1_b)));
+            entries.push((bk.wq.clone(), EntryRef::Panels(&blk.attn.wq)));
+            entries.push((bk.wq_b.clone(), EntryRef::F32s(&blk.attn.bq)));
+            entries.push((bk.wk.clone(), EntryRef::Panels(&blk.attn.wk)));
+            entries.push((bk.wk_b.clone(), EntryRef::F32s(&blk.attn.bk)));
+            entries.push((bk.wv.clone(), EntryRef::Panels(&blk.attn.wv)));
+            entries.push((bk.wv_b.clone(), EntryRef::F32s(&blk.attn.bv)));
+            entries.push((bk.wo.clone(), EntryRef::Panels(&blk.attn.wo)));
+            entries.push((bk.wo_b.clone(), EntryRef::F32s(&blk.attn.bo)));
+            entries.push((bk.ln2_s.clone(), EntryRef::F32s(&blk.ln2_s)));
+            entries.push((bk.ln2_b.clone(), EntryRef::F32s(&blk.ln2_b)));
+            match &blk.moe {
+                PreparedMoeBlock::Dense { w1, b1, w2, b2 } => {
+                    entries.push((bk.mlp_w1.clone(), EntryRef::Panels(w1)));
+                    entries.push((bk.mlp_b1.clone(), EntryRef::F32s(b1)));
+                    entries.push((bk.mlp_w2.clone(), EntryRef::Panels(w2)));
+                    entries.push((bk.mlp_b2.clone(), EntryRef::F32s(b2)));
+                }
+                PreparedMoeBlock::Soft { phi, experts } => {
+                    // Φ here is the *inference fold* (scale·l2norm when
+                    // the router normalizes) — stored under the phi key;
+                    // the load path wires it straight back in.
+                    entries.push((bk.phi.clone(), EntryRef::Panels(phi)));
+                    push_experts(&mut entries, bk, experts);
+                }
+                PreparedMoeBlock::Sparse { wg, experts } => {
+                    entries.push((bk.wg.clone(), EntryRef::Panels(wg)));
+                    push_experts(&mut entries, bk, experts);
+                }
+            }
+        }
+        entries.push(("ln_f/s".into(), EntryRef::F32s(&self.lnf_s)));
+        entries.push(("ln_f/b".into(), EntryRef::F32s(&self.lnf_b)));
+        entries.push(("head/w".into(), EntryRef::Panels(&self.head_w)));
+        entries.push(("head/b".into(), EntryRef::F32s(&self.head_b)));
+        write_snapshot(path, self.dtype, self.params_fp, &entries)
+    }
+
+    /// Load a snapshot written by [`PreparedModel::save_snapshot`] for
+    /// `model`'s config, with panel storage `want`
+    /// (`SOFTMOE_WEIGHT_DTYPE` at the serve call site). The file is
+    /// mapped (`util::Mmap`; read-into-aligned-buffer fallback off
+    /// Linux) and every weight matrix becomes a [`PackedPanels`] view
+    /// borrowing the mapped region — **zero pack passes, zero
+    /// full-payload heap copies**. Every mismatch (dtype, kernel NR/KC
+    /// layout, shapes, truncation, corruption) is a clean `Err`; callers
+    /// fall back to [`PreparedModel::new`] (pack-per-call from the
+    /// store).
+    pub fn load_snapshot(model: &VitModel, path: &Path, want: WeightDtype)
+        -> Result<PreparedModel> {
+        let snap = SnapshotFile::open(path)?;
+        if snap.dtype() != want {
+            bail!(
+                "snapshot stores {} panels but {} was requested — \
+                 re-create it with `softmoe snapshot --dtype {}`",
+                snap.dtype().name(), want.name(), want.name()
+            );
+        }
+        let cfg = &model.cfg;
+        let d = cfg.dim;
+        let (n, eh) = (cfg.num_experts, cfg.expert_hidden);
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        for i in 0..cfg.depth {
+            let bk = &model.keys[i];
+            let attn = AttnPrepacked {
+                wq: snap.panels(&bk.wq, d, d, 1)?,
+                bq: snap.f32s(&bk.wq_b, d)?,
+                wk: snap.panels(&bk.wk, d, d, 1)?,
+                bk: snap.f32s(&bk.wk_b, d)?,
+                wv: snap.panels(&bk.wv, d, d, 1)?,
+                bv: snap.f32s(&bk.wv_b, d)?,
+                wo: snap.panels(&bk.wo, d, d, 1)?,
+                bo: snap.f32s(&bk.wo_b, d)?,
+                heads: cfg.heads,
+            };
+            let is_moe = cfg.moe_layers.contains(&i)
+                && cfg.moe_type != MoeType::Dense;
+            let moe = if !is_moe {
+                PreparedMoeBlock::Dense {
+                    w1: snap.panels(&bk.mlp_w1, d, cfg.mlp_dim, 1)?,
+                    b1: snap.f32s(&bk.mlp_b1, cfg.mlp_dim)?,
+                    w2: snap.panels(&bk.mlp_w2, cfg.mlp_dim, d, 1)?,
+                    b2: snap.f32s(&bk.mlp_b2, d)?,
+                }
+            } else {
+                let experts = PreparedExperts::from_panels(
+                    snap.panels(&bk.moe_w1, d, eh, n)?,
+                    snap.f32s(&bk.moe_b1, n * eh)?,
+                    snap.panels(&bk.moe_w2, eh, d, n)?,
+                    snap.f32s(&bk.moe_b2, n * d)?,
+                )?;
+                match cfg.moe_type {
+                    MoeType::Soft => PreparedMoeBlock::Soft {
+                        phi: snap.panels(&bk.phi, d, cfg.total_slots(), 1)?,
+                        experts,
+                    },
+                    MoeType::TokensChoice | MoeType::ExpertsChoice => {
+                        // Through the shared validating constructor so
+                        // the gate/expert cross-checks run here exactly
+                        // like for the standalone routers.
+                        let router = PreparedSparseRouter::from_parts(
+                            snap.panels(&bk.wg, d, n, 1)?, experts)?;
+                        PreparedMoeBlock::Sparse {
+                            wg: router.wg,
+                            experts: router.experts,
+                        }
+                    }
+                    MoeType::Dense => unreachable!("guarded by is_moe"),
+                }
+            };
+            blocks.push(PreparedBlock {
+                ln1_s: snap.f32s(&bk.ln1_s, d)?,
+                ln1_b: snap.f32s(&bk.ln1_b, d)?,
+                attn,
+                ln2_s: snap.f32s(&bk.ln2_s, d)?,
+                ln2_b: snap.f32s(&bk.ln2_b, d)?,
+                moe,
+            });
+        }
+        let m = cfg.tokens();
+        Ok(PreparedModel {
+            model: model.clone(),
+            dtype: want,
+            params_fp: snap.params_fp(),
+            patch_w: snap.panels("patch_embed/w", cfg.patch_dim(), d, 1)?,
+            patch_b: snap.f32s("patch_embed/b", d)?,
+            pos_embed: Tensor::from_vec(&[m, d],
+                                        snap.f32s("pos_embed", m * d)?),
+            blocks,
+            lnf_s: snap.f32s("ln_f/s", d)?,
+            lnf_b: snap.f32s("ln_f/b", d)?,
+            head_w: snap.panels("head/w", d, cfg.num_classes, 1)?,
+            head_b: snap.f32s("head/b", cfg.num_classes)?,
+        })
     }
 
     fn moe_infer_into(&self, blk: &PreparedBlock, x: &Tensor,
@@ -1535,6 +1740,16 @@ impl PreparedModel {
         }
         ForwardOut { logits, features }
     }
+}
+
+/// The stacked expert manifest's four snapshot entries, shared by the
+/// Soft and Sparse branches of [`PreparedModel::save_snapshot`].
+fn push_experts<'a>(entries: &mut Vec<(String, EntryRef<'a>)>,
+                    bk: &BlockKeys, experts: &'a PreparedExperts) {
+    entries.push((bk.moe_w1.clone(), EntryRef::Panels(&experts.w1)));
+    entries.push((bk.moe_b1.clone(), EntryRef::F32s(&experts.b1)));
+    entries.push((bk.moe_w2.clone(), EntryRef::Panels(&experts.w2)));
+    entries.push((bk.moe_b2.clone(), EntryRef::F32s(&experts.b2)));
 }
 
 fn identity_mix(m: usize, s: usize) -> Tensor {

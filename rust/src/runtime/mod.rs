@@ -13,6 +13,8 @@
 pub mod native;
 pub mod pjrt;
 
+use std::path::Path;
+
 use anyhow::Result;
 
 use crate::nn::ParamStore;
@@ -74,6 +76,34 @@ pub trait Backend {
     /// parameters).
     fn prepare(&mut self, _params: &ParamStore) -> Result<()> {
         Ok(())
+    }
+
+    /// Like [`Backend::prepare`], but restore the prepared snapshot from
+    /// a `.panels` file (`ckpt::snapshot`) instead of re-packing
+    /// `params` — the native engine maps the file and wires zero-copy
+    /// panel views: no pack pass, no payload copy, no per-tensor
+    /// re-layout. (Cold start is not free of streaming reads: by
+    /// default the loader runs one word-FNV checksum pass over the blob
+    /// region — skippable via `SOFTMOE_SNAPSHOT_VERIFY=0` — and one
+    /// fingerprint hash of the in-memory `params`; both are plain
+    /// sequential reads, a small fraction of the re-pack they replace.)
+    /// The snapshot binds to `params` exactly like `prepare` (same-store
+    /// check; `train_step` invalidates it), and its stored parameter
+    /// fingerprint must match `params` — a snapshot packed from
+    /// different values (stale after retraining) is rejected. Returns
+    /// `Ok(false)` when the backend has no snapshot support (PJRT holds
+    /// device-side parameters already); any mismatched or corrupt file
+    /// is an `Err` — callers fall back to [`Backend::prepare`].
+    fn prepare_from_snapshot(&mut self, _params: &ParamStore,
+                             _path: &Path) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Write the prepared representation built by [`Backend::prepare`]
+    /// to a `.panels` snapshot for later [`Backend::prepare_from_snapshot`]
+    /// loads. `Ok(false)` when unsupported or nothing is prepared.
+    fn write_snapshot(&self, _path: &Path) -> Result<bool> {
+        Ok(false)
     }
 
     /// `(resident bytes, dtype name)` of the prepared representation

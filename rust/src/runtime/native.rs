@@ -6,6 +6,8 @@
 //! in-Rust Adam below (same hyperparameters as the JAX train_step:
 //! b1=0.9, b2=0.999, eps=1e-8, bias correction on).
 
+use std::path::Path;
+
 use anyhow::Result;
 
 use crate::config::ModelConfig;
@@ -110,6 +112,44 @@ impl Backend for NativeRuntime {
                                                 WeightDtype::from_env()));
         self.prepared_for = store_key(params);
         Ok(())
+    }
+
+    fn prepare_from_snapshot(&mut self, params: &ParamStore, path: &Path)
+        -> Result<bool> {
+        // Zero pack passes, zero payload copies: the PreparedModel's
+        // panels are views of the mapped file. Binds to `params` exactly
+        // like prepare() — the same-store check and the train_step
+        // invalidation apply unchanged (a snapshot is just another way
+        // to build the in-memory prepared representation).
+        let prep = PreparedModel::load_snapshot(&self.model, path,
+                                                WeightDtype::from_env())?;
+        // Shapes matching is not enough: the snapshot must have been
+        // packed from these parameter VALUES, or a retrained checkpoint
+        // would silently serve the old weights through a stale file.
+        // One streaming hash of the in-memory store buys that guarantee.
+        let want_fp = crate::ckpt::params_fingerprint(params);
+        if prep.params_fingerprint() != want_fp {
+            // Carries the SnapshotFileInvalid marker: a stale file is
+            // the serve layer's cue to rewrite it after falling back.
+            return Err(crate::ckpt::snapshot::file_invalid(format!(
+                "snapshot {path:?} was packed from different parameter \
+                 values than this checkpoint (stale after retraining?) — \
+                 delete it or re-run `softmoe snapshot`"
+            )));
+        }
+        self.prepared = Some(prep);
+        self.prepared_for = store_key(params);
+        Ok(true)
+    }
+
+    fn write_snapshot(&self, path: &Path) -> Result<bool> {
+        match &self.prepared {
+            Some(p) => {
+                p.save_snapshot(path)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
     }
 
     fn prepared_footprint(&self) -> Option<(usize, &'static str)> {

@@ -16,6 +16,7 @@
 //! are not `Send`); clients are any number of threads holding a
 //! [`Client`].
 
+use std::path::Path;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -179,14 +180,73 @@ impl Server {
         // 1. Build the backend's prepared parameter representation
         //    (native: `nn::PreparedModel` — every weight pre-packed into
         //    kernel panels, dtype per SOFTMOE_WEIGHT_DTYPE), so the hot
-        //    loop below never runs a weight pack pass.
+        //    loop below never runs a weight pack pass. When
+        //    SOFTMOE_SNAPSHOT names a `.panels` file, it is mmap'd
+        //    straight into panel storage instead (zero pack passes at
+        //    cold start); a missing file is written after prepacking so
+        //    the NEXT boot takes the fast path, and a mismatched or
+        //    corrupt file falls back to prepacking (the loader rejects
+        //    rather than trusts — see `ckpt::snapshot`).
         // 2. Run one padded warm-up batch per compiled size so every
         //    worker's resident workspace is sized with model-shaped work
         //    and first-request latency reflects steady state. (Requests
         //    already queued by clients just wait; none is consumed here.)
         // Both are asserted by the serve section of
         // `rust/tests/pool_steady_state.rs`.
-        backend.prepare(params)?;
+        let snapshot_path = std::env::var("SOFTMOE_SNAPSHOT")
+            .ok()
+            .filter(|p| !p.is_empty());
+        let mut weight_source = "prepack";
+        let mut snapshot_replaceable = false;
+        if let Some(p) = snapshot_path.as_deref().map(Path::new) {
+            if p.exists() {
+                match backend.prepare_from_snapshot(params, p) {
+                    Ok(true) => weight_source = "snapshot",
+                    Ok(false) => {
+                        eprintln!(
+                            "serve: backend has no snapshot support; \
+                             prepacking instead"
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "serve: snapshot {p:?} rejected ({e:#}); \
+                             falling back to prepacking"
+                        );
+                        // Only a file that is itself bad or stale
+                        // (truncation, corruption, outdated fingerprint)
+                        // is ours to replace below; a configuration
+                        // mismatch (dtype, kernel layout, other model)
+                        // may be someone else's valid artifact.
+                        snapshot_replaceable = e
+                            .downcast_ref::<
+                                crate::ckpt::snapshot::SnapshotFileInvalid>()
+                            .is_some();
+                    }
+                }
+            }
+        }
+        if weight_source != "snapshot" {
+            backend.prepare(params)?;
+            if let Some(p) = snapshot_path.as_deref().map(Path::new) {
+                // Write the snapshot the next boot should use: when the
+                // file is missing, and when the existing one was judged
+                // invalid/stale (atomic temp+rename publish, so a reader
+                // that mapped the old file is untouched).
+                if !p.exists() || snapshot_replaceable {
+                    match backend.write_snapshot(p) {
+                        Ok(true) => {
+                            eprintln!("serve: wrote snapshot {p:?}");
+                        }
+                        Ok(false) => {}
+                        Err(e) => eprintln!(
+                            "serve: could not write snapshot {p:?}: {e:#}"
+                        ),
+                    }
+                }
+            }
+        }
+        metrics.set_label("model/weight_source", weight_source);
         if let Some((bytes, dtype)) = backend.prepared_footprint() {
             metrics.set_gauge("model/prepacked_bytes", bytes as f64);
             metrics.set_label("model/weight_dtype", dtype);
@@ -240,7 +300,7 @@ impl Server {
                 let argmax = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(j, _)| j)
                     .unwrap_or(0);
                 let latency = req.submitted.elapsed();
@@ -351,6 +411,10 @@ mod tests {
             metrics.label("model/weight_dtype").as_deref(),
             Some(crate::tensor::WeightDtype::from_env().name())
         );
+        if std::env::var("SOFTMOE_SNAPSHOT").is_err() {
+            assert_eq!(metrics.label("model/weight_source").as_deref(),
+                       Some("prepack"));
+        }
         assert_eq!(metrics.counter("serve/warmup_batches"), 4);
     }
 

@@ -25,6 +25,7 @@
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::threadpool::parallel_for;
 use crate::util::Rng;
@@ -510,6 +511,13 @@ const PAR_FLOPS: usize = 1 << 22;
 /// Below this many FLOPs the packed kernel's pack cost dominates; use the
 /// direct strided loops instead.
 const SMALL_FLOPS: usize = 1 << 15;
+
+/// The panel layout parameters `(NR, KC)` every kernel shares. Snapshot
+/// files record them so a loader can reject panels packed for a
+/// different layout (`ckpt::snapshot`).
+pub fn panel_layout() -> (usize, usize) {
+    (NR, KC)
+}
 
 #[inline]
 fn div_up(a: usize, b: usize) -> usize {
@@ -1161,10 +1169,79 @@ enum PanelsRef<'a> {
     Bf16(&'a [u16]),
 }
 
+/// Backing storage for packed panels: owned vectors (built by a pack
+/// pass) or a zero-copy view into a shared mapped snapshot region
+/// (`util::Mmap` behind an `Arc`, which this variant keeps alive). Both
+/// present the same `&[T]`; every consumer goes through
+/// [`PanelStore::as_slice`], so the GEMM path cannot tell them apart.
+enum PanelStore<T: Copy> {
+    Owned(Vec<T>),
+    View {
+        ptr: *const T,
+        len: usize,
+        /// Keeps the mapped file resident for as long as any panel
+        /// borrows it.
+        _map: Arc<crate::util::Mmap>,
+    },
+}
+
+impl<T: Copy> PanelStore<T> {
+    fn as_slice(&self) -> &[T] {
+        match self {
+            PanelStore::Owned(v) => v,
+            // Safety: ptr/len were validated against the mapped region at
+            // construction ([`PackedPanels::from_mapped`]); the region is
+            // immutable and `_map` keeps it alive for `self`'s lifetime.
+            PanelStore::View { ptr, len, .. } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PanelStore::Owned(v) => v.len(),
+            PanelStore::View { len, .. } => *len,
+        }
+    }
+
+    fn is_view(&self) -> bool {
+        matches!(self, PanelStore::View { .. })
+    }
+}
+
+impl<T: Copy> Clone for PanelStore<T> {
+    fn clone(&self) -> Self {
+        match self {
+            PanelStore::Owned(v) => PanelStore::Owned(v.clone()),
+            PanelStore::View { ptr, len, _map } => PanelStore::View {
+                ptr: *ptr,
+                len: *len,
+                _map: Arc::clone(_map),
+            },
+        }
+    }
+}
+
+impl<T: Copy> std::fmt::Debug for PanelStore<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PanelStore::Owned(v) => write!(f, "Owned({} elems)", v.len()),
+            PanelStore::View { len, .. } => write!(f, "View({len} elems)"),
+        }
+    }
+}
+
+// The view variant's region is immutable and owned via the Arc'd map;
+// sharing it across threads is sound for the Copy element types used
+// here (f32/u16).
+unsafe impl<T: Copy + Send + Sync> Send for PanelStore<T> {}
+unsafe impl<T: Copy + Send + Sync> Sync for PanelStore<T> {}
+
 #[derive(Clone, Debug)]
 enum PanelData {
-    F32(Vec<f32>),
-    Bf16(Vec<u16>),
+    F32(PanelStore<f32>),
+    Bf16(PanelStore<u16>),
 }
 
 /// One or more (k, n) weight matrices pre-packed into the GEMM panel
@@ -1221,11 +1298,11 @@ impl PackedPanels {
                    &mut f32s[g * plen..(g + 1) * plen]);
         }
         let data = match dtype {
-            WeightDtype::F32 => PanelData::F32(f32s),
+            WeightDtype::F32 => PanelData::F32(PanelStore::Owned(f32s)),
             WeightDtype::Bf16 => {
                 let mut enc = vec![0u16; f32s.len()];
                 kernel::encode_bf16_slice(&f32s, &mut enc);
-                PanelData::Bf16(enc)
+                PanelData::Bf16(PanelStore::Owned(enc))
             }
         };
         let raw = if 2 * k * n < SMALL_FLOPS {
@@ -1281,13 +1358,95 @@ impl PackedPanels {
         panels + self.raw.as_ref().map_or(0, |r| r.len() * 4)
     }
 
+    /// True when the panel storage is a zero-copy view into a mapped
+    /// snapshot ([`PackedPanels::from_mapped`]) rather than owned heap
+    /// vectors.
+    pub fn is_view(&self) -> bool {
+        match &self.data {
+            PanelData::F32(v) => v.is_view(),
+            PanelData::Bf16(v) => v.is_view(),
+        }
+    }
+
+    /// The packed panel storage as raw native-endian bytes (f32 or u16
+    /// elements per [`PackedPanels::dtype`]) — the snapshot writer's blob
+    /// payload. Layout: `groups` back-to-back regions of
+    /// `panel_len(k, n)` elements each, exactly what
+    /// [`PackedPanels::from_mapped`] reconstructs a view over.
+    pub fn panel_bytes(&self) -> &[u8] {
+        match &self.data {
+            PanelData::F32(v) => crate::util::f32s_as_bytes(v.as_slice()),
+            PanelData::Bf16(v) => crate::util::u16s_as_bytes(v.as_slice()),
+        }
+    }
+
+    /// Byte length of the panel storage for a `(k, n)`·`groups` matrix
+    /// set at `dtype` — what a snapshot entry of those dims must contain.
+    pub fn expected_panel_bytes(k: usize, n: usize, groups: usize,
+                                dtype: WeightDtype) -> usize {
+        groups * Self::panel_len(k, n) * dtype.bytes_per_elem()
+    }
+
+    /// Construct panels as a **zero-copy view** borrowing `map` at
+    /// `byte_offset` (no pack pass, no payload copy). The caller
+    /// (`ckpt::snapshot`) validates dims/offsets against the file header
+    /// first; the asserts here are the internal-invariant backstop. The
+    /// small-GEMM row-major copy (see the `raw` field) is rebuilt from
+    /// the panels for matrices the sub-threshold path can reach — a
+    /// bounded decode of tiny matrices, not a pack pass.
+    pub fn from_mapped(k: usize, n: usize, groups: usize,
+                       dtype: WeightDtype, map: &Arc<crate::util::Mmap>,
+                       byte_offset: usize, byte_len: usize) -> Self {
+        assert!(k > 0 && n > 0 && groups > 0,
+                "mapped panels need positive dims (k={k}, n={n}, \
+                 groups={groups})");
+        let elems = groups * Self::panel_len(k, n);
+        assert_eq!(byte_len, elems * dtype.bytes_per_elem(),
+                   "mapped panel byte length mismatch");
+        let bytes = map.bytes();
+        assert!(byte_offset.checked_add(byte_len)
+                    .is_some_and(|end| end <= bytes.len()),
+                "mapped panel range exceeds the snapshot region");
+        assert_eq!(byte_offset % crate::util::mmap::MAP_ALIGN, 0,
+                   "mapped panel offset must be 64-byte aligned");
+        let base = unsafe { bytes.as_ptr().add(byte_offset) };
+        let data = match dtype {
+            WeightDtype::F32 => PanelData::F32(PanelStore::View {
+                ptr: base as *const f32,
+                len: elems,
+                _map: Arc::clone(map),
+            }),
+            WeightDtype::Bf16 => PanelData::Bf16(PanelStore::View {
+                ptr: base as *const u16,
+                len: elems,
+                _map: Arc::clone(map),
+            }),
+        };
+        let mut panels = Self { k, n, groups, data, raw: None };
+        if 2 * k * n < SMALL_FLOPS {
+            // Same retention rule and values as pack time: the panels
+            // hold the (possibly bf16-rounded) weights, and unpacking
+            // them reproduces exactly the row-major copy `pack_grouped`
+            // keeps.
+            let mut raw = vec![0.0f32; groups * k * n];
+            for g in 0..groups {
+                panels.unpack_group_into(g,
+                                         &mut raw[g * k * n..(g + 1) * k * n]);
+            }
+            panels.raw = Some(raw);
+        }
+        panels
+    }
+
     fn group_ref(&self, g: usize) -> PanelsRef<'_> {
         debug_assert!(g < self.groups);
         let plen = Self::panel_len(self.k, self.n);
         match &self.data {
-            PanelData::F32(v) => PanelsRef::F32(&v[g * plen..(g + 1) * plen]),
+            PanelData::F32(v) => {
+                PanelsRef::F32(&v.as_slice()[g * plen..(g + 1) * plen])
+            }
             PanelData::Bf16(v) => {
-                PanelsRef::Bf16(&v[g * plen..(g + 1) * plen])
+                PanelsRef::Bf16(&v.as_slice()[g * plen..(g + 1) * plen])
             }
         }
     }
@@ -1314,10 +1473,11 @@ impl PackedPanels {
                     let dst = &mut out[(k0 + kk) * n + j0..][..nr];
                     match &self.data {
                         PanelData::F32(v) => {
-                            dst.copy_from_slice(&v[src..src + nr]);
+                            dst.copy_from_slice(&v.as_slice()[src..src + nr]);
                         }
                         PanelData::Bf16(v) => {
-                            kernel::decode_bf16_slice(&v[src..src + nr], dst);
+                            kernel::decode_bf16_slice(
+                                &v.as_slice()[src..src + nr], dst);
                         }
                     }
                 }

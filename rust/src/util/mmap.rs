@@ -1,0 +1,247 @@
+//! Read-only file mapping for snapshot loading.
+//!
+//! [`Mmap`] maps a file into the address space on Linux (raw `mmap(2)`
+//! through the libc the Rust standard library already links — no new
+//! dependency) and falls back to reading the whole file into a 64-byte-
+//! aligned heap buffer everywhere else, or when the map call fails. Both
+//! paths expose the same `&[u8]`, and the 64-byte alignment guarantee
+//! holds for both (pages are 4 KiB-aligned; the fallback buffer is
+//! allocated with an explicit 64-byte layout), so callers can overlay
+//! `f32`/`u16` panel views at any 64-byte-aligned offset without copying.
+//!
+//! The mapping is private/read-only and lives until the `Mmap` drops;
+//! `ckpt::snapshot` hands it out behind an `Arc` so zero-copy
+//! `tensor::PackedPanels` views keep the region alive for as long as any
+//! prepared model borrows it.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    // Declared directly against the libc std already links; signatures
+    // match the 64-bit Linux ABI (off_t is 64-bit on every target the
+    // crate supports).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+}
+
+/// Alignment guaranteed for the start of the region (and promised by the
+/// snapshot format for every blob offset).
+pub const MAP_ALIGN: usize = 64;
+
+/// A 64-byte-aligned owned byte buffer (the non-mmap fallback storage).
+struct AlignedBuf {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl AlignedBuf {
+    fn new_zeroed(len: usize) -> Self {
+        if len == 0 {
+            return Self { ptr: std::ptr::null_mut(), len: 0 };
+        }
+        let layout = std::alloc::Layout::from_size_align(len, MAP_ALIGN)
+            .expect("aligned buffer layout");
+        // Zeroed so the &mut [u8] handed to read_exact is initialized.
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        if ptr.is_null() {
+            std::alloc::handle_alloc_error(layout);
+        }
+        Self { ptr, len }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        if self.len == 0 {
+            &mut []
+        } else {
+            unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+        }
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            let layout =
+                std::alloc::Layout::from_size_align(self.len, MAP_ALIGN)
+                    .expect("aligned buffer layout");
+            unsafe { std::alloc::dealloc(self.ptr, layout) };
+        }
+    }
+}
+
+enum Backing {
+    /// Live `mmap(2)` region (Linux). Unmapped on drop.
+    #[cfg(target_os = "linux")]
+    Mapped { ptr: *const u8, len: usize },
+    /// Whole file read into an aligned heap buffer (fallback path).
+    Owned(AlignedBuf),
+}
+
+/// A read-only view of a whole file: mapped on Linux, read into an
+/// aligned buffer elsewhere. See the module docs.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// The region is immutable for the lifetime of the value (PROT_READ /
+// owned buffer never written after construction), so shared access from
+// any thread is sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only (Linux), or read it fully into a 64-byte-
+    /// aligned buffer (other platforms, or if the map call fails).
+    pub fn open(path: &Path) -> io::Result<Mmap> {
+        let mut f = File::open(path)?;
+        let len = f.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "file too large to map on this target",
+            ));
+        }
+        let len = len as usize;
+
+        #[cfg(target_os = "linux")]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            let p = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1; fall through to the read path on
+            // any failure rather than surfacing platform errno quirks.
+            if p as usize != usize::MAX && !p.is_null() {
+                return Ok(Mmap {
+                    backing: Backing::Mapped { ptr: p as *const u8, len },
+                });
+            }
+        }
+
+        let mut buf = AlignedBuf::new_zeroed(len);
+        f.read_exact(buf.as_mut_slice())?;
+        Ok(Mmap { backing: Backing::Owned(buf) })
+    }
+
+    /// The file contents. Start address is 64-byte aligned on both paths.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(target_os = "linux")]
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Owned(b) => b.as_slice(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(target_os = "linux")]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Owned(b) => b.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes come from a live `mmap` (false on the
+    /// read-into-buffer fallback). Observability/tests only — the two
+    /// paths are otherwise interchangeable.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(target_os = "linux")]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_file_contents() {
+        let path = std::env::temp_dir()
+            .join(format!("softmoe-mmap-test-{}", std::process::id()));
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.bytes().as_ptr() as usize % MAP_ALIGN, 0,
+                   "region start must be 64-byte aligned");
+        drop(m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_is_empty_region() {
+        let path = std::env::temp_dir()
+            .join(format!("softmoe-mmap-empty-{}", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes().len(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open(Path::new("/no/such/softmoe-file")).is_err());
+    }
+}

@@ -1,7 +1,9 @@
-//! Small shared utilities: PRNG, timing, formatting.
+//! Small shared utilities: PRNG, timing, formatting, file mapping.
 
+pub mod mmap;
 pub mod rng;
 
+pub use mmap::Mmap;
 pub use rng::Rng;
 
 use std::time::Instant;
@@ -63,14 +65,67 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN inputs sort high instead of panicking (latency
+    // samples come from wall-clock math; a poisoned sample must not take
+    // the whole metrics pipeline down).
+    v.sort_by(f64::total_cmp);
     let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
     v[idx.min(v.len() - 1)]
+}
+
+// ---------------------------------------------------------------------------
+// Raw byte views — checkpoint / snapshot IO.
+//
+// Reinterpret numeric slices as their native-endian byte representation
+// so payloads can be written and read in bulk (one write_all/read_exact
+// per tensor instead of one per element). Always sound: u8 has alignment
+// 1 and every f32/u16 bit pattern is a valid byte sequence. The on-disk
+// formats record endianness (ckpt writes little-endian explicitly; the
+// snapshot header carries an endian tag), so these views never silently
+// change a format's meaning.
+// ---------------------------------------------------------------------------
+
+/// View an f32 slice as its native-endian bytes.
+pub fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    }
+}
+
+/// Mutable byte view of an f32 slice (bulk `read_exact` target).
+pub fn f32s_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    unsafe {
+        std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8,
+                                       v.len() * 4)
+    }
+}
+
+/// View a u16 slice as its native-endian bytes.
+pub fn u16s_as_bytes(v: &[u16]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 2)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn byte_views_roundtrip() {
+        let mut v = vec![1.0f32, -2.5, 3.25];
+        let bytes = f32s_as_bytes(&v).to_vec();
+        assert_eq!(bytes.len(), 12);
+        let mut w = vec![0.0f32; 3];
+        f32s_as_bytes_mut(&mut w).copy_from_slice(&bytes);
+        assert_eq!(v, w);
+        v[0] = f32::from_bits(0x0102_0304);
+        let b = f32s_as_bytes(&v);
+        assert_eq!(u32::from_ne_bytes([b[0], b[1], b[2], b[3]]),
+                   0x0102_0304);
+        let u = [0x1234u16, 0xABCD];
+        assert_eq!(u16s_as_bytes(&u).len(), 4);
+    }
 
     #[test]
     fn human_counts() {

@@ -1,0 +1,127 @@
+//! Cold-start acceptance for panel snapshots: restoring a
+//! `PreparedModel` from a `.panels` file must perform **zero** pack
+//! passes (`tensor::pack_passes`) and no full-payload heap copy (every
+//! weight matrix a view of the mapped region), and the restored model's
+//! forward must be bit-identical (f32) to the prepack-from-store path
+//! under every available kernel.
+//!
+//! Single `#[test]` binary: it asserts on the process-global pack-pass
+//! counter, which concurrently running tests would perturb (same
+//! discipline as `pool_steady_state.rs`).
+
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::nn::{PreparedModel, VitModel};
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::Backend;
+use softmoe::tensor::{kernel, pack_passes, with_workspace, Tensor,
+                      WeightDtype};
+use softmoe::util::Rng;
+
+#[test]
+fn snapshot_cold_start_zero_pack_passes_and_bit_identical() {
+    // The pool_steady_state serve config: weight GEMMs (patch embed
+    // 16×48×32, attention projections 16×32×32, dense MLP 16×32×64) sit
+    // ABOVE the small-GEMM threshold — an unprepared forward provably
+    // packs — while the activation GEMMs (QKᵀ 16×16×16, dispatch/combine
+    // at s = 2) stay below it, so a prepacked forward performs zero pack
+    // passes end to end and the counter assertions have teeth.
+    let cfg = ModelConfig {
+        image_size: 16,
+        patch_size: 4,
+        channels: 3,
+        dim: 32,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 64,
+        num_classes: 4,
+        moe_type: MoeType::Soft,
+        moe_layers: vec![1],
+        num_experts: 2,
+        slots_per_expert: 1,
+        expert_hidden: 64,
+        ..ModelConfig::default()
+    };
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(0);
+    let images = {
+        let mut rng = Rng::new(3);
+        let n = 2 * cfg.image_size * cfg.image_size * cfg.channels;
+        Tensor::from_vec(
+            &[2, cfg.image_size, cfg.image_size, cfg.channels],
+            (0..n).map(|_| rng.uniform()).collect(),
+        )
+    };
+
+    // Prepack from the store (this is the slow cold start: one pack pass
+    // per weight matrix) and snapshot it.
+    let before_prepack = pack_passes();
+    let prep = PreparedModel::new(&model, &params, WeightDtype::F32);
+    assert!(pack_passes() > before_prepack,
+            "prepacking must run pack passes (else the zero-pass \
+             assertion below is vacuous)");
+    let path = std::env::temp_dir().join(format!(
+        "softmoe-cold-start-{}.panels",
+        std::process::id()
+    ));
+    prep.save_snapshot(&path).unwrap();
+
+    // The snapshot cold start: mapping + wiring views runs ZERO pack
+    // passes and copies no panel payload.
+    let before_load = pack_passes();
+    let loaded =
+        PreparedModel::load_snapshot(&model, &path, WeightDtype::F32)
+            .unwrap();
+    assert_eq!(pack_passes(), before_load,
+               "snapshot load must not run a single pack pass");
+    assert!(loaded.storage_is_view(),
+            "snapshot load must borrow the mapped region (no payload \
+             copy)");
+
+    // Bit-identical forward under every available kernel, and the
+    // forward itself performs zero pack passes at this config.
+    for k in kernel::available() {
+        kernel::with_kernel(k.name(), || {
+            let before = pack_passes();
+            let (la, fa) =
+                with_workspace(|ws| prep.forward_item_infer(&images, 0, ws));
+            let (lb, fb) = with_workspace(|ws| {
+                loaded.forward_item_infer(&images, 0, ws)
+            });
+            assert_eq!(pack_passes(), before,
+                       "{}: prepacked forwards must not pack", k.name());
+            assert_eq!(la, lb,
+                       "{}: snapshot forward must be bit-identical to \
+                        prepack-from-store",
+                       k.name());
+            assert_eq!(fa, fb, "{}: features drifted", k.name());
+        });
+    }
+
+    // Same guarantee through the Backend surface (what Server::run
+    // drives): restore, then batched forwards — still zero pack passes
+    // from restore through serving. The backend loads at the env dtype
+    // (SOFTMOE_WEIGHT_DTYPE — the CI matrix runs a bf16 leg), so write
+    // a snapshot at that dtype for it.
+    let env_dtype = WeightDtype::from_env();
+    let prep_env = PreparedModel::new(&model, &params, env_dtype);
+    let path_env = std::env::temp_dir().join(format!(
+        "softmoe-cold-start-env-{}.panels",
+        std::process::id()
+    ));
+    prep_env.save_snapshot(&path_env).unwrap();
+    let mut be = NativeRuntime::new(cfg.clone());
+    let before_backend = pack_passes();
+    assert!(be.prepare_from_snapshot(&params, &path_env).unwrap());
+    let (logits_a, _) = be.forward(&params, &images).unwrap();
+    let (logits_b, _) = be.forward(&params, &images).unwrap();
+    assert_eq!(pack_passes(), before_backend,
+               "backend snapshot restore + forwards must run zero pack \
+                passes");
+    assert_eq!(logits_a.data, logits_b.data);
+    assert_eq!(logits_a.data, prep_env.forward(&images).logits.data,
+               "backend forwards from the snapshot must match the \
+                prepacked model");
+
+    std::fs::remove_file(&path).unwrap();
+    std::fs::remove_file(&path_env).unwrap();
+}

@@ -1,0 +1,263 @@
+//! Panel-snapshot round trips: a `PreparedModel` saved to a `.panels`
+//! file and loaded back (zero-copy views of the mapped region) must be
+//! functionally indistinguishable — bit-identical forwards for both
+//! storage dtypes under every available kernel — and every damaged or
+//! mismatched file must be rejected with a clean error that the serve
+//! path turns into a pack-per-call fallback.
+//!
+//! (The zero-pack-pass / zero-copy cold-start assertions live in
+//! `snapshot_cold_start.rs` and the SOFTMOE_SNAPSHOT serve flow in
+//! `snapshot_serve_env.rs` — both single-test binaries, because one
+//! reads process-global counters and the other mutates process-global
+//! environment variables, which concurrently running sibling tests
+//! would race.)
+
+use std::path::PathBuf;
+
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::nn::{PreparedModel, VitModel};
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::tensor::{kernel, with_workspace, Tensor, WeightDtype};
+use softmoe::util::Rng;
+
+fn tiny_cfg(moe: MoeType) -> ModelConfig {
+    ModelConfig {
+        image_size: 8,
+        patch_size: 4,
+        channels: 3,
+        dim: 16,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 24,
+        num_classes: 5,
+        moe_type: moe,
+        moe_layers: if moe == MoeType::Dense { vec![] } else { vec![1] },
+        num_experts: 3,
+        slots_per_expert: 2,
+        expert_hidden: 24,
+        ..ModelConfig::default()
+    }
+}
+
+fn rand_images(b: usize, cfg: &ModelConfig, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = b * cfg.image_size * cfg.image_size * cfg.channels;
+    Tensor::from_vec(
+        &[b, cfg.image_size, cfg.image_size, cfg.channels],
+        (0..n).map(|_| rng.uniform()).collect(),
+    )
+}
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "softmoe-snap-rt-{tag}-{}.panels",
+        std::process::id()
+    ))
+}
+
+/// Forward one item on the calling thread (GEMM kernels resolve on the
+/// submitting thread, so `kernel::with_kernel` applies to every GEMM in
+/// here — including rows fanned out to the pool).
+fn fwd_item(prep: &PreparedModel, images: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    with_workspace(|ws| prep.forward_item_infer(images, 0, ws))
+}
+
+#[test]
+fn f32_roundtrip_bit_identical_every_kernel_every_variant() {
+    for moe in [MoeType::Soft, MoeType::TokensChoice,
+                MoeType::ExpertsChoice, MoeType::Dense] {
+        let cfg = tiny_cfg(moe);
+        let model = VitModel::new(cfg.clone());
+        let params = model.init(3);
+        let images = rand_images(1, &cfg, 4);
+        let prep = PreparedModel::new(&model, &params, WeightDtype::F32);
+        let path = tmpfile(&format!("f32-{moe:?}"));
+        prep.save_snapshot(&path).unwrap();
+        let loaded =
+            PreparedModel::load_snapshot(&model, &path, WeightDtype::F32)
+                .unwrap();
+        assert!(loaded.storage_is_view(),
+                "loaded panels must borrow the mapped region, not copy");
+        for k in kernel::available() {
+            kernel::with_kernel(k.name(), || {
+                let (la, fa) = fwd_item(&prep, &images);
+                let (lb, fb) = fwd_item(&loaded, &images);
+                assert_eq!(la, lb,
+                           "{moe:?}/{}: snapshot logits must be \
+                            bit-identical to prepack-from-store",
+                           k.name());
+                assert_eq!(fa, fb, "{moe:?}/{}: features drifted",
+                           k.name());
+            });
+        }
+        // Batched path too (process-default kernel, pool workers).
+        let a = prep.forward(&rand_images(3, &cfg, 5));
+        let b = loaded.forward(&rand_images(3, &cfg, 5));
+        assert_eq!(a.logits.data, b.logits.data);
+        drop(loaded);
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn bf16_roundtrip_bit_identical() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(7);
+    let images = rand_images(1, &cfg, 8);
+    let prep = PreparedModel::new(&model, &params, WeightDtype::Bf16);
+    let path = tmpfile("bf16");
+    prep.save_snapshot(&path).unwrap();
+    let loaded =
+        PreparedModel::load_snapshot(&model, &path, WeightDtype::Bf16)
+            .unwrap();
+    assert!(loaded.storage_is_view());
+    for k in kernel::available() {
+        kernel::with_kernel(k.name(), || {
+            let (la, _) = fwd_item(&prep, &images);
+            let (lb, _) = fwd_item(&loaded, &images);
+            // The snapshot holds the exact bf16 panel bytes, so even the
+            // rounded path must agree bit for bit.
+            assert_eq!(la, lb, "bf16/{}: snapshot forward drifted",
+                       k.name());
+        });
+    }
+    drop(loaded);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn dtype_mismatch_rejected() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(1);
+    let prep = PreparedModel::new(&model, &params, WeightDtype::F32);
+    let path = tmpfile("dtype-mismatch");
+    prep.save_snapshot(&path).unwrap();
+    let err = PreparedModel::load_snapshot(&model, &path,
+                                           WeightDtype::Bf16)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dtype")
+                || format!("{err:#}").contains("bf16"),
+            "{err:#}");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn wrong_model_config_rejected() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(1);
+    let prep = PreparedModel::new(&model, &params, WeightDtype::F32);
+    let path = tmpfile("wrong-cfg");
+    prep.save_snapshot(&path).unwrap();
+
+    // More experts: the expert manifest dims disagree.
+    let mut cfg2 = cfg.clone();
+    cfg2.num_experts = 4;
+    let err = PreparedModel::load_snapshot(&VitModel::new(cfg2), &path,
+                                           WeightDtype::F32)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("packed for")
+                || format!("{err:#}").contains("expects"),
+            "{err:#}");
+
+    // A dense config: the MoE entries don't even exist.
+    let err = PreparedModel::load_snapshot(
+        &VitModel::new(tiny_cfg(MoeType::Dense)), &path, WeightDtype::F32)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("missing entry"), "{err:#}");
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn corrupt_and_truncated_files_rejected() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(2);
+    let prep = PreparedModel::new(&model, &params, WeightDtype::F32);
+    let path = tmpfile("damage");
+    prep.save_snapshot(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Wrong magic.
+    let mut bad = good.clone();
+    bad[0] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(PreparedModel::load_snapshot(&model, &path, WeightDtype::F32)
+        .is_err());
+
+    // Truncated blob region.
+    std::fs::write(&path, &good[..good.len() - 64]).unwrap();
+    assert!(PreparedModel::load_snapshot(&model, &path, WeightDtype::F32)
+        .is_err());
+
+    // Flipped weight byte (checksum).
+    let mut bad = good.clone();
+    let at = good.len() - 9;
+    bad[at] ^= 0x80;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(PreparedModel::load_snapshot(&model, &path, WeightDtype::F32)
+        .is_err());
+
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn backend_snapshot_binds_store_and_train_step_invalidates() {
+    let cfg = tiny_cfg(MoeType::Soft);
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(5).unwrap();
+    let path = tmpfile("backend");
+
+    // Write through the Backend surface (nothing prepared yet -> false).
+    assert!(!be.write_snapshot(&path).unwrap());
+    be.prepare(&params).unwrap();
+    assert!(be.write_snapshot(&path).unwrap());
+
+    // A fresh backend restores from the file and serves identical bits.
+    let imgs = rand_images(2, &cfg, 6);
+    let model = VitModel::new(cfg.clone());
+    let want = PreparedModel::new(&model, &params,
+                                  WeightDtype::from_env())
+        .forward(&imgs);
+    let mut be2 = NativeRuntime::new(cfg.clone());
+    assert!(be2.prepare_from_snapshot(&params, &path).unwrap());
+    assert!(be2.prepared_footprint().is_some());
+    let (logits, _) = be2.forward(&params, &imgs).unwrap();
+    assert_eq!(logits.data, want.logits.data);
+
+    // A different store must NOT ride the snapshot (same-store check).
+    let params2 = be2.init(9).unwrap();
+    let (l2, _) = be2.forward(&params2, &imgs).unwrap();
+    let direct = model.forward(&params2, &imgs);
+    assert_eq!(l2.data, direct.logits.data,
+               "a different store must use the unprepared path");
+
+    // train_step mutates params in place -> the loaded snapshot must be
+    // dropped exactly like an in-memory prepared model.
+    let mut state = TrainState::fresh(params);
+    be2.prepare_from_snapshot(&state.params, &path).unwrap();
+    be2.train_step(&mut state, &imgs, &[0, 1], 1e-2).unwrap();
+    assert!(be2.prepared_footprint().is_none(),
+            "train_step must invalidate a snapshot-loaded prepared model");
+    let (l3, _) = be2.forward(&state.params, &imgs).unwrap();
+    let direct = model.forward(&state.params, &imgs);
+    assert_eq!(l3.data, direct.logits.data,
+               "post-training forward must read the updated weights");
+
+    // The retrained store no longer matches the snapshot's parameter
+    // fingerprint: re-loading the same file must be REJECTED, not
+    // silently serve the pre-training weights.
+    let err = be2
+        .prepare_from_snapshot(&state.params, &path)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("different parameter values"),
+            "{err:#}");
+    assert!(be2.prepared_footprint().is_none());
+
+    std::fs::remove_file(&path).unwrap();
+}
+

@@ -1,0 +1,126 @@
+//! The SOFTMOE_SNAPSHOT serve flow, end to end: first boot prepacks and
+//! writes the file, second boot mmap-loads it (bit-identical answers),
+//! a corrupt file falls back to pack-per-call, still serves, and is
+//! atomically rewritten so the boot after that is fast again.
+//!
+//! Single `#[test]` binary on purpose: it mutates process-global
+//! environment variables (`std::env::set_var` racing a sibling test's
+//! `getenv` is undefined behavior on glibc), so nothing else may run in
+//! this process.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::metrics::Registry;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::Backend;
+use softmoe::serve::{BatchPolicy, Server};
+use softmoe::util::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        image_size: 8,
+        patch_size: 4,
+        channels: 3,
+        dim: 16,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 24,
+        num_classes: 5,
+        moe_type: MoeType::Soft,
+        moe_layers: vec![1],
+        num_experts: 3,
+        slots_per_expert: 2,
+        expert_hidden: 24,
+        ..ModelConfig::default()
+    }
+}
+
+#[test]
+fn serve_env_snapshot_write_load_fallback_and_rewrite() {
+    let cfg = tiny_cfg();
+    let path: PathBuf = std::env::temp_dir().join(format!(
+        "softmoe-serve-env-{}.panels",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    std::env::set_var("SOFTMOE_SNAPSHOT", &path);
+
+    let image: Vec<f32> = {
+        let mut rng = Rng::new(21);
+        (0..cfg.image_size * cfg.image_size * cfg.channels)
+            .map(|_| rng.uniform())
+            .collect()
+    };
+    let policy = || BatchPolicy {
+        max_batch: 1,
+        max_delay: Duration::from_millis(0),
+        compiled_sizes: vec![1],
+    };
+    let serve_once = |cfg: &ModelConfig, image: &[f32]| {
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(5).unwrap();
+        let (server, client) = Server::new(
+            policy(), &[cfg.image_size, cfg.image_size, cfg.channels]);
+        let metrics = Registry::new();
+        let rx = client.submit(image.to_vec());
+        drop(client);
+        server.run(&mut be, &params, &metrics, Some(1)).unwrap();
+        (rx.recv().unwrap().logits,
+         metrics.label("model/weight_source").unwrap())
+    };
+
+    // Boot 1: no file yet -> prepack, then write the snapshot.
+    let (logits_prepack, source) = serve_once(&cfg, &image);
+    assert_eq!(source, "prepack");
+    assert!(path.exists(), "first boot must write the snapshot");
+
+    // Boot 2: the file exists -> mmap load, bit-identical answers.
+    let (logits_snap, source) = serve_once(&cfg, &image);
+    assert_eq!(source, "snapshot");
+    assert_eq!(logits_snap, logits_prepack,
+               "snapshot-served logits must be bit-identical");
+
+    // Corrupt the blob: the loader rejects, serve falls back, still
+    // answers (with the prepacked weights, so the bits match again) —
+    // and REWRITES the file (checksum failure carries the
+    // file-invalid marker) so the next boot is fast again.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let at = bytes.len() - 5;
+    bytes[at] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let (logits_fallback, source) = serve_once(&cfg, &image);
+    assert_eq!(source, "prepack",
+               "a corrupt snapshot must fall back to pack-per-call");
+    assert_eq!(logits_fallback, logits_prepack);
+
+    // Boot 4: the rejected file was replaced by a fresh one during the
+    // fallback boot, so the snapshot path works again.
+    let (logits_rewritten, source) = serve_once(&cfg, &image);
+    assert_eq!(source, "snapshot",
+               "a rejected snapshot must be rewritten on the fallback \
+                boot");
+    assert_eq!(logits_rewritten, logits_prepack);
+
+    // A config-mismatch rejection must NOT rewrite someone else's valid
+    // artifact: serve a DIFFERENT model config against the same path —
+    // the shape validation rejects it cleanly (no file-invalid marker),
+    // the boot serves via prepack, and the file is left byte-identical.
+    let before = std::fs::read(&path).unwrap();
+    let mut other = cfg.clone();
+    other.num_experts = 2;
+    let other_image: Vec<f32> = {
+        let mut rng = Rng::new(22);
+        (0..other.image_size * other.image_size * other.channels)
+            .map(|_| rng.uniform())
+            .collect()
+    };
+    let (_, source) = serve_once(&other, &other_image);
+    assert_eq!(source, "prepack");
+    assert_eq!(std::fs::read(&path).unwrap(), before,
+               "a config-mismatch rejection must not clobber the file");
+
+    std::env::remove_var("SOFTMOE_SNAPSHOT");
+    std::fs::remove_file(&path).unwrap();
+}

@@ -60,25 +60,25 @@ fn main() -> anyhow::Result<()> {
     let producer = std::thread::spawn(move || {
         let mut rng = Rng::new(7);
         // Mixed traffic: the audit image rides inside busy batches.
-        let audit_rx = client.submit(audit2);
+        let audit_rx = client.submit(audit2).expect("audit admitted");
         let rxs: Vec<_> = (0..requests - 2)
             .map(|_| {
                 let img: Vec<f32> =
                     (0..image_len).map(|_| rng.uniform()).collect();
-                let rx = client.submit(img);
+                let rx = client.submit(img).expect("request admitted");
                 std::thread::sleep(Duration::from_micros(150));
                 rx
             })
             .collect();
         // Then solo (quiet period lets it be a 1-batch).
         std::thread::sleep(Duration::from_millis(20));
-        let solo_rx = client.submit(audit_img);
+        let solo_rx = client.submit(audit_img).expect("solo admitted");
         drop(client);
-        let batched = audit_rx.recv().unwrap();
+        let batched = audit_rx.wait().unwrap();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.wait().unwrap();
         }
-        let solo = solo_rx.recv().unwrap();
+        let solo = solo_rx.wait().unwrap();
         (batched, solo)
     });
 

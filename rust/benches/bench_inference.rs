@@ -208,10 +208,11 @@ fn main() {
         let metrics = Registry::new();
         let img = images.data.clone();
         let producer = std::thread::spawn(move || {
-            let rxs: Vec<_> =
-                (0..n).map(|_| client.submit(img.clone())).collect();
+            let rxs: Vec<_> = (0..n)
+                .map(|_| client.submit(img.clone()).expect("admitted"))
+                .collect();
             drop(client);
-            rxs.into_iter().map(|rx| rx.recv().unwrap()).count()
+            rxs.into_iter().map(|rx| rx.wait().unwrap()).count()
         });
         server.run(&mut be, &params, &metrics, Some(n)).unwrap();
         producer.join().unwrap();

@@ -356,6 +356,15 @@ impl SnapshotFile {
     /// checks). Blob checksum verification is on unless
     /// `SOFTMOE_SNAPSHOT_VERIFY=0`.
     pub fn open(path: &Path) -> Result<SnapshotFile> {
+        // Fault-injection site: a test (or SOFTMOE_FAILPOINTS) can make
+        // the read fail to exercise the serve fallback/rewrite path.
+        // Carries the file-invalid marker so the caller treats it like a
+        // corrupt blob (reject, prepack, rewrite).
+        if crate::util::failpoints::should_fail("snapshot/read") {
+            return Err(file_invalid(format!(
+                "snapshot {path:?}: injected read failure (failpoint \
+                 snapshot/read)")));
+        }
         let map = Arc::new(Mmap::open(path)
             .with_context(|| format!("open snapshot {path:?}"))?);
         let b = map.bytes();

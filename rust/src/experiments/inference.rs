@@ -122,14 +122,14 @@ fn serve_latency(
             .map(|_| {
                 let img: Vec<f32> =
                     (0..image_len).map(|_| rng.uniform()).collect();
-                let rx = client.submit(img);
+                let rx = client.submit(img).expect("request admitted");
                 // Open-loop-ish arrivals.
                 std::thread::sleep(Duration::from_micros(200));
                 rx
             })
             .collect();
         drop(client);
-        rxs.into_iter().map(|rx| rx.recv().unwrap()).count()
+        rxs.into_iter().map(|rx| rx.wait().unwrap()).count()
     });
     server.run(backend, params, &metrics, Some(n))?;
     handle.join().unwrap();

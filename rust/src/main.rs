@@ -24,7 +24,7 @@ use softmoe::metrics::Registry;
 use softmoe::runtime::native::NativeRuntime;
 use softmoe::runtime::pjrt::PjrtRuntime;
 use softmoe::runtime::{Backend, TrainState};
-use softmoe::serve::{BatchPolicy, Server};
+use softmoe::serve::{BatchPolicy, Server, ServeConfig};
 use softmoe::train::{Schedule, TrainConfig, Trainer};
 use softmoe::util::Rng;
 use softmoe::{ckpt, eval, experiments, flops};
@@ -50,7 +50,8 @@ fn usage() {
          COMMANDS:\n  \
          train       --model soft_s|dense_s|... --backend pjrt|native \
          --steps N --batch N --ckpt-dir DIR\n  \
-         serve       --model soft_s --backend pjrt|native --requests N\n  \
+         serve       --model soft_s --backend pjrt|native --requests N \
+         [--replicas N --queue-cap N --deadline-ms N]\n  \
          eval        --model soft_s --ckpt-dir DIR --ckpt NAME\n  \
          snapshot    --model soft_s --ckpt-dir DIR [--ckpt NAME] \
          --out FILE.panels [--dtype f32|bf16]\n  \
@@ -210,44 +211,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize_or("max-delay-us", 2000)? as u64),
         compiled_sizes: vec![1, 8, 32],
     };
-    let (server, client) = Server::new(
-        policy, &[cfg.image_size, cfg.image_size, cfg.channels]);
+    // Robustness knobs: env defaults (SOFTMOE_REPLICAS etc.), flags win.
+    let mut scfg = ServeConfig::from_env();
+    scfg.replicas = args.usize_or("replicas", scfg.replicas)?.max(1);
+    scfg.queue_cap = args.usize_or("queue-cap", scfg.queue_cap)?.max(1);
+    let deadline_ms = args.usize_or(
+        "deadline-ms",
+        scfg.deadline.map_or(0, |d| d.as_millis() as usize))?;
+    scfg.deadline = (deadline_ms > 0)
+        .then(|| Duration::from_millis(deadline_ms as u64));
+    let (server, client) = Server::with_config(
+        policy, &[cfg.image_size, cfg.image_size, cfg.channels], scfg);
     let metrics = Registry::new();
 
-    // Synthetic open-loop traffic from a client thread.
+    // Synthetic open-loop traffic from a client thread. Every submitted
+    // request is accounted for: answered, error reply (typed), rejected
+    // at submit (shed/deadline), or hung — a hung client is a server bug
+    // and the CI fault leg fails on it.
     let image_len = cfg.image_size * cfg.image_size * cfg.channels;
     let gap_us = args.usize_or("gap-us", 300)? as u64;
     let producer = std::thread::spawn(move || {
         let mut rng = Rng::new(7);
-        let rxs: Vec<_> = (0..requests)
-            .map(|_| {
-                let img: Vec<f32> =
-                    (0..image_len).map(|_| rng.uniform()).collect();
-                let rx = client.submit(img);
-                std::thread::sleep(Duration::from_micros(gap_us));
-                rx
-            })
-            .collect();
+        let mut rejected = 0usize;
+        let mut rxs = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let img: Vec<f32> =
+                (0..image_len).map(|_| rng.uniform()).collect();
+            match client.submit(img) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    rejected += 1;
+                    eprintln!("client: request rejected: {e}");
+                }
+            }
+            std::thread::sleep(Duration::from_micros(gap_us));
+        }
         drop(client);
-        rxs.into_iter().filter(|rx| rx.recv().is_ok()).count()
+        let (mut answered, mut errored, mut hung) = (0usize, 0, 0);
+        for rx in rxs {
+            match rx.wait_timeout(Duration::from_secs(30)) {
+                Some(Ok(_)) => answered += 1,
+                Some(Err(e)) => {
+                    errored += 1;
+                    eprintln!("client: error reply: {e}");
+                }
+                None => hung += 1,
+            }
+        }
+        (answered, errored, rejected, hung)
     });
 
     let served = server.run(backend.as_mut(), &params, &metrics,
                             Some(requests))?;
-    let answered = producer.join().unwrap();
-    let lat = metrics.histogram("serve/latency_secs").unwrap();
-    let bs = metrics.histogram("serve/batch_size").unwrap();
-    let ex = metrics.histogram("serve/execute_secs").unwrap();
+    let (answered, errored, rejected, hung) = producer.join().unwrap();
+    // unwrap_or_default: a run where every request was rejected (e.g.
+    // all deadlines expired) has no latency samples — still report.
+    let lat = metrics.histogram("serve/latency_secs").unwrap_or_default();
+    let bs = metrics.histogram("serve/batch_size").unwrap_or_default();
+    let ex = metrics.histogram("serve/execute_secs").unwrap_or_default();
     println!(
-        "served {served} requests ({answered} answered)\n\
-         latency  p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms\n\
+        "served {served} requests (answered {answered}, error replies \
+         {errored}, rejected at submit {rejected}, hung {hung})\n\
+         latency  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms\n\
          batch    mean {:.1} (max {:.0})\n\
          execute  p50 {:.2} ms per batch\n\
          throughput {:.0} img/s",
-        lat.p50() * 1e3, lat.p95() * 1e3, lat.max() * 1e3,
+        lat.p50() * 1e3, lat.p95() * 1e3, lat.p99() * 1e3,
+        lat.max() * 1e3,
         bs.mean(), bs.max(),
         ex.p50() * 1e3,
         served as f64 / ex.samples().iter().sum::<f64>().max(1e-9)
+    );
+    println!(
+        "replicas {:.0}  replica panics {}  replica restarts {}  \
+         quarantined {}\n\
+         shed {}  deadline expired {}",
+        metrics.gauge("serve/replicas").unwrap_or(1.0),
+        metrics.counter("serve/replica_panics"),
+        metrics.counter("serve/replica_restarts"),
+        metrics.counter("serve/replica_quarantined"),
+        metrics.counter("serve/shed"),
+        metrics.counter("serve/deadline_expired"),
     );
     Ok(())
 }

@@ -1229,6 +1229,21 @@ struct PreparedBlock {
     moe: PreparedMoeBlock,
 }
 
+// Serve-replica contract: a `PreparedModel` is immutable after
+// construction — every forward takes `&self`, and all scratch lives in
+// per-thread workspaces — so the serving layer shares ONE instance
+// across N executor replicas behind an `Arc`
+// (`runtime::Backend::shared_prepared`). When the model was loaded from
+// a snapshot, every replica's panels are zero-copy views of the same
+// `Arc<Mmap>` region. Compile-time proof the type stays shareable (a
+// field with interior mutability would break this line, not a replica
+// at 3am):
+#[allow(dead_code)]
+fn assert_prepared_model_is_shareable() {
+    fn check<T: Send + Sync>() {}
+    check::<PreparedModel>();
+}
+
 /// A [`VitModel`] + [`ParamStore`] snapshot prepared for serving: every
 /// weight matrix on the inference path — patch embed, the attention
 /// projections, dense MLPs, the stacked expert manifests, Soft MoE's Φ

@@ -113,6 +113,21 @@ pub trait Backend {
         None
     }
 
+    /// A shareable handle to the prepared inference surface, for serving
+    /// with multiple executor replicas: `PreparedModel::forward` takes
+    /// `&self` and the type is `Send + Sync`, so replicas on different
+    /// threads execute batches through clones of one `Arc` — when the
+    /// model was loaded via [`Backend::prepare_from_snapshot`], every
+    /// replica's panels are zero-copy views of the *same* `Arc<Mmap>`
+    /// region (no per-replica weight copies). Returns `None` (the
+    /// default) for backends whose execution state is bound to one
+    /// thread (PJRT device handles are not `Send`); the serve layer then
+    /// degrades to a single executor on the calling thread.
+    fn shared_prepared(&self)
+        -> Option<std::sync::Arc<crate::nn::PreparedModel>> {
+        None
+    }
+
     /// Batched forward: images (B, H, W, C) -> (logits (B, classes),
     /// features (B, d)). The backend may require B to match a compiled
     /// batch size (see `PjrtRuntime::fwd_batches`).

@@ -7,6 +7,7 @@
 //! b1=0.9, b2=0.999, eps=1e-8, bias correction on).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -57,8 +58,10 @@ pub struct NativeRuntime {
     /// store (a different store falls back to the unprepared path) and
     /// `train_step` drops the snapshot (it mutates the parameters in
     /// place, so any snapshot is stale). Callers that mutate the store
-    /// by other means must call `prepare` again.
-    prepared: Option<PreparedModel>,
+    /// by other means must call `prepare` again. Behind an `Arc` so the
+    /// serve layer can run N executor replicas against one prepared
+    /// model ([`Backend::shared_prepared`]).
+    prepared: Option<Arc<PreparedModel>>,
     prepared_for: StoreKey,
 }
 
@@ -94,7 +97,7 @@ impl NativeRuntime {
     /// The prepacked parameters, if [`Backend::prepare`] ran (tests and
     /// warmup paths use this to drive the exact serve-time code path).
     pub fn prepared(&self) -> Option<&PreparedModel> {
-        self.prepared.as_ref()
+        self.prepared.as_deref()
     }
 }
 
@@ -108,8 +111,8 @@ impl Backend for NativeRuntime {
     }
 
     fn prepare(&mut self, params: &ParamStore) -> Result<()> {
-        self.prepared = Some(PreparedModel::new(&self.model, params,
-                                                WeightDtype::from_env()));
+        self.prepared = Some(Arc::new(PreparedModel::new(
+            &self.model, params, WeightDtype::from_env())));
         self.prepared_for = store_key(params);
         Ok(())
     }
@@ -137,7 +140,7 @@ impl Backend for NativeRuntime {
                  delete it or re-run `softmoe snapshot`"
             )));
         }
-        self.prepared = Some(prep);
+        self.prepared = Some(Arc::new(prep));
         self.prepared_for = store_key(params);
         Ok(true)
     }
@@ -156,6 +159,10 @@ impl Backend for NativeRuntime {
         self.prepared
             .as_ref()
             .map(|p| (p.resident_bytes(), p.dtype().name()))
+    }
+
+    fn shared_prepared(&self) -> Option<Arc<PreparedModel>> {
+        self.prepared.clone()
     }
 
     fn forward(&mut self, params: &ParamStore, images: &Tensor)

@@ -1,4 +1,5 @@
-//! Inference serving: request queue → dynamic batcher → model executor.
+//! Fault-tolerant inference serving: bounded admission → dynamic
+//! batcher → N panic-contained executor replicas.
 //!
 //! This is the L3 coordination piece for the paper's inference story
 //! (§3.4.2, Table 1: "Soft MoE optimized for inference"): the server
@@ -8,16 +9,49 @@
 //! batching decisions can never change a result (§2.2 "no batch-effects",
 //! verified in `determinism_under_batching`).
 //!
-//! Architecture (single-process, channel-based):
-//!   clients ──mpsc──► batcher (size/deadline policy, pads to a compiled
-//!   batch size) ──► executor (Backend::forward) ──► per-request replies.
+//! Architecture (single-process):
 //!
-//! The executor runs on the thread that owns the `Backend` (PJRT handles
-//! are not `Send`); clients are any number of threads holding a
-//! [`Client`].
+//! ```text
+//! clients ──► AdmissionQueue (bounded; shed + deadline stamps)
+//!                 │                    [serve/queue.rs]
+//!        ┌────────┼────────┐
+//!    replica 0  replica 1 … replica N-1   (SOFTMOE_REPLICAS)
+//!        │        │        │          [serve/replica.rs]
+//!        └──── per-request typed replies ────► clients
+//! ```
+//!
+//! The robustness contract (details in `docs/RELIABILITY.md`):
+//! * **Admission control** — the queue holds at most `SOFTMOE_QUEUE_CAP`
+//!   requests; beyond that, [`Client::submit`] returns
+//!   [`ServeError::Overloaded`] instead of growing memory without bound.
+//! * **Deadlines** — with `SOFTMOE_DEADLINE_MS` set, a request that
+//!   waited too long is rejected *before* execution with
+//!   [`ServeError::DeadlineExceeded`] — never a silent hang.
+//! * **Replicas** — each replica executes batches through the backend's
+//!   shared prepared model (`Backend::shared_prepared`): one `Arc`, and
+//!   for snapshot-loaded weights one shared `Arc<Mmap>` region, so N
+//!   replicas cost no extra weight memory. Backends without a shareable
+//!   prepared model (PJRT device handles are not `Send`) degrade to a
+//!   single executor on the calling thread.
+//! * **Panic containment** — a replica panic is caught; its in-flight
+//!   batch gets [`ServeError::ExecutorPanicked`] replies; the replica
+//!   restarts from the shared model with bounded exponential backoff; a
+//!   crash-looper is quarantined and the server degrades to survivors.
+//! * **Every admitted request gets exactly one reply** — success,
+//!   `DeadlineExceeded`, `ExecutorPanicked`, `Internal`, or a
+//!   `ShuttingDown` drain at exit. [`PendingReply::wait`] can block only
+//!   while the server is alive and working.
+//!
+//! Fault injection for all of the above: `util/failpoints.rs`
+//! (`serve/forward`, `snapshot/read`), exercised by
+//! `rust/tests/serve_faults.rs`.
+
+mod queue;
+mod replica;
 
 use std::path::Path;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -27,11 +61,66 @@ use crate::nn::ParamStore;
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
-/// One inference request: an image (H*W*C floats) and a reply channel.
+use queue::AdmissionQueue;
+
+/// Typed serving failures — every way the server can decline or fail a
+/// request, distinguishable by the client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The admission queue is full; the request was shed. Back off and
+    /// retry.
+    Overloaded { depth: usize, cap: usize },
+    /// The request sat in the queue past its deadline and was rejected
+    /// before execution.
+    DeadlineExceeded { waited: Duration },
+    /// The executor replica running this request's batch panicked. The
+    /// request may be retried; the server restarts the replica.
+    ExecutorPanicked,
+    /// The backend failed this batch with a clean error.
+    Internal(String),
+    /// The server is shutting down (or already gone) and will not serve
+    /// this request.
+    ShuttingDown,
+    /// The server went away without replying (reply channel dropped).
+    Disconnected,
+    /// The submitted image has the wrong number of elements.
+    InvalidRequest { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { depth, cap } => write!(
+                f, "server overloaded: queue depth {depth} at cap {cap}; \
+                    request shed"),
+            ServeError::DeadlineExceeded { waited } => write!(
+                f, "deadline exceeded after {waited:?} in queue"),
+            ServeError::ExecutorPanicked => write!(
+                f, "executor replica panicked while serving this batch"),
+            ServeError::Internal(msg) => write!(
+                f, "server error: {msg}"),
+            ServeError::ShuttingDown => write!(
+                f, "server is shutting down"),
+            ServeError::Disconnected => write!(
+                f, "server disconnected before replying"),
+            ServeError::InvalidRequest { expected, got } => write!(
+                f, "image has {got} elements, expected {expected}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a client ultimately receives for one request.
+pub type ServeResult = Result<Response, ServeError>;
+
+/// One inference request: an image (H*W*C floats), its admission stamp,
+/// its deadline (if the server runs with one) and a reply channel.
 pub struct Request {
     pub image: Vec<f32>,
     pub submitted: Instant,
-    pub reply: mpsc::Sender<Response>,
+    pub deadline: Option<Instant>,
+    pub reply: mpsc::Sender<ServeResult>,
 }
 
 /// The server's answer.
@@ -43,6 +132,8 @@ pub struct Response {
     pub latency: Duration,
     /// Size of the batch this request rode in (observability).
     pub batch_size: usize,
+    /// Which executor replica served it (observability).
+    pub replica: usize,
 }
 
 /// Batching policy.
@@ -77,88 +168,225 @@ impl BatchPolicy {
         }
         *self.compiled_sizes.last().expect("no compiled sizes")
     }
-}
 
-/// Client handle: submit images, receive replies.
-#[derive(Clone)]
-pub struct Client {
-    tx: mpsc::Sender<Request>,
-}
-
-impl Client {
-    /// Submit one image; returns the receiver for the response.
-    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Response> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request {
-            image,
-            submitted: Instant::now(),
-            reply: reply_tx,
-        };
-        // If the server is gone the receiver will simply disconnect.
-        let _ = self.tx.send(req);
-        reply_rx
+    /// The policy the server actually runs: compiled sizes sorted,
+    /// deduplicated and nonzero, and `max_batch` clamped into
+    /// `[1, max(compiled_sizes)]`. The clamp closes a latent buffer
+    /// overrun: a collector honoring `max_batch` > max(compiled) would
+    /// gather more requests than the padded buffer has rows, and the
+    /// copy loop would panic mid-serve. Panics (with a clear message)
+    /// only when no usable compiled size remains.
+    pub fn normalized(&self) -> BatchPolicy {
+        let mut sizes: Vec<usize> = self
+            .compiled_sizes
+            .iter()
+            .copied()
+            .filter(|&s| s > 0)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(
+            !sizes.is_empty(),
+            "BatchPolicy needs at least one nonzero compiled batch size"
+        );
+        let largest = *sizes.last().unwrap();
+        let max_batch = self.max_batch.clamp(1, largest);
+        if max_batch != self.max_batch {
+            eprintln!(
+                "serve: BatchPolicy.max_batch {} clamped to {} (largest \
+                 compiled batch size)",
+                self.max_batch, max_batch
+            );
+        }
+        BatchPolicy {
+            max_batch,
+            max_delay: self.max_delay,
+            compiled_sizes: sizes,
+        }
     }
 }
 
-/// The server: owns the request receiver; `run` drives the batch loop on
-/// the calling thread (which must own the backend).
+/// Runtime knobs for the fault-tolerant server. `from_env` reads the
+/// `SOFTMOE_*` variables documented in the README.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Executor replicas pulling from the shared queue
+    /// (`SOFTMOE_REPLICAS`; degraded to 1 when the backend has no
+    /// shareable prepared model).
+    pub replicas: usize,
+    /// Admission queue bound (`SOFTMOE_QUEUE_CAP`); submits beyond it
+    /// are shed with `ServeError::Overloaded`.
+    pub queue_cap: usize,
+    /// Per-request deadline (`SOFTMOE_DEADLINE_MS`; unset/0 = none).
+    pub deadline: Option<Duration>,
+    /// Consecutive failures after which a replica is quarantined.
+    pub quarantine_after: usize,
+    /// First post-panic backoff; doubles per consecutive failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            queue_cap: 1024,
+            deadline: None,
+            quarantine_after: 8,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(200),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_env() -> Self {
+        let d = Self::default();
+        let env_usize = |name: &str| -> Option<usize> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        };
+        Self {
+            replicas: env_usize("SOFTMOE_REPLICAS")
+                .map_or(d.replicas, |n| n.max(1)),
+            queue_cap: env_usize("SOFTMOE_QUEUE_CAP")
+                .map_or(d.queue_cap, |n| n.max(1)),
+            deadline: match env_usize("SOFTMOE_DEADLINE_MS") {
+                Some(0) | None => d.deadline,
+                Some(ms) => Some(Duration::from_millis(ms as u64)),
+            },
+            ..d
+        }
+    }
+}
+
+/// A pending server reply. Obtained from [`Client::submit`]; resolves to
+/// exactly one [`ServeResult`] — the server's no-hang contract is that
+/// every admitted request is replied to (success or typed error), and a
+/// dead server surfaces as [`ServeError::Disconnected`] rather than a
+/// wait that never returns.
+pub struct PendingReply {
+    rx: mpsc::Receiver<ServeResult>,
+}
+
+impl PendingReply {
+    /// Block until the reply arrives.
+    pub fn wait(self) -> ServeResult {
+        self.rx.recv().unwrap_or(Err(ServeError::Disconnected))
+    }
+
+    /// Block at most `timeout`; `None` means still pending (fault tests
+    /// use this as the hung-client detector).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<ServeResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(ServeError::Disconnected))
+            }
+        }
+    }
+}
+
+/// Client handle: submit images, receive typed replies. Clones share the
+/// queue; the server loop ends when every clone is dropped and the queue
+/// has drained.
+pub struct Client {
+    queue: Arc<AdmissionQueue>,
+    image_elems: usize,
+}
+
+impl Clone for Client {
+    fn clone(&self) -> Self {
+        self.queue.add_producer();
+        Self {
+            queue: Arc::clone(&self.queue),
+            image_elems: self.image_elems,
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        self.queue.remove_producer();
+    }
+}
+
+impl Client {
+    /// Submit one image. Admission is checked *now*: a full queue sheds
+    /// with [`ServeError::Overloaded`], a stopped server answers
+    /// [`ServeError::ShuttingDown`], a wrong-sized image is rejected —
+    /// a submit can no longer silently vanish into a dead channel.
+    pub fn submit(&self, image: Vec<f32>)
+        -> Result<PendingReply, ServeError> {
+        if image.len() != self.image_elems {
+            return Err(ServeError::InvalidRequest {
+                expected: self.image_elems,
+                got: image.len(),
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        self.queue.push(Request {
+            image,
+            submitted: Instant::now(),
+            deadline: self.queue.deadline_from_now(),
+            reply: tx,
+        })?;
+        Ok(PendingReply { rx })
+    }
+}
+
+/// The server: owns the admission queue; `run` drives the replica loops
+/// (replica 0 on the calling thread, which must own the backend).
 pub struct Server {
-    rx: mpsc::Receiver<Request>,
+    queue: Arc<AdmissionQueue>,
     pub policy: BatchPolicy,
+    pub config: ServeConfig,
     image_elems: usize,
     image_shape: Vec<usize>,
 }
 
 impl Server {
-    /// Create a server + client pair for images of shape (H, W, C).
+    /// Create a server + client pair for images of shape (H, W, C),
+    /// with robustness knobs from the environment
+    /// ([`ServeConfig::from_env`]).
     pub fn new(policy: BatchPolicy, image_shape: &[usize]) -> (Self, Client) {
-        let (tx, rx) = mpsc::channel();
-        let server = Self {
-            rx,
-            policy,
-            image_elems: image_shape.iter().product(),
-            image_shape: image_shape.to_vec(),
-        };
-        (server, Client { tx })
+        Self::with_config(policy, image_shape, ServeConfig::from_env())
     }
 
-    /// Collect one batch according to the policy. Blocks for the first
-    /// request; returns `None` when all clients disconnected.
-    fn collect(&self) -> Option<Vec<Request>> {
-        let first = self.rx.recv().ok()?;
-        let mut batch = vec![first];
-        let deadline = Instant::now() + self.policy.max_delay;
-        while batch.len() < self.policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        Some(batch)
+    /// Create a server + client pair with explicit robustness knobs.
+    pub fn with_config(policy: BatchPolicy, image_shape: &[usize],
+                       config: ServeConfig) -> (Self, Client) {
+        let policy = policy.normalized();
+        let image_elems = image_shape.iter().product();
+        let queue = Arc::new(AdmissionQueue::new(config.queue_cap,
+                                                 config.deadline));
+        let server = Self {
+            queue: Arc::clone(&queue),
+            policy,
+            config,
+            image_elems,
+            image_shape: image_shape.to_vec(),
+        };
+        (server, Client { queue, image_elems })
     }
 
     /// Serve until all clients disconnect (or `max_requests` served).
-    /// Runs on the caller's thread; `backend` executes every batch.
+    /// Runs replica 0 on the caller's thread; replicas 1..N (when the
+    /// backend exposes a shareable prepared model) on scoped threads.
     ///
-    /// The executor thread is the root of the parallelism budget (see
-    /// `threadpool::parallel_depth`): padded batches > 1 parallelize over
-    /// items inside the backend, single-item batches hand the threads to
-    /// the GEMM kernel instead — the budget rule prevents the two levels
-    /// from oversubscribing each other. Scratch pooling is resident at
-    /// every batch size: the executor thread's own workspace persists
-    /// across requests, and batch > 1 items run on the persistent worker
-    /// pool whose per-worker workspaces survive across batches and
-    /// requests too — steady state performs zero thread spawns and zero
-    /// workspace allocations (see `rust/tests/pool_steady_state.rs`).
-    /// The pool is prewarmed below so the one-time worker *spawn* cost
-    /// never lands on a request; the first few batches still warm each
-    /// worker's buffer pool (workspace warmup needs model-shaped work,
-    /// which the server only has once requests arrive).
+    /// Each replica's forward is the root of a parallelism-budget region
+    /// (see `threadpool::parallel_depth`): one replica at a time owns
+    /// the worker pool, concurrent replicas degrade to serial on their
+    /// own thread — so replicas never oversubscribe the cores. Scratch
+    /// pooling is resident at every batch size (zero steady-state
+    /// spawns/allocations, see `rust/tests/pool_steady_state.rs`); the
+    /// pool is prewarmed below, spawned replicas warm their own arenas
+    /// with one small forward before serving.
+    ///
+    /// Returns the number of successfully served requests. On every exit
+    /// path — including errors — queued requests are drained with
+    /// `ShuttingDown` replies so no client is left hanging.
     pub fn run(
         &self,
         backend: &mut dyn Backend,
@@ -173,9 +401,21 @@ impl Server {
         );
         crate::threadpool::prewarm();
         // Under SOFTMOE_PIN_CORES=1 the pool pins worker i to core i+1;
-        // pin this executor thread to the core they leave free so it
-        // stops migrating across the workers' cores mid-request.
-        crate::threadpool::pin_executor_thread();
+        // replica 0 (this thread) takes the core they leave free.
+        crate::threadpool::pin_replica_thread(0);
+        // No-hang contract, part 1: whatever exits this function —
+        // normal completion, a snapshot error, a warmup failure —
+        // admitted-but-unserved requests drain as ShuttingDown replies.
+        struct DrainGuard<'a>(&'a AdmissionQueue);
+        impl Drop for DrainGuard<'_> {
+            fn drop(&mut self) {
+                self.0.close();
+                for req in self.0.drain() {
+                    let _ = req.reply.send(Err(ServeError::ShuttingDown));
+                }
+            }
+        }
+        let _drain = DrainGuard(&self.queue);
         // Prepacked-weight startup, BEFORE any request is served:
         // 1. Build the backend's prepared parameter representation
         //    (native: `nn::PreparedModel` — every weight pre-packed into
@@ -260,68 +500,79 @@ impl Server {
         }
         metrics.inc("serve/warmup_batches",
                     self.policy.compiled_sizes.len() as u64);
-        let mut served = 0usize;
-        // Reusable padded input buffer: zero allocations in the hot loop
-        // beyond what the backend itself does.
-        let mut buf: Vec<f32> = Vec::new();
-        while let Some(batch) = self.collect() {
-            let n = batch.len();
-            let padded = self.policy.padded_size(n);
-            buf.clear();
-            buf.resize(padded * self.image_elems, 0.0);
-            for (i, req) in batch.iter().enumerate() {
-                buf[i * self.image_elems..(i + 1) * self.image_elems]
-                    .copy_from_slice(&req.image);
-            }
-            // Pad by repeating the last request (keeps activations in a
-            // realistic range; results for pad rows are discarded).
-            for i in n..padded {
-                let src = (n - 1) * self.image_elems;
-                buf.copy_within(src..src + self.image_elems,
-                                i * self.image_elems);
-            }
-            let mut shape = vec![padded];
-            shape.extend_from_slice(&self.image_shape);
-            let images = Tensor::from_vec(&shape, std::mem::take(&mut buf));
 
-            let exec_start = Instant::now();
-            let (logits, _feats) = backend.forward(params, &images)?;
-            let exec_secs = exec_start.elapsed().as_secs_f64();
-            buf = images.data; // reclaim the buffer
-
-            metrics.observe("serve/batch_size", n as f64);
-            metrics.observe("serve/padded_size", padded as f64);
-            metrics.observe("serve/execute_secs", exec_secs);
-            metrics.inc("serve/batches", 1);
-
-            let c = logits.shape[1];
-            for (i, req) in batch.into_iter().enumerate() {
-                let row = logits.row(i).to_vec();
-                let argmax = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(j, _)| j)
-                    .unwrap_or(0);
-                let latency = req.submitted.elapsed();
-                metrics.observe("serve/latency_secs", latency.as_secs_f64());
-                metrics.inc("serve/requests", 1);
-                let _ = req.reply.send(Response {
-                    logits: row,
-                    argmax,
-                    latency,
-                    batch_size: n,
-                });
-                served += 1;
-                let _ = c;
-            }
-            if let Some(maxr) = max_requests {
-                if served >= maxr {
-                    break;
+        // Replica fan-out. Backends without a shareable prepared model
+        // (PJRT: device handles are not Send) degrade to one executor
+        // on this thread; everything else about the failure contract —
+        // admission, deadlines, panic containment, drain — still holds.
+        let shared = backend.shared_prepared();
+        let mut replicas = self.config.replicas.max(1);
+        if shared.is_none() && replicas > 1 {
+            eprintln!(
+                "serve: backend has no shareable prepared model; \
+                 running 1 replica instead of {replicas}"
+            );
+            replicas = 1;
+        }
+        metrics.set_gauge("serve/replicas", replicas as f64);
+        metrics.set_gauge("serve/queue_cap",
+                          self.config.queue_cap as f64);
+        let served = AtomicUsize::new(0);
+        let active = AtomicUsize::new(replicas);
+        let ctx = replica::ReplicaCtx {
+            queue: &self.queue,
+            policy: &self.policy,
+            image_elems: self.image_elems,
+            image_shape: &self.image_shape,
+            metrics,
+            served: &served,
+            max_requests,
+            config: &self.config,
+            active: &active,
+        };
+        match &shared {
+            Some(source) => std::thread::scope(|s| {
+                for r in 1..replicas {
+                    let ctx = &ctx;
+                    s.spawn(move || {
+                        crate::threadpool::pin_replica_thread(r);
+                        let mut exec = replica::Executor::Shared {
+                            current: Arc::clone(source),
+                            source,
+                        };
+                        replica::warm(ctx, &mut exec);
+                        replica::run_replica(ctx, r, &mut exec);
+                    });
                 }
+                let mut exec = replica::Executor::Shared {
+                    current: Arc::clone(source),
+                    source,
+                };
+                replica::run_replica(&ctx, 0, &mut exec);
+            }),
+            None => {
+                let mut local =
+                    |images: &Tensor| backend.forward(params, images);
+                let mut exec = replica::Executor::Local(&mut local);
+                replica::run_replica(&ctx, 0, &mut exec);
             }
         }
-        Ok(served)
+        // Queue-side robustness counters, published once the replicas
+        // are done (the queue's own counters are the source of truth
+        // while serving).
+        metrics.inc("serve/shed", self.queue.shed_count());
+        Ok(served.load(Ordering::SeqCst))
+    }
+}
+
+impl Drop for Server {
+    /// A server dropped without (or after) `run` must not leave clients
+    /// waiting on requests nobody will ever execute.
+    fn drop(&mut self) {
+        self.queue.close();
+        for req in self.queue.drain() {
+            let _ = req.reply.send(Err(ServeError::ShuttingDown));
+        }
     }
 }
 
@@ -372,6 +623,31 @@ mod tests {
     }
 
     #[test]
+    fn policy_normalization() {
+        // The latent-overrun fix: max_batch beyond the largest compiled
+        // size is clamped so the collector can never outgrow the padded
+        // buffer.
+        let p = BatchPolicy {
+            max_batch: 16,
+            max_delay: Duration::from_millis(1),
+            compiled_sizes: vec![4, 0, 1, 4],
+        }
+        .normalized();
+        assert_eq!(p.compiled_sizes, vec![1, 4], "sorted, deduped, no 0");
+        assert_eq!(p.max_batch, 4, "clamped to largest compiled size");
+        // max_batch 0 is bumped to 1.
+        let p = BatchPolicy { max_batch: 0, ..Default::default() }
+            .normalized();
+        assert_eq!(p.max_batch, 1);
+        // No usable compiled size: a clear construction-time panic, not
+        // a mid-serve one.
+        let bad = BatchPolicy { compiled_sizes: vec![],
+                                ..Default::default() };
+        assert!(std::panic::catch_unwind(move || bad.normalized())
+            .is_err());
+    }
+
+    #[test]
     fn serves_concurrent_clients() {
         let (mut be, params, cfg) = tiny_backend();
         let policy = BatchPolicy {
@@ -388,7 +664,9 @@ mod tests {
             .map(|i| {
                 let c = client.clone();
                 let img = rand_image(&cfg, i as u64);
-                std::thread::spawn(move || c.submit(img).recv().unwrap())
+                std::thread::spawn(move || {
+                    c.submit(img).unwrap().wait().unwrap()
+                })
             })
             .collect();
         drop(client);
@@ -404,6 +682,14 @@ mod tests {
         }
         assert_eq!(metrics.counter("serve/requests"), n_requests as u64);
         assert!(metrics.histogram("serve/latency_secs").unwrap().len() > 0);
+        // Robustness observability: nothing was shed or expired in this
+        // underloaded run, and the replica gauge is set.
+        assert_eq!(metrics.counter("serve/shed"), 0);
+        assert_eq!(metrics.counter("serve/deadline_expired"), 0);
+        assert_eq!(metrics.counter("serve/replica_panics"), 0);
+        if std::env::var("SOFTMOE_REPLICAS").is_err() {
+            assert_eq!(metrics.gauge("serve/replicas"), Some(1.0));
+        }
         // Prepacked-weight observability: run() built the PreparedModel
         // before serving and registered its footprint.
         assert!(metrics.gauge("model/prepacked_bytes").unwrap() > 0.0);
@@ -435,10 +721,10 @@ mod tests {
             &[cfg.image_size, cfg.image_size, cfg.channels],
         );
         let m1 = Registry::new();
-        let rx = client1.submit(img.clone());
+        let rx = client1.submit(img.clone()).unwrap();
         drop(client1);
         server1.run(&mut be, &params, &m1, Some(1)).unwrap();
-        let solo = rx.recv().unwrap();
+        let solo = rx.wait().unwrap();
 
         // Serve with companions in one batch.
         let (server2, client2) = Server::new(
@@ -450,12 +736,12 @@ mod tests {
             &[cfg.image_size, cfg.image_size, cfg.channels],
         );
         let m2 = Registry::new();
-        let rx0 = client2.submit(img);
-        let _rx1 = client2.submit(rand_image(&cfg, 100));
-        let _rx2 = client2.submit(rand_image(&cfg, 101));
+        let rx0 = client2.submit(img).unwrap();
+        let _rx1 = client2.submit(rand_image(&cfg, 100)).unwrap();
+        let _rx2 = client2.submit(rand_image(&cfg, 101)).unwrap();
         drop(client2);
         server2.run(&mut be, &params, &m2, Some(3)).unwrap();
-        let batched = rx0.recv().unwrap();
+        let batched = rx0.wait().unwrap();
         assert!(batched.batch_size >= 2);
 
         for (a, b) in solo.logits.iter().zip(&batched.logits) {
@@ -477,14 +763,214 @@ mod tests {
         let metrics = Registry::new();
         // Submit 8 before the server runs: they should ride one batch.
         let rxs: Vec<_> = (0..8)
-            .map(|i| client.submit(rand_image(&cfg, i)))
+            .map(|i| client.submit(rand_image(&cfg, i)).unwrap())
             .collect();
         drop(client);
         server.run(&mut be, &params, &metrics, Some(8)).unwrap();
         for rx in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.wait().unwrap();
             assert_eq!(resp.batch_size, 8);
         }
         assert_eq!(metrics.counter("serve/batches"), 1);
+    }
+
+    #[test]
+    fn clamped_max_batch_serves_overload_without_panic() {
+        // Regression for the latent overrun: before the normalization
+        // fix, max_batch 16 with compiled sizes [1, 4] let the collector
+        // gather up to 16 requests into a 4-row padded buffer — the copy
+        // loop then panicked mid-serve. Ten eager clients must now ride
+        // several ≤4 batches instead.
+        let (mut be, params, cfg) = tiny_backend();
+        let (server, client) = Server::new(
+            BatchPolicy {
+                max_batch: 16,
+                max_delay: Duration::from_millis(20),
+                compiled_sizes: vec![1, 4],
+            },
+            &[cfg.image_size, cfg.image_size, cfg.channels],
+        );
+        assert_eq!(server.policy.max_batch, 4);
+        let metrics = Registry::new();
+        let rxs: Vec<_> = (0..10)
+            .map(|i| client.submit(rand_image(&cfg, i)).unwrap())
+            .collect();
+        drop(client);
+        let served =
+            server.run(&mut be, &params, &metrics, Some(10)).unwrap();
+        assert_eq!(served, 10);
+        for rx in rxs {
+            let resp = rx.wait().unwrap();
+            assert!(resp.batch_size <= 4,
+                    "batch {} exceeds the largest compiled size",
+                    resp.batch_size);
+        }
+    }
+
+    #[test]
+    fn submit_surfaces_shutdown_and_bad_input() {
+        let (mut be, params, cfg) = tiny_backend();
+        let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+        let (server, client) =
+            Server::new(BatchPolicy::default(), &shape);
+
+        // Wrong-sized image: typed rejection at submit.
+        assert_eq!(
+            client.submit(vec![0.0; 3]).unwrap_err(),
+            ServeError::InvalidRequest {
+                expected: shape.iter().product(),
+                got: 3
+            }
+        );
+
+        // Run to completion, then submit again: the queue is closed, so
+        // the client learns the server is gone instead of hanging on a
+        // receiver that never fires.
+        let metrics = Registry::new();
+        let rx = client.submit(rand_image(&cfg, 1)).unwrap();
+        server.run(&mut be, &params, &metrics, Some(1)).unwrap();
+        assert!(rx.wait().is_ok());
+        assert_eq!(client.submit(rand_image(&cfg, 2)).unwrap_err(),
+                   ServeError::ShuttingDown);
+
+        // A server dropped without ever running drains pending requests
+        // as ShuttingDown — no hang there either.
+        let (server2, client2) =
+            Server::new(BatchPolicy::default(), &shape);
+        let pending = client2.submit(rand_image(&cfg, 3)).unwrap();
+        drop(server2);
+        assert_eq!(pending.wait().unwrap_err(), ServeError::ShuttingDown);
+        assert_eq!(client2.submit(rand_image(&cfg, 4)).unwrap_err(),
+                   ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_error() {
+        // Admission control: a full queue sheds at submit time with a
+        // typed error — memory stays bounded, nobody hangs.
+        let (mut be, params, cfg) = tiny_backend();
+        let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+        let (server, client) = Server::with_config(
+            BatchPolicy {
+                max_batch: 2,
+                max_delay: Duration::from_millis(1),
+                compiled_sizes: vec![1, 2],
+            },
+            &shape,
+            ServeConfig { queue_cap: 2, ..ServeConfig::default() },
+        );
+        let mut admitted = Vec::new();
+        let mut sheds = 0;
+        for i in 0..5 {
+            match client.submit(rand_image(&cfg, i)) {
+                Ok(rx) => admitted.push(rx),
+                Err(ServeError::Overloaded { depth, cap }) => {
+                    assert_eq!(cap, 2);
+                    assert!(depth >= 2);
+                    sheds += 1;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(sheds, 3);
+        drop(client);
+        let metrics = Registry::new();
+        let served =
+            server.run(&mut be, &params, &metrics, Some(2)).unwrap();
+        assert_eq!(served, 2, "admitted requests still get served");
+        for rx in admitted {
+            assert!(rx.wait().is_ok());
+        }
+        assert_eq!(metrics.counter("serve/shed"), 3);
+        assert_eq!(metrics.gauge("serve/queue_cap"), Some(2.0));
+    }
+
+    #[test]
+    fn expired_requests_get_deadline_errors_not_hangs() {
+        // Deadlines: requests that outwaited their deadline in the queue
+        // are rejected before execution with a typed error.
+        let (mut be, params, cfg) = tiny_backend();
+        let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+        let (server, client) = Server::with_config(
+            BatchPolicy {
+                max_batch: 2,
+                max_delay: Duration::from_millis(0),
+                compiled_sizes: vec![1, 2],
+            },
+            &shape,
+            ServeConfig {
+                deadline: Some(Duration::from_millis(1)),
+                ..ServeConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..3)
+            .map(|i| client.submit(rand_image(&cfg, i)).unwrap())
+            .collect();
+        // Let every queued request expire before the server starts.
+        std::thread::sleep(Duration::from_millis(10));
+        drop(client);
+        let metrics = Registry::new();
+        let served =
+            server.run(&mut be, &params, &metrics, None).unwrap();
+        assert_eq!(served, 0, "expired requests must never execute");
+        for rx in rxs {
+            match rx.wait().unwrap_err() {
+                ServeError::DeadlineExceeded { waited } => {
+                    assert!(waited >= Duration::from_millis(1));
+                }
+                e => panic!("expected DeadlineExceeded, got {e}"),
+            }
+        }
+        assert_eq!(metrics.counter("serve/deadline_expired"), 3);
+        assert_eq!(metrics.counter("serve/requests"), 0);
+    }
+
+    #[test]
+    fn multi_replica_matches_single_replica_bitwise() {
+        // N replicas share one PreparedModel; per-item determinism means
+        // the replica that happens to serve a request can never change
+        // its logits.
+        let (mut be, params, cfg) = tiny_backend();
+        let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+        let n = 24usize;
+        let images: Vec<Vec<f32>> =
+            (0..n).map(|i| rand_image(&cfg, 1000 + i as u64)).collect();
+
+        let serve_with = |be: &mut NativeRuntime, replicas: usize|
+            -> Vec<Vec<f32>> {
+            let (server, client) = Server::with_config(
+                BatchPolicy {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                    compiled_sizes: vec![1, 2, 4],
+                },
+                &shape,
+                ServeConfig { replicas, ..ServeConfig::default() },
+            );
+            let metrics = Registry::new();
+            let imgs = images.clone();
+            let producer = std::thread::spawn(move || {
+                let rxs: Vec<_> = imgs
+                    .into_iter()
+                    .map(|img| client.submit(img).unwrap())
+                    .collect();
+                drop(client);
+                rxs.into_iter()
+                    .map(|rx| rx.wait().unwrap().logits)
+                    .collect::<Vec<_>>()
+            });
+            let served =
+                server.run(be, &params, &metrics, Some(n)).unwrap();
+            assert_eq!(served, n);
+            assert_eq!(metrics.gauge("serve/replicas"),
+                       Some(replicas as f64));
+            producer.join().unwrap()
+        };
+
+        let single = serve_with(&mut be, 1);
+        let triple = serve_with(&mut be, 3);
+        assert_eq!(single, triple,
+                   "replica fan-out changed served logits");
     }
 }

@@ -1,0 +1,183 @@
+//! Bounded admission queue shared by all executor replicas.
+//!
+//! The queue is the server's *admission control* point: it holds at most
+//! `cap` requests, and a submit against a full queue is **shed** with a
+//! typed [`ServeError::Overloaded`] instead of growing without bound —
+//! under sustained overload the server's memory stays flat and clients
+//! learn immediately that they must back off. Each admitted request is
+//! stamped with its deadline (`deadline_ms` after submit, when
+//! configured); replicas reject expired requests *before* execution with
+//! [`ServeError::DeadlineExceeded`], so a request never burns executor
+//! time producing an answer nobody is waiting for.
+//!
+//! Implementation: `Mutex<VecDeque>` + `Condvar`, because replicas are
+//! multiple *consumers* (std's mpsc channel is single-consumer).
+//! Producer-side disconnect semantics mirror the old mpsc behavior:
+//! [`Client`](super::Client) handles register/unregister on
+//! clone/drop, and once the last producer is gone a drained queue reads
+//! as closed, ending the serve loop.
+//!
+//! Lock discipline: no user code (model forward, reply channels that
+//! could block) runs under the queue lock, and lock poisoning is
+//! recovered (`into_inner`) — a panicking replica must never wedge
+//! admission for the survivors.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::{Request, ServeError};
+
+/// Outcome of a pop.
+pub(crate) enum Pop {
+    /// A request to execute (its deadline has NOT been checked yet —
+    /// the replica filters expired requests when assembling a batch).
+    Req(Request),
+    /// Timed out waiting (bounded pop only).
+    Empty,
+    /// Closed, or all producers gone, and nothing left to drain.
+    Closed,
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    /// Live `Client` handles. 0 with an empty queue reads as closed.
+    producers: usize,
+    /// Set by `close()`: no further admissions; pops drain what's left.
+    closed: bool,
+}
+
+pub(crate) struct AdmissionQueue {
+    cap: usize,
+    /// Per-request deadline applied at admission, if configured.
+    deadline: Option<Duration>,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    /// Requests rejected because the queue was full (monotonic; the
+    /// server publishes it as the `serve/shed` counter).
+    shed: AtomicU64,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize, deadline: Option<Duration>) -> Self {
+        Self {
+            cap: cap.max(1),
+            deadline,
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                producers: 1, // the Client returned alongside the Server
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Admit `req` or reject it with a typed error. Never blocks.
+    pub fn push(&self, req: Request) -> Result<(), ServeError> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        if st.q.len() >= self.cap {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded {
+                depth: st.q.len(),
+                cap: self.cap,
+            });
+        }
+        st.q.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// The deadline stamp for a request admitted now.
+    pub fn deadline_from_now(&self) -> Option<Instant> {
+        self.deadline.map(|d| Instant::now() + d)
+    }
+
+    /// Block until a request is available (or the queue is finished).
+    pub fn pop_blocking(&self) -> Pop {
+        let mut st = self.lock();
+        loop {
+            if let Some(r) = st.q.pop_front() {
+                return Pop::Req(r);
+            }
+            if st.closed || st.producers == 0 {
+                return Pop::Closed;
+            }
+            st = match self.not_empty.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Pop with a bounded wait (batch-fill: wait at most `timeout` for
+    /// a companion request).
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.lock();
+        loop {
+            if let Some(r) = st.q.pop_front() {
+                return Pop::Req(r);
+            }
+            if st.closed || st.producers == 0 {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Empty;
+            }
+            st = match self.not_empty.wait_timeout(st, deadline - now) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+
+    /// Stop admitting and wake every waiter. Idempotent.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Remove and return everything still queued (shutdown drain: the
+    /// server replies `ShuttingDown` to each so no client hangs).
+    pub fn drain(&self) -> Vec<Request> {
+        self.lock().q.drain(..).collect()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.lock().q.len()
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn add_producer(&self) {
+        self.lock().producers += 1;
+    }
+
+    pub fn remove_producer(&self) {
+        let mut st = self.lock();
+        st.producers = st.producers.saturating_sub(1);
+        let wake = st.producers == 0;
+        drop(st);
+        if wake {
+            // Replicas blocked on an empty queue must notice the
+            // disconnect and finish.
+            self.not_empty.notify_all();
+        }
+    }
+}

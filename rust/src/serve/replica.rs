@@ -1,0 +1,290 @@
+//! Executor replicas: batch assembly, panic containment, restart with
+//! backoff, quarantine.
+//!
+//! Each replica runs [`run_replica`] on its own thread (replica 0 on the
+//! thread that called `Server::run`), pulling batches from the shared
+//! [`AdmissionQueue`] and executing them through an [`Executor`]. The
+//! failure contract, end to end:
+//!
+//! * **Expired requests never execute.** While assembling a batch the
+//!   replica replies `DeadlineExceeded` to any request whose deadline
+//!   passed while it sat in the queue.
+//! * **A panic is contained to its batch.** The forward runs under
+//!   `catch_unwind`; on panic every request in the in-flight batch gets
+//!   an `ExecutorPanicked` reply (never a hang), the replica sleeps a
+//!   bounded exponential backoff, reinstalls its executor from the
+//!   shared prepared model (the `Arc` everyone else is serving from) and
+//!   resumes — counted in `serve/replica_panics` / `serve/replica_restarts`.
+//! * **A crash-looping replica is quarantined.** After
+//!   `ServeConfig::quarantine_after` consecutive failures the replica
+//!   retires (`serve/replica_quarantined`) and the server degrades to
+//!   the survivors; when the *last* replica retires, the queue closes so
+//!   waiting clients drain with `ShuttingDown` instead of hanging.
+//!
+//! The replica's forward is a *root* parallel region: one replica at a
+//! time owns the worker pool, concurrent replicas degrade to serial on
+//! their own thread (`threadpool` budget rule) — N replicas add fault
+//! isolation and queue-drain concurrency without oversubscribing cores.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::Registry;
+use crate::nn::PreparedModel;
+use crate::tensor::Tensor;
+
+use super::queue::{AdmissionQueue, Pop};
+use super::{BatchPolicy, Request, Response, ServeConfig, ServeError};
+
+/// How a replica executes a padded batch.
+pub(crate) enum Executor<'a> {
+    /// N-replica mode: a clone of the shared `Arc<PreparedModel>`.
+    /// `source` is the canonical handle held by `Server::run`; restart
+    /// after a panic reinstalls from it.
+    Shared {
+        current: Arc<PreparedModel>,
+        source: &'a Arc<PreparedModel>,
+    },
+    /// Single-replica fallback for backends without a shareable
+    /// prepared model (PJRT): execute on the calling thread through the
+    /// backend itself. Restart reuses the same backend state.
+    Local(&'a mut dyn FnMut(&Tensor) -> Result<(Tensor, Tensor)>),
+}
+
+impl Executor<'_> {
+    fn execute(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
+        match self {
+            Executor::Shared { current, .. } => {
+                let out = current.forward(images);
+                Ok((out.logits, out.features))
+            }
+            Executor::Local(f) => f(images),
+        }
+    }
+
+    /// Restart after a contained panic: drop the (possibly suspect)
+    /// handle and take a fresh clone of the shared prepared model — for
+    /// snapshot-loaded weights that is a fresh zero-copy view of the
+    /// same `Arc<Mmap>`.
+    fn reinstall(&mut self) {
+        if let Executor::Shared { current, source } = self {
+            *current = Arc::clone(source);
+        }
+    }
+}
+
+/// Everything a replica loop shares with its siblings.
+pub(crate) struct ReplicaCtx<'a> {
+    pub queue: &'a AdmissionQueue,
+    pub policy: &'a BatchPolicy,
+    pub image_elems: usize,
+    pub image_shape: &'a [usize],
+    pub metrics: &'a Registry,
+    /// Successfully served request count (all replicas).
+    pub served: &'a AtomicUsize,
+    pub max_requests: Option<usize>,
+    pub config: &'a ServeConfig,
+    /// Replicas still running; the last one out closes the queue.
+    pub active: &'a AtomicUsize,
+}
+
+/// One forward at the smallest compiled size, so a freshly spawned
+/// replica thread's resident workspace is warm before a real request
+/// lands on it. Skips the `serve/forward` failpoint on purpose: injected
+/// faults target served batches, keeping fault tests deterministic.
+pub(crate) fn warm(ctx: &ReplicaCtx, exec: &mut Executor) {
+    let mut shape = vec![ctx.policy.compiled_sizes[0]];
+    shape.extend_from_slice(ctx.image_shape);
+    let images = Tensor::zeros(&shape);
+    let _ = panic::catch_unwind(AssertUnwindSafe(|| {
+        let _ = exec.execute(&images);
+    }));
+}
+
+/// Append `req` to the batch, unless its deadline already passed — then
+/// reply `DeadlineExceeded` right here (the request never executes).
+fn admit_or_expire(req: Request, batch: &mut Vec<Request>,
+                   metrics: &Registry) {
+    if let Some(dl) = req.deadline {
+        if Instant::now() >= dl {
+            metrics.inc("serve/deadline_expired", 1);
+            let waited = req.submitted.elapsed();
+            let _ = req.reply
+                .send(Err(ServeError::DeadlineExceeded { waited }));
+            return;
+        }
+    }
+    batch.push(req);
+}
+
+/// Collect one batch per the policy (block for the first request, wait
+/// at most `max_delay` for companions, never exceed `max_batch`),
+/// filtering out expired requests. `None` means the queue is finished.
+fn collect(ctx: &ReplicaCtx) -> Option<Vec<Request>> {
+    loop {
+        let first = match ctx.queue.pop_blocking() {
+            Pop::Req(r) => r,
+            Pop::Empty | Pop::Closed => return None,
+        };
+        let mut batch = Vec::with_capacity(ctx.policy.max_batch);
+        admit_or_expire(first, &mut batch, ctx.metrics);
+        let deadline = Instant::now() + ctx.policy.max_delay;
+        while batch.len() < ctx.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match ctx.queue.pop_timeout(deadline - now) {
+                Pop::Req(r) => admit_or_expire(r, &mut batch, ctx.metrics),
+                Pop::Empty | Pop::Closed => break,
+            }
+        }
+        if !batch.is_empty() {
+            return Some(batch);
+        }
+        // Everything it gathered had expired; go wait for fresh work.
+    }
+}
+
+fn backoff_delay(cfg: &ServeConfig, consecutive: usize) -> Duration {
+    let exp = consecutive.saturating_sub(1).min(20) as u32;
+    cfg.backoff_base.saturating_mul(1u32 << exp).min(cfg.backoff_cap)
+}
+
+fn reply_all_err(batch: Vec<Request>, err: ServeError) {
+    for req in batch {
+        let _ = req.reply.send(Err(err.clone()));
+    }
+}
+
+/// The replica loop. Returns when the queue is finished or the replica
+/// quarantines itself.
+pub(crate) fn run_replica(ctx: &ReplicaCtx, idx: usize,
+                          exec: &mut Executor) {
+    let mut consecutive_failures = 0usize;
+    // Reusable padded input buffer (same zero-hot-loop-alloc story as
+    // the single-executor server had).
+    let mut buf: Vec<f32> = Vec::new();
+    while let Some(batch) = collect(ctx) {
+        ctx.metrics.set_gauge("serve/queue_depth",
+                              ctx.queue.depth() as f64);
+        let n = batch.len();
+        let padded = ctx.policy.padded_size(n);
+        buf.clear();
+        buf.resize(padded * ctx.image_elems, 0.0);
+        for (i, req) in batch.iter().enumerate() {
+            buf[i * ctx.image_elems..(i + 1) * ctx.image_elems]
+                .copy_from_slice(&req.image);
+        }
+        // Pad by repeating the last request (keeps activations in a
+        // realistic range; results for pad rows are discarded).
+        for i in n..padded {
+            let src = (n - 1) * ctx.image_elems;
+            buf.copy_within(src..src + ctx.image_elems,
+                            i * ctx.image_elems);
+        }
+        let mut shape = vec![padded];
+        shape.extend_from_slice(ctx.image_shape);
+        let images = Tensor::from_vec(&shape, std::mem::take(&mut buf));
+
+        let exec_start = Instant::now();
+        // Contain panics to this batch: the failpoint (fault tests) and
+        // the model forward both run under catch_unwind. AssertUnwindSafe
+        // is sound here because on panic we either reinstall the executor
+        // from the shared source or quarantine the replica — no state
+        // observed mid-panic is ever reused.
+        let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+            crate::util::failpoints::fire("serve/forward");
+            exec.execute(&images)
+        }));
+        let exec_secs = exec_start.elapsed().as_secs_f64();
+        match outcome {
+            Ok(Ok((logits, _feats))) => {
+                consecutive_failures = 0;
+                ctx.metrics.observe("serve/batch_size", n as f64);
+                ctx.metrics.observe("serve/padded_size", padded as f64);
+                ctx.metrics.observe("serve/execute_secs", exec_secs);
+                ctx.metrics.inc("serve/batches", 1);
+                for (i, req) in batch.into_iter().enumerate() {
+                    let row = logits.row(i).to_vec();
+                    let argmax = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(j, _)| j)
+                        .unwrap_or(0);
+                    let latency = req.submitted.elapsed();
+                    ctx.metrics.observe("serve/latency_secs",
+                                        latency.as_secs_f64());
+                    ctx.metrics.inc("serve/requests", 1);
+                    let _ = req.reply.send(Ok(Response {
+                        logits: row,
+                        argmax,
+                        latency,
+                        batch_size: n,
+                        replica: idx,
+                    }));
+                }
+                let total =
+                    ctx.served.fetch_add(n, Ordering::SeqCst) + n;
+                if ctx.max_requests.is_some_and(|max| total >= max) {
+                    ctx.queue.close();
+                }
+            }
+            Ok(Err(e)) => {
+                // The backend failed cleanly (shape mismatch, IO, ...).
+                // Same contract as a panic: every in-flight request gets
+                // an error reply, never a hang.
+                ctx.metrics.inc("serve/replica_errors", 1);
+                eprintln!("serve: replica {idx} batch failed: {e:#}");
+                reply_all_err(batch,
+                              ServeError::Internal(format!("{e:#}")));
+                consecutive_failures += 1;
+                if quarantine_if_crash_looping(ctx, idx,
+                                               consecutive_failures) {
+                    break;
+                }
+                std::thread::sleep(
+                    backoff_delay(ctx.config, consecutive_failures));
+            }
+            Err(_panic) => {
+                ctx.metrics.inc("serve/replica_panics", 1);
+                eprintln!("serve: replica {idx} panicked mid-batch; \
+                           replying errors to {n} in-flight request(s)");
+                reply_all_err(batch, ServeError::ExecutorPanicked);
+                consecutive_failures += 1;
+                if quarantine_if_crash_looping(ctx, idx,
+                                               consecutive_failures) {
+                    break;
+                }
+                std::thread::sleep(
+                    backoff_delay(ctx.config, consecutive_failures));
+                exec.reinstall();
+                ctx.metrics.inc("serve/replica_restarts", 1);
+            }
+        }
+        buf = images.data; // reclaim the padded buffer
+    }
+    // Last replica out closes the queue: with nobody left to execute,
+    // admitted-but-unserved requests must drain as errors (Server::run
+    // replies ShuttingDown to the leftovers), not sit forever.
+    if ctx.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+        ctx.queue.close();
+    }
+}
+
+/// Quarantine check: true when the replica must retire.
+fn quarantine_if_crash_looping(ctx: &ReplicaCtx, idx: usize,
+                               consecutive: usize) -> bool {
+    if consecutive < ctx.config.quarantine_after {
+        return false;
+    }
+    ctx.metrics.inc("serve/replica_quarantined", 1);
+    eprintln!("serve: replica {idx} quarantined after {consecutive} \
+               consecutive failures; degrading to surviving replicas");
+    true
+}

@@ -523,8 +523,24 @@ fn pin_requested() -> bool {
 /// the serve executor thread stops migrating between the workers' cores
 /// — previously only pool workers were pinned. Best-effort (Linux).
 pub fn pin_executor_thread() {
+    pin_replica_thread(0);
+}
+
+/// Per-replica half of the pinning story for multi-replica serving
+/// (`SOFTMOE_REPLICAS > 1`): replica `idx` pins to core `idx % ncpu`
+/// when `SOFTMOE_PIN_CORES=1` (no-op otherwise). Replica 0 is the
+/// classic executor thread on core 0; additional replicas land on
+/// distinct cores so they don't stack on the submitter's core. Replica
+/// threads do NOT enlarge the parallelism budget: each forward is a
+/// root parallel region, one region owns the worker pool at a time and
+/// the rest degrade to serial on their own thread (see
+/// `concurrent_root_regions_degrade_but_complete`), so N replicas
+/// trade per-batch latency for isolation without oversubscribing.
+pub fn pin_replica_thread(idx: usize) {
     if pin_requested() {
-        pin_to_core(0);
+        let ncpu =
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        pin_to_core(idx % ncpu.max(1));
     }
 }
 

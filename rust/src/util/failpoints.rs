@@ -1,0 +1,311 @@
+//! Deterministic fault injection for testing recovery paths.
+//!
+//! A *failpoint* is a named site in production code (e.g.
+//! `serve/forward`, `snapshot/read`) that does nothing unless armed. A
+//! test (or the `SOFTMOE_FAILPOINTS` env var) arms a site with an
+//! [`Action`] — panic on the Nth hit, inject latency, or report a
+//! synthetic failure — so every recovery path in the serving core is
+//! exercised by a repeatable test instead of by luck.
+//!
+//! Design constraints:
+//! - **Zero overhead disarmed.** `fire()` / `should_fail()` are a single
+//!   relaxed atomic load when nothing is armed — safe to leave in the
+//!   serve hot loop.
+//! - **Deterministic.** Hit counters are global per site, so
+//!   `panic@3` means "the 3rd time this site is reached in this
+//!   process", regardless of which thread reaches it.
+//! - **Test-friendly.** `arm` / `disarm_all` are programmatic; tests
+//!   that arm failpoints must live in their own test binary (one
+//!   `#[test]`) because the registry is process-global.
+//!
+//! Env syntax (`SOFTMOE_FAILPOINTS`), comma-separated entries:
+//!
+//! ```text
+//! serve/forward=panic@3          # panic on the 3rd hit only
+//! serve/forward=panic@3..5       # panic on hits 3,4,5
+//! serve/forward=panic            # panic on every hit
+//! serve/forward=delay:50         # sleep 50ms on every hit
+//! snapshot/read=fail             # report failure on every hit
+//! snapshot/read=fail@1           # report failure on the 1st hit only
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// What an armed failpoint does when its site is reached.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Panic on hits in `[from, to]` (1-based, inclusive; `to = None`
+    /// means every hit from `from` on).
+    Panic { from: u64, to: Option<u64> },
+    /// Sleep for the given duration on every hit (latency injection).
+    Delay(Duration),
+    /// Report failure (`should_fail() == true`) on hits in `[from, to]`.
+    Fail { from: u64, to: Option<u64> },
+}
+
+impl Action {
+    fn in_range(from: u64, to: Option<u64>, hit: u64) -> bool {
+        hit >= from && to.map_or(true, |t| hit <= t)
+    }
+}
+
+struct Site {
+    action: Action,
+    hits: AtomicU64,
+}
+
+struct State {
+    /// Fast path: false ⇒ no site is armed, skip everything.
+    enabled: AtomicBool,
+    sites: Mutex<HashMap<String, Site>>,
+}
+
+fn state() -> &'static State {
+    static STATE: OnceLock<State> = OnceLock::new();
+    STATE.get_or_init(|| {
+        let st = State {
+            enabled: AtomicBool::new(false),
+            sites: Mutex::new(HashMap::new()),
+        };
+        if let Ok(spec) = std::env::var("SOFTMOE_FAILPOINTS") {
+            let mut map = st.sites.lock().unwrap();
+            for entry in spec.split(',') {
+                let entry = entry.trim();
+                if entry.is_empty() {
+                    continue;
+                }
+                match parse_entry(entry) {
+                    Some((name, action)) => {
+                        map.insert(name.to_string(),
+                                   Site { action, hits: AtomicU64::new(0) });
+                    }
+                    None => eprintln!(
+                        "failpoints: ignoring malformed SOFTMOE_FAILPOINTS \
+                         entry {entry:?}"
+                    ),
+                }
+            }
+            st.enabled.store(!map.is_empty(), Ordering::Release);
+            drop(map);
+        }
+        st
+    })
+}
+
+/// Parse one `name=spec` entry. Returns `None` on malformed input.
+fn parse_entry(entry: &str) -> Option<(&str, Action)> {
+    let (name, spec) = entry.split_once('=')?;
+    let (name, spec) = (name.trim(), spec.trim());
+    if name.is_empty() {
+        return None;
+    }
+    let action = parse_action(spec)?;
+    Some((name, action))
+}
+
+fn parse_action(spec: &str) -> Option<Action> {
+    if let Some(ms) = spec.strip_prefix("delay:") {
+        return Some(Action::Delay(Duration::from_millis(
+            ms.trim().parse().ok()?,
+        )));
+    }
+    let (kind, range) = match spec.split_once('@') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    let (from, to) = match range {
+        None => (1, None),
+        Some(r) => match r.split_once("..") {
+            Some((a, b)) => {
+                let from = a.trim().parse().ok()?;
+                let to = b.trim().parse().ok()?;
+                (from, Some(to))
+            }
+            None => {
+                let n: u64 = r.trim().parse().ok()?;
+                (n, Some(n))
+            }
+        },
+    };
+    if from == 0 {
+        return None; // hits are 1-based
+    }
+    match kind.trim() {
+        "panic" => Some(Action::Panic { from, to }),
+        "fail" => Some(Action::Fail { from, to }),
+        _ => None,
+    }
+}
+
+fn lock_sites(st: &State) -> MutexGuard<'_, HashMap<String, Site>> {
+    // A panicking failpoint never holds this lock (fire() drops it before
+    // panicking), but recover from poisoning anyway: this module exists
+    // to test recovery, it must not be the thing that wedges.
+    match st.sites.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Arm a failpoint programmatically (tests). Replaces any existing
+/// action for `name` and resets its hit counter.
+pub fn arm(name: &str, action: Action) {
+    let st = state();
+    lock_sites(st).insert(name.to_string(),
+                          Site { action, hits: AtomicU64::new(0) });
+    st.enabled.store(true, Ordering::Release);
+}
+
+/// Disarm one failpoint.
+pub fn disarm(name: &str) {
+    let st = state();
+    let mut map = lock_sites(st);
+    map.remove(name);
+    st.enabled.store(!map.is_empty(), Ordering::Release);
+}
+
+/// Disarm every failpoint (test teardown).
+pub fn disarm_all() {
+    let st = state();
+    lock_sites(st).clear();
+    st.enabled.store(false, Ordering::Release);
+}
+
+/// How many times `name`'s site has been reached while armed.
+pub fn hits(name: &str) -> u64 {
+    let st = state();
+    lock_sites(st)
+        .get(name)
+        .map_or(0, |s| s.hits.load(Ordering::Relaxed))
+}
+
+/// Production sites call this at the point where a fault may be
+/// injected. Disarmed: a single atomic load. Armed with `Panic`:
+/// panics when the hit count is in range (the caller is expected to
+/// contain it with `catch_unwind`). Armed with `Delay`: sleeps.
+pub fn fire(name: &str) {
+    let st = state();
+    if !st.enabled.load(Ordering::Acquire) {
+        return;
+    }
+    let action = {
+        let map = lock_sites(st);
+        match map.get(name) {
+            None => return,
+            Some(site) => {
+                let hit = site.hits.fetch_add(1, Ordering::Relaxed) + 1;
+                match site.action {
+                    Action::Panic { from, to }
+                        if Action::in_range(from, to, hit) =>
+                    {
+                        Some((hit, None))
+                    }
+                    Action::Delay(d) => Some((hit, Some(d))),
+                    _ => None,
+                }
+            }
+        }
+        // Guard dropped here: never panic or sleep while holding the lock.
+    };
+    match action {
+        Some((_, Some(d))) => std::thread::sleep(d),
+        Some((hit, None)) => {
+            panic!("failpoint {name} fired (hit {hit})")
+        }
+        None => {}
+    }
+}
+
+/// Production sites that want a *clean error* instead of a panic consult
+/// this. Disarmed: a single atomic load, always false.
+pub fn should_fail(name: &str) -> bool {
+    let st = state();
+    if !st.enabled.load(Ordering::Acquire) {
+        return false;
+    }
+    let map = lock_sites(st);
+    match map.get(name) {
+        None => false,
+        Some(site) => {
+            let hit = site.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            matches!(site.action,
+                     Action::Fail { from, to }
+                         if Action::in_range(from, to, hit))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests arm DISTINCT site names so they stay independent even
+    // though the registry is process-global and tests run concurrently.
+
+    #[test]
+    fn disarmed_sites_are_inert() {
+        fire("tests/never-armed");
+        assert!(!should_fail("tests/never-armed"));
+        assert_eq!(hits("tests/never-armed"), 0);
+    }
+
+    #[test]
+    fn panic_on_nth_hit_is_deterministic() {
+        arm("tests/panic3", Action::Panic { from: 3, to: Some(3) });
+        fire("tests/panic3");
+        fire("tests/panic3");
+        let err = std::panic::catch_unwind(|| fire("tests/panic3"));
+        assert!(err.is_err(), "3rd hit must panic");
+        fire("tests/panic3"); // 4th hit: out of range again
+        assert_eq!(hits("tests/panic3"), 4);
+        disarm("tests/panic3");
+    }
+
+    #[test]
+    fn fail_window_and_disarm() {
+        arm("tests/fail12", Action::Fail { from: 1, to: Some(2) });
+        assert!(should_fail("tests/fail12"));
+        assert!(should_fail("tests/fail12"));
+        assert!(!should_fail("tests/fail12"));
+        disarm("tests/fail12");
+        assert!(!should_fail("tests/fail12"));
+    }
+
+    #[test]
+    fn env_spec_parser() {
+        assert_eq!(
+            parse_entry("serve/forward=panic@3"),
+            Some(("serve/forward",
+                  Action::Panic { from: 3, to: Some(3) }))
+        );
+        assert_eq!(
+            parse_entry("a=panic@2..4"),
+            Some(("a", Action::Panic { from: 2, to: Some(4) }))
+        );
+        assert_eq!(parse_entry("a=panic"),
+                   Some(("a", Action::Panic { from: 1, to: None })));
+        assert_eq!(
+            parse_entry("snapshot/read=fail"),
+            Some(("snapshot/read", Action::Fail { from: 1, to: None }))
+        );
+        assert_eq!(
+            parse_entry("a=delay:50"),
+            Some(("a", Action::Delay(Duration::from_millis(50))))
+        );
+        assert_eq!(parse_entry("nonsense"), None);
+        assert_eq!(parse_entry("a=panic@0"), None, "hits are 1-based");
+        assert_eq!(parse_entry("a=explode"), None);
+    }
+
+    #[test]
+    fn delay_injects_latency() {
+        arm("tests/delay", Action::Delay(Duration::from_millis(15)));
+        let t0 = std::time::Instant::now();
+        fire("tests/delay");
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        disarm("tests/delay");
+    }
+}

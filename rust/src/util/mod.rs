@@ -1,5 +1,7 @@
-//! Small shared utilities: PRNG, timing, formatting, file mapping.
+//! Small shared utilities: PRNG, timing, formatting, file mapping,
+//! fault injection.
 
+pub mod failpoints;
 pub mod mmap;
 pub mod rng;
 

@@ -166,10 +166,11 @@ fn serve_trained_model_end_to_end() {
     let producer = std::thread::spawn(move || {
         let rxs: Vec<_> = (0..n)
             .map(|i| client.submit(images.data[i * item..(i + 1) * item]
-                                   .to_vec()))
+                                   .to_vec())
+                     .expect("request admitted"))
             .collect();
         drop(client);
-        rxs.into_iter().map(|rx| rx.recv().unwrap()).collect::<Vec<_>>()
+        rxs.into_iter().map(|rx| rx.wait().unwrap()).collect::<Vec<_>>()
     });
     server.run(&mut be, &state.params, &metrics, Some(n)).unwrap();
     let responses = producer.join().unwrap();

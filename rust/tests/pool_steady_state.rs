@@ -223,12 +223,12 @@ fn serve_steady_state_never_packs_or_allocates() {
     // steady-state work.
     let checker = std::thread::spawn(move || {
         for _ in 0..warm {
-            client.submit(img.clone()).recv().unwrap();
+            client.submit(img.clone()).unwrap().wait().unwrap();
         }
         let before = (pack_passes(), total_fresh_allocs(),
                       threadpool::spawn_count());
         for _ in 0..steady {
-            client.submit(img.clone()).recv().unwrap();
+            client.submit(img.clone()).unwrap().wait().unwrap();
         }
         let after = (pack_passes(), total_fresh_allocs(),
                      threadpool::spawn_count());

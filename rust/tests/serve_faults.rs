@@ -1,0 +1,295 @@
+//! Fault-injection coverage for the serving stack (the acceptance test
+//! for the robustness contract in `docs/RELIABILITY.md`):
+//!
+//! 1. **Replica killed mid-batch under concurrent load** — the armed
+//!    `serve/forward` failpoint panics the 3rd executed batch. Every
+//!    client must get a reply within a bounded wait (a timeout is a
+//!    hung client and fails the test), the killed batch gets typed
+//!    `ExecutorPanicked` errors, the survivors serve everything else,
+//!    the replica restarts, and every successful reply is **bit
+//!    identical** to a fault-free run of the same requests.
+//! 2. **Crash-loop quarantine** — with `serve/forward` panicking on
+//!    every hit, all replicas quarantine after `quarantine_after`
+//!    consecutive failures; every queued request still resolves to a
+//!    typed error (panic or shutdown drain), never a hang.
+//! 3. **Snapshot read fault** — an armed `snapshot/read` failpoint
+//!    turns a valid `.panels` file into a clean load error (the serve
+//!    path's prepack fallback consumes exactly this error).
+//!
+//! Single `#[test]` binary on purpose: the failpoint registry is
+//! process-global, so a sibling test running concurrently would observe
+//! (and trip over) this test's armed sites. Scenarios run sequentially
+//! and disarm on the way out. No environment variables are touched —
+//! everything is armed programmatically.
+
+use std::time::Duration;
+
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::metrics::Registry;
+use softmoe::nn::{PreparedModel, VitModel};
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::Backend;
+use softmoe::serve::{
+    BatchPolicy, ServeConfig, ServeError, ServeResult, Server,
+};
+use softmoe::tensor::{Tensor, WeightDtype};
+use softmoe::util::failpoints::{self, Action};
+use softmoe::util::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        image_size: 8,
+        patch_size: 4,
+        channels: 3,
+        dim: 16,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 24,
+        num_classes: 4,
+        moe_type: MoeType::Soft,
+        moe_layers: vec![1],
+        num_experts: 2,
+        slots_per_expert: 2,
+        expert_hidden: 24,
+        ..ModelConfig::default()
+    }
+}
+
+fn rand_image(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..cfg.image_size * cfg.image_size * cfg.channels)
+        .map(|_| rng.uniform())
+        .collect()
+}
+
+/// Serve `images` through a 2-replica server fed by three concurrent
+/// producer threads; return (served count, per-index replies, metrics).
+/// A reply that does not arrive within 30s is a hung client: the
+/// producer panics, the join below propagates it, the test fails.
+fn run_server(
+    cfg: &ModelConfig,
+    scfg: ServeConfig,
+    images: &[Vec<f32>],
+) -> (usize, Vec<ServeResult>, Registry) {
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(5).unwrap();
+    let (server, client) = Server::with_config(
+        BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_millis(2),
+            compiled_sizes: vec![1, 2],
+        },
+        &[cfg.image_size, cfg.image_size, cfg.channels],
+        scfg,
+    );
+    let metrics = Registry::new();
+    let mut shares: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); 3];
+    for (i, img) in images.iter().enumerate() {
+        shares[i % 3].push((i, img.clone()));
+    }
+    let producers: Vec<_> = shares
+        .into_iter()
+        .map(|share| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let pending: Vec<_> = share
+                    .into_iter()
+                    .map(|(i, img)| {
+                        let rx = c.submit(img);
+                        std::thread::sleep(Duration::from_micros(200));
+                        (i, rx)
+                    })
+                    .collect();
+                drop(c);
+                pending
+                    .into_iter()
+                    .map(|(i, rx)| match rx {
+                        Ok(rx) => {
+                            let r = rx
+                                .wait_timeout(Duration::from_secs(30))
+                                .unwrap_or_else(|| panic!(
+                                    "request {i} HUNG: no reply within \
+                                     30s — the no-hang contract is \
+                                     broken"));
+                            (i, r)
+                        }
+                        // A typed submit-time rejection is a reply too.
+                        Err(e) => (i, Err(e)),
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    drop(client);
+    let served = server.run(&mut be, &params, &metrics, None).unwrap();
+    let mut replies: Vec<Option<ServeResult>> = vec![None; images.len()];
+    for p in producers {
+        for (i, r) in p.join().unwrap() {
+            replies[i] = Some(r);
+        }
+    }
+    let replies = replies.into_iter().map(Option::unwrap).collect();
+    (served, replies, metrics)
+}
+
+/// Scenario 1: kill one replica mid-batch; prove containment, recovery
+/// and bitwise-identical post-recovery answers.
+fn replica_killed_mid_batch(cfg: &ModelConfig) {
+    let n = 12usize;
+    let images: Vec<Vec<f32>> =
+        (0..n).map(|i| rand_image(cfg, 40 + i as u64)).collect();
+    let scfg = ServeConfig { replicas: 2, ..ServeConfig::default() };
+
+    // Fault-free baseline: same weights (seeded init), same requests.
+    let (served, baseline, _m) = run_server(cfg, scfg.clone(), &images);
+    assert_eq!(served, n, "baseline run must serve everything");
+    let baseline: Vec<Vec<f32>> = baseline
+        .into_iter()
+        .map(|r| r.expect("baseline reply").logits)
+        .collect();
+
+    // Kill the 3rd executed batch (batches ≤ 2 requests, so 12 requests
+    // mean ≥ 6 batches: the panic lands mid-stream, with serving before
+    // and after it).
+    failpoints::arm("serve/forward",
+                    Action::Panic { from: 3, to: Some(3) });
+    let (served, replies, metrics) = run_server(cfg, scfg, &images);
+    // Read before disarming: disarm_all() drops the site (and its
+    // counter).
+    let forward_hits = failpoints::hits("serve/forward");
+    failpoints::disarm_all();
+
+    let mut killed = 0usize;
+    for (i, r) in replies.iter().enumerate() {
+        match r {
+            // Post-recovery answers: bit-identical to the fault-free
+            // run (Soft MoE per-item determinism — no batch effects,
+            // no replica effects, no restart effects).
+            Ok(resp) => assert_eq!(
+                resp.logits, baseline[i],
+                "request {i}: logits differ from the fault-free run"
+            ),
+            Err(ServeError::ExecutorPanicked) => killed += 1,
+            Err(e) => panic!("request {i}: unexpected error {e}"),
+        }
+    }
+    assert!(killed >= 1 && killed <= 2,
+            "exactly the panicked batch (1-2 requests) errors; got \
+             {killed}");
+    assert_eq!(served, n - killed,
+               "survivors must serve every non-killed request");
+    assert_eq!(metrics.counter("serve/replica_panics"), 1);
+    assert_eq!(metrics.counter("serve/replica_restarts"), 1,
+               "the killed replica must restart from the shared model");
+    assert_eq!(metrics.counter("serve/replica_quarantined"), 0);
+    assert_eq!(metrics.counter("serve/requests"), served as u64);
+    assert!(forward_hits >= 4,
+            "batches must keep executing after the injected panic");
+    println!("scenario 1 ok: killed {killed}, served {served}, \
+              restarts 1, zero hangs");
+}
+
+/// Scenario 2: every batch panics → all replicas quarantine; the server
+/// degrades and drains — typed errors everywhere, zero hangs.
+fn crash_loop_quarantines(cfg: &ModelConfig) {
+    failpoints::arm("serve/forward",
+                    Action::Panic { from: 1, to: None });
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(5).unwrap();
+    let (server, client) = Server::with_config(
+        BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_millis(1),
+            compiled_sizes: vec![1, 2],
+        },
+        &[cfg.image_size, cfg.image_size, cfg.channels],
+        ServeConfig {
+            replicas: 2,
+            quarantine_after: 2,
+            backoff_base: Duration::from_micros(100),
+            ..ServeConfig::default()
+        },
+    );
+    let metrics = Registry::new();
+    // Pre-queue everything so each replica deterministically finds work
+    // for both of its allowed failures: 2 replicas × 2 failures × ≤2
+    // requests per batch consume at most 8 of the 12.
+    let rxs: Vec<_> = (0..12)
+        .map(|i| client.submit(rand_image(cfg, 500 + i)).unwrap())
+        .collect();
+    drop(client);
+    let served = server.run(&mut be, &params, &metrics, None).unwrap();
+    failpoints::disarm_all();
+
+    assert_eq!(served, 0, "no batch can succeed while armed");
+    let (mut panicked, mut drained) = (0usize, 0usize);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|| panic!("request {i} HUNG after \
+                                       quarantine"))
+        {
+            Err(ServeError::ExecutorPanicked) => panicked += 1,
+            Err(ServeError::ShuttingDown) => drained += 1,
+            other => panic!("request {i}: expected a typed failure, \
+                             got {other:?}"),
+        }
+    }
+    assert_eq!(panicked + drained, 12);
+    assert_eq!(panicked, 8,
+               "4 failing batches of 2 before both replicas retire");
+    assert_eq!(metrics.counter("serve/replica_panics"), 4);
+    assert_eq!(metrics.counter("serve/replica_quarantined"), 2,
+               "both replicas must quarantine");
+    assert_eq!(metrics.counter("serve/replica_restarts"), 2,
+               "one restart each before the quarantine threshold");
+    println!("scenario 2 ok: {panicked} panic replies, {drained} \
+              drained, 2 quarantined, zero hangs");
+}
+
+/// Scenario 3: an armed `snapshot/read` turns a valid snapshot into a
+/// clean typed load error (the serve boot path falls back to prepack on
+/// exactly this error — covered end to end by snapshot_serve_env.rs).
+fn snapshot_read_fault(cfg: &ModelConfig) {
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(0);
+    let dtype = WeightDtype::F32;
+    let prep = PreparedModel::new(&model, &params, dtype);
+    let path = std::env::temp_dir().join(format!(
+        "softmoe-serve-faults-{}.panels",
+        std::process::id()
+    ));
+    prep.save_snapshot(&path).unwrap();
+
+    failpoints::arm("snapshot/read", Action::Fail { from: 1, to: None });
+    let err = PreparedModel::load_snapshot(&model, &path, dtype)
+        .err()
+        .expect("armed snapshot/read must fail the load");
+    assert!(format!("{err:#}").contains("failpoint snapshot/read"),
+            "error must name the injected fault: {err:#}");
+    failpoints::disarm_all();
+
+    // Disarmed, the same file loads and answers identically.
+    let loaded =
+        PreparedModel::load_snapshot(&model, &path, dtype).unwrap();
+    let mut rng = Rng::new(3);
+    let images = Tensor::from_vec(
+        &[1, cfg.image_size, cfg.image_size, cfg.channels],
+        (0..cfg.image_size * cfg.image_size * cfg.channels)
+            .map(|_| rng.uniform())
+            .collect(),
+    );
+    assert_eq!(prep.forward(&images).logits.data,
+               loaded.forward(&images).logits.data);
+    std::fs::remove_file(&path).unwrap();
+    println!("scenario 3 ok: injected snapshot read failure surfaced \
+              cleanly");
+}
+
+#[test]
+fn fault_injection_recovery_contract() {
+    let cfg = tiny_cfg();
+    replica_killed_mid_batch(&cfg);
+    crash_loop_quarantines(&cfg);
+    snapshot_read_fault(&cfg);
+}

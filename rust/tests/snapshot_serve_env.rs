@@ -64,10 +64,10 @@ fn serve_env_snapshot_write_load_fallback_and_rewrite() {
         let (server, client) = Server::new(
             policy(), &[cfg.image_size, cfg.image_size, cfg.channels]);
         let metrics = Registry::new();
-        let rx = client.submit(image.to_vec());
+        let rx = client.submit(image.to_vec()).expect("request admitted");
         drop(client);
         server.run(&mut be, &params, &metrics, Some(1)).unwrap();
-        (rx.recv().unwrap().logits,
+        (rx.wait().unwrap().logits,
          metrics.label("model/weight_source").unwrap())
     };
 

@@ -84,6 +84,10 @@ pub struct ModelConfig {
     pub dispatch_mode: MixMode,
     pub combine_mode: MixMode,
     pub normalize_router: bool,
+    /// ST-MoE router z-loss coefficient for the sparse routers
+    /// (TokensChoice/ExpertsChoice); 0.0 disables the term. Set via
+    /// `SOFTMOE_ZLOSS` on the training CLI.
+    pub router_zloss: f32,
 }
 
 impl Default for ModelConfig {
@@ -108,6 +112,7 @@ impl Default for ModelConfig {
             dispatch_mode: MixMode::Soft,
             combine_mode: MixMode::Soft,
             normalize_router: true,
+            router_zloss: 0.0,
         }
     }
 }
@@ -213,6 +218,9 @@ impl ModelConfig {
                 v.req("combine_mode")?.as_str().context("combine_mode")?)?,
             normalize_router: v.req("normalize_router")?
                 .as_bool().context("normalize_router")?,
+            // Training-only knob; absent from (older) manifests.
+            router_zloss: v.get("router_zloss")
+                .and_then(|z| z.as_f64()).unwrap_or(0.0) as f32,
         })
     }
 }

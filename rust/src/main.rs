@@ -121,15 +121,22 @@ fn native_model_config(args: &Args) -> Result<ModelConfig> {
     } else {
         None
     };
-    match cfg {
-        Some(c) => Ok(c),
+    let mut cfg = match cfg {
+        Some(c) => c,
         None => {
             let (moe, size) = model_name
                 .rsplit_once('_')
                 .context("model name must look like soft_s")?;
-            ModelConfig::preset(size, MoeType::parse(moe)?)
+            ModelConfig::preset(size, MoeType::parse(moe)?)?
         }
+    };
+    // ST-MoE router z-loss for the sparse routers (training only).
+    if let Ok(z) = std::env::var("SOFTMOE_ZLOSS") {
+        cfg.router_zloss = z
+            .parse::<f32>()
+            .with_context(|| format!("SOFTMOE_ZLOSS '{z}' not a number"))?;
     }
+    Ok(cfg)
 }
 
 fn dataset_for(cfg: &ModelConfig, seed: u64) -> SynthShapes {

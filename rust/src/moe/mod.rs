@@ -19,8 +19,9 @@ pub use stats::RoutingStats;
 pub use tokens_choice::TokensChoice;
 
 use crate::tensor::{
-    matmul_grouped_prepacked_into, with_workspace, PackedPanels, RouteEntry,
-    Tensor, WeightDtype, Workspace,
+    gelu_grad, matmul_grouped_nt_into, matmul_grouped_prepacked_into,
+    matmul_grouped_tn_into, with_workspace, PackedPanels, RouteEntry, Tensor,
+    WeightDtype, Workspace,
 };
 use crate::util::Rng;
 
@@ -428,6 +429,94 @@ pub(crate) fn sparse_experts_apply_prepacked(
     ws.give_idx(fills);
 }
 
+/// Grouped column-sum for the bias gradients: `out` is the stacked
+/// (n_groups, n_cols) result, group `g` summing the active rows
+/// `[g·stride, g·stride + rows_g)` of `data` (n_groups·stride, n_cols)
+/// in ascending row order — the same order as the per-expert
+/// `layers::colsum` calls it replaces, so results are bit-identical.
+/// The output is always fully defined (empty groups get zeros).
+pub fn colsum_grouped(data: &[f32], n_cols: usize, stride: usize,
+                      rows: Option<&[usize]>, out: &mut [f32]) {
+    assert_eq!(out.len() % n_cols, 0);
+    let ng = out.len() / n_cols;
+    assert_eq!(data.len(), ng * stride * n_cols);
+    if let Some(r) = rows {
+        assert_eq!(r.len(), ng);
+    }
+    let rows_of = move |g: usize| rows.map_or(stride, |r| r[g]);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for g in 0..ng {
+        let og = &mut out[g * n_cols..(g + 1) * n_cols];
+        let r0 = g * stride;
+        for i in 0..rows_of(g) {
+            let row = &data[(r0 + i) * n_cols..(r0 + i + 1) * n_cols];
+            for (o, &v) in og.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+    }
+}
+
+/// Backward pass through ALL experts' MLPs in one shot — the training
+/// mirror of [`sparse_experts_apply_prepacked`]'s grouped forward. Each
+/// per-expert gradient GEMM of the seed-era serial loop becomes one
+/// grouped driver call (one pack pass + one parallel region across
+/// experts):
+///
+/// ```text
+///   dG  = dY · W2ᵀ          (matmul_grouped_nt_into)
+///   dW2 = Gᵀ · dY           (matmul_grouped_tn_into)
+///   db2 = colsum(dY)        (colsum_grouped)
+///   dH  = dG ⊙ gelu'(H)
+///   dX  = dH · W1ᵀ          (matmul_grouped_nt_into)
+///   dW1 = Xᵀ · dH           (matmul_grouped_tn_into)
+///   db1 = colsum(dH)        (colsum_grouped)
+/// ```
+///
+/// Inputs are the stacked forward caches (`xs` expert inputs, `hs`
+/// pre-GELU hidden, `gs` = gelu(`hs`), all (n_groups·stride, ·)) and
+/// the stacked weights in the manifest layout (w1 (n, d, h),
+/// w2 (n, h, d)). `dw1/db1/dw2/db2` are fully overwritten in the same
+/// stacked layout; rows of `dxs` past `rows_g` in a group's block are
+/// left untouched (stale gather slots — callers only scatter active
+/// rows). All transient scratch comes from `ws`.
+#[allow(clippy::too_many_arguments)]
+pub fn expert_mlps_bwd_grouped(
+    xs: &Tensor,
+    hs: &Tensor,
+    gs: &Tensor,
+    w1: &Tensor,
+    w2: &Tensor,
+    stride: usize,
+    rows: Option<&[usize]>,
+    dys: &Tensor,
+    dxs: &mut [f32],
+    dw1: &mut [f32],
+    db1: &mut [f32],
+    dw2: &mut [f32],
+    db2: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (rt, d) = xs.dims2();
+    let h = hs.shape[1];
+    debug_assert_eq!(dys.shape, vec![rt, d]);
+    debug_assert_eq!(dxs.len(), rt * d);
+
+    let mut dgs = ws.take_tensor(&[rt, h]);
+    matmul_grouped_nt_into(dys, &w2.data, h, stride, rows, &mut dgs.data, ws);
+    matmul_grouped_tn_into(gs, dys, stride, rows, dw2, ws);
+    colsum_grouped(&dys.data, d, stride, rows, db2);
+    for (v, &hp) in dgs.data.iter_mut().zip(&hs.data) {
+        *v *= gelu_grad(hp);
+    }
+    matmul_grouped_nt_into(&dgs, &w1.data, d, stride, rows, dxs, ws);
+    matmul_grouped_tn_into(xs, &dgs, stride, rows, dw1, ws);
+    colsum_grouped(&dgs.data, h, stride, rows, db1);
+    ws.give_tensor(dgs);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,6 +545,73 @@ mod tests {
         let mut rng = Rng::new(2);
         let ep = ExpertParams::new(4, 8, 16, &mut rng);
         assert_eq!(ep.param_count(), 4 * (8 * 16 + 16 + 16 * 8 + 8));
+    }
+
+    #[test]
+    fn grouped_expert_backward_matches_per_expert_loop() {
+        use crate::nn::layers::{mlp_bwd, mlp_fwd};
+        use crate::tensor::{gelu, matmul_grouped_into};
+
+        let mut rng = Rng::new(7);
+        let (n, d, h, stride) = (3usize, 6usize, 10usize, 4usize);
+        let ep = ExpertParams::new(n, d, h, &mut rng);
+        let fills = [4usize, 2, 0];
+        let xs = Tensor::randn(&[n * stride, d], 1.0, &mut rng);
+        let dys = Tensor::randn(&[n * stride, d], 1.0, &mut rng);
+
+        // Grouped forward caches (gelu kept out of the epilogue so the
+        // pre-activation is materialized, same as the training path).
+        let mut hs = Tensor::zeros(&[n * stride, h]);
+        let mut gs = Tensor::zeros(&[n * stride, h]);
+        with_workspace(|ws| {
+            matmul_grouped_into(&xs, &ep.w1.data, Some(&ep.b1.data), h,
+                                stride, Some(&fills), false, &mut hs.data,
+                                ws);
+        });
+        for (g, &hp) in gs.data.iter_mut().zip(&hs.data) {
+            *g = gelu(hp);
+        }
+
+        let mut dxs = vec![0.0f32; n * stride * d];
+        let mut dw1 = vec![0.0f32; n * d * h];
+        let mut db1 = vec![0.0f32; n * h];
+        let mut dw2 = vec![0.0f32; n * h * d];
+        let mut db2 = vec![0.0f32; n * d];
+        with_workspace(|ws| {
+            expert_mlps_bwd_grouped(&xs, &hs, &gs, &ep.w1, &ep.w2, stride,
+                                    Some(&fills), &dys, &mut dxs, &mut dw1,
+                                    &mut db1, &mut dw2, &mut db2, ws);
+        });
+
+        // Per-expert reference over the active rows only.
+        for e in 0..n {
+            let m = fills[e];
+            let w1e = Tensor::from_vec(&[d, h], ep.w1_of(e).to_vec());
+            let w2e = Tensor::from_vec(&[h, d], ep.w2_of(e).to_vec());
+            if m == 0 {
+                assert!(dw1[e * d * h..(e + 1) * d * h]
+                            .iter()
+                            .all(|&v| v == 0.0));
+                assert!(db1[e * h..(e + 1) * h].iter().all(|&v| v == 0.0));
+                assert!(dw2[e * h * d..(e + 1) * h * d]
+                            .iter()
+                            .all(|&v| v == 0.0));
+                assert!(db2[e * d..(e + 1) * d].iter().all(|&v| v == 0.0));
+                continue;
+            }
+            let r0 = e * stride;
+            let xe = xs.rows(r0, r0 + m);
+            let dye = dys.rows(r0, r0 + m);
+            let (_, cache) =
+                mlp_fwd(&xe, &w1e, ep.b1_of(e), &w2e, ep.b2_of(e));
+            let (dx_r, dw1_r, db1_r, dw2_r, db2_r) =
+                mlp_bwd(&cache, &w1e, &w2e, &dye);
+            assert_eq!(&dxs[r0 * d..(r0 + m) * d], &dx_r.data[..]);
+            assert_eq!(&dw1[e * d * h..(e + 1) * d * h], &dw1_r.data[..]);
+            assert_eq!(&db1[e * h..(e + 1) * h], &db1_r[..]);
+            assert_eq!(&dw2[e * h * d..(e + 1) * h * d], &dw2_r.data[..]);
+            assert_eq!(&db2[e * d..(e + 1) * d], &db2_r[..]);
+        }
     }
 
     #[test]

@@ -16,11 +16,14 @@
 pub mod layers;
 pub mod vit;
 
-pub use vit::{ParamStore, PreparedModel, VitModel};
+pub use vit::{ParamStore, PreparedModel, TrainScratch, VitModel};
 
 use crate::tensor::Tensor;
 
-/// Gradient accumulator keyed like the ParamStore.
+/// Gradient accumulator keyed like the ParamStore — the seed-era
+/// representation, kept for the reference backward path
+/// (`VitModel::loss_and_grads_reference`) that the refactored
+/// slot-indexed path is bit-compared against.
 pub type Grads = std::collections::BTreeMap<String, Tensor>;
 
 /// Add `g` into the accumulator (creating the slot if needed).
@@ -30,5 +33,132 @@ pub fn accumulate(grads: &mut Grads, name: &str, g: Tensor) {
         None => {
             grads.insert(name.to_string(), g);
         }
+    }
+}
+
+/// Preallocated, slot-indexed gradient store aligned to the
+/// [`ParamStore`] layout.
+///
+/// The seed-era `Grads` BTreeMap was rebuilt from scratch every item
+/// (`accumulate` does a `to_string` + tree insert per parameter per
+/// item) and merged sequentially. `GradStore` fixes the layout once —
+/// names in `ParamStore` (BTreeMap) order, one preallocated tensor per
+/// parameter — so the backward pass writes through integer slot ids
+/// (resolved once per step, like PR 2's interned `BlockKeys`), the
+/// cross-item merge parallelizes over slots, and steady-state training
+/// allocates nothing.
+///
+/// The name list is shared (`Arc`) between the per-item stores and the
+/// merged store of a training step.
+#[derive(Clone, Debug)]
+pub struct GradStore {
+    names: std::sync::Arc<Vec<String>>,
+    slots: Vec<Tensor>,
+}
+
+impl GradStore {
+    /// A zeroed store with one slot per parameter of `p`, in `p`'s
+    /// (sorted) key order.
+    pub fn new_like(p: &ParamStore) -> GradStore {
+        let names: Vec<String> = p.keys().cloned().collect();
+        let slots = p.values().map(|t| Tensor::zeros(&t.shape)).collect();
+        GradStore { names: std::sync::Arc::new(names), slots }
+    }
+
+    /// An empty store (no slots); placeholder until the first
+    /// `new_like` sizing.
+    pub fn empty() -> GradStore {
+        GradStore { names: std::sync::Arc::new(Vec::new()),
+                    slots: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Does this store have exactly one slot per parameter of `p`, in
+    /// the same order? (Layout check for scratch reuse across steps.)
+    pub fn matches(&self, p: &ParamStore) -> bool {
+        self.names.len() == p.len()
+            && self.names.iter().zip(p.keys()).all(|(a, b)| a == b)
+    }
+
+    /// Slot id for a parameter name (binary search over the sorted
+    /// layout). Resolve once, index many times.
+    pub fn slot_of(&self, name: &str) -> Option<usize> {
+        self.names.binary_search_by(|n| n.as_str().cmp(name)).ok()
+    }
+
+    pub fn name_of(&self, slot: usize) -> &String {
+        &self.names[slot]
+    }
+
+    pub fn slot(&self, slot: usize) -> &Tensor {
+        &self.slots[slot]
+    }
+
+    pub fn slot_mut(&mut self, slot: usize) -> &mut Tensor {
+        &mut self.slots[slot]
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.slot_of(name).map(|i| &self.slots[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.slot_of(name).map(move |i| &mut self.slots[i])
+    }
+
+    /// Borrow `N` distinct slots mutably at once — the backward pass
+    /// writes a layer's gradients (e.g. attention's nine sinks) in one
+    /// call. Panics if any two ids coincide or any id is out of range,
+    /// which is what makes the aliasing-free raw-pointer split sound.
+    pub fn slots_mut<const N: usize>(&mut self, ids: [usize; N])
+        -> [&mut Tensor; N] {
+        for i in 0..N {
+            assert!(ids[i] < self.slots.len(),
+                    "slot id {} out of range {}", ids[i], self.slots.len());
+            for j in i + 1..N {
+                assert_ne!(ids[i], ids[j], "aliasing slot ids in slots_mut");
+            }
+        }
+        let base = self.slots.as_mut_ptr();
+        ids.map(|i| unsafe { &mut *base.add(i) })
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.names.iter().zip(self.slots.iter())
+    }
+}
+
+impl<'a> IntoIterator for &'a GradStore {
+    type Item = (&'a String, &'a Tensor);
+    type IntoIter = std::iter::Zip<std::slice::Iter<'a, String>,
+                                   std::slice::Iter<'a, Tensor>>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.names.iter().zip(self.slots.iter())
+    }
+}
+
+impl std::ops::Index<&String> for GradStore {
+    type Output = Tensor;
+
+    fn index(&self, name: &String) -> &Tensor {
+        self.get(name)
+            .unwrap_or_else(|| panic!("no gradient slot for {name:?}"))
+    }
+}
+
+impl std::ops::Index<&str> for GradStore {
+    type Output = Tensor;
+
+    fn index(&self, name: &str) -> &Tensor {
+        self.get(name)
+            .unwrap_or_else(|| panic!("no gradient slot for {name:?}"))
     }
 }

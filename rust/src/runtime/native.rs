@@ -12,7 +12,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ModelConfig;
-use crate::nn::{ParamStore, PreparedModel, VitModel};
+use crate::nn::{GradStore, ParamStore, PreparedModel, TrainScratch, VitModel};
 use crate::runtime::{Backend, StepOut, TrainState};
 use crate::tensor::{Tensor, WeightDtype};
 
@@ -24,7 +24,7 @@ pub const ADAM_EPS: f32 = 1e-8;
 /// (matches the JAX `train_step`, which increments before the update).
 pub fn adam_update(
     state: &mut TrainState,
-    grads: &crate::nn::Grads,
+    grads: &GradStore,
     lr: f32,
 ) {
     state.step += 1;
@@ -63,6 +63,10 @@ pub struct NativeRuntime {
     /// model ([`Backend::shared_prepared`]).
     prepared: Option<Arc<PreparedModel>>,
     prepared_for: StoreKey,
+    /// Per-item + merged gradient stores, reused across `train_step`
+    /// calls so steady-state training allocates nothing on the gradient
+    /// side (asserted in `rust/tests/pool_steady_state.rs`).
+    scratch: TrainScratch,
 }
 
 /// Identity key for the store a prepared snapshot was built from: the
@@ -91,6 +95,7 @@ impl NativeRuntime {
             label,
             prepared: None,
             prepared_for: (0, 0, 0),
+            scratch: TrainScratch::new(),
         }
     }
 
@@ -191,9 +196,9 @@ impl Backend for NativeRuntime {
         self.prepared = None;
         let labels_usize: Vec<usize> =
             labels.iter().map(|&l| l as usize).collect();
-        let (loss, acc, grads) =
-            self.model.loss_and_grads(&state.params, images, &labels_usize);
-        adam_update(state, &grads, lr);
+        let (loss, acc) = self.model.loss_and_grads_with(
+            &state.params, images, &labels_usize, &mut self.scratch);
+        adam_update(state, self.scratch.grads(), lr);
         Ok(StepOut { loss, accuracy: acc })
     }
 }
@@ -256,11 +261,12 @@ mod tests {
         // Minimize (w - 3)^2 with Adam: w must approach 3.
         let mut p = ParamStore::new();
         p.insert("w".into(), Tensor::scalar(0.0));
+        let mut grads = GradStore::new_like(&p);
+        let slot = grads.slot_of("w").unwrap();
         let mut state = TrainState::fresh(p);
         for _ in 0..800 {
             let w = state.params["w"].data[0];
-            let mut grads = crate::nn::Grads::new();
-            grads.insert("w".into(), Tensor::scalar(2.0 * (w - 3.0)));
+            grads.slot_mut(slot).data[0] = 2.0 * (w - 3.0);
             adam_update(&mut state, &grads, 0.05);
         }
         let w = state.params["w"].data[0];

@@ -155,6 +155,15 @@ impl Tensor {
         self.map(|x| x * s)
     }
 
+    /// In-place `self *= s`. Use instead of `t = t.scale(s)` on hot
+    /// paths: `scale` allocates a fresh tensor per call, which turned
+    /// the per-step gradient finalization into an allocation storm.
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
     pub fn axpy_inplace(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -1096,6 +1105,278 @@ pub fn matmul_grouped_into(
             let slice = unsafe { out_ptr.slice(r0 * n, (r1 - r0) * n) };
             gemm_rows(&a.data, k, &bp_ref[off_ref[g]..], k, n, r0..r1,
                       slice, ep_of(g), kern);
+        });
+        ws.give_idx(chunk_start);
+    }
+    ws.give_idx(pack_off);
+    ws.give(bp);
+}
+
+/// Grouped TN GEMM for the backward pass: for every group `g`,
+///
+/// ```text
+///   out[g]  =  A_gᵀ(rows_g, k) · B_g(rows_g, n)   ->  (k, n)
+/// ```
+///
+/// where `A_g`/`B_g` are the rows `[g·stride, g·stride + rows_g)` of the
+/// stacked `a` (n_groups·stride, k) and `b` (n_groups·stride, n), and
+/// `out` is the stacked (n_groups, k, n) result — exactly the layout of
+/// the stacked expert weights, so `dW1`/`dW2` for ALL experts land in
+/// one call. Unlike the forward grouped driver the output is always
+/// fully defined: groups with `rows_g == 0` get a zero gradient block.
+///
+/// Mirrors [`matmul_grouped_into`]: all experts' transposes + weight
+/// packs go through one scratch arena and ONE parallel region over
+/// (group × row-chunk) tiles, replacing the serial per-expert
+/// `matmul_tn` loop of the seed-era backward. Per-element accumulation
+/// order matches the single-GEMM `matmul_tn_into` (ascending source
+/// row), so per-group results are bit-identical to per-expert calls
+/// under the same dispatched kernel.
+pub fn matmul_grouped_tn_into(a: &Tensor, b: &Tensor, stride: usize,
+                              rows: Option<&[usize]>, out: &mut [f32],
+                              ws: &mut Workspace) {
+    let (rows_total, k) = a.dims2();
+    let (rows_total2, n) = b.dims2();
+    assert_eq!(rows_total, rows_total2,
+               "grouped TN outer dims {rows_total} vs {rows_total2}");
+    assert!(n > 0 && k > 0 && stride > 0,
+            "grouped TN needs positive k ({k}), n ({n}), stride ({stride})");
+    assert_eq!(rows_total % stride, 0,
+               "A rows {rows_total} not a multiple of stride {stride}");
+    let ng = rows_total / stride;
+    assert_eq!(out.len(), ng * k * n);
+    if let Some(r) = rows {
+        assert_eq!(r.len(), ng);
+        assert!(r.iter().all(|&rg| rg <= stride),
+                "group rows exceed stride {stride}");
+    }
+
+    let rows_of = move |g: usize| rows.map_or(stride, |r| r[g]);
+    let active_rows: usize = (0..ng).map(rows_of).sum();
+
+    let flops = 2 * active_rows * n * k;
+    if flops < SMALL_FLOPS {
+        // Direct loops per group, same i-k-j order as the small path of
+        // `matmul_tn_into`; inactive groups stay at the zero init.
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        for g in 0..ng {
+            let m_g = rows_of(g);
+            let r0 = g * stride;
+            let og = &mut out[g * k * n..(g + 1) * k * n];
+            for i in 0..m_g {
+                let arow = &a.data[(r0 + i) * k..(r0 + i + 1) * k];
+                let brow = &b.data[(r0 + i) * n..(r0 + i + 1) * n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let orow = &mut og[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+        return;
+    }
+
+    let kern = kernel::active();
+    // Transpose every active group's A block and pack its B block once.
+    // Panel sizes vary per group (the reduction length is rows_g), so
+    // both offsets are running sums.
+    let npanels = div_up(n, NR);
+    let mut atb = ws.take(active_rows * k);
+    let mut bp = ws.take(active_rows * npanels * NR);
+    let mut at_off = ws.take_idx(ng);
+    let mut pack_off = ws.take_idx(ng);
+    {
+        let mut aoff = 0usize;
+        let mut boff = 0usize;
+        for g in 0..ng {
+            at_off[g] = aoff;
+            pack_off[g] = boff;
+            let m_g = rows_of(g);
+            if m_g == 0 {
+                // Zero gradient block; untouched by the loops below.
+                out[g * k * n..(g + 1) * k * n].fill(0.0);
+                continue;
+            }
+            let r0 = g * stride;
+            transpose_into(&a.data[r0 * k..(r0 + m_g) * k], m_g, k,
+                           &mut atb[aoff..aoff + m_g * k]);
+            pack_b(&b.data[r0 * n..(r0 + m_g) * n], n, 1, m_g, n,
+                   &mut bp[boff..boff + m_g * npanels * NR]);
+            aoff += m_g * k;
+            boff += m_g * npanels * NR;
+        }
+    }
+
+    if flops < PAR_FLOPS || !crate::threadpool::parallelism_available() {
+        for g in 0..ng {
+            let m_g = rows_of(g);
+            if m_g == 0 {
+                continue;
+            }
+            gemm_rows(&atb[at_off[g]..], m_g, &bp[pack_off[g]..], m_g, n,
+                      0..k, &mut out[g * k * n..(g + 1) * k * n],
+                      Epilogue::None, kern);
+        }
+    } else {
+        // ONE region over (group × output-row-chunk) tiles; every group
+        // has k output rows, chunked tile-height-aligned so the split
+        // is bit-identical to the serial loop above.
+        let nactive = (0..ng).filter(|&g| rows_of(g) > 0).count();
+        let threads = crate::threadpool::pool_threads();
+        let rows_per =
+            div_up(div_up(nactive * k, threads * 4), kern.mr) * kern.mr;
+        let mut chunk_start = ws.take_idx(ng + 1);
+        let mut acc = 0usize;
+        for g in 0..ng {
+            chunk_start[g] = acc;
+            if rows_of(g) > 0 {
+                acc += div_up(k, rows_per);
+            }
+        }
+        chunk_start[ng] = acc;
+        let nchunks = acc;
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let atb_ref: &[f32] = &atb;
+        let bp_ref: &[f32] = &bp;
+        let aoff_ref: &[usize] = &at_off;
+        let boff_ref: &[usize] = &pack_off;
+        let cs_ref: &[usize] = &chunk_start;
+        parallel_for(nchunks, |c| {
+            let g = cs_ref[..ng].partition_point(|&s| s <= c) - 1;
+            let local = c - cs_ref[g];
+            let m_g = rows_of(g);
+            let r0 = local * rows_per;
+            let r1 = k.min(r0 + rows_per);
+            let slice =
+                unsafe { out_ptr.slice(g * k * n + r0 * n, (r1 - r0) * n) };
+            gemm_rows(&atb_ref[aoff_ref[g]..], m_g, &bp_ref[boff_ref[g]..],
+                      m_g, n, r0..r1, slice, Epilogue::None, kern);
+        });
+        ws.give_idx(chunk_start);
+    }
+    ws.give_idx(pack_off);
+    ws.give_idx(at_off);
+    ws.give(bp);
+    ws.give(atb);
+}
+
+/// Grouped NT GEMM for the backward pass: for every group `g`,
+///
+/// ```text
+///   out_g(rows_g, n)  =  A_g(rows_g, k) · B_gᵀ   with B_g (n, k)
+/// ```
+///
+/// over rows `[g·stride, g·stride + rows_g)` of the stacked `a`
+/// (n_groups·stride, k) and `out` (n_groups·stride, n); `b_stacked`
+/// holds n_groups row-major (n, k) matrices back to back — the stacked
+/// expert weight layout, read against its transpose. This is the `dX =
+/// dY·Wᵀ` / `dG = dY·W2ᵀ` step for ALL experts in one pack pass + one
+/// parallel region. Rows past `rows_g` in a group's block are neither
+/// read nor written, exactly like [`matmul_grouped_into`].
+pub fn matmul_grouped_nt_into(a: &Tensor, b_stacked: &[f32], n: usize,
+                              stride: usize, rows: Option<&[usize]>,
+                              out: &mut [f32], ws: &mut Workspace) {
+    let (rows_total, k) = a.dims2();
+    assert!(n > 0 && k > 0 && stride > 0,
+            "grouped NT needs positive k ({k}), n ({n}), stride ({stride})");
+    assert_eq!(b_stacked.len() % (n * k), 0,
+               "stacked B len {} not a multiple of {n}x{k}", b_stacked.len());
+    let ng = b_stacked.len() / (n * k);
+    assert_eq!(rows_total, ng * stride,
+               "A rows {rows_total} vs {ng} groups x stride {stride}");
+    assert_eq!(out.len(), rows_total * n);
+    if let Some(r) = rows {
+        assert_eq!(r.len(), ng);
+        assert!(r.iter().all(|&rg| rg <= stride),
+                "group rows exceed stride {stride}");
+    }
+
+    let rows_of = move |g: usize| rows.map_or(stride, |r| r[g]);
+    let active_rows: usize = (0..ng).map(rows_of).sum();
+    if active_rows == 0 {
+        return;
+    }
+
+    let flops = 2 * active_rows * n * k;
+    if flops < SMALL_FLOPS {
+        // Direct strided loops per group — Bᵀ element (kk, j) =
+        // b_g[j*k + kk], i.e. rs = 1 / cs = k, the same dot-product
+        // branch `matmul_nt_into` takes below the threshold.
+        for g in 0..ng {
+            let m_g = rows_of(g);
+            if m_g == 0 {
+                continue;
+            }
+            let r0 = g * stride;
+            gemm_small_ep(m_g, n, k, &a.data[r0 * k..],
+                          &b_stacked[g * n * k..(g + 1) * n * k], 1, k,
+                          &mut out[r0 * n..(r0 + m_g) * n], Epilogue::None);
+        }
+        return;
+    }
+
+    let kern = kernel::active();
+    // Pack every active group's transposed weights once; the panel size
+    // is uniform (reduction length k for every group).
+    let npanels = div_up(n, NR);
+    let panel = k * npanels * NR;
+    let nactive = (0..ng).filter(|&g| rows_of(g) > 0).count();
+    let mut bp = ws.take(nactive * panel);
+    let mut pack_off = ws.take_idx(ng);
+    {
+        let mut off = 0usize;
+        for g in 0..ng {
+            pack_off[g] = off;
+            if rows_of(g) == 0 {
+                continue;
+            }
+            pack_b(&b_stacked[g * n * k..(g + 1) * n * k], 1, k, k, n,
+                   &mut bp[off..off + panel]);
+            off += panel;
+        }
+    }
+
+    if flops < PAR_FLOPS || !crate::threadpool::parallelism_available() {
+        for g in 0..ng {
+            let m_g = rows_of(g);
+            if m_g == 0 {
+                continue;
+            }
+            let r0 = g * stride;
+            gemm_rows(&a.data, k, &bp[pack_off[g]..], k, n, r0..r0 + m_g,
+                      &mut out[r0 * n..(r0 + m_g) * n], Epilogue::None,
+                      kern);
+        }
+    } else {
+        // ONE region over (group × row-chunk) tiles, identical chunking
+        // to the forward grouped driver.
+        let threads = crate::threadpool::pool_threads();
+        let rows_per =
+            div_up(div_up(active_rows, threads * 4), kern.mr) * kern.mr;
+        let mut chunk_start = ws.take_idx(ng + 1);
+        let mut acc = 0usize;
+        for g in 0..ng {
+            chunk_start[g] = acc;
+            acc += div_up(rows_of(g), rows_per);
+        }
+        chunk_start[ng] = acc;
+        let nchunks = acc;
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let bp_ref: &[f32] = &bp;
+        let off_ref: &[usize] = &pack_off;
+        let cs_ref: &[usize] = &chunk_start;
+        parallel_for(nchunks, |c| {
+            let g = cs_ref[..ng].partition_point(|&s| s <= c) - 1;
+            let local = c - cs_ref[g];
+            let m_g = rows_of(g);
+            let r0 = g * stride + local * rows_per;
+            let r1 = (g * stride + m_g).min(r0 + rows_per);
+            let slice = unsafe { out_ptr.slice(r0 * n, (r1 - r0) * n) };
+            gemm_rows(&a.data, k, &bp_ref[off_ref[g]..], k, n, r0..r1,
+                      slice, Epilogue::None, kern);
         });
         ws.give_idx(chunk_start);
     }

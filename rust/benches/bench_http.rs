@@ -1,0 +1,184 @@
+//! Transport-overhead bench: what the HTTP front-end costs on top of
+//! the in-process admission queue, request by request.
+//!
+//! Three shapes, one tiny soft model, batch-of-1 policy so every number
+//! is a pure per-request path cost:
+//!
+//! * `submit/b1`     — in-process `Client::submit` + reply wait (the
+//!                     floor: queue + batcher + forward).
+//! * `http/keepalive_b1` — one persistent connection, framed
+//!                     request/response per iteration (parser + socket
+//!                     round-trip on top of the floor).
+//! * `http/oneshot_b1`   — connect + request + close per iteration
+//!                     (adds the TCP setup/teardown the shed/burst path
+//!                     pays).
+//!
+//! Writes `reports/BENCH_HTTP.json` alongside the other `BENCH_*`
+//! trajectories. `SOFTMOE_BENCH_FAST=1` cuts iterations for CI.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use softmoe::bench::{black_box, Bench};
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::json::Value;
+use softmoe::metrics::Registry;
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::Backend;
+use softmoe::serve::conn::HttpLimits;
+use softmoe::serve::http::{HttpConfig, HttpFrontend};
+use softmoe::serve::{BatchPolicy, Server};
+use softmoe::util::Rng;
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 1,
+        max_delay: Duration::from_micros(0),
+        compiled_sizes: vec![1],
+    }
+}
+
+fn post_infer(body: &[u8], keep_alive: bool) -> Vec<u8> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let mut v = format!(
+        "POST /infer HTTP/1.1\r\nHost: bench\r\nContent-Type: \
+         application/octet-stream\r\nContent-Length: {}\r\n\
+         Connection: {conn}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    v.extend_from_slice(body);
+    v
+}
+
+/// Read exactly one framed response off a keep-alive stream: headers to
+/// the blank line, then Content-Length body bytes. Chunked reads so the
+/// bench client's own syscall count stays out of the measurement.
+fn read_response(s: &mut TcpStream) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(head_end) =
+            buf.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            let head =
+                String::from_utf8_lossy(&buf[..head_end]).to_lowercase();
+            let len: usize = head
+                .split("content-length:")
+                .nth(1)
+                .and_then(|rest| rest.split_whitespace().next())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0);
+            if buf.len() >= head_end + 4 + len {
+                return buf;
+            }
+        }
+        match s.read(&mut chunk) {
+            Ok(0) | Err(_) => return buf,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+        }
+    }
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let cfg = ModelConfig::preset("mu", MoeType::Soft).unwrap();
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(0).unwrap();
+    let (server, client) = Server::with_config(
+        policy(),
+        &[cfg.image_size, cfg.image_size, cfg.channels],
+        softmoe::serve::ServeConfig::default(),
+    );
+    let metrics = Arc::new(Registry::new());
+    let mut front = HttpFrontend::start(
+        HttpConfig {
+            listen: "127.0.0.1:0".into(),
+            max_conns: 16,
+            limits: HttpLimits::default(),
+            client_timeout: Duration::from_secs(30),
+            request_budget: None,
+        },
+        client.clone(),
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let addr: SocketAddr = front.local_addr();
+
+    let mut rng = Rng::new(11);
+    let elems = cfg.image_size * cfg.image_size * cfg.channels;
+    let image: Vec<f32> = (0..elems).map(|_| rng.uniform()).collect();
+    let body: Vec<u8> =
+        image.iter().flat_map(|f| f.to_le_bytes()).collect();
+
+    println!("== http transport overhead (native soft mu, batch 1) ==");
+    let (t_submit, t_keep, t_oneshot) = std::thread::scope(|s| {
+        let be = &mut be;
+        let params = &params;
+        let m = &metrics;
+        let h = s.spawn(move || {
+            server.run(be, params, m, None).unwrap();
+        });
+
+        // Warm-up gate: the first request waits for model prepack.
+        let r = client.submit(image.clone()).unwrap().wait().unwrap();
+        black_box(r);
+
+        let t_submit = bench.run("submit/b1", || {
+            let r =
+                client.submit(image.clone()).unwrap().wait().unwrap();
+            black_box(r.argmax);
+        });
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let keep_payload = post_infer(&body, true);
+        let t_keep = bench.run("http/keepalive_b1", || {
+            conn.write_all(&keep_payload).unwrap();
+            black_box(read_response(&mut conn));
+        });
+        let _ = conn.shutdown(Shutdown::Both);
+
+        let oneshot_payload = post_infer(&body, false);
+        let t_oneshot = bench.run("http/oneshot_b1", || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            s.write_all(&oneshot_payload).unwrap();
+            let _ = s.shutdown(Shutdown::Write);
+            let mut out = Vec::new();
+            let _ = s.read_to_end(&mut out);
+            black_box(out);
+        });
+
+        drop(client);
+        front.shutdown();
+        h.join().unwrap();
+        (t_submit, t_keep, t_oneshot)
+    });
+
+    println!(
+        "submit {:.3} ms  keep-alive {:.3} ms (+{:.1}%)  oneshot \
+         {:.3} ms (+{:.1}%)  -> {:.0} req/s over keep-alive",
+        t_submit * 1e3,
+        t_keep * 1e3,
+        (t_keep / t_submit - 1.0) * 100.0,
+        t_oneshot * 1e3,
+        (t_oneshot / t_submit - 1.0) * 100.0,
+        1.0 / t_keep
+    );
+
+    let mut root = bench.to_json();
+    root.set("keepalive_req_per_s", Value::Num(1.0 / t_keep));
+    root.set("oneshot_req_per_s", Value::Num(1.0 / t_oneshot));
+    root.set("transport_overhead_frac",
+             Value::Num(t_keep / t_submit - 1.0));
+    let path = std::path::Path::new("reports/BENCH_HTTP.json");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(path, root.to_string()) {
+        eprintln!("could not write {path:?}: {e}");
+    }
+}

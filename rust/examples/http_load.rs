@@ -1,0 +1,219 @@
+//! Std-only HTTP load client for the serve front-end — the CI
+//! smoke-and-faults driver (no curl, no crates):
+//!
+//! ```text
+//! softmoe serve --listen 127.0.0.1:8077 --requests 96 &
+//! cargo run --release --example http_load -- \
+//!     --addr 127.0.0.1:8077 --requests 96 --conns 6 --burst 24
+//! ```
+//!
+//! Every attempted request produces exactly one terminal outcome —
+//! a 2xx/4xx/5xx response (an accept-level shed 503 counts as that
+//! request's 5xx) or, after the wait cap, a `hung` verdict. Totals
+//! therefore match the server's `--requests` budget one-for-one, and
+//! the final line is grep-able:
+//!
+//! ```text
+//! load: sent 96  2xx 90  4xx 0  5xx 6  hung 0
+//! ```
+//!
+//! Exit status 1 when any request hung — the transport analogue of the
+//! fault tests' hung-client detector.
+//!
+//! `--burst N` fires the first N requests from simultaneous
+//! connections so a small `SOFTMOE_MAX_CONNS` observably sheds (the CI
+//! leg asserts a non-zero shed count on the server side).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Tally {
+    ok2xx: AtomicUsize,
+    err4xx: AtomicUsize,
+    err5xx: AtomicUsize,
+    hung: AtomicUsize,
+}
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn send_raw(addr: &str, payload: &[u8], wait: Duration) -> String {
+    let sa = match addr.to_socket_addrs().ok().and_then(|mut i| i.next())
+    {
+        Some(sa) => sa,
+        None => return String::new(),
+    };
+    let mut s = match TcpStream::connect_timeout(
+        &sa, Duration::from_secs(5))
+    {
+        Ok(s) => s,
+        Err(_) => return String::new(),
+    };
+    let _ = s.set_read_timeout(Some(wait));
+    let _ = s.set_nodelay(true);
+    let _ = s.write_all(payload);
+    let _ = s.shutdown(Shutdown::Write);
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+fn status_of(resp: &str) -> Option<u16> {
+    resp.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn get(path: &str) -> Vec<u8> {
+    format!(
+        "GET {path} HTTP/1.1\r\nHost: load\r\nConnection: close\r\n\r\n"
+    )
+    .into_bytes()
+}
+
+fn infer_payload(image_elems: usize, seed: u64) -> Vec<u8> {
+    // xorshift — deterministic junk pixels, no rand crate.
+    let mut x = seed | 1;
+    let body: Vec<u8> = (0..image_elems)
+        .flat_map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (((x % 1000) as f32) / 1000.0).to_le_bytes()
+        })
+        .collect();
+    let mut v = format!(
+        "POST /infer HTTP/1.1\r\nHost: load\r\nContent-Type: \
+         application/octet-stream\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    v.extend_from_slice(&body);
+    v
+}
+
+fn classify(tally: &Tally, resp: &str) {
+    match status_of(resp) {
+        Some(s) if (200..300).contains(&s) => &tally.ok2xx,
+        Some(s) if (400..500).contains(&s) => &tally.err4xx,
+        Some(_) => &tally.err5xx,
+        // No parseable status line inside the wait cap: a hung (or
+        // vanished) server. The shed path always writes its 503 first,
+        // so this can only be a contract violation.
+        None => &tally.hung,
+    }
+    .fetch_add(1, Ordering::SeqCst);
+}
+
+fn main() {
+    let addr = arg("--addr").unwrap_or_else(|| {
+        eprintln!("usage: http_load --addr HOST:PORT [--requests N] \
+                   [--conns N] [--burst N] [--timeout-ms N]");
+        std::process::exit(2);
+    });
+    let requests: usize =
+        arg("--requests").and_then(|v| v.parse().ok()).unwrap_or(96);
+    let conns: usize = arg("--conns")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6)
+        .max(1);
+    let burst: usize = arg("--burst")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+        .min(requests);
+    let wait = Duration::from_millis(
+        arg("--timeout-ms").and_then(|v| v.parse().ok()).unwrap_or(30_000),
+    );
+
+    // Wait for warm-up, then learn the image size from the index.
+    let mut ready = false;
+    for _ in 0..1200 {
+        if status_of(&send_raw(&addr, &get("/readyz"), wait))
+            == Some(200)
+        {
+            ready = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if !ready {
+        eprintln!("http_load: {addr} never became ready");
+        std::process::exit(1);
+    }
+    let index = send_raw(&addr, &get("/"), wait);
+    let image_elems: usize = index
+        .split("\r\n\r\n")
+        .nth(1)
+        .and_then(|body| {
+            let key = "\"image_elems\": ";
+            let at = body.find(key)? + key.len();
+            body[at..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse()
+                .ok()
+        })
+        .unwrap_or_else(|| {
+            eprintln!("http_load: no image_elems in index: {index:?}");
+            std::process::exit(1);
+        });
+
+    let tally = Arc::new(Tally {
+        ok2xx: AtomicUsize::new(0),
+        err4xx: AtomicUsize::new(0),
+        err5xx: AtomicUsize::new(0),
+        hung: AtomicUsize::new(0),
+    });
+
+    // Phase 1: simultaneous burst — provokes the connection gate.
+    std::thread::scope(|s| {
+        for i in 0..burst {
+            let tally = Arc::clone(&tally);
+            let addr = addr.clone();
+            s.spawn(move || {
+                let p = infer_payload(image_elems, 1 + i as u64);
+                classify(&tally, &send_raw(&addr, &p, wait));
+            });
+        }
+    });
+
+    // Phase 2: steady workers sharing the remaining request count.
+    let next = AtomicUsize::new(burst);
+    std::thread::scope(|s| {
+        for w in 0..conns {
+            let tally = Arc::clone(&tally);
+            let addr = addr.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= requests {
+                    break;
+                }
+                let p =
+                    infer_payload(image_elems, (1000 * (w + 1) + i) as u64);
+                classify(&tally, &send_raw(&addr, &p, wait));
+            });
+        }
+    });
+
+    let (ok2xx, err4xx, err5xx, hung) = (
+        tally.ok2xx.load(Ordering::SeqCst),
+        tally.err4xx.load(Ordering::SeqCst),
+        tally.err5xx.load(Ordering::SeqCst),
+        tally.hung.load(Ordering::SeqCst),
+    );
+    println!(
+        "load: sent {requests}  2xx {ok2xx}  4xx {err4xx}  \
+         5xx {err5xx}  hung {hung}"
+    );
+    if hung > 0 {
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,7 @@
 //! `artifacts/` beforehand for the PJRT paths.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -24,6 +25,7 @@ use softmoe::metrics::Registry;
 use softmoe::runtime::native::NativeRuntime;
 use softmoe::runtime::pjrt::PjrtRuntime;
 use softmoe::runtime::{Backend, TrainState};
+use softmoe::serve::http::{HttpConfig, HttpFrontend};
 use softmoe::serve::{BatchPolicy, Server, ServeConfig};
 use softmoe::train::{Schedule, TrainConfig, Trainer};
 use softmoe::util::Rng;
@@ -51,13 +53,18 @@ fn usage() {
          train       --model soft_s|dense_s|... --backend pjrt|native \
          --steps N --batch N --ckpt-dir DIR\n  \
          serve       --model soft_s --backend pjrt|native --requests N \
-         [--replicas N --queue-cap N --deadline-ms N]\n  \
+         [--replicas N --queue-cap N --deadline-ms N --listen ADDR]\n  \
          eval        --model soft_s --ckpt-dir DIR --ckpt NAME\n  \
          snapshot    --model soft_s --ckpt-dir DIR [--ckpt NAME] \
          --out FILE.panels [--dtype f32|bf16]\n  \
          experiment  <id>|all|list [--steps N --quick]\n  \
          models      [--artifacts DIR]\n  \
          flops       print the analytic cost table\n\n\
+         `serve --listen ADDR` (or SOFTMOE_LISTEN) exposes the server \
+         over HTTP/1.1 —\n\
+         GET /healthz /readyz /metrics, POST /infer — with connection \
+         limits, timeouts\n\
+         and graceful drain (see docs/RELIABILITY.md, \"Transport\").\n\
          `snapshot` prepacks a checkpoint's inference surface into the \
          kernel panel layout\n\
          and writes one mmap-able .panels file; `serve` loads it when \
@@ -229,7 +236,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .then(|| Duration::from_millis(deadline_ms as u64));
     let (server, client) = Server::with_config(
         policy, &[cfg.image_size, cfg.image_size, cfg.channels], scfg);
-    let metrics = Registry::new();
+    let metrics = Arc::new(Registry::new());
+
+    // HTTP mode: real transport in front of the admission queue.
+    // `--requests N` becomes the front-end's terminal-reply budget —
+    // after N `/infer` outcomes (replies + accept-level sheds) the
+    // front-end drains itself, which releases the queue's producers and
+    // ends `run`.
+    let listen = args.str_opt("listen").or_else(|| {
+        std::env::var("SOFTMOE_LISTEN").ok().filter(|s| !s.is_empty())
+    });
+    if let Some(addr) = listen.as_deref() {
+        let budget = (requests > 0).then_some(requests);
+        let mut front = HttpFrontend::start(
+            HttpConfig::from_env(addr, budget),
+            client,
+            Arc::clone(&metrics),
+        )?;
+        println!("listening on http://{}", front.local_addr());
+        let served =
+            server.run(backend.as_mut(), &params, &metrics, None)?;
+        front.join();
+        // "hung" here is the server-side hung-reply detector: `/infer`
+        // requests whose reply never arrived within
+        // SOFTMOE_CLIENT_TIMEOUT_MS (the client got a terminal 504).
+        println!(
+            "served {served} requests over http (2xx {}, 4xx {}, \
+             5xx {}, bad requests {}, hung {})\n\
+             conns  accepted {}  shed {}  reaped {}  write errors {}",
+            metrics.counter("http/responses_2xx"),
+            metrics.counter("http/responses_4xx"),
+            metrics.counter("http/responses_5xx"),
+            metrics.counter("http/bad_requests"),
+            metrics.counter("http/reply_timeouts"),
+            metrics.counter("http/conns_accepted"),
+            metrics.counter("http/conns_shed"),
+            metrics.counter("http/conns_reaped"),
+            metrics.counter("http/write_errors"),
+        );
+        print_serve_tail(served, &metrics);
+        return Ok(());
+    }
 
     // Synthetic open-loop traffic from a client thread. Every submitted
     // request is accounted for: answered, error reply (typed), rejected
@@ -237,6 +284,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // and the CI fault leg fails on it.
     let image_len = cfg.image_size * cfg.image_size * cfg.channels;
     let gap_us = args.usize_or("gap-us", 300)? as u64;
+    let client_timeout = softmoe::serve::client_timeout_from_env();
     let producer = std::thread::spawn(move || {
         let mut rng = Rng::new(7);
         let mut rejected = 0usize;
@@ -256,7 +304,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         drop(client);
         let (mut answered, mut errored, mut hung) = (0usize, 0, 0);
         for rx in rxs {
-            match rx.wait_timeout(Duration::from_secs(30)) {
+            match rx.wait_timeout(client_timeout) {
                 Some(Ok(_)) => answered += 1,
                 Some(Err(e)) => {
                     errored += 1;
@@ -271,15 +319,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let served = server.run(backend.as_mut(), &params, &metrics,
                             Some(requests))?;
     let (answered, errored, rejected, hung) = producer.join().unwrap();
+    println!(
+        "served {served} requests (answered {answered}, error replies \
+         {errored}, rejected at submit {rejected}, hung {hung})"
+    );
+    print_serve_tail(served, &metrics);
+    Ok(())
+}
+
+/// Latency/batch/robustness summary shared by the synthetic and HTTP
+/// serve modes (the CI fault legs grep these lines).
+fn print_serve_tail(served: usize, metrics: &Registry) {
     // unwrap_or_default: a run where every request was rejected (e.g.
     // all deadlines expired) has no latency samples — still report.
     let lat = metrics.histogram("serve/latency_secs").unwrap_or_default();
     let bs = metrics.histogram("serve/batch_size").unwrap_or_default();
     let ex = metrics.histogram("serve/execute_secs").unwrap_or_default();
     println!(
-        "served {served} requests (answered {answered}, error replies \
-         {errored}, rejected at submit {rejected}, hung {hung})\n\
-         latency  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms\n\
+        "latency  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms\n\
          batch    mean {:.1} (max {:.0})\n\
          execute  p50 {:.2} ms per batch\n\
          throughput {:.0} img/s",
@@ -300,7 +357,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.counter("serve/shed"),
         metrics.counter("serve/deadline_expired"),
     );
-    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -146,6 +146,65 @@ impl Registry {
         self.inner.lock().unwrap().histograms.get(name).cloned()
     }
 
+    /// Stable text exposition (Prometheus-style `name value` lines),
+    /// served by the HTTP front-end's `GET /metrics`. Names are
+    /// sanitized (`/` and other non-identifier characters become `_`),
+    /// each histogram expands to `_count/_mean/_p50/_p95/_p99/_max`
+    /// series, labels are emitted as quoted string comments, and the
+    /// `BTreeMap` backing makes the output order deterministic — two
+    /// renders of the same state are byte-identical.
+    pub fn render_text(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        fn num(v: f64) -> String {
+            if v == v.trunc() && v.abs() < 1e15 {
+                format!("{}", v as i64)
+            } else {
+                format!("{v}")
+            }
+        }
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        if !g.counters.is_empty() {
+            out.push_str("# counters\n");
+            for (k, v) in &g.counters {
+                let _ = writeln!(out, "{} {}", sanitize(k), v);
+            }
+        }
+        if !g.gauges.is_empty() {
+            out.push_str("# gauges\n");
+            for (k, v) in &g.gauges {
+                let _ = writeln!(out, "{} {}", sanitize(k), num(*v));
+            }
+        }
+        if !g.histograms.is_empty() {
+            out.push_str("# histograms\n");
+            for (k, h) in &g.histograms {
+                let k = sanitize(k);
+                let _ = writeln!(out, "{k}_count {}", h.len());
+                for (suffix, v) in [
+                    ("mean", h.mean()),
+                    ("p50", h.p50()),
+                    ("p95", h.p95()),
+                    ("p99", h.p99()),
+                    ("max", h.max()),
+                ] {
+                    let _ = writeln!(out, "{k}_{suffix} {}", num(v));
+                }
+            }
+        }
+        if !g.labels.is_empty() {
+            out.push_str("# labels\n");
+            for (k, v) in &g.labels {
+                let _ = writeln!(out, "{} {:?}", sanitize(k), v);
+            }
+        }
+        out
+    }
+
     /// Dump everything as a JSON object.
     pub fn to_json(&self) -> Value {
         let g = self.inner.lock().unwrap();
@@ -312,6 +371,44 @@ mod tests {
         assert_eq!(reg.gauge("missing"), None);
         let j = reg.to_json();
         assert!(j.get("labels").unwrap().get("model/weight_dtype").is_some());
+    }
+
+    #[test]
+    fn render_text_is_stable_sorted_and_sanitized() {
+        let reg = Registry::new();
+        reg.inc("serve/requests", 7);
+        reg.inc("http/responses_2xx", 3);
+        reg.set_gauge("serve/replicas", 2.0);
+        reg.set_gauge("queue/depth", 1.5);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            reg.observe("serve/latency_secs", v);
+        }
+        reg.set_label("model/weight_dtype", "bf16");
+        let text = reg.render_text();
+        // Exact golden output: BTreeMap ordering + name sanitization
+        // make this deterministic across renders and platforms.
+        assert_eq!(
+            text,
+            "# counters\n\
+             http_responses_2xx 3\n\
+             serve_requests 7\n\
+             # gauges\n\
+             queue_depth 1.5\n\
+             serve_replicas 2\n\
+             # histograms\n\
+             serve_latency_secs_count 4\n\
+             serve_latency_secs_mean 2.5\n\
+             serve_latency_secs_p50 3\n\
+             serve_latency_secs_p95 4\n\
+             serve_latency_secs_p99 4\n\
+             serve_latency_secs_max 4\n\
+             # labels\n\
+             model_weight_dtype \"bf16\"\n"
+        );
+        assert_eq!(text, reg.render_text(), "two renders are identical");
+        // Empty registry renders empty (sections are omitted, not
+        // emitted with no rows).
+        assert_eq!(Registry::new().render_text(), "");
     }
 
     #[test]

@@ -1,0 +1,709 @@
+//! Hand-rolled incremental HTTP/1.1 connection machinery for the serve
+//! front-end: a request parser engineered for hostile input, and a
+//! response writer — no dependencies beyond `std::io`.
+//!
+//! Design rules (the transport side of the no-hang contract in
+//! `docs/RELIABILITY.md`):
+//!
+//! * **Hard caps, typed rejections.** The parser never trusts the peer:
+//!   header bytes are capped ([`HttpLimits::max_header_bytes`] → 431),
+//!   declared bodies are capped *before* allocation
+//!   ([`HttpLimits::max_body_bytes`] → 413), request counts per
+//!   connection are capped (the front-end closes with
+//!   `Connection: close`), and every malformed input — truncated request
+//!   line, non-numeric `Content-Length`, garbage bytes, bogus HTTP
+//!   version — surfaces as a typed [`HttpError`] that maps to a 4xx/5xx
+//!   response instead of a panic or an unbounded read.
+//! * **Incremental.** [`RequestReader`] owns a rolling buffer: bytes
+//!   arrive in whatever fragments the socket delivers (or a slow-loris
+//!   client dribbles), leftover bytes after one request seed the next
+//!   (pipelining works), and progress is bounded per `read` by the
+//!   socket timeout and per *request* by the front-end's reaper.
+//! * **Deterministically faultable.** The read and write paths consult
+//!   the `http/read` / `http/write` failpoints
+//!   ([`crate::util::failpoints::check`]), so socket-level stalls and
+//!   mid-response write failures are injectable in tests
+//!   (`SOFTMOE_FAILPOINTS="http/read=delay:50,http/write=fail@3"`).
+//!
+//! The protocol subset is deliberately small (the front-end serves four
+//! routes): methods GET and POST, `Content-Length` framing only
+//! (`Transfer-Encoding: chunked` is rejected 501), HTTP/1.0 and 1.1 with
+//! standard keep-alive defaults.
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::Duration;
+
+use crate::util::failpoints;
+
+/// Hard limits on what one connection may do. Defaults are generous for
+/// real clients and tight enough that a hostile one cannot balloon
+/// memory or pin a connection slot forever.
+#[derive(Clone, Debug)]
+pub struct HttpLimits {
+    /// Cap on request line + headers, in bytes (reject 431).
+    pub max_header_bytes: usize,
+    /// Cap on `Content-Length` (reject 413, checked before allocating).
+    pub max_body_bytes: usize,
+    /// Requests served per connection before `Connection: close`.
+    pub max_requests_per_conn: usize,
+    /// Per-`read()`/`write()` socket timeout (slow-socket backstop).
+    pub io_timeout: Duration,
+    /// Whole-request deadline: one request (headers + body) must arrive
+    /// within this budget or the reaper shuts the connection down. Also
+    /// the keep-alive idle timeout (`SOFTMOE_HTTP_TIMEOUT_MS`).
+    pub request_deadline: Duration,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        Self {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 8 << 20,
+            max_requests_per_conn: 1024,
+            io_timeout: Duration::from_secs(10),
+            request_deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Everything that can go wrong reading one request. `status()` says
+/// which variants earn an HTTP error reply; the rest are connection-level
+/// conditions (peer gone, timeout with nothing in flight) where no reply
+/// is possible or meaningful.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Request line is not `METHOD SP TARGET SP HTTP/1.x` (or the header
+    /// block is not valid UTF-8). → 400
+    BadRequestLine(String),
+    /// A header line without `:`. → 400
+    BadHeader(String),
+    /// `Content-Length` non-numeric or conflicting duplicates. → 400
+    BadContentLength(String),
+    /// POST without `Content-Length`. → 411
+    LengthRequired,
+    /// Method other than GET/POST. → 405
+    MethodNotAllowed(String),
+    /// Not HTTP/1.0 or 1.1. → 505
+    VersionNotSupported(String),
+    /// Request line + headers exceeded `max_header_bytes`. → 431
+    HeadersTooLarge { limit: usize },
+    /// Declared body exceeds `max_body_bytes`. → 413
+    BodyTooLarge { len: usize, limit: usize },
+    /// `Transfer-Encoding` framing is not implemented. → 501
+    NotImplemented(&'static str),
+    /// Peer closed cleanly between requests (normal end of keep-alive).
+    Closed,
+    /// Peer closed (or was reaped) mid-request; nobody to reply to.
+    Truncated,
+    /// Socket timed out with no request in flight (idle keep-alive).
+    Idle,
+    /// Socket timed out mid-request (stalled peer). → best-effort 408
+    Timeout,
+    /// Any other I/O failure (includes injected `http/read` faults).
+    Io(ErrorKind),
+}
+
+impl HttpError {
+    /// `(status, reason)` when the error earns an HTTP reply.
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            HttpError::BadRequestLine(_)
+            | HttpError::BadHeader(_)
+            | HttpError::BadContentLength(_) => Some((400, "Bad Request")),
+            HttpError::LengthRequired => Some((411, "Length Required")),
+            HttpError::MethodNotAllowed(_) => {
+                Some((405, "Method Not Allowed"))
+            }
+            HttpError::VersionNotSupported(_) => {
+                Some((505, "HTTP Version Not Supported"))
+            }
+            HttpError::HeadersTooLarge { .. } => {
+                Some((431, "Request Header Fields Too Large"))
+            }
+            HttpError::BodyTooLarge { .. } => {
+                Some((413, "Content Too Large"))
+            }
+            HttpError::NotImplemented(_) => Some((501, "Not Implemented")),
+            HttpError::Timeout => Some((408, "Request Timeout")),
+            HttpError::Closed
+            | HttpError::Truncated
+            | HttpError::Idle
+            | HttpError::Io(_) => None,
+        }
+    }
+
+    /// Machine-readable kind for JSON error bodies.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            HttpError::BadRequestLine(_) => "bad-request-line",
+            HttpError::BadHeader(_) => "bad-header",
+            HttpError::BadContentLength(_) => "bad-content-length",
+            HttpError::LengthRequired => "length-required",
+            HttpError::MethodNotAllowed(_) => "method-not-allowed",
+            HttpError::VersionNotSupported(_) => "version-not-supported",
+            HttpError::HeadersTooLarge { .. } => "headers-too-large",
+            HttpError::BodyTooLarge { .. } => "body-too-large",
+            HttpError::NotImplemented(_) => "not-implemented",
+            HttpError::Closed => "closed",
+            HttpError::Truncated => "truncated",
+            HttpError::Idle => "idle",
+            HttpError::Timeout => "timeout",
+            HttpError::Io(_) => "io",
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::BadRequestLine(l) => {
+                write!(f, "malformed request line {l:?}")
+            }
+            HttpError::BadHeader(l) => write!(f, "malformed header {l:?}"),
+            HttpError::BadContentLength(v) => {
+                write!(f, "bad Content-Length {v:?}")
+            }
+            HttpError::LengthRequired => {
+                write!(f, "POST requires Content-Length")
+            }
+            HttpError::MethodNotAllowed(m) => {
+                write!(f, "method {m} not allowed (GET, POST)")
+            }
+            HttpError::VersionNotSupported(v) => {
+                write!(f, "unsupported version {v} (HTTP/1.0, HTTP/1.1)")
+            }
+            HttpError::HeadersTooLarge { limit } => {
+                write!(f, "headers exceed {limit} bytes")
+            }
+            HttpError::BodyTooLarge { len, limit } => {
+                write!(f, "body of {len} bytes exceeds {limit}")
+            }
+            HttpError::NotImplemented(what) => {
+                write!(f, "{what} not implemented")
+            }
+            HttpError::Closed => write!(f, "connection closed"),
+            HttpError::Truncated => write!(f, "connection closed mid-request"),
+            HttpError::Idle => write!(f, "idle timeout"),
+            HttpError::Timeout => write!(f, "timed out mid-request"),
+            HttpError::Io(k) => write!(f, "io error: {k:?}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request. Header names are lowercased; only the headers the
+/// front-end routes on are kept.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Request target, query string stripped.
+    pub path: String,
+    /// Keep-alive after this request (version default overridden by a
+    /// `Connection:` header).
+    pub keep_alive: bool,
+    pub content_type: Option<String>,
+    pub body: Vec<u8>,
+}
+
+/// Incremental request reader. One per connection; leftover bytes from a
+/// read that overshot one request seed the next request (pipelining).
+#[derive(Default)]
+pub struct RequestReader {
+    buf: Vec<u8>,
+    /// Bytes already scanned for the header terminator (avoid rescans).
+    scanned: usize,
+}
+
+impl RequestReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read and parse one request. Blocking, but bounded: each `read` is
+    /// capped by the socket timeout, total progress by the front-end
+    /// reaper, buffered bytes by `max_header_bytes`/`max_body_bytes`.
+    pub fn read_request<R: Read>(
+        &mut self,
+        stream: &mut R,
+        limits: &HttpLimits,
+    ) -> Result<HttpRequest, HttpError> {
+        let head_end = loop {
+            if let Some((end, skip)) = find_head_end(&self.buf, &mut self.scanned) {
+                break (end, skip);
+            }
+            if self.buf.len() > limits.max_header_bytes {
+                return Err(HttpError::HeadersTooLarge {
+                    limit: limits.max_header_bytes,
+                });
+            }
+            self.fill(stream, self.buf.is_empty())?;
+        };
+        let (head_len, sep_len) = head_end;
+        let head = std::str::from_utf8(&self.buf[..head_len])
+            .map_err(|_| {
+                HttpError::BadRequestLine("non-UTF-8 header block".into())
+            })?
+            .to_string();
+        self.buf.drain(..head_len + sep_len);
+        self.scanned = 0;
+
+        let mut req = parse_head(&head)?;
+
+        // Body: framed by Content-Length only. Parsed (and capped) before
+        // any allocation; bytes may already sit in the buffer.
+        let body_len = match parse_body_len(&head, limits)? {
+            Some(n) => n,
+            None if req.method == "POST" => {
+                return Err(HttpError::LengthRequired)
+            }
+            None => 0,
+        };
+        while self.buf.len() < body_len {
+            self.fill(stream, false)?;
+        }
+        req.body = self.buf.drain(..body_len).collect();
+        Ok(req)
+    }
+
+    /// One bounded read into the buffer. `idle` distinguishes "timed out
+    /// waiting for a request to start" from "timed out mid-request".
+    fn fill<R: Read>(&mut self, stream: &mut R, idle: bool)
+        -> Result<(), HttpError> {
+        // Failpoint `http/read`: delay:MS injects socket latency, fail
+        // reports a synthetic read error (peer reset mid-request).
+        if failpoints::check("http/read") {
+            return Err(HttpError::Io(ErrorKind::Other));
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => Err(if self.buf.is_empty() && idle {
+                HttpError::Closed
+            } else {
+                HttpError::Truncated
+            }),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock
+                || e.kind() == ErrorKind::TimedOut => {
+                Err(if self.buf.is_empty() && idle {
+                    HttpError::Idle
+                } else {
+                    HttpError::Timeout
+                })
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => Ok(()),
+            Err(e) => Err(HttpError::Io(e.kind())),
+        }
+    }
+}
+
+/// Find the end of the header block: `\r\n\r\n` (or the lenient `\n\n`).
+/// Returns (head_len, separator_len). `scanned` persists progress so a
+/// dribbling client does not trigger quadratic rescans.
+fn find_head_end(buf: &[u8], scanned: &mut usize) -> Option<(usize, usize)> {
+    let start = scanned.saturating_sub(3);
+    for i in start..buf.len().saturating_sub(1) {
+        if buf[i] == b'\n' {
+            if i + 2 < buf.len() + 1 && buf.get(i + 1) == Some(&b'\n') {
+                return Some((i + 1, 1));
+            }
+            if buf.get(i + 1) == Some(&b'\r')
+                && buf.get(i + 2) == Some(&b'\n') {
+                // buf[i] ends a "\r\n" or bare "\n" line; "\r\n" follows.
+                return Some((i + 1, 2));
+            }
+        }
+    }
+    *scanned = buf.len();
+    None
+}
+
+/// Parse the request line + headers (body handled separately).
+fn parse_head(head: &str) -> Result<HttpRequest, HttpError> {
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(),
+                                           parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => {
+            return Err(HttpError::BadRequestLine(
+                clip(request_line).to_string(),
+            ))
+        }
+    };
+    let keep_alive_default = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        v => {
+            return Err(HttpError::VersionNotSupported(clip(v).to_string()))
+        }
+    };
+    let method = method.to_ascii_uppercase();
+    if method != "GET" && method != "POST" {
+        return Err(HttpError::MethodNotAllowed(clip(&method).to_string()));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::BadRequestLine(
+            clip(request_line).to_string(),
+        ));
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut keep_alive = keep_alive_default;
+    let mut content_type = None;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::BadHeader(clip(line).to_string()))?;
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "content-type" => content_type = Some(value.to_string()),
+            "transfer-encoding" => {
+                return Err(HttpError::NotImplemented(
+                    "Transfer-Encoding framing",
+                ))
+            }
+            _ => {}
+        }
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        keep_alive,
+        content_type,
+        body: Vec::new(),
+    })
+}
+
+/// Extract and validate `Content-Length` (duplicates must agree; the cap
+/// is enforced here, before any body allocation).
+fn parse_body_len(head: &str, limits: &HttpLimits)
+    -> Result<Option<usize>, HttpError> {
+    let mut found: Option<usize> = None;
+    for line in head.split('\n').skip(1).map(|l| l.trim_end_matches('\r')) {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if !name.trim().eq_ignore_ascii_case("content-length") {
+            continue;
+        }
+        let value = value.trim();
+        let n: usize = value.parse().map_err(|_| {
+            HttpError::BadContentLength(clip(value).to_string())
+        })?;
+        if let Some(prev) = found {
+            if prev != n {
+                return Err(HttpError::BadContentLength(format!(
+                    "conflicting values {prev} and {n}"
+                )));
+            }
+        }
+        found = Some(n);
+    }
+    if let Some(n) = found {
+        if n > limits.max_body_bytes {
+            return Err(HttpError::BodyTooLarge {
+                len: n,
+                limit: limits.max_body_bytes,
+            });
+        }
+    }
+    Ok(found)
+}
+
+/// Clip hostile strings before they land in error messages / logs.
+fn clip(s: &str) -> &str {
+    let end = s
+        .char_indices()
+        .nth(80)
+        .map(|(i, _)| i)
+        .unwrap_or(s.len());
+    &s[..end]
+}
+
+/// One response, written in full by [`write_response`].
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub reason: &'static str,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// `Retry-After` seconds (load-shedding 503s).
+    pub retry_after: Option<u32>,
+    pub keep_alive: bool,
+}
+
+impl HttpResponse {
+    pub fn text(status: u16, reason: &'static str, body: &str) -> Self {
+        Self {
+            status,
+            reason,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+            retry_after: None,
+            keep_alive: true,
+        }
+    }
+
+    pub fn json(status: u16, reason: &'static str,
+                body: &crate::json::Value) -> Self {
+        Self {
+            status,
+            reason,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+            retry_after: None,
+            keep_alive: true,
+        }
+    }
+
+    /// Typed error body: `{"error": msg, "kind": kind}`.
+    pub fn error(status: u16, reason: &'static str, kind: &str,
+                 msg: &str) -> Self {
+        let mut v = crate::json::Value::obj();
+        v.set("error", crate::json::Value::Str(msg.to_string()));
+        v.set("kind", crate::json::Value::Str(kind.to_string()));
+        Self::json(status, reason, &v)
+    }
+}
+
+/// Serialize and send one response. The `http/write` failpoint injects
+/// mid-response write failures (`fail@N`); the caller treats any error
+/// as fatal for the connection (framing can no longer be trusted) but
+/// never for the server.
+pub fn write_response<W: Write>(w: &mut W, resp: &HttpResponse)
+    -> std::io::Result<()> {
+    if failpoints::check("http/write") {
+        return Err(std::io::Error::new(
+            ErrorKind::Other,
+            "failpoint http/write fired",
+        ));
+    }
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n",
+        resp.status,
+        resp.reason,
+        resp.content_type,
+        resp.body.len(),
+        if resp.keep_alive { "keep-alive" } else { "close" },
+    );
+    if let Some(secs) = resp.retry_after {
+        head.push_str(&format!("Retry-After: {secs}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// A reader that yields its input `n` bytes per read — the parser
+    /// must assemble requests from arbitrary fragmentation.
+    struct Dribble {
+        data: Vec<u8>,
+        pos: usize,
+        n: usize,
+    }
+
+    impl Read for Dribble {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let take = self.n.min(out.len()).min(self.data.len() - self.pos);
+            out[..take]
+                .copy_from_slice(&self.data[self.pos..self.pos + take]);
+            self.pos += take;
+            Ok(take)
+        }
+    }
+
+    fn limits() -> HttpLimits {
+        HttpLimits {
+            max_header_bytes: 1024,
+            max_body_bytes: 4096,
+            ..HttpLimits::default()
+        }
+    }
+
+    fn read_one(raw: &[u8]) -> Result<HttpRequest, HttpError> {
+        RequestReader::new()
+            .read_request(&mut Cursor::new(raw.to_vec()), &limits())
+    }
+
+    #[test]
+    fn parses_get() {
+        let req = read_one(
+            b"GET /healthz?probe=1 HTTP/1.1\r\nHost: x\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz", "query string stripped");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body_and_pipelined_next_request() {
+        let raw = b"POST /infer HTTP/1.1\r\nContent-Type: \
+                    application/octet-stream\r\nContent-Length: 4\r\n\r\n\
+                    ABCDGET /healthz HTTP/1.1\r\n\r\n";
+        let mut rd = RequestReader::new();
+        let mut cur = Cursor::new(raw.to_vec());
+        let req = rd.read_request(&mut cur, &limits()).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"ABCD");
+        assert_eq!(req.content_type.as_deref(),
+                   Some("application/octet-stream"));
+        // The trailing bytes were buffered; the next request parses
+        // without another read.
+        let req2 = rd.read_request(&mut cur, &limits()).unwrap();
+        assert_eq!(req2.path, "/healthz");
+    }
+
+    #[test]
+    fn assembles_across_fragmented_reads() {
+        let raw =
+            b"POST /infer HTTP/1.1\r\nContent-Length: 8\r\n\r\n01234567";
+        for n in [1, 2, 3, 7] {
+            let mut rd = RequestReader::new();
+            let mut d = Dribble { data: raw.to_vec(), pos: 0, n };
+            let req = rd.read_request(&mut d, &limits()).unwrap();
+            assert_eq!(req.body, b"01234567", "fragment size {n}");
+        }
+    }
+
+    #[test]
+    fn lf_only_line_endings_accepted() {
+        let req =
+            read_one(b"POST /infer HTTP/1.1\nContent-Length: 2\n\nhi")
+                .unwrap();
+        assert_eq!(req.body, b"hi");
+    }
+
+    #[test]
+    fn connection_header_overrides_version_default() {
+        let req = read_one(
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive);
+        let req = read_one(
+            b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.keep_alive);
+        let req = read_one(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.keep_alive, "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn malformed_corpus_yields_typed_errors() {
+        // (raw request, expected status) — the malformed-request corpus.
+        let cases: &[(&[u8], u16)] = &[
+            (b"GET\r\n\r\n", 400),                          // no target
+            (b"GET /x HTTP/1.1 extra\r\n\r\n", 400),        // 4 tokens
+            (b"GET x HTTP/1.1\r\n\r\n", 400),               // no leading /
+            (b"\xff\xfe\x00garbage\r\n\r\n", 400),          // non-UTF-8
+            (b"GET /x HTTP/2.0\r\n\r\n", 505),
+            (b"GET /x SPDY/3\r\n\r\n", 505),
+            (b"DELETE /x HTTP/1.1\r\n\r\n", 405),
+            (b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 2\r\n\
+               Content-Length: 5\r\n\r\nhi", 400),
+            (b"POST /x HTTP/1.1\r\n\r\n", 411),              // no length
+            (b"POST /x HTTP/1.1\r\nContent-Length: 99999\r\n\r\n", 413),
+            (b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+             501),
+        ];
+        for (raw, want) in cases {
+            let err = read_one(raw).expect_err("must reject");
+            let (got, _) = err.status().unwrap_or_else(|| {
+                panic!("{raw:?} -> {err} has no HTTP status")
+            });
+            assert_eq!(got, *want, "{err} for {raw:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_headers_rejected_431_even_without_terminator() {
+        // Garbage (or an endless header) with no \r\n\r\n must hit the
+        // header cap, not grow the buffer forever.
+        let mut raw = vec![b'A'; 4096]; // > max_header_bytes = 1024
+        raw.extend_from_slice(b"\r\n\r\n");
+        let err = read_one(&raw).expect_err("must reject");
+        assert_eq!(err.status().unwrap().0, 431, "{err}");
+        assert!(matches!(err, HttpError::HeadersTooLarge { limit: 1024 }));
+    }
+
+    #[test]
+    fn premature_close_is_typed_not_a_panic() {
+        // Clean close before any byte: normal end of keep-alive.
+        assert!(matches!(read_one(b""), Err(HttpError::Closed)));
+        // Close mid-request-line and mid-body: truncated.
+        assert!(matches!(read_one(b"GET /hea"),
+                         Err(HttpError::Truncated)));
+        assert!(matches!(
+            read_one(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nab"),
+            Err(HttpError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn body_cap_checked_before_allocation() {
+        // Content-Length of usize::MAX parses; the cap must reject it
+        // before any attempt to reserve the buffer.
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            usize::MAX
+        );
+        let err = read_one(raw.as_bytes()).expect_err("must reject");
+        assert!(matches!(err, HttpError::BodyTooLarge { .. }), "{err}");
+    }
+
+    #[test]
+    fn response_writer_emits_framing_and_retry_after() {
+        let mut out = Vec::new();
+        let mut resp = HttpResponse::text(200, "OK", "ok\n");
+        write_response(&mut out, &resp).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 3\r\n"), "{s}");
+        assert!(s.contains("Connection: keep-alive\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\nok\n"), "{s}");
+
+        resp.status = 503;
+        resp.reason = "Service Unavailable";
+        resp.retry_after = Some(1);
+        resp.keep_alive = false;
+        let mut out = Vec::new();
+        write_response(&mut out, &resp).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Retry-After: 1\r\n"), "{s}");
+        assert!(s.contains("Connection: close\r\n"), "{s}");
+    }
+
+    #[test]
+    fn error_json_body_is_typed() {
+        let resp = HttpResponse::error(400, "Bad Request",
+                                       "bad-content-length", "nope");
+        let v = crate::json::parse(
+            std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(),
+                   Some("bad-content-length"));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("nope"));
+    }
+}

@@ -1,0 +1,823 @@
+//! Hardened HTTP/1.1 front-end over the typed admission surface.
+//!
+//! `std::net::TcpListener` + the hand-rolled parser in [`super::conn`] —
+//! no dependencies — in front of [`Client::submit`]. The transport
+//! extends the serve no-hang contract (`docs/RELIABILITY.md`) across the
+//! socket boundary:
+//!
+//! * **Bounded connections.** At most `SOFTMOE_MAX_CONNS` concurrent
+//!   connections; beyond that the acceptor sheds with `503` +
+//!   `Retry-After: 1` instead of queueing acceptors or growing threads
+//!   without bound.
+//! * **No slow-loris.** Per-socket read/write timeouts
+//!   (`set_read_timeout`/`set_write_timeout`) bound each syscall, and a
+//!   reaper thread enforces a whole-request deadline
+//!   (`SOFTMOE_HTTP_TIMEOUT_MS`): a client dribbling one byte per
+//!   interval is cut off and its connection slot freed.
+//! * **Typed status mapping.** Parser rejections surface as 4xx
+//!   (`super::conn::HttpError::status`); [`ServeError`] maps via
+//!   [`status_for`] — `Overloaded`/`ShuttingDown` → 503 (+Retry-After),
+//!   `DeadlineExceeded` → 504, `ExecutorPanicked`/`Internal` → 500 —
+//!   all with JSON bodies carrying a machine-readable `kind`.
+//! * **Graceful drain.** On shutdown (explicit, or after a configured
+//!   request budget): stop accepting, drop the master [`Client`] so the
+//!   server's producer count can reach zero, let in-flight requests
+//!   finish through the queue's own drain, reap idle keep-alive
+//!   connections, then join — a guard on every connection thread frees
+//!   its slot on every exit path, panic included.
+//! * **Faultable at the socket layer.** `http/accept=fail@N` drops the
+//!   Nth accepted connection, `http/read=delay:MS|fail@N` injects slow
+//!   or failing reads, `http/write=fail@N` kills the Nth response
+//!   mid-flight (see `util/failpoints.rs`).
+//!
+//! Endpoints: `GET /` (service index), `GET /healthz` (liveness),
+//! `GET /readyz` (ready only after serve warm-up), `GET /metrics`
+//! (text exposition of the [`Registry`]), `POST /infer` (f32-LE bytes
+//! or JSON `{"image": [...]}`).
+//!
+//! Threading: one acceptor, one reaper, one thread per live connection
+//! (bounded by the connection cap). The inference `Server::run` loop
+//! stays on the caller's thread exactly as in library mode; the
+//! front-end only feeds its queue.
+
+use std::collections::HashMap;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr,
+               TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+use crate::metrics::Registry;
+use crate::util::failpoints;
+
+use super::conn::{self, HttpError, HttpLimits, HttpRequest, HttpResponse,
+                  RequestReader};
+use super::{Client, ServeError};
+
+/// Front-end knobs. `from_env` reads the `SOFTMOE_*` variables
+/// documented in the README.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Listen address, e.g. `127.0.0.1:8077` (`SOFTMOE_LISTEN`).
+    pub listen: String,
+    /// Concurrent-connection cap (`SOFTMOE_MAX_CONNS`, default 256);
+    /// beyond it new connections are shed with 503 + Retry-After.
+    pub max_conns: usize,
+    /// Parser caps + socket/request deadlines
+    /// (`SOFTMOE_HTTP_TIMEOUT_MS` feeds both the per-request deadline
+    /// and the per-syscall socket timeouts).
+    pub limits: HttpLimits,
+    /// How long `/infer` waits for the server's reply before answering
+    /// 504 (`SOFTMOE_CLIENT_TIMEOUT_MS`, shared with the synthetic
+    /// serve loop in main.rs).
+    pub client_timeout: Duration,
+    /// Terminal replies (every `/infer` response + every accept-level
+    /// shed) after which the front-end drains itself — how
+    /// `softmoe serve --requests N --listen …` terminates. `None`
+    /// serves until an explicit `shutdown()`.
+    pub request_budget: Option<usize>,
+}
+
+impl HttpConfig {
+    pub fn from_env(listen: &str, request_budget: Option<usize>) -> Self {
+        let env_u64 = |name: &str| -> Option<u64> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        };
+        let http_timeout = Duration::from_millis(
+            env_u64("SOFTMOE_HTTP_TIMEOUT_MS").filter(|&ms| ms > 0)
+                .unwrap_or(10_000),
+        );
+        Self {
+            listen: listen.to_string(),
+            max_conns: env_u64("SOFTMOE_MAX_CONNS")
+                .map_or(256, |n| (n as usize).max(1)),
+            limits: HttpLimits {
+                io_timeout: http_timeout,
+                request_deadline: http_timeout,
+                ..HttpLimits::default()
+            },
+            client_timeout: super::client_timeout_from_env(),
+            request_budget,
+        }
+    }
+}
+
+/// Map a typed serving failure onto `(status, reason, kind,
+/// retry_after_secs)`. The transport half of the ServeError contract:
+/// load conditions are 503 (retryable, with Retry-After), deadline
+/// expiry is 504, server faults are 500, caller mistakes are 400.
+pub fn status_for(e: &ServeError)
+    -> (u16, &'static str, &'static str, Option<u32>) {
+    match e {
+        ServeError::Overloaded { .. } => {
+            (503, "Service Unavailable", "overloaded", Some(1))
+        }
+        ServeError::ShuttingDown => {
+            (503, "Service Unavailable", "shutting-down", Some(1))
+        }
+        ServeError::DeadlineExceeded { .. } => {
+            (504, "Gateway Timeout", "deadline-exceeded", None)
+        }
+        ServeError::ExecutorPanicked => {
+            (500, "Internal Server Error", "executor-panicked", None)
+        }
+        ServeError::Internal(_) => {
+            (500, "Internal Server Error", "internal", None)
+        }
+        ServeError::Disconnected => {
+            (500, "Internal Server Error", "disconnected", None)
+        }
+        ServeError::InvalidRequest { .. } => {
+            (400, "Bad Request", "invalid-request", None)
+        }
+    }
+}
+
+fn error_response(e: &ServeError) -> HttpResponse {
+    let (status, reason, kind, retry) = status_for(e);
+    let mut resp =
+        HttpResponse::error(status, reason, kind, &e.to_string());
+    resp.retry_after = retry;
+    resp
+}
+
+/// Reaper bookkeeping for one live connection: a clone of its stream
+/// (so the reaper can `shutdown()` it from outside) and the deadline by
+/// which its current read phase must finish. `None` while the request
+/// is dispatched — the admission queue's own deadline machinery owns
+/// that phase.
+struct ConnEntry {
+    stream: TcpStream,
+    deadline: Option<Instant>,
+}
+
+/// State shared by the acceptor, the reaper, every connection thread
+/// and the [`HttpFrontend`] handle.
+struct FrontState {
+    limits: HttpLimits,
+    client_timeout: Duration,
+    max_conns: usize,
+    budget: Option<usize>,
+    metrics: Arc<Registry>,
+    /// Master client; cloned per connection. Taken (dropped) when the
+    /// drain begins so the server's producer count can reach zero.
+    client: Mutex<Option<Client>>,
+    image_elems: usize,
+    local_addr: SocketAddr,
+    /// Live connections (gate for the shed decision).
+    conns: AtomicUsize,
+    /// Terminal replies so far (see [`HttpConfig::request_budget`]).
+    terminal: AtomicUsize,
+    draining: AtomicBool,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    table: Mutex<HashMap<u64, ConnEntry>>,
+}
+
+impl FrontState {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    fn set_deadline(&self, id: u64, deadline: Option<Instant>) {
+        if let Some(entry) = self.table.lock().unwrap().get_mut(&id) {
+            entry.deadline = deadline;
+        }
+    }
+
+    fn count_response(&self, status: u16) {
+        let class = match status / 100 {
+            2 => "http/responses_2xx",
+            4 => "http/responses_4xx",
+            _ => "http/responses_5xx",
+        };
+        self.metrics.inc(class, 1);
+    }
+
+    /// One terminal outcome (an `/infer` reply or an accept-level
+    /// shed). Crossing the budget starts the drain — this is how a
+    /// `--requests N` serve run ends while every client still gets its
+    /// reply first.
+    fn note_terminal(&self) {
+        let n = self.terminal.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.budget.is_some_and(|b| n >= b) {
+            self.begin_drain();
+        }
+    }
+
+    /// Start the graceful drain (idempotent): stop admitting new work,
+    /// release the master client, wake the acceptor so it can exit.
+    fn begin_drain(&self) {
+        if self.draining.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.client.lock().unwrap().take();
+        self.wake_acceptor();
+    }
+
+    /// Unblock a blocking `accept()` by connecting to ourselves (the
+    /// listener has no timeout API in std).
+    fn wake_acceptor(&self) {
+        let mut addr = self.local_addr;
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ =
+            TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+    }
+}
+
+/// Handle to a running front-end. Owns the acceptor + reaper threads;
+/// dropping it (or calling [`HttpFrontend::shutdown`]) drains
+/// gracefully on every path.
+pub struct HttpFrontend {
+    state: Arc<FrontState>,
+    acceptor: Option<JoinHandle<()>>,
+    reaper: Option<JoinHandle<()>>,
+}
+
+impl HttpFrontend {
+    /// Bind `cfg.listen` and start serving `client` over HTTP. The
+    /// returned handle must outlive the traffic; pair it with
+    /// `Server::run` on another thread (or this one, via main.rs).
+    pub fn start(cfg: HttpConfig, client: Client,
+                 metrics: Arc<Registry>) -> Result<HttpFrontend> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let local_addr = listener.local_addr()?;
+        let image_elems = client.image_elems;
+        let state = Arc::new(FrontState {
+            limits: cfg.limits,
+            client_timeout: cfg.client_timeout,
+            max_conns: cfg.max_conns,
+            budget: cfg.request_budget,
+            metrics,
+            client: Mutex::new(Some(client)),
+            image_elems,
+            local_addr,
+            conns: AtomicUsize::new(0),
+            terminal: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            table: Mutex::new(HashMap::new()),
+        });
+        state.metrics.set_gauge("http/max_conns",
+                                cfg.max_conns as f64);
+        let acceptor = {
+            let state = Arc::clone(&state);
+            std::thread::Builder::new()
+                .name("http-accept".into())
+                .spawn(move || accept_loop(&state, listener))?
+        };
+        let reaper = {
+            let state = Arc::clone(&state);
+            std::thread::Builder::new()
+                .name("http-reaper".into())
+                .spawn(move || reaper_loop(&state))?
+        };
+        Ok(HttpFrontend {
+            state,
+            acceptor: Some(acceptor),
+            reaper: Some(reaper),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.local_addr
+    }
+
+    /// Terminal replies so far (tests + the serve summary).
+    pub fn terminal_count(&self) -> usize {
+        self.state.terminal.load(Ordering::SeqCst)
+    }
+
+    /// Wait until the drain has begun (request budget reached, or
+    /// someone called `shutdown`), then finish it and join the threads.
+    pub fn join(&mut self) {
+        while !self.state.draining() {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.finish();
+    }
+
+    /// Begin the drain now and tear down.
+    pub fn shutdown(&mut self) {
+        self.state.begin_drain();
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        // In-flight requests get their replies: wait (bounded by the
+        // request deadline plus slack — the reaper enforces the
+        // deadline) for connection threads to retire.
+        let grace = self.state.limits.request_deadline
+            + self.state.client_timeout
+            + Duration::from_secs(2);
+        let deadline = Instant::now() + grace;
+        while self.state.conns.load(Ordering::SeqCst) > 0
+            && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.state.stop.store(true, Ordering::SeqCst);
+        // The acceptor normally exits on the drain wake; cover the case
+        // where shutdown() raced ahead of it.
+        self.state.wake_acceptor();
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reaper.take() {
+            let _ = h.join();
+        }
+        // Anything still in the table outlived the grace period:
+        // hard-close so no socket leaks past shutdown.
+        for entry in self.state.table.lock().unwrap().values() {
+            let _ = entry.stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for HttpFrontend {
+    /// Drain-on-every-exit-path: a front-end that goes out of scope —
+    /// including via a panic unwinding through the owner — still stops
+    /// accepting, releases its producer handle and joins its threads.
+    fn drop(&mut self) {
+        self.state.begin_drain();
+        if self.acceptor.is_some() || self.reaper.is_some() {
+            self.finish();
+        }
+    }
+}
+
+fn accept_loop(state: &Arc<FrontState>, listener: TcpListener) {
+    for incoming in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) || state.draining() {
+            break;
+        }
+        let stream = match incoming {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // Failpoint `http/accept`: drop the connection before it is
+        // served — the client sees an immediate EOF (as after a
+        // front-end crash between accept and serve).
+        if failpoints::check("http/accept") {
+            state.metrics.inc("http/accept_faults", 1);
+            continue;
+        }
+        // Connection gate: the slot is taken optimistically; over the
+        // cap we give it back and shed with a typed, retryable 503.
+        if state.conns.fetch_add(1, Ordering::SeqCst) >= state.max_conns {
+            state.conns.fetch_sub(1, Ordering::SeqCst);
+            state.metrics.inc("http/conns_shed", 1);
+            // A shed is a terminal outcome for that client's request —
+            // it must count toward the budget or a fully-shed burst
+            // could leave the server waiting for replies that will
+            // never be requested again. Counted inside `shed` (after
+            // the 503 is on the wire), off-thread so a burst of sheds
+            // never stalls the acceptor.
+            shed(state, stream, "overloaded",
+                 "connection limit reached; retry shortly", true);
+            continue;
+        }
+        let client = state.client.lock().unwrap().clone();
+        let Some(client) = client else {
+            // Drain raced the accept: refuse politely, don't count.
+            state.conns.fetch_sub(1, Ordering::SeqCst);
+            shed(state, stream, "shutting-down",
+                 "server is shutting down", false);
+            continue;
+        };
+        state.metrics.inc("http/conns_accepted", 1);
+        let id = state.next_id.fetch_add(1, Ordering::SeqCst);
+        if let Ok(clone) = stream.try_clone() {
+            state.table.lock().unwrap().insert(
+                id,
+                ConnEntry { stream: clone, deadline: None },
+            );
+        }
+        let st = Arc::clone(state);
+        let spawned = std::thread::Builder::new()
+            .name(format!("http-conn-{id}"))
+            .spawn(move || handle_conn(&st, id, stream, client));
+        if spawned.is_err() {
+            // Thread exhaustion is load: shed like a full gate.
+            state.table.lock().unwrap().remove(&id);
+            state.conns.fetch_sub(1, Ordering::SeqCst);
+            state.metrics.inc("http/conns_shed", 1);
+            state.note_terminal();
+        }
+    }
+}
+
+/// Best-effort 503 to a connection we will not serve, written from a
+/// short-lived thread so a burst of sheds never stalls the acceptor
+/// (each write is bounded by its own timeout).
+fn shed(state: &Arc<FrontState>, mut stream: TcpStream, kind: &str,
+        msg: &str, terminal: bool) {
+    let st = Arc::clone(state);
+    let kind = kind.to_string();
+    let msg = msg.to_string();
+    let work = move || {
+        let _ = stream
+            .set_write_timeout(Some(Duration::from_millis(250)));
+        let mut resp = HttpResponse::error(
+            503, "Service Unavailable", &kind, &msg);
+        resp.retry_after = Some(1);
+        resp.keep_alive = false;
+        st.count_response(503);
+        if conn::write_response(&mut stream, &resp).is_err() {
+            st.metrics.inc("http/write_errors", 1);
+        }
+        linger_close(stream);
+        if terminal {
+            st.note_terminal();
+        }
+    };
+    if std::thread::Builder::new()
+        .name("http-shed".into())
+        .spawn(work)
+        .is_err()
+    {
+        // Thread exhaustion dropped the stream (and its 503) with the
+        // closure; the outcome is still terminal for that client, so
+        // keep the budget accounting sound.
+        state.metrics.inc("http/write_errors", 1);
+        if terminal {
+            state.note_terminal();
+        }
+    }
+}
+
+/// Close without an RST: a plain drop while the peer's request bytes
+/// sit unread in our receive buffer makes the kernel reset the
+/// connection, which can destroy the response we just queued before
+/// the peer reads it. Half-close our side, then briefly drain theirs
+/// so the reply survives the close.
+fn linger_close(mut stream: TcpStream) {
+    use std::io::Read;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut sink = [0u8; 4096];
+    let deadline = Instant::now() + Duration::from_millis(300);
+    while Instant::now() < deadline {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// The reaper: every tick, shut down connections whose current read
+/// phase outlived the request deadline (slow-loris, stalled peers,
+/// idle keep-alives), and — during a drain — every connection that is
+/// merely waiting for its next request. `shutdown(Both)` makes the
+/// handler's blocking read return immediately; its guard then frees
+/// the slot.
+fn reaper_loop(state: &Arc<FrontState>) {
+    while !state.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(25));
+        let draining = state.draining();
+        let now = Instant::now();
+        let mut table = state.table.lock().unwrap();
+        for entry in table.values_mut() {
+            let expired = entry.deadline.is_some_and(|d| now >= d);
+            if expired || (draining && entry.deadline.is_some()) {
+                let _ = entry.stream.shutdown(Shutdown::Both);
+                entry.deadline = None; // count each reap once
+                state.metrics.inc("http/conns_reaped", 1);
+            }
+        }
+    }
+}
+
+fn handle_conn(state: &Arc<FrontState>, id: u64, mut stream: TcpStream,
+               client: Client) {
+    /// Slot release on every exit path (parse error, write error,
+    /// reaped socket, panic) — the connection-level DrainGuard.
+    struct SlotGuard<'a> {
+        state: &'a FrontState,
+        id: u64,
+    }
+    impl Drop for SlotGuard<'_> {
+        fn drop(&mut self) {
+            self.state.table.lock().unwrap().remove(&self.id);
+            self.state.conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _guard = SlotGuard { state, id };
+    let limits = state.limits.clone();
+    let _ = stream.set_read_timeout(Some(limits.io_timeout));
+    let _ = stream.set_write_timeout(Some(limits.io_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut reader = RequestReader::new();
+    let mut served = 0usize;
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Arm the reaper for the whole read phase — this deadline is
+        // what defeats a dribbling client that stays under the socket
+        // timeout per byte. It doubles as the keep-alive idle timeout.
+        state.set_deadline(
+            id, Some(Instant::now() + limits.request_deadline));
+        let result = reader.read_request(&mut stream, &limits);
+        state.set_deadline(id, None);
+        match result {
+            Ok(req) => {
+                served += 1;
+                let wants_keep_alive = req.keep_alive;
+                // `/infer` replies are terminal outcomes for budget
+                // accounting, whatever their status.
+                let terminal =
+                    req.method == "POST" && req.path == "/infer";
+                let mut resp = route(state, &client, req);
+                resp.keep_alive = wants_keep_alive
+                    && resp.keep_alive
+                    && served < limits.max_requests_per_conn
+                    && !state.draining();
+                state.count_response(resp.status);
+                let wrote = conn::write_response(&mut stream, &resp);
+                if terminal {
+                    state.note_terminal();
+                }
+                if wrote.is_err() {
+                    state.metrics.inc("http/write_errors", 1);
+                    break;
+                }
+                if !resp.keep_alive {
+                    break;
+                }
+            }
+            Err(e) => {
+                if let Some((status, reason)) = e.status() {
+                    // Malformed input: typed 4xx/5xx reply, then close
+                    // — after a framing error the byte stream can no
+                    // longer be trusted.
+                    state.metrics.inc("http/bad_requests", 1);
+                    let mut resp = HttpResponse::error(
+                        status, reason, e.kind(), &e.to_string());
+                    resp.keep_alive = false;
+                    state.count_response(status);
+                    if conn::write_response(&mut stream, &resp).is_err() {
+                        state.metrics.inc("http/write_errors", 1);
+                    }
+                } else {
+                    match e {
+                        HttpError::Closed => {}
+                        HttpError::Idle | HttpError::Truncated => {
+                            // Clean idle expiry / peer gone mid-request
+                            // (includes reaped sockets): nothing to say.
+                        }
+                        _ => state.metrics.inc("http/conn_errors", 1),
+                    }
+                }
+                break;
+            }
+        }
+    }
+    // Half-close + bounded drain so a queued response is not destroyed
+    // by a RST when the client still has unread bytes in flight (e.g.
+    // the body of a 413-rejected upload).
+    linger_close(stream);
+}
+
+fn route(state: &FrontState, client: &Client, req: HttpRequest)
+    -> HttpResponse {
+    state.metrics.inc("http/requests", 1);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/") => index(state),
+        ("GET", "/healthz") => HttpResponse::text(200, "OK", "ok\n"),
+        ("GET", "/readyz") => {
+            if state.draining() {
+                let mut r = HttpResponse::error(
+                    503, "Service Unavailable", "draining",
+                    "server is draining");
+                r.retry_after = Some(1);
+                r
+            } else if state.metrics.counter("serve/warmup_batches") > 0 {
+                HttpResponse::text(200, "OK", "ready\n")
+            } else {
+                let mut r = HttpResponse::error(
+                    503, "Service Unavailable", "not-ready",
+                    "warm-up has not completed");
+                r.retry_after = Some(1);
+                r
+            }
+        }
+        ("GET", "/metrics") => HttpResponse::text(
+            200, "OK", &state.metrics.render_text()),
+        ("POST", "/infer") => infer(state, client, &req),
+        (_, "/" | "/healthz" | "/readyz" | "/metrics" | "/infer") => {
+            HttpResponse::error(
+                405, "Method Not Allowed", "method-not-allowed",
+                "endpoint exists, method does not")
+        }
+        _ => HttpResponse::error(404, "Not Found", "not-found",
+                                 "unknown path"),
+    }
+}
+
+fn index(state: &FrontState) -> HttpResponse {
+    let mut v = Value::obj();
+    v.set("service", Value::from("softmoe"));
+    v.set("image_elems", Value::from(state.image_elems));
+    v.set(
+        "endpoints",
+        Value::Arr(
+            ["GET /healthz", "GET /readyz", "GET /metrics",
+             "POST /infer"]
+                .iter()
+                .map(|&e| Value::from(e))
+                .collect(),
+        ),
+    );
+    HttpResponse::json(200, "OK", &v)
+}
+
+fn infer(state: &FrontState, client: &Client, req: &HttpRequest)
+    -> HttpResponse {
+    let image = match decode_image(req, state.image_elems) {
+        Ok(v) => v,
+        Err(resp) => return *resp,
+    };
+    let pending = match client.submit(image) {
+        Ok(p) => p,
+        Err(e) => return error_response(&e),
+    };
+    match pending.wait_timeout(state.client_timeout) {
+        Some(Ok(r)) => {
+            let mut v = Value::obj();
+            v.set("argmax", Value::from(r.argmax));
+            v.set("latency_ms",
+                  Value::from(r.latency.as_secs_f64() * 1e3));
+            v.set("batch_size", Value::from(r.batch_size));
+            v.set("replica", Value::from(r.replica));
+            v.set(
+                "logits",
+                Value::Arr(
+                    r.logits.iter().map(|&x| Value::Num(x as f64))
+                        .collect(),
+                ),
+            );
+            HttpResponse::json(200, "OK", &v)
+        }
+        Some(Err(e)) => error_response(&e),
+        None => {
+            // The server outlived its reply window — the HTTP analogue
+            // of the fault tests' hung-client detector. The client gets
+            // a terminal 504 instead of a stalled socket.
+            state.metrics.inc("http/reply_timeouts", 1);
+            HttpResponse::error(
+                504, "Gateway Timeout", "reply-timeout",
+                "no reply from the inference server in time")
+        }
+    }
+}
+
+/// Decode an `/infer` body: raw little-endian f32s
+/// (`application/octet-stream`, also the default), or JSON
+/// `{"image": [...]}`. Errors come back as ready-made 4xx responses
+/// (boxed: the happy path shouldn't pay for their size).
+fn decode_image(req: &HttpRequest, image_elems: usize)
+    -> Result<Vec<f32>, Box<HttpResponse>> {
+    let bad = |kind: &str, msg: &str| {
+        Box::new(HttpResponse::error(400, "Bad Request", kind, msg))
+    };
+    match req.content_type.as_deref() {
+        None | Some("application/octet-stream") => {
+            if req.body.len() % 4 != 0 {
+                return Err(bad(
+                    "bad-body",
+                    &format!("body of {} bytes is not a whole number \
+                              of f32s", req.body.len()),
+                ));
+            }
+            let floats: Vec<f32> = req
+                .body
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            if floats.len() != image_elems {
+                return Err(bad(
+                    "invalid-request",
+                    &format!("image has {} elements, expected {}",
+                             floats.len(), image_elems),
+                ));
+            }
+            Ok(floats)
+        }
+        Some(ct) if ct.starts_with("application/json") => {
+            let text = std::str::from_utf8(&req.body)
+                .map_err(|_| bad("bad-json", "body is not UTF-8"))?;
+            let v = crate::json::parse(text)
+                .map_err(|e| bad("bad-json", &format!("{e:#}")))?;
+            let arr = v
+                .get("image")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| {
+                    bad("bad-json", "expected {\"image\": [numbers]}")
+                })?;
+            let mut floats = Vec::with_capacity(arr.len());
+            for x in arr {
+                floats.push(x.as_f64().ok_or_else(|| {
+                    bad("bad-json", "image array must be all numbers")
+                })? as f32);
+            }
+            Ok(floats)
+        }
+        Some(ct) => Err(Box::new(HttpResponse::error(
+            415, "Unsupported Media Type", "bad-content-type",
+            &format!("unsupported Content-Type {ct:?}"),
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_errors_map_to_transport_statuses() {
+        let cases = [
+            (ServeError::Overloaded { depth: 8, cap: 8 },
+             503, "overloaded", Some(1)),
+            (ServeError::ShuttingDown, 503, "shutting-down", Some(1)),
+            (ServeError::DeadlineExceeded {
+                waited: Duration::from_millis(5) },
+             504, "deadline-exceeded", None),
+            (ServeError::ExecutorPanicked,
+             500, "executor-panicked", None),
+            (ServeError::Internal("x".into()), 500, "internal", None),
+            (ServeError::Disconnected, 500, "disconnected", None),
+            (ServeError::InvalidRequest { expected: 4, got: 3 },
+             400, "invalid-request", None),
+        ];
+        for (e, status, kind, retry) in cases {
+            let (s, _, k, r) = status_for(&e);
+            assert_eq!((s, k, r), (status, kind, retry), "{e}");
+            let resp = error_response(&e);
+            assert_eq!(resp.status, status);
+            assert_eq!(resp.retry_after, retry);
+            let body = crate::json::parse(
+                std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(body.get("kind").unwrap().as_str(), Some(kind));
+        }
+    }
+
+    #[test]
+    fn decode_image_accepts_bytes_and_json_rejects_garbage() {
+        let mk = |ct: Option<&str>, body: Vec<u8>| HttpRequest {
+            method: "POST".into(),
+            path: "/infer".into(),
+            keep_alive: true,
+            content_type: ct.map(str::to_string),
+            body,
+        };
+        let floats = [0.5f32, -1.25, 3.0];
+        let bytes: Vec<u8> =
+            floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        assert_eq!(decode_image(&mk(None, bytes.clone()), 3).unwrap(),
+                   floats);
+        assert_eq!(
+            decode_image(
+                &mk(Some("application/octet-stream"), bytes), 3)
+                .unwrap(),
+            floats
+        );
+        let json = br#"{"image": [0.5, -1.25, 3.0]}"#.to_vec();
+        assert_eq!(
+            decode_image(&mk(Some("application/json"), json), 3)
+                .unwrap(),
+            floats
+        );
+
+        // Rejections: truncated float, wrong element count, non-JSON,
+        // wrong JSON shape, unsupported type.
+        assert_eq!(
+            decode_image(&mk(None, vec![0u8; 6]), 3).unwrap_err()
+                .status, 400);
+        assert_eq!(
+            decode_image(&mk(None, vec![0u8; 8]), 3).unwrap_err()
+                .status, 400);
+        assert_eq!(
+            decode_image(
+                &mk(Some("application/json"), b"not json".to_vec()), 3)
+                .unwrap_err().status, 400);
+        assert_eq!(
+            decode_image(
+                &mk(Some("application/json"), b"{\"x\": 1}".to_vec()),
+                3)
+                .unwrap_err().status, 400);
+        assert_eq!(
+            decode_image(&mk(Some("text/csv"), vec![]), 3).unwrap_err()
+                .status, 415);
+    }
+}

@@ -46,6 +46,8 @@
 //! (`serve/forward`, `snapshot/read`), exercised by
 //! `rust/tests/serve_faults.rs`.
 
+pub mod conn;
+pub mod http;
 mod queue;
 mod replica;
 
@@ -258,6 +260,21 @@ impl ServeConfig {
             ..d
         }
     }
+}
+
+/// How long a client (the HTTP `/infer` path, and main.rs's synthetic
+/// serve loop) waits for a reply before declaring it hung and answering
+/// with a timeout — `SOFTMOE_CLIENT_TIMEOUT_MS`, default 30000. This is
+/// the outermost clock: generous enough to never fire while the server
+/// honors its own deadlines, small enough that a broken server surfaces
+/// as a typed timeout instead of a wait that never returns.
+pub fn client_timeout_from_env() -> Duration {
+    let ms = std::env::var("SOFTMOE_CLIENT_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .unwrap_or(30_000);
+    Duration::from_millis(ms)
 }
 
 /// A pending server reply. Obtained from [`Client::submit`]; resolves to

@@ -27,7 +27,14 @@
 //! serve/forward=delay:50         # sleep 50ms on every hit
 //! snapshot/read=fail             # report failure on every hit
 //! snapshot/read=fail@1           # report failure on the 1st hit only
+//! http/read=delay:50             # socket-layer sites (see below)
 //! ```
+//!
+//! The HTTP transport adds socket-layer sites wired through [`check`]:
+//! `http/read` (per socket read; `delay:MS` simulates a slow network,
+//! `fail` a peer reset mid-request), `http/write` (per response write;
+//! `fail@N` kills the Nth response mid-flight), and `http/accept`
+//! (`fail@N` drops the Nth accepted connection before it is served).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -219,6 +226,62 @@ pub fn fire(name: &str) {
     }
 }
 
+/// Combined site for code paths where *any* armed action may apply:
+/// one hit increment, then `Panic` panics, `Delay` sleeps (and returns
+/// false), `Fail` returns true when the hit is in range. Use this
+/// instead of calling both `fire()` and `should_fail()` at one site —
+/// each of those increments the hit counter on its own, which would
+/// make `@N` indexing consume two hits per visit. The HTTP transport
+/// sites (`http/read`, `http/write`, `http/accept`) use this so a
+/// single site supports `delay:MS` and `fail@N` specs alike.
+pub fn check(name: &str) -> bool {
+    let st = state();
+    if !st.enabled.load(Ordering::Acquire) {
+        return false;
+    }
+    enum Outcome {
+        Panic(u64),
+        Sleep(Duration),
+        Fail,
+        Nothing,
+    }
+    let outcome = {
+        let map = lock_sites(st);
+        match map.get(name) {
+            None => Outcome::Nothing,
+            Some(site) => {
+                let hit = site.hits.fetch_add(1, Ordering::Relaxed) + 1;
+                match site.action {
+                    Action::Panic { from, to }
+                        if Action::in_range(from, to, hit) =>
+                    {
+                        Outcome::Panic(hit)
+                    }
+                    Action::Delay(d) => Outcome::Sleep(d),
+                    Action::Fail { from, to }
+                        if Action::in_range(from, to, hit) =>
+                    {
+                        Outcome::Fail
+                    }
+                    _ => Outcome::Nothing,
+                }
+            }
+        }
+        // Guard dropped here: never panic or sleep while holding the lock.
+    };
+    match outcome {
+        Outcome::Panic(hit) => {
+            panic!("failpoint {name} fired (hit {hit})")
+        }
+        Outcome::Sleep(d) => {
+            std::thread::sleep(d);
+            false
+        }
+        Outcome::Fail => true,
+        Outcome::Nothing => false,
+    }
+}
+
 /// Production sites that want a *clean error* instead of a panic consult
 /// this. Disarmed: a single atomic load, always false.
 pub fn should_fail(name: &str) -> bool {
@@ -298,6 +361,32 @@ mod tests {
         assert_eq!(parse_entry("nonsense"), None);
         assert_eq!(parse_entry("a=panic@0"), None, "hits are 1-based");
         assert_eq!(parse_entry("a=explode"), None);
+    }
+
+    #[test]
+    fn check_handles_every_action_with_one_hit_each() {
+        // fail@2: first visit passes, second fails, third passes —
+        // proving check() consumes exactly one hit per visit.
+        arm("tests/check-fail", Action::Fail { from: 2, to: Some(2) });
+        assert!(!check("tests/check-fail"));
+        assert!(check("tests/check-fail"));
+        assert!(!check("tests/check-fail"));
+        assert_eq!(hits("tests/check-fail"), 3);
+        disarm("tests/check-fail");
+
+        arm("tests/check-panic", Action::Panic { from: 1, to: Some(1) });
+        assert!(std::panic::catch_unwind(|| check("tests/check-panic"))
+            .is_err());
+        assert!(!check("tests/check-panic"));
+        disarm("tests/check-panic");
+
+        arm("tests/check-delay", Action::Delay(Duration::from_millis(15)));
+        let t0 = std::time::Instant::now();
+        assert!(!check("tests/check-delay"));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        disarm("tests/check-delay");
+
+        assert!(!check("tests/check-unarmed"));
     }
 
     #[test]

@@ -206,7 +206,8 @@ fn main() {
 
     // Prepacked weights vs the per-call pack at the weight-GEMM preset
     // shapes (the serve acceptance criterion: speedup > 1.0), plus bf16
-    // panel storage vs f32 (halved weight-side memory traffic).
+    // and int8 panel storage vs f32 (2x / 4x less weight-side memory
+    // traffic, paid for with per-tile decode ALU work).
     println!("\n== prepacked weights vs per-call pack ==");
     let mut prepacked_rows: Vec<Value> = Vec::new();
     for size in sizes {
@@ -240,11 +241,19 @@ fn main() {
                                                &mut ws);
                     black_box(&out);
                 });
+            let wp8 = PackedPanels::pack(&w, WeightDtype::Int8);
+            let t_i8 =
+                bench.run(&format!("{size}/{name}/prepacked_int8"), || {
+                    matmul_bias_prepacked_into(&a, &wp8, &bias, &mut out,
+                                               &mut ws);
+                    black_box(&out);
+                });
             println!(
                 "    -> {size}/{name}: repack/prepacked {:.2}x, \
-                 repack/bf16 {:.2}x",
+                 repack/bf16 {:.2}x, repack/int8 {:.2}x",
                 t_repack / t_pre,
-                t_repack / t_b16
+                t_repack / t_b16,
+                t_repack / t_i8
             );
             let mut o = Value::obj();
             o.set("name", Value::Str(format!("{size}/{name}")));
@@ -254,8 +263,13 @@ fn main() {
             o.set("repack_ms", Value::Num(t_repack * 1e3));
             o.set("prepacked_f32_ms", Value::Num(t_pre * 1e3));
             o.set("prepacked_bf16_ms", Value::Num(t_b16 * 1e3));
+            o.set("prepacked_int8_ms", Value::Num(t_i8 * 1e3));
             o.set("speedup", Value::Num(t_repack / t_pre));
             o.set("bf16_speedup", Value::Num(t_repack / t_b16));
+            o.set("int8_speedup", Value::Num(t_repack / t_i8));
+            // Quantized vs bf16 panels: same staging structure, half
+            // the weight-side memory traffic plus the dequant ALU cost.
+            o.set("int8_vs_bf16", Value::Num(t_b16 / t_i8));
             prepacked_rows.push(o);
         }
         // The grouped expert shape through the prepacked grouped driver.
@@ -279,13 +293,26 @@ fn main() {
                                               None, true, &mut hid, &mut ws);
                 black_box(&hid);
             });
-        println!("    -> {size}/experts: grouped repack/prepacked {:.2}x",
-                 t_grouped / t_gpre);
+        let w1p8 = PackedPanels::pack_grouped(&w1.data, d, eh,
+                                              WeightDtype::Int8);
+        let t_gpre8 =
+            bench.run(&format!("{size}/experts/grouped_prepacked_int8"),
+                      || {
+                matmul_grouped_prepacked_into(&xs, &w1p8, Some(&b1.data),
+                                              sp, None, true, &mut hid,
+                                              &mut ws);
+                black_box(&hid);
+            });
+        println!("    -> {size}/experts: grouped repack/prepacked {:.2}x, \
+                  repack/int8 {:.2}x",
+                 t_grouped / t_gpre, t_grouped / t_gpre8);
         let mut o = Value::obj();
         o.set("name", Value::Str(format!("{size}/experts_grouped")));
         o.set("repack_ms", Value::Num(t_grouped * 1e3));
         o.set("prepacked_f32_ms", Value::Num(t_gpre * 1e3));
+        o.set("prepacked_int8_ms", Value::Num(t_gpre8 * 1e3));
         o.set("speedup", Value::Num(t_grouped / t_gpre));
+        o.set("int8_speedup", Value::Num(t_grouped / t_gpre8));
         prepacked_rows.push(o);
     }
 

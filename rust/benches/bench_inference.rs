@@ -54,7 +54,7 @@ fn main() {
     }
 
     // --- Prepared (prepacked-weight) native inference: repack vs
-    // prepacked, and f32 vs bf16 panel storage, in tokens/s.
+    // prepacked, and f32 vs bf16 vs int8 panel storage, in tokens/s.
     println!("\n== prepared-model inference (native soft, batch 8) ==");
     let mut prepared_rows: Vec<Value> = Vec::new();
     for size in sizes {
@@ -69,7 +69,8 @@ fn main() {
         let mut row = Value::obj();
         row.set("name", Value::Str(format!("soft_{size}/b8")));
         row.set("repack_tokens_per_s", Value::Num(tokens / t_repack));
-        for dtype in [WeightDtype::F32, WeightDtype::Bf16] {
+        for dtype in [WeightDtype::F32, WeightDtype::Bf16,
+                      WeightDtype::Int8] {
             let prep = PreparedModel::new(&model, &params, dtype);
             let t = bench.run(
                 &format!("prepared/{size}/{}_b8", dtype.name()), || {
@@ -101,51 +102,60 @@ fn main() {
         let cfg = ModelConfig::preset(size, MoeType::Soft).unwrap();
         let model = VitModel::new(cfg.clone());
         let params = model.init(0);
-        let dtype = WeightDtype::from_env();
         let images = rand_images(1, cfg.image_size, 9);
+        // All three storage dtypes: file size shrinks with the dtype
+        // (int8 carries its f32 scale arrays, so slightly over 1/4 of
+        // f32) while load stays an mmap + header parse.
+        for dtype in [WeightDtype::F32, WeightDtype::Bf16,
+                      WeightDtype::Int8] {
+            let sw = Stopwatch::start();
+            let prep = PreparedModel::new(&model, &params, dtype);
+            let prepack_secs = sw.elapsed_secs();
+            let sw = Stopwatch::start();
+            let _ = black_box(prep.forward(&images));
+            let prepack_first = prepack_secs + sw.elapsed_secs();
 
-        let sw = Stopwatch::start();
-        let prep = PreparedModel::new(&model, &params, dtype);
-        let prepack_secs = sw.elapsed_secs();
-        let sw = Stopwatch::start();
-        let _ = black_box(prep.forward(&images));
-        let prepack_first = prepack_secs + sw.elapsed_secs();
+            let file = snap_dir.join(
+                format!("{size}-{}.panels", dtype.name()));
+            let sw = Stopwatch::start();
+            prep.save_snapshot(&file).unwrap();
+            let save_secs = sw.elapsed_secs();
 
-        let file = snap_dir.join(format!("{size}.panels"));
-        let sw = Stopwatch::start();
-        prep.save_snapshot(&file).unwrap();
-        let save_secs = sw.elapsed_secs();
+            let sw = Stopwatch::start();
+            let loaded = PreparedModel::load_snapshot(&model, &file, dtype)
+                .unwrap();
+            let load_secs = sw.elapsed_secs();
+            let sw = Stopwatch::start();
+            let _ = black_box(loaded.forward(&images));
+            let load_first = load_secs + sw.elapsed_secs();
 
-        let sw = Stopwatch::start();
-        let loaded = PreparedModel::load_snapshot(&model, &file, dtype)
-            .unwrap();
-        let load_secs = sw.elapsed_secs();
-        let sw = Stopwatch::start();
-        let _ = black_box(loaded.forward(&images));
-        let load_first = load_secs + sw.elapsed_secs();
-
-        let file_bytes = std::fs::metadata(&file).unwrap().len();
-        println!(
-            "    -> {size}: prepack {:.2} ms vs snapshot load {:.2} ms \
-             ({:.1}x); cold-start-to-first-token {:.2} -> {:.2} ms \
-             (file {:.1} MiB, save {:.2} ms)",
-            prepack_secs * 1e3, load_secs * 1e3,
-            prepack_secs / load_secs.max(1e-9),
-            prepack_first * 1e3, load_first * 1e3,
-            file_bytes as f64 / (1024.0 * 1024.0), save_secs * 1e3
-        );
-        let mut row = Value::obj();
-        row.set("name", Value::Str(format!("soft_{size}")));
-        row.set("dtype", Value::Str(dtype.name().to_string()));
-        row.set("prepack_secs", Value::Num(prepack_secs));
-        row.set("snapshot_load_secs", Value::Num(load_secs));
-        row.set("snapshot_save_secs", Value::Num(save_secs));
-        row.set("cold_first_token_prepack_secs", Value::Num(prepack_first));
-        row.set("cold_first_token_snapshot_secs", Value::Num(load_first));
-        row.set("load_speedup", Value::Num(
-            prepack_secs / load_secs.max(1e-9)));
-        row.set("file_bytes", Value::from(file_bytes as usize));
-        snapshot_rows.push(row);
+            let file_bytes = std::fs::metadata(&file).unwrap().len();
+            println!(
+                "    -> {size}/{}: prepack {:.2} ms vs snapshot load \
+                 {:.2} ms ({:.1}x); cold-start-to-first-token {:.2} -> \
+                 {:.2} ms (file {:.1} MiB, save {:.2} ms)",
+                dtype.name(),
+                prepack_secs * 1e3, load_secs * 1e3,
+                prepack_secs / load_secs.max(1e-9),
+                prepack_first * 1e3, load_first * 1e3,
+                file_bytes as f64 / (1024.0 * 1024.0), save_secs * 1e3
+            );
+            let mut row = Value::obj();
+            row.set("name", Value::Str(
+                format!("soft_{size}/{}", dtype.name())));
+            row.set("dtype", Value::Str(dtype.name().to_string()));
+            row.set("prepack_secs", Value::Num(prepack_secs));
+            row.set("snapshot_load_secs", Value::Num(load_secs));
+            row.set("snapshot_save_secs", Value::Num(save_secs));
+            row.set("cold_first_token_prepack_secs",
+                    Value::Num(prepack_first));
+            row.set("cold_first_token_snapshot_secs",
+                    Value::Num(load_first));
+            row.set("load_speedup", Value::Num(
+                prepack_secs / load_secs.max(1e-9)));
+            row.set("file_bytes", Value::from(file_bytes as usize));
+            snapshot_rows.push(row);
+        }
     }
     let _ = std::fs::remove_dir_all(&snap_dir);
 
@@ -227,7 +237,8 @@ fn main() {
     let _ = bench.save_csv(std::path::Path::new(
         "reports/bench_inference.csv"));
     // Machine-readable perf trajectory (tracked across PRs), including
-    // the prepacked f32-vs-bf16 tokens/s comparison.
+    // the prepacked f32/bf16/int8 tokens/s comparison and the per-dtype
+    // snapshot cold starts.
     let mut root = bench.to_json();
     root.set("prepared", Value::Arr(prepared_rows));
     root.set("snapshot", Value::Arr(snapshot_rows));

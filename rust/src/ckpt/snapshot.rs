@@ -20,15 +20,26 @@
 //!           aligned offset, zero padding in between
 //! ```
 //!
-//! Header JSON fields: `version` (1), `endian` ("little"/"big" — the
+//! Header JSON fields: `version` (2), `endian` ("little"/"big" — the
 //! blobs are raw native-endian element bytes, so a file only loads on a
-//! same-endian host), `dtype` ("f32"/"bf16" panel storage), `nr`/`kc`
-//! (the kernel panel layout the blobs were packed for —
-//! [`tensor::panel_layout`]; a mismatch means the panels would feed the
-//! microkernel garbage, so the loader rejects it), `blob_bytes`,
-//! `checksum` (FNV-1a 64 over the whole blob region, hex), and
-//! `entries`: `{name, kind: "panels"|"f32", k, n, groups | len, offset,
-//! bytes}` with offsets relative to the blob base.
+//! same-endian host), `dtype` (the file's *nominal* panel storage:
+//! "f32"/"bf16"/"int8" — what the snapshot was requested at; individual
+//! entries may differ, see below), `nr`/`kc` (the kernel panel layout
+//! the blobs were packed for — [`tensor::panel_layout`]; a mismatch
+//! means the panels would feed the microkernel garbage, so the loader
+//! rejects it), `blob_bytes`, `checksum` (FNV-1a 64 over the whole blob
+//! region, hex), and `entries`: `{name, kind: "panels"|"f32", dtype
+//! (panels only), k, n, groups | len, offset, bytes}` with offsets
+//! relative to the blob base.
+//!
+//! Version history: v1 (PR 5) had no per-entry dtype — every panels
+//! entry was stored at the file dtype. v2 records each entry's own
+//! dtype (the int8 router policy keeps Φ/gates at bf16 inside an int8
+//! file) and adds the int8 payload shape: an int8 entry's payload is
+//! `[quantized blob | zero pad to 64 | f32 scale+zero-point arrays]` in
+//! one entry (single offset/bytes), so both segments land 64-byte
+//! aligned and map as zero-copy views. v1 readers reject v2 files (and
+//! vice versa) by the version check below.
 //!
 //! # Validation
 //!
@@ -82,7 +93,7 @@ impl std::error::Error for SnapshotFileInvalid {}
 pub(crate) fn file_invalid(msg: String) -> anyhow::Error {
     anyhow::Error::new(SnapshotFileInvalid).context(msg)
 }
-const VERSION: usize = 1;
+const VERSION: usize = 2;
 /// Blob alignment: every entry payload starts on a 64-byte boundary so
 /// mapped f32/u16 views are always well-aligned (and cache-line-clean).
 const ALIGN: usize = 64;
@@ -107,6 +118,7 @@ fn dtype_parse(s: &str) -> Result<WeightDtype> {
     match s {
         "f32" => Ok(WeightDtype::F32),
         "bf16" => Ok(WeightDtype::Bf16),
+        "int8" => Ok(WeightDtype::Int8),
         other => bail!("snapshot has unknown weight dtype '{other}'"),
     }
 }
@@ -192,47 +204,56 @@ pub enum EntryRef<'a> {
 }
 
 impl EntryRef<'_> {
-    fn byte_len(&self) -> usize {
+    /// The payload as segments: the main blob, plus (int8 panels only)
+    /// the f32 scale/zero-point arrays, which the writer emits after
+    /// padding the blob to the 64-byte alignment so the mapped scales
+    /// view is aligned too.
+    fn segments(&self) -> (&[u8], Option<&[u8]>) {
         match self {
-            EntryRef::Panels(p) => p.panel_bytes().len(),
-            EntryRef::F32s(v) => v.len() * 4,
+            EntryRef::Panels(p) => (p.panel_bytes(), p.scale_bytes()),
+            EntryRef::F32s(v) => (util::f32s_as_bytes(v), None),
         }
     }
 
-    fn bytes(&self) -> &[u8] {
-        match self {
-            EntryRef::Panels(p) => p.panel_bytes(),
-            EntryRef::F32s(v) => util::f32s_as_bytes(v),
+    /// Total payload bytes including the inter-segment padding —
+    /// matches `PackedPanels::expected_panel_bytes` for panels entries.
+    fn byte_len(&self) -> usize {
+        let (s1, s2) = self.segments();
+        match s2 {
+            Some(s2) => align_up(s1.len()) + s2.len(),
+            None => s1.len(),
         }
     }
 }
 
-/// Write a snapshot holding `entries` (in order) with panel storage
-/// `dtype`. Every `Panels` entry must already be stored at `dtype` —
-/// the file has one dtype, validated at load. `params_fp` is the
-/// fingerprint of the `ParamStore` the panels were packed from
-/// ([`crate::ckpt::params_fingerprint`]); loaders compare it against
-/// the store they are asked to serve so a stale snapshot (retrained
-/// checkpoint, same file) is rejected instead of silently serving old
-/// weights.
+/// Write a snapshot holding `entries` (in order); `dtype` is the
+/// file's nominal panel storage (what the snapshot was requested at —
+/// compared against the loader's requested dtype). Each `Panels` entry
+/// records its own storage dtype, which may differ from the nominal one
+/// (the int8 router policy stores Φ/gates at bf16 inside an int8
+/// file). `params_fp` is the fingerprint of the `ParamStore` the
+/// panels were packed from ([`crate::ckpt::params_fingerprint`]);
+/// loaders compare it against the store they are asked to serve so a
+/// stale snapshot (retrained checkpoint, same file) is rejected instead
+/// of silently serving old weights.
 pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
                       entries: &[(String, EntryRef<'_>)]) -> Result<()> {
     // Pass 1: offsets + checksum over the exact bytes pass 2 will emit
-    // (payloads and inter-blob zero padding).
+    // (payload segments, deterministic inter-segment padding, and
+    // inter-blob zero padding).
     let mut metas = Vec::with_capacity(entries.len());
     let mut sum = Fnv64::new();
     let zeros = [0u8; ALIGN];
     let mut off = 0usize;
     for (name, e) in entries {
         let bytes = e.byte_len();
-        if let EntryRef::Panels(p) = e {
-            if p.dtype() != dtype {
-                bail!("entry '{name}' is {} but the snapshot dtype is {}",
-                      dtype_name(p.dtype()), dtype_name(dtype));
-            }
-        }
         metas.push((name.as_str(), off, bytes));
-        sum.update(e.bytes());
+        let (s1, s2) = e.segments();
+        sum.update(s1);
+        if let Some(s2) = s2 {
+            sum.update(&zeros[..align_up(s1.len()) - s1.len()]);
+            sum.update(s2);
+        }
         let padded = align_up(bytes);
         sum.update(&zeros[..padded - bytes]);
         off = off
@@ -260,6 +281,7 @@ pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
         match e {
             EntryRef::Panels(p) => {
                 v.set("kind", Value::from("panels"));
+                v.set("dtype", Value::from(dtype_name(p.dtype())));
                 v.set("k", Value::from(p.k_rows()));
                 v.set("n", Value::from(p.n_cols()));
                 v.set("groups", Value::from(p.groups()));
@@ -298,9 +320,14 @@ pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
         let head_len = PANELS_MAGIC.len() + 4 + header_s.len();
         w.write_all(&zeros[..align_up(head_len) - head_len])?;
         for (_name, e) in entries {
-            let bytes = e.bytes();
-            w.write_all(bytes)?;
-            w.write_all(&zeros[..align_up(bytes.len()) - bytes.len()])?;
+            let (s1, s2) = e.segments();
+            w.write_all(s1)?;
+            if let Some(s2) = s2 {
+                w.write_all(&zeros[..align_up(s1.len()) - s1.len()])?;
+                w.write_all(s2)?;
+            }
+            let total = e.byte_len();
+            w.write_all(&zeros[..align_up(total) - total])?;
         }
         let f = w.into_inner()
             .map_err(|e| anyhow::anyhow!("flush snapshot: {e}"))?;
@@ -333,6 +360,10 @@ enum EntryKind {
 
 struct Entry {
     kind: EntryKind,
+    /// This entry's own storage dtype (panels; `F32` for f32 vectors).
+    /// May differ from the file's nominal dtype — the int8 router
+    /// policy stores Φ/gates at bf16 inside an int8 file.
+    dtype: WeightDtype,
     /// (k, n, groups) for panels; (len, 0, 0) for f32 vectors.
     dims: (usize, usize, usize),
     /// Offset into the blob region (64-byte aligned).
@@ -465,18 +496,24 @@ impl SnapshotFile {
                 "f32" => EntryKind::F32s,
                 other => bail!("entry '{name}' has unknown kind '{other}'"),
             };
-            let dims = match kind {
+            let (edtype, dims) = match kind {
                 EntryKind::Panels => (
-                    e.req("k")?.as_usize().context("k")?,
-                    e.req("n")?.as_usize().context("n")?,
-                    e.req("groups")?.as_usize().context("groups")?,
+                    dtype_parse(
+                        e.req("dtype")?.as_str().context("entry dtype")?)?,
+                    (
+                        e.req("k")?.as_usize().context("k")?,
+                        e.req("n")?.as_usize().context("n")?,
+                        e.req("groups")?.as_usize().context("groups")?,
+                    ),
                 ),
-                EntryKind::F32s => {
-                    (e.req("len")?.as_usize().context("len")?, 0, 0)
-                }
+                EntryKind::F32s => (
+                    WeightDtype::F32,
+                    (e.req("len")?.as_usize().context("len")?, 0, 0),
+                ),
             };
             if entries.insert(name.clone(),
-                              Entry { kind, dims, offset, bytes })
+                              Entry { kind, dtype: edtype, dims, offset,
+                                      bytes })
                 .is_some()
             {
                 bail!("duplicate snapshot entry '{name}'");
@@ -485,7 +522,9 @@ impl SnapshotFile {
         Ok(SnapshotFile { map, dtype, params_fp, blob_base, entries })
     }
 
-    /// Panel storage dtype of every `panels` entry in this file.
+    /// The file's nominal panel storage dtype (what the snapshot was
+    /// requested at). Individual entries may be stored differently —
+    /// [`SnapshotFile::panels`] honors each entry's own dtype.
     pub fn dtype(&self) -> WeightDtype {
         self.dtype
     }
@@ -523,7 +562,11 @@ impl SnapshotFile {
     }
 
     /// The packed panels stored under `name`, validated against the
-    /// model-expected dims, as a zero-copy view of the mapped region.
+    /// model-expected dims, as a zero-copy view of the mapped region
+    /// (for int8 entries: views over both the quantized blob and the
+    /// scale/zero-point arrays). The entry's own recorded dtype governs
+    /// the reconstruction, so mixed-dtype files (int8 with bf16 router
+    /// surfaces) reload exactly as they were prepared.
     pub fn panels(&self, name: &str, k: usize, n: usize, groups: usize)
         -> Result<PackedPanels> {
         let e = self.entry(name, EntryKind::Panels)?;
@@ -535,13 +578,13 @@ impl SnapshotFile {
             );
         }
         let expect =
-            PackedPanels::expected_panel_bytes(k, n, groups, self.dtype);
+            PackedPanels::expected_panel_bytes(k, n, groups, e.dtype);
         if e.bytes != expect {
             bail!("snapshot entry '{name}' holds {} bytes, {} panel \
                    layout needs {expect}", e.bytes,
-                  dtype_name(self.dtype));
+                  dtype_name(e.dtype));
         }
-        Ok(PackedPanels::from_mapped(k, n, groups, self.dtype, &self.map,
+        Ok(PackedPanels::from_mapped(k, n, groups, e.dtype, &self.map,
                                      self.blob_base + e.offset, e.bytes))
     }
 
@@ -630,7 +673,8 @@ mod tests {
 
     #[test]
     fn roundtrip_preserves_bytes_and_dims() {
-        for dtype in [WeightDtype::F32, WeightDtype::Bf16] {
+        for dtype in
+            [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8] {
             let path = tmpfile(dtype.name());
             let (a, b, v) = write_sample(&path, dtype);
             let snap = SnapshotFile::open(&path).unwrap();
@@ -642,6 +686,11 @@ mod tests {
             assert!(la.is_view() && lb.is_view());
             assert_eq!(la.panel_bytes(), a.panel_bytes());
             assert_eq!(lb.panel_bytes(), b.panel_bytes());
+            // int8 carries the scale/zero-point arrays too — they must
+            // round-trip byte-exact as zero-copy views alongside the
+            // quantized blob (None == None for f32/bf16).
+            assert_eq!(la.scale_bytes(), a.scale_bytes());
+            assert_eq!(lb.scale_bytes(), b.scale_bytes());
             assert_eq!(snap.f32s("bias", 37).unwrap(), v);
             // Shape/kind mismatches are clean errors.
             assert!(snap.panels("w/a", 96, 300, 1).is_err());
@@ -652,6 +701,57 @@ mod tests {
             drop(snap);
             std::fs::remove_file(&path).unwrap();
         }
+    }
+
+    #[test]
+    fn mixed_dtype_entries_reload_at_their_own_dtype() {
+        // The int8 router policy stores Φ/gates at bf16 inside an int8
+        // file: per-entry dtypes must round-trip independently of the
+        // file's nominal dtype.
+        let path = tmpfile("mixed");
+        let mut rng = Rng::new(9);
+        let big = Tensor::randn(&[300, 96], 1.0, &mut rng);
+        let q = PackedPanels::pack(&big, WeightDtype::Int8);
+        let h = PackedPanels::pack(&big, WeightDtype::Bf16);
+        let entries = vec![
+            ("w/q".to_string(), EntryRef::Panels(&q)),
+            ("w/h".to_string(), EntryRef::Panels(&h)),
+        ];
+        write_snapshot(&path, WeightDtype::Int8, 1, &entries).unwrap();
+        let snap = SnapshotFile::open(&path).unwrap();
+        assert_eq!(snap.dtype(), WeightDtype::Int8);
+        let lq = snap.panels("w/q", 300, 96, 1).unwrap();
+        let lh = snap.panels("w/h", 300, 96, 1).unwrap();
+        assert_eq!(lq.dtype(), WeightDtype::Int8);
+        assert_eq!(lh.dtype(), WeightDtype::Bf16);
+        assert!(lq.is_view() && lh.is_view());
+        assert_eq!(lq.panel_bytes(), q.panel_bytes());
+        assert_eq!(lq.scale_bytes(), q.scale_bytes());
+        assert_eq!(lh.panel_bytes(), h.panel_bytes());
+        drop((lq, lh));
+        drop(snap);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_rejected_both_directions() {
+        // v2 readers must reject other versions cleanly — a patched
+        // lower version stands in for a real v1 file (same check, same
+        // message), a higher one for a future format.
+        let path = tmpfile("version");
+        write_sample(&path, WeightDtype::F32);
+        let data = std::fs::read(&path).unwrap();
+        let find = format!("\"version\":{VERSION}").into_bytes();
+        for wrong in ["\"version\":1", "\"version\":3"] {
+            std::fs::write(&path, patch(&data, &find, wrong.as_bytes()))
+                .unwrap();
+            let err = SnapshotFile::open(&path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("snapshot version")
+                        && msg.contains("this build reads"),
+                    "{msg}");
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

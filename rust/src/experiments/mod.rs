@@ -58,6 +58,7 @@ impl ExpOptions {
 /// All experiment ids (keep in sync with DESIGN.md §5).
 pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("pareto", "Fig.3/Table 9: training cost vs quality Pareto"),
+    ("pareto_dtype", "serving dtype front: f32/bf16/int8 cost vs quality"),
     ("longrun", "Fig.4/Table 2: long-horizon runs per model class"),
     ("inference", "Fig.5/Table 1: inference-optimized models"),
     ("experts_scaling", "Fig.6/20/21/26: experts at fixed total slots"),
@@ -78,6 +79,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
     let opts = ExpOptions::from_args(args)?;
     match id {
         "pareto" => pareto::run(&opts),
+        "pareto_dtype" => pareto::run_dtype(&opts),
         "longrun" => pareto::run_longrun(&opts),
         "inference" => inference::run(&opts),
         "experts_scaling" => experts_scaling::run_fixed_slots(&opts),

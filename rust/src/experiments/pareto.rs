@@ -1,6 +1,7 @@
 //! Fig. 3 / Fig. 22–25 / Table 9: the training-cost vs quality Pareto
-//! sweep over model sizes and routing algorithms, and the Fig. 4 /
-//! Table 2 long-run variant.
+//! sweep over model sizes and routing algorithms, the Fig. 4 /
+//! Table 2 long-run variant, and the serving-side dtype front
+//! (f32/bf16/int8 panel storage on one trained model).
 //!
 //! Paper shape to reproduce: at every FLOP/wall-clock budget, Soft MoE
 //! sits above Dense and the sparse routers on both metrics (synth p@1 ~
@@ -24,6 +25,68 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     let sizes: &[&str] = if opts.quick { &["mu"] } else { &["mu", "ti", "s"] };
     let steps = if opts.quick { opts.steps.min(40) } else { opts.steps };
     sweep("pareto", sizes, steps, opts)
+}
+
+/// Inference-dtype Pareto front: ONE trained model served at each of
+/// the three panel dtypes (f32/bf16/int8) — eval quality vs resident
+/// weight bytes and forward throughput. The quantization analogue of
+/// the cost/quality sweep above: training is held fixed, so any p@1
+/// movement is pure storage-dtype effect (int8 keeps its routing
+/// matrices at bf16, which is why routing decisions — and usually p@1 —
+/// survive quantization unchanged).
+pub fn run_dtype(opts: &ExpOptions) -> Result<()> {
+    use crate::nn::{PreparedModel, VitModel};
+    use crate::tensor::WeightDtype;
+    use crate::util::Stopwatch;
+
+    let steps = if opts.quick { opts.steps.min(40) } else { opts.steps };
+    let size = if opts.quick { "mu" } else { "s" };
+    let data = exp_dataset(opts.seed);
+    let cfg = exp_config(size, MoeType::Soft);
+    let (_backend, state) = common::train_keep_state(
+        &cfg, &data, steps, opts.batch_size, opts.seed as i32)?;
+    let model = VitModel::new(cfg.clone());
+
+    // Pre-generate the eval batches so the timed loop measures forward
+    // passes only, not synthetic-image generation.
+    let nbatches = if opts.quick { 2 } else { 8 };
+    let batches: Vec<_> = (0..nbatches)
+        .map(|b| data.eval_batch((b * opts.batch_size) as u64,
+                                 opts.batch_size))
+        .collect();
+
+    let mut table = Table::new(&[
+        "model", "dtype", "resident_mb", "synth_p@1", "images_per_s",
+    ]);
+    for dtype in [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8] {
+        let prep = PreparedModel::new(&model, &state.params, dtype);
+        // Warm pass: populate pools/workspaces outside the timed loop.
+        prep.forward(&batches[0].0);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let sw = Stopwatch::start();
+        for (images, labels) in &batches {
+            let out = prep.forward(images);
+            correct += crate::eval::count_correct(&out.logits, labels);
+            total += labels.len();
+        }
+        let secs = sw.elapsed_secs();
+        let p1 = correct as f64 / total as f64;
+        let mb = prep.resident_bytes() as f64 / (1024.0 * 1024.0);
+        let ips = total as f64 / secs.max(1e-9);
+        println!(
+            "  {size}/{:<5} {mb:>8.3} MB  p@1 {p1:.3}  {ips:.0} img/s",
+            dtype.name()
+        );
+        table.row(vec![
+            size.to_string(),
+            dtype.name().to_string(),
+            f(mb, 3),
+            f(p1, 4),
+            f(ips, 1),
+        ]);
+    }
+    opts.save("pareto_dtype", &table)
 }
 
 /// Fig. 4 / Table 2: longer horizon, larger budget per class.

@@ -56,7 +56,7 @@ fn usage() {
          [--replicas N --queue-cap N --deadline-ms N --listen ADDR]\n  \
          eval        --model soft_s --ckpt-dir DIR --ckpt NAME\n  \
          snapshot    --model soft_s --ckpt-dir DIR [--ckpt NAME] \
-         --out FILE.panels [--dtype f32|bf16]\n  \
+         --out FILE.panels [--dtype f32|bf16|int8]\n  \
          experiment  <id>|all|list [--steps N --quick]\n  \
          models      [--artifacts DIR]\n  \
          flops       print the analytic cost table\n\n\
@@ -392,7 +392,8 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
     {
         "f32" => WeightDtype::F32,
         "bf16" => WeightDtype::Bf16,
-        other => bail!("--dtype={other}: expected f32|bf16"),
+        "int8" => WeightDtype::Int8,
+        other => bail!("--dtype={other}: expected f32|bf16|int8"),
     };
 
     let params = ckpt::load_params(&dir, &format!("{name}.params"))?;

@@ -350,7 +350,11 @@ impl PreparedSparseRouter {
     pub fn new(wg: &Tensor, experts: &ExpertParams, dtype: WeightDtype)
         -> Self {
         Self {
-            wg: PackedPanels::pack(wg, dtype),
+            // The gate's logits pick which experts run — under int8 the
+            // router policy caps it at bf16
+            // ([`WeightDtype::router_dtype`]); expert MLPs take the full
+            // requested dtype.
+            wg: PackedPanels::pack(wg, dtype.router_dtype()),
             experts: PreparedExperts::new(experts, dtype),
         }
     }

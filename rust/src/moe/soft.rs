@@ -283,11 +283,15 @@ impl SoftMoe {
 /// the EXACT op sequence of the per-call paths (copy, in-place column
 /// normalize, scale multiply) before packing. The one implementation
 /// behind both [`SoftMoe::prepare`] and `nn::PreparedModel`, so the f32
-/// bit-identity contract has a single maintenance point.
+/// bit-identity contract has a single maintenance point — which is also
+/// where the router dtype policy applies: Φ's logits decide the
+/// dispatch/combine softmaxes, so int8 storage caps here at bf16
+/// ([`WeightDtype::router_dtype`]).
 pub(crate) fn pack_phi_for_inference(phi: &[f32], d: usize, s: usize,
                                      scale: f32, normalize: bool,
                                      dtype: WeightDtype) -> PackedPanels {
     assert_eq!(phi.len(), d * s, "Φ len {} vs {d}x{s}", phi.len());
+    let dtype = dtype.router_dtype();
     if normalize {
         let mut t = Tensor::from_vec(&[d, s], phi.to_vec());
         with_workspace(|ws| l2_normalize_cols_inplace(&mut t, ws));

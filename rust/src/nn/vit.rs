@@ -2038,8 +2038,17 @@ fn assert_prepared_model_is_shareable() {
 /// weight matrix on the inference path — patch embed, the attention
 /// projections, dense MLPs, the stacked expert manifests, Soft MoE's Φ
 /// and the sparse gates, the classifier head — is pre-packed into the
-/// GEMM panel layout ([`PackedPanels`]), stored as f32 or bf16
+/// GEMM panel layout ([`PackedPanels`]), stored as f32, bf16, or int8
 /// (`SOFTMOE_WEIGHT_DTYPE`), with LayerNorm/bias vectors owned alongside.
+///
+/// Per-matrix dtype policy: every GEMM weight takes the requested
+/// dtype, **except** the routing surfaces — the folded Φ and the sparse
+/// gates — which are capped at bf16 under int8
+/// ([`WeightDtype::router_dtype`]): their logits feed softmaxes whose
+/// argmax/top-k pick *which* experts run, and int8's coarse per-column
+/// steps can flip those discrete decisions. Bias/LayerNorm/positional
+/// vectors always stay f32 (they are O(d) — quantizing them saves
+/// nothing and LN is precision-sensitive).
 ///
 /// Built once (e.g. by `Server::run` at startup); the steady-state
 /// forward then performs **zero** pack passes over weights
@@ -2106,8 +2115,10 @@ impl PreparedModel {
                     }
                     MoeType::TokensChoice | MoeType::ExpertsChoice => {
                         PreparedMoeBlock::Sparse {
+                            // Router policy: gates cap at bf16 under
+                            // int8 (see the struct docs).
                             wg: PackedPanels::pack(model.get(p, &bk.wg),
-                                                   dtype),
+                                                   dtype.router_dtype()),
                             experts,
                         }
                     }
@@ -2810,6 +2821,38 @@ mod tests {
                 // in rust/tests/kernel_dispatch.rs.)
                 assert!((a - b).abs() < 0.05,
                         "{moe:?} bf16 logits drift: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_int8_forward_close_and_smaller() {
+        for moe in [MoeType::Soft, MoeType::TokensChoice] {
+            let cfg = tiny_cfg(moe);
+            let model = VitModel::new(cfg.clone());
+            let p = model.init(0);
+            let bf16p = PreparedModel::new(&model, &p, WeightDtype::Bf16);
+            let i8p = PreparedModel::new(&model, &p, WeightDtype::Int8);
+            assert_eq!(i8p.dtype(), WeightDtype::Int8);
+            // int8 matrices are 1 byte/elem vs 2 for bf16; scale arrays
+            // and the bf16-held router matrices keep it from a strict 2x,
+            // but the footprint must still land below bf16's.
+            assert!(i8p.resident_bytes() < bf16p.resident_bytes(),
+                    "{moe:?}: int8 must shrink below bf16");
+            let imgs = rand_images(1, &cfg, 4);
+            let mut ws = Workspace::new();
+            let (lw, _) = model.forward_item_infer(&p, &imgs, 0, &mut ws);
+            let (lp, fp) = i8p.forward_item_infer(&imgs, 0, &mut ws);
+            assert!(fp.iter().all(|v| v.is_finite()));
+            for (a, b) in lp.iter().zip(&lw) {
+                // Per-column affine int8 quantization bounds each weight's
+                // error by half a quantization step (<= range/510); across
+                // this tiny model the logits stay within a small band. The
+                // rigorous k-scaled GEMM bound lives in
+                // rust/tests/kernel_dispatch.rs; routing matrices stay
+                // bf16 so the discrete routing decisions are unchanged.
+                assert!((a - b).abs() < 0.08,
+                        "{moe:?} int8 logits drift: {a} vs {b}");
             }
         }
     }

@@ -512,6 +512,87 @@ pub fn encode_bf16_slice(src: &[f32], dst: &mut [u16]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// int8 panel codec — affine per-column quantization for prepacked weights
+// ---------------------------------------------------------------------------
+//
+// `tensor::PackedPanels` may store pre-packed B panels as int8 with one
+// f32 (scale, zero_point) pair per *column* of B, quartering the
+// weight-side memory traffic vs f32. The affine map is chosen once per
+// column at prepare time from that column's [lo, hi] range:
+//
+//     scale = (hi - lo) / 255        zero_point = lo + 128 * scale
+//     decode(q) = q as f32 * scale + zero_point
+//     encode(v) = clamp(round((v - zero_point) / scale), -128, 127)
+//
+// so q = -128 decodes to exactly `lo` and q = 127 to exactly `hi`, and
+// the worst-case absolute error is scale/2 = (hi - lo)/510 per element.
+// Degenerate columns (hi <= lo, i.e. constant) get scale = 0 and
+// zero_point = lo: every element encodes to 0 and decodes to exactly
+// `lo` — which also makes the all-zero padding lanes of a panel (scale
+// 0, zero_point 0, q 0) decode to exactly 0.0, matching `pack_b`'s
+// zero padding bit for bit.
+//
+// As with bf16, compute stays f32: the prepacked GEMM driver decodes one
+// L1-sized panel slab at a time right before the microkernel consumes it
+// (`gemm_rows_int8` in `tensor`), so the microkernels never see int8.
+// Everything here uses the same `q * scale + zp` expression, so the
+// panel decode, the small-matrix row-major rebuild, and the snapshot
+// reload all produce bit-identical f32 values.
+
+/// Per-column affine parameters from the column's value range.
+/// Returns `(scale, zero_point)`; a degenerate range (`hi <= lo`)
+/// yields `(0.0, lo)`.
+#[inline]
+pub fn int8_quant_params(lo: f32, hi: f32) -> (f32, f32) {
+    if !(hi > lo) {
+        return (0.0, lo);
+    }
+    let scale = (hi - lo) / 255.0;
+    (scale, lo + 128.0 * scale)
+}
+
+/// Encode one f32 with the column's affine parameters.
+#[inline]
+pub fn int8_encode(v: f32, scale: f32, zp: f32) -> i8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let q = ((v - zp) / scale).round();
+    q.clamp(-128.0, 127.0) as i8
+}
+
+/// Decode one int8 with the column's affine parameters. This exact
+/// expression is the codec's single source of truth for decode bits.
+#[inline]
+pub fn int8_decode(q: i8, scale: f32, zp: f32) -> f32 {
+    q as f32 * scale + zp
+}
+
+/// Decode one packed panel slab (`kb` rows × `nr` lanes, row-major
+/// within the slab) into f32, applying lane `j`'s `(scales[j], zps[j])`
+/// to every row. This is the L1-tile staging step of `gemm_rows_int8`.
+#[inline]
+pub fn decode_int8_panel(
+    src: &[i8],
+    kb: usize,
+    nr: usize,
+    scales: &[f32],
+    zps: &[f32],
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(src.len(), kb * nr);
+    debug_assert!(dst.len() >= kb * nr);
+    debug_assert!(scales.len() >= nr && zps.len() >= nr);
+    for kk in 0..kb {
+        let row = &src[kk * nr..(kk + 1) * nr];
+        let out = &mut dst[kk * nr..(kk + 1) * nr];
+        for j in 0..nr {
+            out[j] = int8_decode(row[j], scales[j], zps[j]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -599,6 +680,67 @@ mod tests {
         decode_bf16_slice(&enc, &mut dec);
         for (a, b) in src.iter().zip(&dec) {
             assert!((a - b).abs() <= a.abs() * (0.5f32).powi(8));
+        }
+    }
+
+    #[test]
+    fn int8_params_hit_range_endpoints() {
+        let (s, z) = int8_quant_params(-1.5, 2.5);
+        assert!(s > 0.0);
+        // q = -128 decodes to exactly lo, q = 127 to exactly hi.
+        assert_eq!(int8_decode(-128, s, z), -1.5);
+        assert_eq!(int8_decode(127, s, z), 2.5);
+        assert_eq!(int8_encode(-1.5, s, z), -128);
+        assert_eq!(int8_encode(2.5, s, z), 127);
+        // Out-of-range inputs clamp instead of wrapping.
+        assert_eq!(int8_encode(100.0, s, z), 127);
+        assert_eq!(int8_encode(-100.0, s, z), -128);
+    }
+
+    #[test]
+    fn int8_degenerate_column_is_exact() {
+        // Constant column: scale 0, zp = the constant; decode is exact.
+        let (s, z) = int8_quant_params(0.75, 0.75);
+        assert_eq!(s, 0.0);
+        assert_eq!(int8_encode(0.75, s, z), 0);
+        assert_eq!(int8_decode(0, s, z), 0.75);
+        // All-zero padding lane: (0, 0, q=0) decodes to exactly 0.0.
+        assert_eq!(int8_decode(0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn int8_roundtrip_error_within_half_step() {
+        let vals: Vec<f32> =
+            (0..300).map(|i| -2.0 + 0.013 * i as f32).collect();
+        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let (s, z) = int8_quant_params(lo, hi);
+        for &v in &vals {
+            let r = int8_decode(int8_encode(v, s, z), s, z);
+            // Half a quantization step, padded slightly for the f32
+            // arithmetic in the affine map itself.
+            assert!((r - v).abs() <= 0.5 * s * 1.001, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn int8_panel_decode_matches_scalar_decode() {
+        let kb = 7;
+        let nr = 16;
+        let src: Vec<i8> =
+            (0..kb * nr).map(|i| ((i * 37) % 251) as i8).collect();
+        let scales: Vec<f32> =
+            (0..nr).map(|j| 0.01 + 0.002 * j as f32).collect();
+        let zps: Vec<f32> = (0..nr).map(|j| -0.3 + 0.05 * j as f32).collect();
+        let mut dst = vec![0f32; kb * nr];
+        decode_int8_panel(&src, kb, nr, &scales, &zps, &mut dst);
+        for kk in 0..kb {
+            for j in 0..nr {
+                assert_eq!(
+                    dst[kk * nr + j],
+                    int8_decode(src[kk * nr + j], scales[j], zps[j])
+                );
+            }
         }
     }
 

@@ -1393,10 +1393,15 @@ pub fn matmul_grouped_nt_into(a: &Tensor, b_stacked: &[f32], n: usize,
 // the NR/KC panel layout `pack_b` emits (the layout is shared by every
 // dispatched kernel — only the tile height varies per kernel, never the
 // panel shape), so the `*_prepacked_into` drivers skip the pack pass
-// entirely. Panels are stored as f32 or bf16 (`WeightDtype`); compute
-// stays f32 — bf16 panels are decoded one L1-sized tile at a time right
-// before the microkernel consumes them (`gemm_rows_bf16`), halving the
-// weight bytes the steady-state loop streams.
+// entirely. Panels are stored as f32, bf16, or int8 (`WeightDtype`);
+// compute stays f32 — bf16/int8 panels are decoded one L1-sized tile at
+// a time right before the microkernel consumes them (`gemm_rows_bf16` /
+// `gemm_rows_int8`), halving / quartering the weight bytes the
+// steady-state loop streams. int8 storage carries one f32
+// (scale, zero_point) pair per column (affine quantization, see the
+// codec in `kernel.rs`), stored alongside the panels per group as
+// `[scales(npanels·NR) | zero_points(npanels·NR)]` — padding lanes get
+// (0, 0) so they decode to exactly 0.0, matching `pack_b`'s padding.
 //
 // Contract: for F32 storage the prepacked drivers are **bit-identical**
 // to the pack-per-call drivers above — same panel bytes, same small-GEMM
@@ -1411,19 +1416,27 @@ pub fn matmul_grouped_nt_into(a: &Tensor, b_stacked: &[f32], n: usize,
 pub enum WeightDtype {
     F32,
     Bf16,
+    Int8,
 }
 
 impl WeightDtype {
     /// The `SOFTMOE_WEIGHT_DTYPE` selection: `bf16` halves panel bytes,
-    /// `f32` (or unset/empty/`auto`) keeps full precision. Panics on
-    /// anything else.
+    /// `int8` quarters them (affine per-column quantization + f32
+    /// scales), `f32` (or unset/empty/`auto`) keeps full precision.
+    /// Anything else is a loud startup error — a typo'd dtype must never
+    /// silently serve at a different precision than the operator asked
+    /// for.
     pub fn from_env() -> Self {
         match std::env::var("SOFTMOE_WEIGHT_DTYPE") {
             Ok(v) if v == "bf16" => WeightDtype::Bf16,
+            Ok(v) if v == "int8" => WeightDtype::Int8,
             Ok(v) if v.is_empty() || v == "f32" || v == "auto" => {
                 WeightDtype::F32
             }
-            Ok(v) => panic!("SOFTMOE_WEIGHT_DTYPE={v} (expected f32|bf16)"),
+            Ok(v) => panic!(
+                "SOFTMOE_WEIGHT_DTYPE={v} is not a valid weight dtype \
+                 (expected f32|bf16|int8)"
+            ),
             Err(_) => WeightDtype::F32,
         }
     }
@@ -1432,6 +1445,7 @@ impl WeightDtype {
         match self {
             WeightDtype::F32 => "f32",
             WeightDtype::Bf16 => "bf16",
+            WeightDtype::Int8 => "int8",
         }
     }
 
@@ -1439,6 +1453,21 @@ impl WeightDtype {
         match self {
             WeightDtype::F32 => 4,
             WeightDtype::Bf16 => 2,
+            WeightDtype::Int8 => 1,
+        }
+    }
+
+    /// The dtype routing surfaces (the folded Φ and the sparse gates)
+    /// are stored at under this policy. Routing logits feed a softmax
+    /// whose argmax/top-k decides *which* experts run — int8's ~1/255
+    /// per-column steps can flip those discrete decisions, so int8 caps
+    /// router matrices at bf16 (which PR 4 validated end to end) while
+    /// every other GEMM surface takes the full footprint win. f32/bf16
+    /// pass through unchanged.
+    pub fn router_dtype(self) -> Self {
+        match self {
+            WeightDtype::Int8 => WeightDtype::Bf16,
+            other => other,
         }
     }
 }
@@ -1448,6 +1477,14 @@ impl WeightDtype {
 enum PanelsRef<'a> {
     F32(&'a [f32]),
     Bf16(&'a [u16]),
+    Int8 {
+        q: &'a [i8],
+        /// Per-lane affine params for this group, each `npanels·NR`
+        /// long (lane `j` of panel `p` is column `p·NR + j`, so column
+        /// `c`'s params sit at index `c`).
+        scales: &'a [f32],
+        zps: &'a [f32],
+    },
 }
 
 /// Backing storage for packed panels: owned vectors (built by a pack
@@ -1515,7 +1552,7 @@ impl<T: Copy> std::fmt::Debug for PanelStore<T> {
 
 // The view variant's region is immutable and owned via the Arc'd map;
 // sharing it across threads is sound for the Copy element types used
-// here (f32/u16).
+// here (f32/u16/i8).
 unsafe impl<T: Copy + Send + Sync> Send for PanelStore<T> {}
 unsafe impl<T: Copy + Send + Sync> Sync for PanelStore<T> {}
 
@@ -1523,6 +1560,13 @@ unsafe impl<T: Copy + Send + Sync> Sync for PanelStore<T> {}
 enum PanelData {
     F32(PanelStore<f32>),
     Bf16(PanelStore<u16>),
+    Int8 {
+        q: PanelStore<i8>,
+        /// Per-group affine params: `groups` back-to-back regions of
+        /// `2·npanels·NR` f32s laid out `[scales | zero_points]`
+        /// (padding lanes hold (0, 0) → decode exactly 0.0).
+        sz: PanelStore<f32>,
+    },
 }
 
 /// One or more (k, n) weight matrices pre-packed into the GEMM panel
@@ -1556,6 +1600,12 @@ impl PackedPanels {
         k * div_up(n, NR) * NR
     }
 
+    /// f32 scale/zero-point elements per group for int8 storage:
+    /// `[scales(npanels·NR) | zero_points(npanels·NR)]`.
+    fn scale_len(n: usize) -> usize {
+        2 * div_up(n, NR) * NR
+    }
+
     /// Pack a row-major (k, n) matrix.
     pub fn pack(b: &Tensor, dtype: WeightDtype) -> Self {
         let (k, n) = b.dims2();
@@ -1585,21 +1635,114 @@ impl PackedPanels {
                 kernel::encode_bf16_slice(&f32s, &mut enc);
                 PanelData::Bf16(PanelStore::Owned(enc))
             }
+            WeightDtype::Int8 => {
+                let sz = Self::int8_column_params(b_stacked, k, n, groups);
+                let q = Self::int8_encode_panels(&f32s, k, n, groups, &sz);
+                PanelData::Int8 {
+                    q: PanelStore::Owned(q),
+                    sz: PanelStore::Owned(sz),
+                }
+            }
         };
         let raw = if 2 * k * n < SMALL_FLOPS {
-            Some(match dtype {
-                WeightDtype::F32 => b_stacked.to_vec(),
+            Some(match &data {
+                PanelData::F32(_) => b_stacked.to_vec(),
                 // The rounded values the panels hold, so the direct path
                 // stays exactly equal to the panel-consuming path.
-                WeightDtype::Bf16 => b_stacked
+                PanelData::Bf16(_) => b_stacked
                     .iter()
                     .map(|&v| kernel::bf16_to_f32(kernel::f32_to_bf16(v)))
                     .collect(),
+                // encode→decode through the same per-column affine map
+                // the panel path uses (`q·scale + zp`), so the bits
+                // match the staged decode exactly — and match the
+                // `from_mapped` rebuild, which unpacks the panels with
+                // the same expression.
+                PanelData::Int8 { sz, .. } => {
+                    let slen = Self::scale_len(n);
+                    let half = slen / 2;
+                    let sz = sz.as_slice();
+                    b_stacked
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| {
+                            let g = i / (k * n);
+                            let c = i % n;
+                            let s = sz[g * slen + c];
+                            let z = sz[g * slen + half + c];
+                            kernel::int8_decode(
+                                kernel::int8_encode(v, s, z), s, z)
+                        })
+                        .collect()
+                }
             })
         } else {
             None
         };
         Self { k, n, groups, data, raw }
+    }
+
+    /// Per-column affine quantization params for every group of a
+    /// stacked row-major matrix set: `groups` regions of
+    /// `[scales(npanels·NR) | zero_points(npanels·NR)]`. Column `c` of
+    /// group `g` lands at lane index `c` (panels are NR-wide column
+    /// slices, so lane `j` of panel `p` is column `p·NR + j`); padding
+    /// lanes beyond `n` keep (0, 0) and decode to exactly 0.0.
+    fn int8_column_params(b_stacked: &[f32], k: usize, n: usize,
+                          groups: usize) -> Vec<f32> {
+        let slen = Self::scale_len(n);
+        let half = slen / 2;
+        let mut sz = vec![0.0f32; groups * slen];
+        for g in 0..groups {
+            let b = &b_stacked[g * k * n..(g + 1) * k * n];
+            for c in 0..n {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for r in 0..k {
+                    let v = b[r * n + c];
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let (s, z) = kernel::int8_quant_params(lo, hi);
+                sz[g * slen + c] = s;
+                sz[g * slen + half + c] = z;
+            }
+        }
+        sz
+    }
+
+    /// Quantize already-packed f32 panels to int8 using the per-column
+    /// params from [`Self::int8_column_params`]. Walks the exact
+    /// [`pack_b`] layout so each element meets its own column's affine
+    /// map; pack padding (0.0 in lanes with scale 0) encodes to 0.
+    fn int8_encode_panels(f32s: &[f32], k: usize, n: usize, groups: usize,
+                          sz: &[f32]) -> Vec<i8> {
+        let plen = Self::panel_len(k, n);
+        let slen = Self::scale_len(n);
+        let half = slen / 2;
+        let npanels = div_up(n, NR);
+        let mut q = vec![0i8; f32s.len()];
+        for g in 0..groups {
+            let scales = &sz[g * slen..g * slen + half];
+            let zps = &sz[g * slen + half..(g + 1) * slen];
+            let mut off = g * plen;
+            let mut k0 = 0usize;
+            while k0 < k {
+                let kb = KC.min(k - k0);
+                for p in 0..npanels {
+                    for kk in 0..kb {
+                        for j in 0..NR {
+                            let lane = p * NR + j;
+                            q[off] = kernel::int8_encode(
+                                f32s[off], scales[lane], zps[lane]);
+                            off += 1;
+                        }
+                    }
+                }
+                k0 += kb;
+            }
+        }
+        q
     }
 
     /// Group `g`'s row-major matrix, when the small-path copy is kept
@@ -1626,15 +1769,18 @@ impl PackedPanels {
         match self.data {
             PanelData::F32(_) => WeightDtype::F32,
             PanelData::Bf16(_) => WeightDtype::Bf16,
+            PanelData::Int8 { .. } => WeightDtype::Int8,
         }
     }
 
-    /// Bytes resident in the panel storage plus the small-path row-major
-    /// copy, if kept (the serve memory-footprint gauge).
+    /// Bytes resident in the panel storage (for int8 including the
+    /// scale/zero-point arrays) plus the small-path row-major copy, if
+    /// kept (the serve memory-footprint gauge).
     pub fn resident_bytes(&self) -> usize {
         let panels = match &self.data {
             PanelData::F32(v) => v.len() * 4,
             PanelData::Bf16(v) => v.len() * 2,
+            PanelData::Int8 { q, sz } => q.len() + sz.len() * 4,
         };
         panels + self.raw.as_ref().map_or(0, |r| r.len() * 4)
     }
@@ -1646,26 +1792,61 @@ impl PackedPanels {
         match &self.data {
             PanelData::F32(v) => v.is_view(),
             PanelData::Bf16(v) => v.is_view(),
+            PanelData::Int8 { q, sz } => q.is_view() && sz.is_view(),
         }
     }
 
-    /// The packed panel storage as raw native-endian bytes (f32 or u16
-    /// elements per [`PackedPanels::dtype`]) — the snapshot writer's blob
-    /// payload. Layout: `groups` back-to-back regions of
+    /// The packed panel storage as raw native-endian bytes (f32, u16,
+    /// or i8 elements per [`PackedPanels::dtype`]) — the snapshot
+    /// writer's blob payload. Layout: `groups` back-to-back regions of
     /// `panel_len(k, n)` elements each, exactly what
-    /// [`PackedPanels::from_mapped`] reconstructs a view over.
+    /// [`PackedPanels::from_mapped`] reconstructs a view over. For int8
+    /// this is the quantized blob only; the scale/zero-point arrays are
+    /// a separate segment ([`PackedPanels::scale_bytes`]).
     pub fn panel_bytes(&self) -> &[u8] {
         match &self.data {
             PanelData::F32(v) => crate::util::f32s_as_bytes(v.as_slice()),
             PanelData::Bf16(v) => crate::util::u16s_as_bytes(v.as_slice()),
+            PanelData::Int8 { q, .. } => {
+                crate::util::i8s_as_bytes(q.as_slice())
+            }
+        }
+    }
+
+    /// int8 storage's per-column scale/zero-point arrays as raw
+    /// native-endian f32 bytes (`groups` regions of
+    /// `[scales(npanels·NR) | zero_points(npanels·NR)]`); `None` for
+    /// f32/bf16. The snapshot writer appends this segment after the
+    /// quantized blob, padded to the 64-byte map alignment.
+    pub fn scale_bytes(&self) -> Option<&[u8]> {
+        match &self.data {
+            PanelData::Int8 { sz, .. } => {
+                Some(crate::util::f32s_as_bytes(sz.as_slice()))
+            }
+            _ => None,
         }
     }
 
     /// Byte length of the panel storage for a `(k, n)`·`groups` matrix
-    /// set at `dtype` — what a snapshot entry of those dims must contain.
+    /// set at `dtype` — what a snapshot entry of those dims must
+    /// contain. For int8 the entry payload is
+    /// `[quantized blob | pad to 64 | f32 scales+zero-points]`, so both
+    /// segments land 64-byte aligned in the mapped file.
     pub fn expected_panel_bytes(k: usize, n: usize, groups: usize,
                                 dtype: WeightDtype) -> usize {
-        groups * Self::panel_len(k, n) * dtype.bytes_per_elem()
+        let qbytes = groups * Self::panel_len(k, n) * dtype.bytes_per_elem();
+        match dtype {
+            WeightDtype::Int8 => {
+                Self::align_map(qbytes) + groups * Self::scale_len(n) * 4
+            }
+            _ => qbytes,
+        }
+    }
+
+    /// Round up to the snapshot/mmap alignment (both are 64 bytes).
+    fn align_map(x: usize) -> usize {
+        let a = crate::util::mmap::MAP_ALIGN;
+        div_up(x, a) * a
     }
 
     /// Construct panels as a **zero-copy view** borrowing `map` at
@@ -1682,7 +1863,8 @@ impl PackedPanels {
                 "mapped panels need positive dims (k={k}, n={n}, \
                  groups={groups})");
         let elems = groups * Self::panel_len(k, n);
-        assert_eq!(byte_len, elems * dtype.bytes_per_elem(),
+        assert_eq!(byte_len,
+                   Self::expected_panel_bytes(k, n, groups, dtype),
                    "mapped panel byte length mismatch");
         let bytes = map.bytes();
         assert!(byte_offset.checked_add(byte_len)
@@ -1702,6 +1884,26 @@ impl PackedPanels {
                 len: elems,
                 _map: Arc::clone(map),
             }),
+            WeightDtype::Int8 => {
+                // Two segments: quantized blob, then (64-byte aligned,
+                // matching the writer's padding) the f32 scale/zp
+                // arrays. byte_offset is 64-aligned and align_map(elems)
+                // is a 64-multiple, so the scales view is aligned too.
+                let soff = Self::align_map(elems);
+                let slen = groups * Self::scale_len(n);
+                PanelData::Int8 {
+                    q: PanelStore::View {
+                        ptr: base as *const i8,
+                        len: elems,
+                        _map: Arc::clone(map),
+                    },
+                    sz: PanelStore::View {
+                        ptr: unsafe { base.add(soff) } as *const f32,
+                        len: slen,
+                        _map: Arc::clone(map),
+                    },
+                }
+            }
         };
         let mut panels = Self { k, n, groups, data, raw: None };
         if 2 * k * n < SMALL_FLOPS {
@@ -1729,6 +1931,17 @@ impl PackedPanels {
             PanelData::Bf16(v) => {
                 PanelsRef::Bf16(&v.as_slice()[g * plen..(g + 1) * plen])
             }
+            PanelData::Int8 { q, sz } => {
+                let slen = Self::scale_len(self.n);
+                let (scales, zps) = sz.as_slice()
+                    [g * slen..(g + 1) * slen]
+                    .split_at(slen / 2);
+                PanelsRef::Int8 {
+                    q: &q.as_slice()[g * plen..(g + 1) * plen],
+                    scales,
+                    zps,
+                }
+            }
         }
     }
 
@@ -1742,6 +1955,7 @@ impl PackedPanels {
         debug_assert_eq!(out.len(), k * n);
         let npanels = div_up(n, NR);
         let base = g * Self::panel_len(k, n);
+        let slen = Self::scale_len(n);
         let mut off = 0usize;
         let mut k0 = 0usize;
         while k0 < k {
@@ -1760,6 +1974,15 @@ impl PackedPanels {
                             kernel::decode_bf16_slice(
                                 &v.as_slice()[src..src + nr], dst);
                         }
+                        PanelData::Int8 { q, sz } => {
+                            let qs = &q.as_slice()[src..src + nr];
+                            let szg = &sz.as_slice()[g * slen..];
+                            for (j, d) in dst.iter_mut().enumerate() {
+                                let c = j0 + j;
+                                *d = kernel::int8_decode(
+                                    qs[j], szg[c], szg[slen / 2 + c]);
+                            }
+                        }
                     }
                 }
                 off += kb * NR;
@@ -1767,10 +1990,22 @@ impl PackedPanels {
             k0 += kb;
         }
     }
+
+    /// Group `g` reconstructed as a row-major (k, n) matrix — the exact
+    /// f32 values the panels hold (original weights for f32 storage,
+    /// rounded/dequantized values for bf16/int8). Public so parity
+    /// tests can build the "matmul over the rounded weights" reference
+    /// the prepacked path must match bit for bit.
+    pub fn unpack_group(&self, g: usize) -> Vec<f32> {
+        assert!(g < self.groups, "group {g} out of {}", self.groups);
+        let mut out = vec![0.0f32; self.k * self.n];
+        self.unpack_group_into(g, &mut out);
+        out
+    }
 }
 
-/// [`gemm_rows`] over either panel storage: f32 panels go straight to
-/// the microkernel; bf16 panels go through the decode staging path.
+/// [`gemm_rows`] over any panel storage: f32 panels go straight to the
+/// microkernel; bf16/int8 panels go through their decode staging paths.
 fn gemm_rows_any(a: &[f32], lda: usize, bp: PanelsRef, k: usize, n: usize,
                  rows: std::ops::Range<usize>, out_rows: &mut [f32],
                  ep: Epilogue, kern: &kernel::Kernel) {
@@ -1780,6 +2015,10 @@ fn gemm_rows_any(a: &[f32], lda: usize, bp: PanelsRef, k: usize, n: usize,
         }
         PanelsRef::Bf16(p) => {
             gemm_rows_bf16(a, lda, p, k, n, rows, out_rows, ep, kern);
+        }
+        PanelsRef::Int8 { q, scales, zps } => {
+            gemm_rows_int8(a, lda, q, scales, zps, k, n, rows, out_rows, ep,
+                           kern);
         }
     }
 }
@@ -1818,6 +2057,72 @@ fn gemm_rows_bf16(a: &[f32], lda: usize, bp: &[u16], k: usize, n: usize,
             let src =
                 &bp[off_block + p * kb * NR..off_block + (p + 1) * kb * NR];
             kernel::decode_bf16_slice(src, &mut stage[..kb * NR]);
+            let j0 = p * NR;
+            let nr = NR.min(n - j0);
+            let mut i0 = 0usize;
+            while i0 < nrows {
+                let mr = mr_max.min(nrows - i0);
+                let abase = &a[(rows.start + i0) * lda + k0..];
+                let c = &mut out_rows[i0 * n + j0..];
+                // Safety: same dispatch/slice contract as in `gemm_rows`.
+                unsafe {
+                    (kern.micro)(abase, lda, &stage[..kb * NR], kb, c, n, mr,
+                                 nr)
+                };
+                i0 += mr_max;
+            }
+        }
+        off_block += npanels * kb * NR;
+        k0 += kb;
+    }
+    if ep.wants_gelu() {
+        for v in out_rows.iter_mut() {
+            *v = gelu(*v);
+        }
+    }
+}
+
+/// [`gemm_rows`] against int8-stored panels: exactly the
+/// [`gemm_rows_bf16`] structure — decode one panel at a time into the
+/// L1-sized f32 staging tile and run all row tiles against it — with
+/// the affine per-lane dequant (`kernel::decode_int8_panel`) in place
+/// of the bf16 widening. Panel `p`'s lanes are columns `p·NR..`, so its
+/// scale/zp windows start at `p·NR` in the group's per-column arrays.
+/// Accumulation still runs k blocks in ascending order: bit-identical
+/// to dequantizing all of B up front and running [`gemm_rows`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_int8(a: &[f32], lda: usize, bp: &[i8], scales: &[f32],
+                  zps: &[f32], k: usize, n: usize,
+                  rows: std::ops::Range<usize>, out_rows: &mut [f32],
+                  ep: Epilogue, kern: &kernel::Kernel) {
+    let nrows = rows.len();
+    debug_assert_eq!(out_rows.len(), nrows * n);
+    let npanels = div_up(n, NR);
+    let mr_max = kern.mr;
+    match ep.bias() {
+        Some(bv) => {
+            for r in 0..nrows {
+                out_rows[r * n..(r + 1) * n].copy_from_slice(bv);
+            }
+        }
+        None => {
+            for v in out_rows.iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+    let mut stage = [0.0f32; KC * NR];
+    let mut off_block = 0usize;
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for p in 0..npanels {
+            let src =
+                &bp[off_block + p * kb * NR..off_block + (p + 1) * kb * NR];
+            kernel::decode_int8_panel(src, kb, NR,
+                                      &scales[p * NR..(p + 1) * NR],
+                                      &zps[p * NR..(p + 1) * NR],
+                                      &mut stage[..kb * NR]);
             let j0 = p * NR;
             let nr = NR.min(n - j0);
             let mut i0 = 0usize;
@@ -2826,6 +3131,46 @@ mod tests {
     }
 
     #[test]
+    fn prepacked_int8_matches_matmul_over_dequant_weights() {
+        // Two claims, checked independently of the pack internals:
+        // (1) the panels hold exactly the per-column affine
+        // quantize→dequantize of the original weights (reference built
+        // from the raw matrix with the public kernel codec alone), and
+        // (2) the staged-decode GEMM equals the normal driver run over
+        // those dequantized weights bit for bit.
+        let mut rng = Rng::new(38);
+        let mut ws = Workspace::new();
+        for &(m, k, n) in PREPACK_SHAPES {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let w = PackedPanels::pack(&b, WeightDtype::Int8);
+            let mut b_rounded = b.clone();
+            for c in 0..n {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for r in 0..k {
+                    let v = b.data[r * n + c];
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let (s, z) = kernel::int8_quant_params(lo, hi);
+                for r in 0..k {
+                    let v = b.data[r * n + c];
+                    b_rounded.data[r * n + c] = kernel::int8_decode(
+                        kernel::int8_encode(v, s, z), s, z);
+                }
+            }
+            assert_eq!(w.unpack_group(0), b_rounded.data,
+                       "panel contents ({m},{k},{n})");
+            let mut want = vec![0.0f32; m * n];
+            let mut got = vec![0.0f32; m * n];
+            matmul_into(&a, &b_rounded, &mut want, &mut ws);
+            matmul_prepacked_into(&a, &w, &mut got, &mut ws);
+            assert_eq!(got, want, "int8 ({m},{k},{n})");
+        }
+    }
+
+    #[test]
     fn prepacked_unpack_roundtrips() {
         let mut rng = Rng::new(32);
         for &(k, n, groups) in
@@ -2914,6 +3259,13 @@ mod tests {
         assert_eq!(h.dtype(), WeightDtype::Bf16);
         assert_eq!(f.resident_bytes(), 2 * h.resident_bytes(),
                    "bf16 panels must halve resident bytes");
+        let q = PackedPanels::pack(&big, WeightDtype::Int8);
+        assert_eq!(q.dtype(), WeightDtype::Int8);
+        // int8 pays 1 byte/elem plus the per-column scale/zp arrays —
+        // strictly under half of bf16 at this shape.
+        assert!(2 * q.resident_bytes() < h.resident_bytes(),
+                "int8 {} vs bf16 {}", q.resident_bytes(),
+                h.resident_bytes());
         // Small matrix: both keep the f32 small-path copy on top of the
         // panels, so bf16 is smaller but not exactly half.
         let small = Tensor::randn(&[33, 20], 1.0, &mut rng);
@@ -2922,8 +3274,15 @@ mod tests {
         assert!(sh.resident_bytes() < sf.resident_bytes());
         assert_eq!(WeightDtype::F32.name(), "f32");
         assert_eq!(WeightDtype::Bf16.name(), "bf16");
+        assert_eq!(WeightDtype::Int8.name(), "int8");
         assert_eq!(WeightDtype::F32.bytes_per_elem(), 4);
         assert_eq!(WeightDtype::Bf16.bytes_per_elem(), 2);
+        assert_eq!(WeightDtype::Int8.bytes_per_elem(), 1);
+        // Router policy: int8 caps routing surfaces at bf16; f32/bf16
+        // pass through.
+        assert_eq!(WeightDtype::Int8.router_dtype(), WeightDtype::Bf16);
+        assert_eq!(WeightDtype::Bf16.router_dtype(), WeightDtype::Bf16);
+        assert_eq!(WeightDtype::F32.router_dtype(), WeightDtype::F32);
     }
 
     #[test]
@@ -2934,7 +3293,8 @@ mod tests {
         // reachable (2·k·n < SMALL_FLOPS).
         let mut rng = Rng::new(37);
         let b = Tensor::randn(&[40, 24], 1.0, &mut rng); // 2·k·n = 1920
-        for dtype in [WeightDtype::F32, WeightDtype::Bf16] {
+        for dtype in
+            [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8] {
             let w = PackedPanels::pack(&b, dtype);
             let raw = w.raw_group(0).expect("small matrix keeps raw copy");
             let mut unpacked = vec![0.0f32; 40 * 24];
@@ -2956,8 +3316,36 @@ mod tests {
             Ok(v) if v == "bf16" => {
                 assert_eq!(WeightDtype::from_env(), WeightDtype::Bf16);
             }
+            Ok(v) if v == "int8" => {
+                assert_eq!(WeightDtype::from_env(), WeightDtype::Int8);
+            }
             _ => assert_eq!(WeightDtype::from_env(), WeightDtype::F32),
         }
+    }
+
+    #[test]
+    fn weight_dtype_env_rejects_unknown_values() {
+        // A typo'd SOFTMOE_WEIGHT_DTYPE must be a loud startup error
+        // naming the valid set, not a silent fallback. from_env reads
+        // the process env, so force the bad value in a child process —
+        // no set_var races with concurrently running tests.
+        let exe = std::env::current_exe().expect("test exe path");
+        let out = std::process::Command::new(exe)
+            .arg("weight_dtype_env_parse_matches_environment")
+            .arg("--exact")
+            .env("SOFTMOE_WEIGHT_DTYPE", "int4")
+            .output()
+            .expect("spawn child test");
+        assert!(!out.status.success(),
+                "bad dtype value must fail the process");
+        // libtest prints the captured panic to stdout; look in both
+        // streams to stay harness-agnostic.
+        let mut text = String::from_utf8_lossy(&out.stdout).into_owned();
+        text.push_str(&String::from_utf8_lossy(&out.stderr));
+        assert!(text.contains("f32|bf16|int8"),
+                "error must list valid dtypes, got: {text}");
+        assert!(text.contains("int4"),
+                "error must echo the offending value, got: {text}");
     }
 
     #[test]

@@ -109,6 +109,11 @@ pub fn u16s_as_bytes(v: &[u16]) -> &[u8] {
     }
 }
 
+/// View an i8 slice as bytes (int8 panel blobs; endianness-free).
+pub fn i8s_as_bytes(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -576,10 +576,141 @@ fn prepacked_bf16_meets_error_budget_under_every_kernel() {
 }
 
 #[test]
+fn prepacked_int8_meets_error_budget_under_every_kernel() {
+    // int8 panels quantize each weight once with its column's affine
+    // parameters (error <= half a quantization step, scale/2 =
+    // (hi-lo)/510) and then accumulate in f32 exactly like the f32
+    // path. Three layers of assertion, per kernel and epilogue:
+    //   (1) the quantizer itself keeps every dequantized weight within
+    //       half a step of the original (params rebuilt independently
+    //       from the column min/max via the public codec);
+    //   (2) the prepacked int8 GEMM is EXACTLY a matmul over the
+    //       dequantized weights (L1-tile staging changes no bits);
+    //   (3) against the unquantized f64 reference it stays within the
+    //       usual k-scaled accumulation term plus the per-column
+    //       half-step term sum_k |a| * scale_j/2.
+    let mut rng = Rng::new(53);
+    let mut ws = Workspace::new();
+    for &(m, k, n) in SHAPES {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let (want, mag) = reference(&a, &b);
+        let w = PackedPanels::pack(&b, WeightDtype::Int8);
+        let b_deq = Tensor::from_vec(&[k, n], w.unpack_group(0));
+
+        // (1) per-column half-step bound on the quantizer, from
+        // independently recomputed params.
+        let mut half = vec![0.0f64; n];
+        for j in 0..n {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for kk in 0..k {
+                lo = lo.min(b.data[kk * n + j]);
+                hi = hi.max(b.data[kk * n + j]);
+            }
+            let (scale, _) = kernel::int8_quant_params(lo, hi);
+            half[j] = scale as f64 * 0.5;
+            for kk in 0..k {
+                let err =
+                    (b_deq.data[kk * n + j] as f64 - b.data[kk * n + j] as f64)
+                        .abs();
+                assert!(err <= 1.05 * half[j] + 1e-30,
+                        "quantizer error at ({kk},{j}): {err} > half-step \
+                         {}", half[j]);
+            }
+        }
+        let rowsum: Vec<f64> = (0..m)
+            .map(|i| {
+                a.data[i * k..(i + 1) * k]
+                    .iter()
+                    .map(|&v| (v as f64).abs())
+                    .sum()
+            })
+            .collect();
+
+        let accum = 2.0 * (k as f64 + 2.0) * f32::EPSILON as f64;
+        for kern in kernel::available() {
+            kernel::with_kernel(kern.name(), || {
+                let mut got = vec![0.0f32; m * n];
+                matmul_prepacked_into(&a, &w, &mut got, &mut ws);
+                // (3) budget vs the unquantized reference.
+                for (i, &g) in got.iter().enumerate() {
+                    let (r, c) = (i / n, i % n);
+                    let bound =
+                        accum * mag[i] + 1.1 * rowsum[r] * half[c] + 1e-30;
+                    assert!(
+                        (g as f64 - want[i]).abs() <= bound,
+                        "{}:int8({m},{k},{n})[{i}]: {g} vs {} (budget \
+                         {bound:e})",
+                        kern.name(), want[i]
+                    );
+                }
+                // (2) exactness over the dequantized weights, for every
+                // fused epilogue.
+                let mut exact = vec![0.0f32; m * n];
+                matmul_into(&a, &b_deq, &mut exact, &mut ws);
+                assert_eq!(got, exact,
+                           "{}:int8-exact({m},{k},{n})", kern.name());
+                matmul_bias_prepacked_into(&a, &w, &bias, &mut got, &mut ws);
+                matmul_bias_into(&a, &b_deq, &bias, &mut exact, &mut ws);
+                assert_eq!(got, exact,
+                           "{}:int8-bias({m},{k},{n})", kern.name());
+                softmoe::tensor::matmul_bias_gelu_prepacked_into(
+                    &a, &w, &bias, &mut got, &mut ws);
+                matmul_bias_gelu_into(&a, &b_deq, &bias, &mut exact, &mut ws);
+                assert_eq!(got, exact,
+                           "{}:int8-gelu({m},{k},{n})", kern.name());
+            });
+        }
+    }
+}
+
+#[test]
+fn prepacked_int8_grouped_exact_over_dequantized_weights() {
+    // Grouped expert GEMMs over int8 panels: same configurations as
+    // all_kernels_grouped_gemm (variable fills, an empty group, a
+    // KC-crossing k). Each group quantizes with its own per-column
+    // params; the prepacked driver must reproduce the pack-per-call
+    // driver over the dequantized weights exactly, per kernel —
+    // untouched rows (empty groups) included.
+    let mut rng = Rng::new(54);
+    let mut ws = Workspace::new();
+    for &(ng, stride, k, n) in
+        &[(3usize, 2usize, 9usize, 11usize), (4, 5, 67, 40), (3, 8, 300, 19)]
+    {
+        let rows: Vec<usize> = (0..ng).map(|g| g % (stride + 1)).collect();
+        let a = Tensor::randn(&[ng * stride, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[ng, k, n], 1.0, &mut rng);
+        let bias = Tensor::randn(&[ng, n], 0.5, &mut rng);
+        let w = PackedPanels::pack_grouped(&b.data, k, n, WeightDtype::Int8);
+        let mut b_deq = Vec::with_capacity(ng * k * n);
+        for g in 0..ng {
+            b_deq.extend_from_slice(&w.unpack_group(g));
+        }
+        for kern in kernel::available() {
+            kernel::with_kernel(kern.name(), || {
+                let mut want = vec![3.5f32; ng * stride * n];
+                let mut got = vec![3.5f32; ng * stride * n];
+                matmul_grouped_into(&a, &b_deq, Some(&bias.data), n, stride,
+                                    Some(&rows), false, &mut want, &mut ws);
+                matmul_grouped_prepacked_into(&a, &w, Some(&bias.data),
+                                              stride, Some(&rows), false,
+                                              &mut got, &mut ws);
+                assert_eq!(got, want,
+                           "{}:int8-grouped({ng},{stride},{k},{n})",
+                           kern.name());
+            });
+        }
+    }
+}
+
+#[test]
 fn prepared_model_forward_bit_identical_under_every_kernel() {
     // End-to-end acceptance criterion: the PreparedModel (f32) forward
     // reproduces the unprepared inference path exactly, under every
-    // kernel; the bf16 PreparedModel stays within a loose band of it.
+    // kernel; the bf16 and int8 PreparedModels stay within loose bands
+    // of it (int8 keeps its routing matrices at bf16, so quantization
+    // never flips a discrete routing decision).
     let cfg = ModelConfig {
         image_size: 8,
         patch_size: 4,
@@ -600,6 +731,7 @@ fn prepared_model_forward_bit_identical_under_every_kernel() {
     let p = model.init(7);
     let prep = PreparedModel::new(&model, &p, WeightDtype::F32);
     let prep16 = PreparedModel::new(&model, &p, WeightDtype::Bf16);
+    let prep8 = PreparedModel::new(&model, &p, WeightDtype::Int8);
     let mut rng = Rng::new(8);
     let npx = cfg.image_size * cfg.image_size * cfg.channels;
     let imgs = Tensor::from_vec(
@@ -617,6 +749,11 @@ fn prepared_model_forward_bit_identical_under_every_kernel() {
             for (x, y) in l16.iter().zip(&lw) {
                 assert!((x - y).abs() < 0.05,
                         "{} bf16 logits drift: {x} vs {y}", kern.name());
+            }
+            let (l8, _) = prep8.forward_item_infer(&imgs, 0, &mut ws);
+            for (x, y) in l8.iter().zip(&lw) {
+                assert!((x - y).abs() < 0.08,
+                        "{} int8 logits drift: {x} vs {y}", kern.name());
             }
         });
     }

@@ -13,7 +13,7 @@ use softmoe::metrics::Registry;
 use softmoe::nn::{PreparedModel, VitModel};
 use softmoe::runtime::native::NativeRuntime;
 use softmoe::runtime::pjrt::PjrtRuntime;
-use softmoe::runtime::Backend;
+use softmoe::runtime::{Backend, TrainState};
 use softmoe::serve::{BatchPolicy, Server};
 use softmoe::tensor::{Tensor, WeightDtype};
 use softmoe::util::{Rng, Stopwatch};
@@ -157,6 +157,74 @@ fn main() {
             snapshot_rows.push(row);
         }
     }
+    // --- Delta refresh vs full prepare: the serve-while-train path.
+    // One filtered fine-tune step (head + Soft-MoE routers) dirties a
+    // handful of snapshot entries; `refresh_prepared` re-packs only
+    // those, and `write_snapshot_delta` rewrites only their byte ranges
+    // — both must come in well under their full-rebuild counterparts.
+    println!("\n== delta refresh vs full prepare (native soft, \
+              filtered fine-tune) ==");
+    let mut refresh_rows: Vec<Value> = Vec::new();
+    for size in sizes {
+        let cfg = ModelConfig::preset(size, MoeType::Soft).unwrap();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(0).unwrap();
+        let mut state = TrainState::fresh(params);
+        be.prepare(&state.params).unwrap();
+        let file = snap_dir.join(format!("{size}-delta.panels"));
+        assert!(be.write_snapshot(&file).unwrap());
+
+        let images = rand_images(2, cfg.image_size, 11);
+        be.train_step_filtered(&mut state, &images, &[0, 1], 1e-3,
+                               &["head/", "phi", "scale"])
+            .unwrap();
+
+        let model = VitModel::new(cfg.clone());
+        let sw = Stopwatch::start();
+        let full = PreparedModel::new(&model, &state.params,
+                                      WeightDtype::from_env());
+        let full_secs = sw.elapsed_secs();
+        drop(full);
+
+        let sw = Stopwatch::start();
+        let (_prep, stats) = be.refresh_prepared(&state.params).unwrap();
+        let refresh_secs = sw.elapsed_secs();
+
+        let sw = Stopwatch::start();
+        let d = be.write_snapshot_delta(&file).unwrap()
+            .expect("provenance recorded by write_snapshot");
+        let delta_write_secs = sw.elapsed_secs();
+
+        println!(
+            "    -> {size}: delta refresh {:.2} ms vs full prepare \
+             {:.2} ms ({:.1}x); repacked {}/{} entries; snapshot delta \
+             rewrote {}/{} entries, {:.1}% of payload bytes, in \
+             {:.2} ms",
+            refresh_secs * 1e3, full_secs * 1e3,
+            full_secs / refresh_secs.max(1e-9),
+            stats.entries_repacked, stats.entries_total,
+            d.entries_rewritten, d.entries_total,
+            100.0 * d.bytes_rewritten as f64
+                / d.bytes_total.max(1) as f64,
+            delta_write_secs * 1e3
+        );
+        assert!(d.bytes_rewritten < d.bytes_total,
+                "delta must rewrite strictly fewer bytes than full");
+        let mut row = Value::obj();
+        row.set("name", Value::Str(format!("soft_{size}/refresh")));
+        row.set("full_prepare_secs", Value::Num(full_secs));
+        row.set("delta_refresh_secs", Value::Num(refresh_secs));
+        row.set("refresh_speedup", Value::Num(
+            full_secs / refresh_secs.max(1e-9)));
+        row.set("entries_repacked", Value::from(stats.entries_repacked));
+        row.set("entries_total", Value::from(stats.entries_total));
+        row.set("delta_entries_rewritten",
+                Value::from(d.entries_rewritten));
+        row.set("delta_bytes_rewritten", Value::from(d.bytes_rewritten));
+        row.set("delta_bytes_total", Value::from(d.bytes_total));
+        row.set("delta_write_secs", Value::Num(delta_write_secs));
+        refresh_rows.push(row);
+    }
     let _ = std::fs::remove_dir_all(&snap_dir);
 
     // --- PJRT: every model in the manifest at each compiled batch size.
@@ -242,6 +310,7 @@ fn main() {
     let mut root = bench.to_json();
     root.set("prepared", Value::Arr(prepared_rows));
     root.set("snapshot", Value::Arr(snapshot_rows));
+    root.set("refresh", Value::Arr(refresh_rows));
     let path = std::path::Path::new("reports/BENCH_INFERENCE.json");
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);

@@ -23,6 +23,12 @@
 //! `--burst N` fires the first N requests from simultaneous
 //! connections so a small `SOFTMOE_MAX_CONNS` observably sheds (the CI
 //! leg asserts a non-zero shed count on the server side).
+//!
+//! `--reload-at N` fires one `POST /reload` once N requests have
+//! completed, so the finetune-serve CI leg can hot-swap weights while
+//! inference traffic is still in flight. The outcome prints as its own
+//! grep-able line (`load: reload status 200 ...`) and does not count
+//! toward the request tally.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
@@ -76,6 +82,19 @@ fn get(path: &str) -> Vec<u8> {
     .into_bytes()
 }
 
+fn post_reload() -> Vec<u8> {
+    b"POST /reload HTTP/1.1\r\nHost: load\r\nContent-Length: 0\r\n\
+      Connection: close\r\n\r\n"
+        .to_vec()
+}
+
+fn completed(tally: &Tally) -> usize {
+    tally.ok2xx.load(Ordering::SeqCst)
+        + tally.err4xx.load(Ordering::SeqCst)
+        + tally.err5xx.load(Ordering::SeqCst)
+        + tally.hung.load(Ordering::SeqCst)
+}
+
 fn infer_payload(image_elems: usize, seed: u64) -> Vec<u8> {
     // xorshift — deterministic junk pixels, no rand crate.
     let mut x = seed | 1;
@@ -114,7 +133,8 @@ fn classify(tally: &Tally, resp: &str) {
 fn main() {
     let addr = arg("--addr").unwrap_or_else(|| {
         eprintln!("usage: http_load --addr HOST:PORT [--requests N] \
-                   [--conns N] [--burst N] [--timeout-ms N]");
+                   [--conns N] [--burst N] [--timeout-ms N] \
+                   [--reload-at N]");
         std::process::exit(2);
     });
     let requests: usize =
@@ -130,6 +150,8 @@ fn main() {
     let wait = Duration::from_millis(
         arg("--timeout-ms").and_then(|v| v.parse().ok()).unwrap_or(30_000),
     );
+    let reload_at: Option<usize> =
+        arg("--reload-at").and_then(|v| v.parse().ok());
 
     // Wait for warm-up, then learn the image size from the index.
     let mut ready = false;
@@ -184,9 +206,30 @@ fn main() {
         }
     });
 
-    // Phase 2: steady workers sharing the remaining request count.
+    // Phase 2: steady workers sharing the remaining request count. The
+    // optional reload trigger rides alongside them so the weight swap
+    // happens while inference requests are genuinely in flight.
+    let reload_status = AtomicUsize::new(usize::MAX);
     let next = AtomicUsize::new(burst);
     std::thread::scope(|s| {
+        if let Some(at) = reload_at {
+            let tally = Arc::clone(&tally);
+            let addr = addr.clone();
+            let reload_status = &reload_status;
+            s.spawn(move || {
+                while completed(&tally) < at.min(requests) {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                let resp = send_raw(&addr, &post_reload(), wait);
+                let status = status_of(&resp).unwrap_or(0);
+                reload_status.store(status as usize, Ordering::SeqCst);
+                println!(
+                    "load: reload status {status} after {} completed \
+                     requests",
+                    completed(&tally)
+                );
+            });
+        }
         for w in 0..conns {
             let tally = Arc::clone(&tally);
             let addr = addr.clone();
@@ -214,6 +257,13 @@ fn main() {
          5xx {err5xx}  hung {hung}"
     );
     if hung > 0 {
+        std::process::exit(1);
+    }
+    // A requested reload that never came back 200 is a failure even when
+    // every inference request survived it.
+    if reload_at.is_some()
+        && reload_status.load(Ordering::SeqCst) != 200
+    {
         std::process::exit(1);
     }
 }

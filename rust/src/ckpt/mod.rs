@@ -136,6 +136,23 @@ pub fn params_fingerprint(params: &ParamStore) -> u64 {
     f.finish()
 }
 
+/// Fingerprint of one or more tensors (shape dims + payload bytes, in
+/// order) — the per-entry `fp` recorded by panel-snapshot v3 headers
+/// and compared by the delta-refresh path to decide which entries to
+/// re-pack. Entries packed from several params hash all of them in
+/// entry-definition order (the Φ entry folds `phi` and the router
+/// `scale`, so a change to either marks it dirty).
+pub fn entry_fingerprint(tensors: &[&Tensor]) -> u64 {
+    let mut f = snapshot::Fnv64::new();
+    for t in tensors {
+        for &d in &t.shape {
+            f.update(&(d as u64).to_le_bytes());
+        }
+        f.update(util::f32s_as_bytes(&t.data));
+    }
+    f.finish()
+}
+
 /// Save the full train state (params + Adam moments + step).
 pub fn save_state(dir: &Path, name: &str, state: &TrainState) -> Result<()> {
     save_params(dir, &format!("{name}.params"), &state.params)?;

@@ -20,7 +20,7 @@
 //!           aligned offset, zero padding in between
 //! ```
 //!
-//! Header JSON fields: `version` (2), `endian` ("little"/"big" — the
+//! Header JSON fields: `version` (3), `endian` ("little"/"big" — the
 //! blobs are raw native-endian element bytes, so a file only loads on a
 //! same-endian host), `dtype` (the file's *nominal* panel storage:
 //! "f32"/"bf16"/"int8" — what the snapshot was requested at; individual
@@ -28,7 +28,7 @@
 //! the blobs were packed for — [`tensor::panel_layout`]; a mismatch
 //! means the panels would feed the microkernel garbage, so the loader
 //! rejects it), `blob_bytes`, `checksum` (FNV-1a 64 over the whole blob
-//! region, hex), and `entries`: `{name, kind: "panels"|"f32", dtype
+//! region, hex), and `entries`: `{name, kind: "panels"|"f32", fp, dtype
 //! (panels only), k, n, groups | len, offset, bytes}` with offsets
 //! relative to the blob base.
 //!
@@ -38,8 +38,15 @@
 //! file) and adds the int8 payload shape: an int8 entry's payload is
 //! `[quantized blob | zero pad to 64 | f32 scale+zero-point arrays]` in
 //! one entry (single offset/bytes), so both segments land 64-byte
-//! aligned and map as zero-copy views. v1 readers reject v2 files (and
-//! vice versa) by the version check below.
+//! aligned and map as zero-copy views. v3 adds a per-entry `fp`: the
+//! FNV-1a-64 fingerprint (hex) of the *source parameter payload(s)* the
+//! entry was packed from — the Φ entry's fp covers both `phi` and the
+//! router `scale` since the stored panels fold both. Fingerprints drive
+//! [`write_snapshot_delta`]: after a fine-tune, only entries whose
+//! source params changed are re-quantized/re-packed; unchanged entries
+//! are copied byte-for-byte from the base file at their existing byte
+//! ranges. Readers of one version reject files of another by the
+//! version check below.
 //!
 //! # Validation
 //!
@@ -93,7 +100,7 @@ impl std::error::Error for SnapshotFileInvalid {}
 pub(crate) fn file_invalid(msg: String) -> anyhow::Error {
     anyhow::Error::new(SnapshotFileInvalid).context(msg)
 }
-const VERSION: usize = 2;
+const VERSION: usize = 3;
 /// Blob alignment: every entry payload starts on a 64-byte boundary so
 /// mapped f32/u16 views are always well-aligned (and cache-line-clean).
 const ALIGN: usize = 64;
@@ -198,6 +205,7 @@ impl Fnv64 {
 /// One entry to serialize: packed panels (the bulk, mapped back as views
 /// on load) or a plain f32 vector (biases, LayerNorm params, the
 /// positional embedding — small, copied on load).
+#[derive(Clone, Copy)]
 pub enum EntryRef<'a> {
     Panels(&'a PackedPanels),
     F32s(&'a [f32]),
@@ -226,36 +234,93 @@ impl EntryRef<'_> {
     }
 }
 
-/// Write a snapshot holding `entries` (in order); `dtype` is the
-/// file's nominal panel storage (what the snapshot was requested at —
-/// compared against the loader's requested dtype). Each `Panels` entry
-/// records its own storage dtype, which may differ from the nominal one
-/// (the int8 router policy stores Φ/gates at bf16 inside an int8
-/// file). `params_fp` is the fingerprint of the `ParamStore` the
-/// panels were packed from ([`crate::ckpt::params_fingerprint`]);
-/// loaders compare it against the store they are asked to serve so a
-/// stale snapshot (retrained checkpoint, same file) is rejected instead
-/// of silently serving old weights.
-pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
-                      entries: &[(String, EntryRef<'_>)]) -> Result<()> {
-    // Pass 1: offsets + checksum over the exact bytes pass 2 will emit
-    // (payload segments, deterministic inter-segment padding, and
-    // inter-blob zero padding).
-    let mut metas = Vec::with_capacity(entries.len());
+/// One named entry handed to [`write_snapshot`]: the payload plus the
+/// FNV-1a-64 fingerprint of the source parameter payload(s) it was
+/// packed from (recorded per entry in the v3 header; drives
+/// [`write_snapshot_delta`]'s changed/unchanged decision on the next
+/// refresh).
+pub struct SnapshotEntry<'a> {
+    pub name: String,
+    pub fp: u64,
+    pub payload: EntryRef<'a>,
+}
+
+/// What the shared streaming core emits for one entry: a fresh payload
+/// (segments + deterministic padding) or an already-padded byte region
+/// copied verbatim from a base snapshot (delta keep-entries). Both
+/// produce identical on-disk bytes for identical logical content, so a
+/// delta-written file is byte-for-byte equal to a full rewrite of the
+/// same surface.
+enum WirePayload<'a> {
+    Fresh(EntryRef<'a>),
+    /// `align_up(bytes)` long — the entry's blob range *including* its
+    /// trailing alignment padding, as stored in the base file.
+    Raw(&'a [u8]),
+}
+
+struct WireEntry<'a> {
+    name: &'a str,
+    fp: u64,
+    kind: EntryKind,
+    dtype: WeightDtype,
+    /// (k, n, groups) for panels; (len, 0, 0) for f32 vectors.
+    dims: (usize, usize, usize),
+    /// Logical payload bytes (excluding trailing alignment padding).
+    bytes: usize,
+    payload: WirePayload<'a>,
+}
+
+impl<'a> WireEntry<'a> {
+    /// Meta derived from a fresh payload (the full-write path and delta
+    /// rewrite-entries).
+    fn fresh(name: &'a str, fp: u64, payload: EntryRef<'a>) -> Self {
+        let (kind, dtype, dims) = match &payload {
+            EntryRef::Panels(p) => (
+                EntryKind::Panels,
+                p.dtype(),
+                (p.k_rows(), p.n_cols(), p.groups()),
+            ),
+            EntryRef::F32s(d) => {
+                (EntryKind::F32s, WeightDtype::F32, (d.len(), 0, 0))
+            }
+        };
+        let bytes = payload.byte_len();
+        WireEntry { name, fp, kind, dtype, dims, bytes,
+                    payload: WirePayload::Fresh(payload) }
+    }
+}
+
+/// Shared writer core: offsets + checksum pass over the exact bytes the
+/// stream pass will emit, header, then stream to a temp file in the
+/// target directory and publish with an atomic rename. Readers that
+/// already mapped the old file keep their (old) inode intact — an
+/// in-place truncating write would SIGBUS them or hand them torn
+/// weights — and a crash mid-write can never leave a half-written file
+/// at the final path.
+fn write_snapshot_file(path: &Path, dtype: WeightDtype, params_fp: u64,
+                       wires: &[WireEntry<'_>]) -> Result<()> {
+    let mut metas = Vec::with_capacity(wires.len());
     let mut sum = Fnv64::new();
     let zeros = [0u8; ALIGN];
     let mut off = 0usize;
-    for (name, e) in entries {
-        let bytes = e.byte_len();
-        metas.push((name.as_str(), off, bytes));
-        let (s1, s2) = e.segments();
-        sum.update(s1);
-        if let Some(s2) = s2 {
-            sum.update(&zeros[..align_up(s1.len()) - s1.len()]);
-            sum.update(s2);
+    for w in wires {
+        metas.push(off);
+        let padded = align_up(w.bytes);
+        match &w.payload {
+            WirePayload::Fresh(e) => {
+                let (s1, s2) = e.segments();
+                sum.update(s1);
+                if let Some(s2) = s2 {
+                    sum.update(&zeros[..align_up(s1.len()) - s1.len()]);
+                    sum.update(s2);
+                }
+                sum.update(&zeros[..padded - w.bytes]);
+            }
+            WirePayload::Raw(r) => {
+                debug_assert_eq!(r.len(), padded);
+                sum.update(r);
+            }
         }
-        let padded = align_up(bytes);
-        sum.update(&zeros[..padded - bytes]);
         off = off
             .checked_add(padded)
             .context("snapshot blob region size overflow")?;
@@ -272,23 +337,24 @@ pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
     header.set("blob_bytes", Value::from(blob_bytes));
     header.set("checksum", Value::from(sum.hex()));
     header.set("params_fp", Value::from(format!("{params_fp:016x}")));
-    let mut arr = Vec::with_capacity(entries.len());
-    for ((name, e), &(_, eoff, ebytes)) in entries.iter().zip(&metas) {
+    let mut arr = Vec::with_capacity(wires.len());
+    for (w, &eoff) in wires.iter().zip(&metas) {
         let mut v = Value::obj();
-        v.set("name", Value::from(name.as_str()));
+        v.set("name", Value::from(w.name));
         v.set("offset", Value::from(eoff));
-        v.set("bytes", Value::from(ebytes));
-        match e {
-            EntryRef::Panels(p) => {
+        v.set("bytes", Value::from(w.bytes));
+        v.set("fp", Value::from(format!("{:016x}", w.fp)));
+        match w.kind {
+            EntryKind::Panels => {
                 v.set("kind", Value::from("panels"));
-                v.set("dtype", Value::from(dtype_name(p.dtype())));
-                v.set("k", Value::from(p.k_rows()));
-                v.set("n", Value::from(p.n_cols()));
-                v.set("groups", Value::from(p.groups()));
+                v.set("dtype", Value::from(dtype_name(w.dtype)));
+                v.set("k", Value::from(w.dims.0));
+                v.set("n", Value::from(w.dims.1));
+                v.set("groups", Value::from(w.dims.2));
             }
-            EntryRef::F32s(d) => {
+            EntryKind::F32s => {
                 v.set("kind", Value::from("f32"));
-                v.set("len", Value::from(d.len()));
+                v.set("len", Value::from(w.dims.0));
             }
         }
         arr.push(v);
@@ -296,11 +362,6 @@ pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
     header.set("entries", Value::Arr(arr));
     let header_s = header.to_string();
 
-    // Pass 2: stream to a temp file in the target directory, then
-    // publish with an atomic rename. Readers that already mapped the old
-    // file keep their (old) inode intact — an in-place truncating write
-    // would SIGBUS them or hand them torn weights — and a crash
-    // mid-write can never leave a half-written file at the final path.
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
@@ -319,15 +380,20 @@ pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
         w.write_all(header_s.as_bytes())?;
         let head_len = PANELS_MAGIC.len() + 4 + header_s.len();
         w.write_all(&zeros[..align_up(head_len) - head_len])?;
-        for (_name, e) in entries {
-            let (s1, s2) = e.segments();
-            w.write_all(s1)?;
-            if let Some(s2) = s2 {
-                w.write_all(&zeros[..align_up(s1.len()) - s1.len()])?;
-                w.write_all(s2)?;
+        for we in wires {
+            match &we.payload {
+                WirePayload::Fresh(e) => {
+                    let (s1, s2) = e.segments();
+                    w.write_all(s1)?;
+                    if let Some(s2) = s2 {
+                        w.write_all(&zeros[..align_up(s1.len())
+                                           - s1.len()])?;
+                        w.write_all(s2)?;
+                    }
+                    w.write_all(&zeros[..align_up(we.bytes) - we.bytes])?;
+                }
+                WirePayload::Raw(r) => w.write_all(r)?,
             }
-            let total = e.byte_len();
-            w.write_all(&zeros[..align_up(total) - total])?;
         }
         let f = w.into_inner()
             .map_err(|e| anyhow::anyhow!("flush snapshot: {e}"))?;
@@ -346,6 +412,146 @@ pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
             let _ = std::fs::remove_file(&tmp);
         })?;
     Ok(())
+}
+
+/// Write a snapshot holding `entries` (in order); `dtype` is the
+/// file's nominal panel storage (what the snapshot was requested at —
+/// compared against the loader's requested dtype). Each `Panels` entry
+/// records its own storage dtype, which may differ from the nominal one
+/// (the int8 router policy stores Φ/gates at bf16 inside an int8
+/// file). `params_fp` is the fingerprint of the `ParamStore` the
+/// panels were packed from ([`crate::ckpt::params_fingerprint`]);
+/// loaders compare it against the store they are asked to serve so a
+/// stale snapshot (retrained checkpoint, same file) is rejected instead
+/// of silently serving old weights.
+pub fn write_snapshot(path: &Path, dtype: WeightDtype, params_fp: u64,
+                      entries: &[SnapshotEntry<'_>]) -> Result<()> {
+    let wires: Vec<WireEntry<'_>> = entries
+        .iter()
+        .map(|e| WireEntry::fresh(&e.name, e.fp, e.payload))
+        .collect();
+    write_snapshot_file(path, dtype, params_fp, &wires)
+}
+
+/// One entry of a delta refresh ([`write_snapshot_delta`]).
+pub enum DeltaEntry<'a> {
+    /// The source params did not change: copy the entry's bytes from
+    /// the base file. `fp` is the fingerprint the caller expects the
+    /// base entry to carry — a mismatch means the base file was written
+    /// from different params than the refresh assumed (stale base) and
+    /// rejects the whole delta.
+    Keep { name: String, fp: u64 },
+    /// The source params changed: a freshly re-packed payload.
+    Write { name: String, fp: u64, payload: EntryRef<'a> },
+}
+
+/// What a delta refresh actually rewrote, for metrics
+/// (`snapshot/delta_entries_rewritten`) and the strictly-fewer-bytes
+/// acceptance check. `bytes_*` count logical payload bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaStats {
+    pub entries_total: usize,
+    pub entries_rewritten: usize,
+    pub bytes_total: usize,
+    pub bytes_rewritten: usize,
+}
+
+/// Delta refresh: rewrite the snapshot at `path`, re-emitting only the
+/// entries whose source params changed (`Write`) and copying everything
+/// else byte-for-byte from `base` (`Keep`) — no re-quantize/re-pack for
+/// unchanged entries, which at fine-tune scale is nearly all of them.
+/// The entry list, order, and per-entry sizes must match the base file
+/// (same model config), so unchanged entries keep their byte ranges;
+/// the output is byte-identical to a full [`write_snapshot`] of the
+/// same surface. Publication shares the temp-file + rename path, so a
+/// failure (including the `snapshot/delta_write` failpoint) leaves the
+/// base file untouched and still serving.
+pub fn write_snapshot_delta(path: &Path, base: &SnapshotFile,
+                            dtype: WeightDtype, params_fp: u64,
+                            entries: &[DeltaEntry<'_>])
+    -> Result<DeltaStats> {
+    // Fault-injection site: a torn delta write must leave the old
+    // generation serving. Carries the file-invalid marker so callers
+    // classify it like any other bad-file condition.
+    if crate::util::failpoints::should_fail("snapshot/delta_write") {
+        return Err(file_invalid(format!(
+            "snapshot {path:?}: injected delta-write failure (failpoint \
+             snapshot/delta_write)")));
+    }
+    if dtype != base.dtype() {
+        bail!("delta refresh requested at dtype {}, base snapshot is {} \
+               — rewrite the snapshot in full instead",
+              dtype_name(dtype), dtype_name(base.dtype()));
+    }
+    if entries.len() != base.len() {
+        bail!("delta refresh has {} entries, base snapshot has {} — \
+               different model config, rewrite the snapshot in full",
+              entries.len(), base.len());
+    }
+    let blob = base.map.bytes();
+    let mut wires = Vec::with_capacity(entries.len());
+    let mut stats = DeltaStats { entries_total: entries.len(),
+                                 entries_rewritten: 0,
+                                 bytes_total: 0,
+                                 bytes_rewritten: 0 };
+    for d in entries {
+        match d {
+            DeltaEntry::Keep { name, fp } => {
+                let be = base.entries.get(name).with_context(|| {
+                    format!("delta refresh keeps entry '{name}' but the \
+                             base snapshot has no such entry — different \
+                             model config, rewrite the snapshot in full")
+                })?;
+                if be.fp != *fp {
+                    return Err(file_invalid(format!(
+                        "delta refresh base is stale: entry '{name}' has \
+                         fingerprint {:016x} on disk, the refresh was \
+                         computed against {fp:016x} — the base snapshot \
+                         was written from different params",
+                        be.fp)));
+                }
+                let start = base.blob_base + be.offset;
+                let end = start
+                    .checked_add(align_up(be.bytes))
+                    .filter(|&e| e <= blob.len())
+                    .with_context(|| format!(
+                        "base snapshot entry '{name}' padded range \
+                         exceeds the file"))?;
+                stats.bytes_total += be.bytes;
+                wires.push(WireEntry {
+                    name,
+                    fp: *fp,
+                    kind: be.kind,
+                    dtype: be.dtype,
+                    dims: be.dims,
+                    bytes: be.bytes,
+                    payload: WirePayload::Raw(&blob[start..end]),
+                });
+            }
+            DeltaEntry::Write { name, fp, payload } => {
+                let w = WireEntry::fresh(name, *fp, *payload);
+                let be = base.entries.get(name.as_str())
+                    .with_context(|| format!(
+                        "delta refresh rewrites entry '{name}' but the \
+                         base snapshot has no such entry — different \
+                         model config, rewrite the snapshot in full"))?;
+                if (be.kind, be.dtype, be.dims, be.bytes)
+                    != (w.kind, w.dtype, w.dims, w.bytes)
+                {
+                    bail!("delta refresh entry '{name}' has a different \
+                           shape/dtype than the base snapshot — \
+                           different model config, rewrite the snapshot \
+                           in full");
+                }
+                stats.bytes_total += w.bytes;
+                stats.bytes_rewritten += w.bytes;
+                stats.entries_rewritten += 1;
+                wires.push(w);
+            }
+        }
+    }
+    write_snapshot_file(path, dtype, params_fp, &wires)?;
+    Ok(stats)
 }
 
 // ---------------------------------------------------------------------------
@@ -369,6 +575,9 @@ struct Entry {
     /// Offset into the blob region (64-byte aligned).
     offset: usize,
     bytes: usize,
+    /// Fingerprint of the source parameter payload(s) the entry was
+    /// packed from (v3; see module docs).
+    fp: u64,
 }
 
 /// An open, header-validated snapshot. The typed getters validate each
@@ -496,6 +705,10 @@ impl SnapshotFile {
                 "f32" => EntryKind::F32s,
                 other => bail!("entry '{name}' has unknown kind '{other}'"),
             };
+            let fp = u64::from_str_radix(
+                e.req("fp")?.as_str().context("entry fp")?, 16)
+                .with_context(|| format!(
+                    "entry '{name}' fp is not a hex fingerprint"))?;
             let (edtype, dims) = match kind {
                 EntryKind::Panels => (
                     dtype_parse(
@@ -513,7 +726,7 @@ impl SnapshotFile {
             };
             if entries.insert(name.clone(),
                               Entry { kind, dtype: edtype, dims, offset,
-                                      bytes })
+                                      bytes, fp })
                 .is_some()
             {
                 bail!("duplicate snapshot entry '{name}'");
@@ -548,6 +761,19 @@ impl SnapshotFile {
 
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
+    }
+
+    /// The recorded source-param fingerprint of entry `name` (None if
+    /// the entry does not exist). Drives the changed/unchanged decision
+    /// of a delta refresh.
+    pub fn entry_fp(&self, name: &str) -> Option<u64> {
+        self.entries.get(name).map(|e| e.fp)
+    }
+
+    /// All `(entry name, source-param fingerprint)` pairs, in name
+    /// order.
+    pub fn entry_fps(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.entries.iter().map(|(n, e)| (n.as_str(), e.fp))
     }
 
     fn entry(&self, name: &str, kind: EntryKind) -> Result<&Entry> {
@@ -620,6 +846,10 @@ mod tests {
         ))
     }
 
+    const FP_A: u64 = 0xA1;
+    const FP_B: u64 = 0xB2;
+    const FP_V: u64 = 0xC3;
+
     fn sample_entries(rng: &mut Rng, dtype: WeightDtype)
         -> (PackedPanels, PackedPanels, Vec<f32>) {
         // One big single matrix (above the raw-retention threshold), one
@@ -639,9 +869,12 @@ mod tests {
         let (a, b, v) = sample_entries(&mut rng, dtype);
         {
             let entries = vec![
-                ("w/a".to_string(), EntryRef::Panels(&a)),
-                ("w/b".to_string(), EntryRef::Panels(&b)),
-                ("bias".to_string(), EntryRef::F32s(&v)),
+                SnapshotEntry { name: "w/a".to_string(), fp: FP_A,
+                                payload: EntryRef::Panels(&a) },
+                SnapshotEntry { name: "w/b".to_string(), fp: FP_B,
+                                payload: EntryRef::Panels(&b) },
+                SnapshotEntry { name: "bias".to_string(), fp: FP_V,
+                                payload: EntryRef::F32s(&v) },
             ];
             write_snapshot(path, dtype, 0xDEAD_BEEF_0123_4567, &entries)
                 .unwrap();
@@ -681,6 +914,11 @@ mod tests {
             assert_eq!(snap.dtype(), dtype);
             assert_eq!(snap.params_fp(), 0xDEAD_BEEF_0123_4567);
             assert_eq!(snap.len(), 3);
+            // v3: per-entry source fingerprints round-trip.
+            assert_eq!(snap.entry_fp("w/a"), Some(FP_A));
+            assert_eq!(snap.entry_fp("w/b"), Some(FP_B));
+            assert_eq!(snap.entry_fp("bias"), Some(FP_V));
+            assert_eq!(snap.entry_fp("nope"), None);
             let la = snap.panels("w/a", 300, 96, 1).unwrap();
             let lb = snap.panels("w/b", 24, 16, 3).unwrap();
             assert!(la.is_view() && lb.is_view());
@@ -714,8 +952,10 @@ mod tests {
         let q = PackedPanels::pack(&big, WeightDtype::Int8);
         let h = PackedPanels::pack(&big, WeightDtype::Bf16);
         let entries = vec![
-            ("w/q".to_string(), EntryRef::Panels(&q)),
-            ("w/h".to_string(), EntryRef::Panels(&h)),
+            SnapshotEntry { name: "w/q".to_string(), fp: 1,
+                            payload: EntryRef::Panels(&q) },
+            SnapshotEntry { name: "w/h".to_string(), fp: 2,
+                            payload: EntryRef::Panels(&h) },
         ];
         write_snapshot(&path, WeightDtype::Int8, 1, &entries).unwrap();
         let snap = SnapshotFile::open(&path).unwrap();
@@ -735,14 +975,14 @@ mod tests {
 
     #[test]
     fn version_mismatch_rejected_both_directions() {
-        // v2 readers must reject other versions cleanly — a patched
-        // lower version stands in for a real v1 file (same check, same
-        // message), a higher one for a future format.
+        // Readers of one version must reject files of another cleanly —
+        // a patched lower version stands in for a real v2 file (same
+        // check, same message), a higher one for a future format.
         let path = tmpfile("version");
         write_sample(&path, WeightDtype::F32);
         let data = std::fs::read(&path).unwrap();
         let find = format!("\"version\":{VERSION}").into_bytes();
-        for wrong in ["\"version\":1", "\"version\":3"] {
+        for wrong in ["\"version\":2", "\"version\":4"] {
             std::fs::write(&path, patch(&data, &find, wrong.as_bytes()))
                 .unwrap();
             let err = SnapshotFile::open(&path).unwrap_err();
@@ -838,6 +1078,150 @@ mod tests {
         let err = SnapshotFile::open(&path).unwrap_err();
         assert!(format!("{err:#}").contains("dtype"), "{err:#}");
 
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn delta_rewrite_matches_full_write_byte_for_byte() {
+        for dtype in
+            [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8] {
+            let base_path = tmpfile(&format!("dbase-{}", dtype.name()));
+            let (a, _b, v) = write_sample(&base_path, dtype);
+            // "Fine-tune" w/b only: same dims, new values.
+            let mut rng = Rng::new(11);
+            let nb = Tensor::randn(&[3, 24, 16], 1.0, &mut rng);
+            let b2 = PackedPanels::pack_grouped(&nb.data, 24, 16, dtype);
+            let base = SnapshotFile::open(&base_path).unwrap();
+            let delta_path = tmpfile(&format!("dout-{}", dtype.name()));
+            let stats = write_snapshot_delta(
+                &delta_path, &base, dtype, 0x1111,
+                &[
+                    DeltaEntry::Keep { name: "w/a".into(), fp: FP_A },
+                    DeltaEntry::Write { name: "w/b".into(), fp: 0xB9,
+                                        payload: EntryRef::Panels(&b2) },
+                    DeltaEntry::Keep { name: "bias".into(), fp: FP_V },
+                ])
+                .unwrap();
+            assert_eq!(stats.entries_total, 3);
+            assert_eq!(stats.entries_rewritten, 1);
+            assert!(stats.bytes_rewritten > 0
+                        && stats.bytes_rewritten < stats.bytes_total,
+                    "{stats:?}");
+            // The delta output must be byte-identical to a full write of
+            // the same surface — identical header, offsets, checksum.
+            let full_path = tmpfile(&format!("dfull-{}", dtype.name()));
+            write_snapshot(&full_path, dtype, 0x1111, &[
+                SnapshotEntry { name: "w/a".into(), fp: FP_A,
+                                payload: EntryRef::Panels(&a) },
+                SnapshotEntry { name: "w/b".into(), fp: 0xB9,
+                                payload: EntryRef::Panels(&b2) },
+                SnapshotEntry { name: "bias".into(), fp: FP_V,
+                                payload: EntryRef::F32s(&v) },
+            ])
+            .unwrap();
+            assert_eq!(std::fs::read(&delta_path).unwrap(),
+                       std::fs::read(&full_path).unwrap(),
+                       "delta and full writes diverge at {}",
+                       dtype.name());
+            // And it opens clean with the refreshed entry in place.
+            let snap = SnapshotFile::open(&delta_path).unwrap();
+            assert_eq!(snap.params_fp(), 0x1111);
+            assert_eq!(snap.entry_fp("w/a"), Some(FP_A));
+            assert_eq!(snap.entry_fp("w/b"), Some(0xB9));
+            let lb = snap.panels("w/b", 24, 16, 3).unwrap();
+            assert_eq!(lb.panel_bytes(), b2.panel_bytes());
+            assert_eq!(lb.scale_bytes(), b2.scale_bytes());
+            assert_eq!(snap.f32s("bias", 37).unwrap(), v);
+            drop(lb);
+            drop((snap, base));
+            for p in [&base_path, &delta_path, &full_path] {
+                std::fs::remove_file(p).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn delta_over_its_own_base_path_is_atomic() {
+        // The production flow rewrites SOFTMOE_SNAPSHOT in place while
+        // the base mapping is still open: the rename must publish a new
+        // inode without disturbing the open map.
+        let path = tmpfile("dinplace");
+        let (a, b, v) = write_sample(&path, WeightDtype::F32);
+        let base = SnapshotFile::open(&path).unwrap();
+        let stats = write_snapshot_delta(
+            &path, &base, WeightDtype::F32, 0x2222,
+            &[
+                DeltaEntry::Keep { name: "w/a".into(), fp: FP_A },
+                DeltaEntry::Keep { name: "w/b".into(), fp: FP_B },
+                DeltaEntry::Write { name: "bias".into(), fp: 0xC9,
+                                    payload: EntryRef::F32s(&v) },
+            ])
+            .unwrap();
+        assert_eq!(stats.entries_rewritten, 1);
+        // The old mapping still reads the old generation…
+        assert_eq!(base.params_fp(), 0xDEAD_BEEF_0123_4567);
+        assert_eq!(base.panels("w/a", 300, 96, 1).unwrap().panel_bytes(),
+                   a.panel_bytes());
+        // …and a fresh open sees the new one.
+        let snap = SnapshotFile::open(&path).unwrap();
+        assert_eq!(snap.params_fp(), 0x2222);
+        assert_eq!(snap.entry_fp("bias"), Some(0xC9));
+        assert_eq!(snap.panels("w/b", 24, 16, 3).unwrap().panel_bytes(),
+                   b.panel_bytes());
+        drop((snap, base));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn delta_with_stale_base_fingerprint_rejected() {
+        // A base file written from different params than the refresh
+        // assumed must reject the whole delta with the file-invalid
+        // marker, leaving the base untouched.
+        let path = tmpfile("dstale");
+        write_sample(&path, WeightDtype::F32);
+        let base = SnapshotFile::open(&path).unwrap();
+        let out = tmpfile("dstale-out");
+        let err = write_snapshot_delta(
+            &out, &base, WeightDtype::F32, 7,
+            &[
+                DeltaEntry::Keep { name: "w/a".into(), fp: 0xFFFF },
+                DeltaEntry::Keep { name: "w/b".into(), fp: FP_B },
+                DeltaEntry::Keep { name: "bias".into(), fp: FP_V },
+            ])
+            .unwrap_err();
+        assert!(err.downcast_ref::<SnapshotFileInvalid>().is_some(),
+                "{err:#}");
+        assert!(format!("{err:#}").contains("stale"), "{err:#}");
+        assert!(!out.exists());
+        drop(base);
+        SnapshotFile::open(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn delta_write_failpoint_leaves_base_intact() {
+        use crate::util::failpoints;
+        let path = tmpfile("dfail");
+        write_sample(&path, WeightDtype::F32);
+        let base = SnapshotFile::open(&path).unwrap();
+        failpoints::arm("snapshot/delta_write",
+                        failpoints::Action::Fail { from: 1, to: None });
+        let err = write_snapshot_delta(
+            &path, &base, WeightDtype::F32, 7,
+            &[
+                DeltaEntry::Keep { name: "w/a".into(), fp: FP_A },
+                DeltaEntry::Keep { name: "w/b".into(), fp: FP_B },
+                DeltaEntry::Keep { name: "bias".into(), fp: FP_V },
+            ])
+            .unwrap_err();
+        failpoints::disarm("snapshot/delta_write");
+        assert!(err.downcast_ref::<SnapshotFileInvalid>().is_some(),
+                "{err:#}");
+        drop(base);
+        // The base file is untouched: opens clean, old fingerprint.
+        let snap = SnapshotFile::open(&path).unwrap();
+        assert_eq!(snap.params_fp(), 0xDEAD_BEEF_0123_4567);
+        drop(snap);
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -1,13 +1,15 @@
 //! `softmoe` — the L3 coordinator binary.
 //!
 //! Subcommands:
-//!   train       train a model (PJRT artifacts or the native engine)
-//!   serve       run the batching inference server on synthetic traffic
-//!   eval        evaluate a checkpoint (p@1 + few-shot probe)
-//!   snapshot    convert a .json/.bin checkpoint to a .panels snapshot
-//!   experiment  run a paper experiment by id (see `experiment list`)
-//!   models      list AOT models available in the manifest
-//!   flops       print the analytic cost table for the model family
+//!   train           train a model (PJRT artifacts or the native engine)
+//!   serve           run the batching inference server on synthetic traffic
+//!   finetune-serve  serve live traffic while fine-tuning, then hot-swap
+//!                   the refreshed weights in with zero downtime
+//!   eval            evaluate a checkpoint (p@1 + few-shot probe)
+//!   snapshot        convert a .json/.bin checkpoint to a .panels snapshot
+//!   experiment      run a paper experiment by id (see `experiment list`)
+//!   models          list AOT models available in the manifest
+//!   flops           print the analytic cost table for the model family
 //!
 //! Python never runs here: `make artifacts` must have produced
 //! `artifacts/` beforehand for the PJRT paths.
@@ -54,6 +56,8 @@ fn usage() {
          --steps N --batch N --ckpt-dir DIR\n  \
          serve       --model soft_s --backend pjrt|native --requests N \
          [--replicas N --queue-cap N --deadline-ms N --listen ADDR]\n  \
+         finetune-serve  --model soft_s --requests N --steps K \
+         [--finetune SUBSTR,… --lr F --replicas N --listen ADDR]\n  \
          eval        --model soft_s --ckpt-dir DIR --ckpt NAME\n  \
          snapshot    --model soft_s --ckpt-dir DIR [--ckpt NAME] \
          --out FILE.panels [--dtype f32|bf16|int8]\n  \
@@ -69,7 +73,18 @@ fn usage() {
          kernel panel layout\n\
          and writes one mmap-able .panels file; `serve` loads it when \
          SOFTMOE_SNAPSHOT is set\n\
-         (cold start then performs zero weight pack passes).\n"
+         (cold start then performs zero weight pack passes).\n\
+         `finetune-serve` (native only) serves traffic while running \
+         --steps filtered\n\
+         fine-tune steps (--finetune lists param-name substrings the \
+         optimizer may move,\n\
+         default head/,phi,scale), delta-refreshes only the dirtied \
+         panel entries, delta-\n\
+         rewrites SOFTMOE_SNAPSHOT when set, and hot-swaps the new \
+         generation in with\n\
+         zero dropped or hung requests; with --listen, POST /reload \
+         triggers a round\n\
+         (see docs/RELIABILITY.md, \"Hot swap\").\n"
     );
 }
 
@@ -77,6 +92,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(args),
         "serve" => cmd_serve(args),
+        "finetune-serve" => cmd_finetune_serve(args),
         "eval" => cmd_eval(args),
         "snapshot" => cmd_snapshot(args),
         "experiment" => cmd_experiment(args),
@@ -243,7 +259,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // after N `/infer` outcomes (replies + accept-level sheds) the
     // front-end drains itself, which releases the queue's producers and
     // ends `run`.
-    let listen = args.str_opt("listen").or_else(|| {
+    let listen = args.str_opt("listen").map(str::to_string).or_else(|| {
         std::env::var("SOFTMOE_LISTEN").ok().filter(|s| !s.is_empty())
     });
     if let Some(addr) = listen.as_deref() {
@@ -357,6 +373,331 @@ fn print_serve_tail(served: usize, metrics: &Registry) {
         metrics.counter("serve/shed"),
         metrics.counter("serve/deadline_expired"),
     );
+}
+
+/// One serve-while-train round: `steps` filtered fine-tune steps, a
+/// delta refresh of the prepared surface (only dirtied entries re-pack),
+/// an optional delta rewrite of the `.panels` snapshot, a bit-identity
+/// probe against a cold full prepare, then the zero-downtime hot swap.
+/// Returns the published weight generation. Failure on any stage leaves
+/// the old generation serving (the swap is the last step).
+#[allow(clippy::too_many_arguments)]
+fn finetune_swap_once(
+    be: &mut NativeRuntime,
+    state: &mut TrainState,
+    data: &SynthShapes,
+    cfg: &ModelConfig,
+    steps: usize,
+    batch: usize,
+    lr: f32,
+    filter: &[&str],
+    snapshot: Option<&std::path::Path>,
+    handle: &softmoe::serve::SwapHandle,
+    metrics: &Registry,
+    sample_base: u64,
+) -> Result<u64> {
+    use softmoe::nn::{PreparedModel, VitModel};
+
+    for s in 0..steps {
+        let (images, labels) =
+            data.batch(sample_base + (s * batch) as u64, batch);
+        let (out, kept) =
+            be.train_step_filtered(state, &images, &labels, lr, filter)?;
+        println!(
+            "finetune step {s}: loss {:.4} acc {:.3} \
+             ({kept} params updated)",
+            out.loss, out.accuracy
+        );
+    }
+    let (prep, stats) = be.refresh_prepared(&state.params)?;
+    println!(
+        "refresh: repacked {} / {} entries (weight generation {})",
+        stats.entries_repacked, stats.entries_total, prep.generation()
+    );
+    anyhow::ensure!(
+        stats.entries_repacked < stats.entries_total,
+        "delta refresh repacked every entry ({} of {}) — the --finetune \
+         filter {:?} dirties the whole surface, so a delta buys nothing",
+        stats.entries_repacked, stats.entries_total, filter
+    );
+    // Bit-identity probe: the incrementally refreshed surface must be
+    // indistinguishable from a cold full prepare of the same params.
+    let (probe, _) = data.eval_batch(0, 2);
+    let cold = PreparedModel::new(&VitModel::new(cfg.clone()),
+                                  &state.params, prep.dtype());
+    let warm_out = prep.forward(&probe);
+    let cold_out = cold.forward(&probe);
+    let identical = warm_out.logits.data == cold_out.logits.data
+        && warm_out.features.data == cold_out.features.data;
+    println!("refresh bit-identical to full prepare: {identical}");
+    anyhow::ensure!(
+        identical,
+        "delta-refreshed logits diverge from a cold full prepare"
+    );
+    if let Some(path) = snapshot {
+        match be.write_snapshot_delta(path)? {
+            Some(d) => {
+                metrics.inc("snapshot/delta_entries_rewritten",
+                            d.entries_rewritten as u64);
+                println!(
+                    "snapshot delta: rewrote {} / {} entries, {} / {} \
+                     payload bytes",
+                    d.entries_rewritten, d.entries_total,
+                    softmoe::util::human_count(d.bytes_rewritten as f64),
+                    softmoe::util::human_count(d.bytes_total as f64)
+                );
+                anyhow::ensure!(
+                    d.entries_rewritten < d.entries_total
+                        && d.bytes_rewritten < d.bytes_total,
+                    "snapshot delta rewrote the whole file ({} of {} \
+                     bytes)", d.bytes_rewritten, d.bytes_total
+                );
+            }
+            None => println!(
+                "snapshot delta unavailable (no provenance recorded); \
+                 leaving {} as-is", path.display()),
+        }
+    }
+    let generation = handle.swap(prep, metrics)?;
+    println!("swapped in weight generation {generation}");
+    Ok(generation)
+}
+
+/// Serve-while-train: boot a prepared surface, serve traffic through the
+/// replica fan-out, fine-tune on another thread, and publish the
+/// refreshed weights through the server's swap cell — no restart, no
+/// dropped or hung request, in-flight batches finish on the generation
+/// they started with. Native only: PJRT holds device-side parameters,
+/// there is no host surface to delta-refresh or swap.
+fn cmd_finetune_serve(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    use softmoe::serve::http::ServeHooks;
+
+    let backend = args.str_or("backend", "native");
+    if backend != "native" {
+        bail!("finetune-serve requires --backend native (PJRT has no \
+               host-side prepared surface to refresh or swap)");
+    }
+    let cfg = native_model_config(args)?;
+    let mut be = NativeRuntime::new(cfg.clone());
+    println!("backend: {}", be.name());
+
+    let requests = args.usize_or("requests", 128)?;
+    let steps = args.usize_or("steps", 4)?;
+    let batch = args.usize_or("batch", 8)?;
+    let lr = args.f32_or("lr", 1e-3)?;
+    let seed = args.usize_or("seed", 0)? as i32;
+    let filter: Vec<String> = args
+        .str_or("finetune", "head/,phi,scale")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let filter_refs: Vec<&str> =
+        filter.iter().map(String::as_str).collect();
+
+    let params = match args.str_opt("ckpt-dir") {
+        Some(dir) => ckpt::load_params(
+            &PathBuf::from(dir),
+            &format!("{}.params", args.str_or("ckpt", "latest")))?,
+        None => be.init(seed)?,
+    };
+    let mut state = TrainState::fresh(params);
+    let data = dataset_for(&cfg, seed as u64);
+
+    // Boot surface + snapshot provenance: writing (or loading) the
+    // `.panels` file here records which params it holds, so the
+    // post-fine-tune write can be a delta instead of a full rewrite.
+    let snapshot = std::env::var("SOFTMOE_SNAPSHOT")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from);
+    be.prepare(&state.params)?;
+    if let Some(p) = &snapshot {
+        if be.write_snapshot(p)? {
+            println!("snapshot written to {} (delta-refresh target)",
+                     p.display());
+        }
+    }
+    let prep0 = be
+        .shared_prepared()
+        .context("native backend exposes no shared prepared surface")?;
+
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 32)?,
+        max_delay: Duration::from_micros(
+            args.usize_or("max-delay-us", 2000)? as u64),
+        compiled_sizes: vec![1, 8, 32],
+    };
+    let mut scfg = ServeConfig::from_env();
+    scfg.replicas = args.usize_or("replicas", scfg.replicas)?.max(1);
+    scfg.queue_cap = args.usize_or("queue-cap", scfg.queue_cap)?.max(1);
+    let (server, client) = Server::with_config(
+        policy, &[cfg.image_size, cfg.image_size, cfg.channels], scfg);
+    let metrics = Arc::new(Registry::new());
+    let handle = server.swap_handle();
+
+    let listen = args.str_opt("listen").map(str::to_string).or_else(|| {
+        std::env::var("SOFTMOE_LISTEN").ok().filter(|s| !s.is_empty())
+    });
+    if let Some(addr) = listen.as_deref() {
+        // HTTP mode: every POST /reload runs one fine-tune + refresh +
+        // swap round against the backend behind a mutex (requests keep
+        // flowing through the replicas while it holds the lock — they
+        // only need the already-published Arc).
+        let shared = Arc::new(Mutex::new((be, state)));
+        let reload: Arc<dyn Fn() -> Result<u64> + Send + Sync> = {
+            let shared = Arc::clone(&shared);
+            let handle = handle.clone();
+            let metrics = Arc::clone(&metrics);
+            let data = dataset_for(&cfg, seed as u64);
+            let cfg = cfg.clone();
+            let snapshot = snapshot.clone();
+            let filter = filter.clone();
+            let rounds = std::sync::atomic::AtomicU64::new(0);
+            Arc::new(move || {
+                let round = rounds.fetch_add(1, Ordering::SeqCst);
+                let guard = &mut *shared.lock().unwrap();
+                let filter_refs: Vec<&str> =
+                    filter.iter().map(String::as_str).collect();
+                finetune_swap_once(
+                    &mut guard.0, &mut guard.1, &data, &cfg, steps,
+                    batch, lr, &filter_refs, snapshot.as_deref(),
+                    &handle, &metrics,
+                    (1 << 20) + round * (steps * batch) as u64)
+            })
+        };
+        let budget = (requests > 0).then_some(requests);
+        let mut front = HttpFrontend::start_with_hooks(
+            HttpConfig::from_env(addr, budget),
+            client,
+            Arc::clone(&metrics),
+            ServeHooks {
+                swap: Some(server.swap_cell()),
+                reload: Some(reload),
+            },
+        )?;
+        println!(
+            "listening on http://{} (POST /reload fine-tunes and \
+             hot-swaps the weights)", front.local_addr());
+        let served = server.run_prepared(prep0, &metrics, None)?;
+        front.join();
+        println!(
+            "served {served} requests over http (2xx {}, 4xx {}, 5xx {}, \
+             hung {})\nswaps {}  reloads {} (failed {})",
+            metrics.counter("http/responses_2xx"),
+            metrics.counter("http/responses_4xx"),
+            metrics.counter("http/responses_5xx"),
+            metrics.counter("http/reply_timeouts"),
+            metrics.counter("serve/swaps"),
+            metrics.counter("http/reloads"),
+            metrics.counter("http/reload_failures"),
+        );
+        print_serve_tail(served, &metrics);
+        return Ok(());
+    }
+
+    // Synthetic choreography: half the traffic rides the boot
+    // generation, one fine-tune + refresh + swap runs in the middle,
+    // the other half rides the new generation — every reply accounted
+    // for, `hung 0` is the CI-enforced no-hang line.
+    let image_len = cfg.image_size * cfg.image_size * cfg.channels;
+    let gap_us = args.usize_or("gap-us", 300)? as u64;
+    let client_timeout = softmoe::serve::client_timeout_from_env();
+    let first_half = requests / 2;
+    let swapped = AtomicBool::new(false);
+
+    let (served, outcome, swap_result) = std::thread::scope(|s| {
+        let server_ref = &server;
+        let metrics_ref: &Registry = &metrics;
+        let prep_boot = Arc::clone(&prep0);
+        let srv = s.spawn(move || {
+            server_ref.run_prepared(prep_boot, metrics_ref, None)
+        });
+
+        let swapped_ref = &swapped;
+        let producer = s.spawn(move || {
+            let mut rng = Rng::new(7);
+            let mut rejected = 0usize;
+            let mut rxs = Vec::with_capacity(requests);
+            for phase in 0..2 {
+                let n = if phase == 0 { first_half }
+                        else { requests - first_half };
+                for _ in 0..n {
+                    let img: Vec<f32> =
+                        (0..image_len).map(|_| rng.uniform()).collect();
+                    match client.submit(img) {
+                        Ok(rx) => rxs.push(rx),
+                        Err(e) => {
+                            rejected += 1;
+                            eprintln!("client: request rejected: {e}");
+                        }
+                    }
+                    std::thread::sleep(Duration::from_micros(gap_us));
+                }
+                if phase == 0 {
+                    // Hold the second half until the retrained
+                    // generation is live (the trainer sets the flag on
+                    // every path, including failure).
+                    while !swapped_ref.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+            drop(client);
+            let (mut answered, mut errored, mut hung) = (0usize, 0, 0);
+            for rx in rxs {
+                match rx.wait_timeout(client_timeout) {
+                    Some(Ok(_)) => answered += 1,
+                    Some(Err(e)) => {
+                        errored += 1;
+                        eprintln!("client: error reply: {e}");
+                    }
+                    None => hung += 1,
+                }
+            }
+            (answered, errored, rejected, hung)
+        });
+
+        // Trainer (this thread): wait for the boot generation, then run
+        // the round. The swap handle refuses to publish before the
+        // server installed generation 0.
+        while handle.generation() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let swap_result = finetune_swap_once(
+            &mut be, &mut state, &data, &cfg, steps, batch, lr,
+            &filter_refs, snapshot.as_deref(), &handle, &metrics,
+            1 << 20);
+        swapped.store(true, Ordering::SeqCst);
+
+        let outcome = producer.join().unwrap();
+        let served = srv.join().unwrap();
+        (served, outcome, swap_result)
+    });
+    let served = served?;
+    let (answered, errored, rejected, hung) = outcome;
+    let generation = swap_result?;
+    println!(
+        "served {served} requests across the swap (answered {answered}, \
+         error replies {errored}, rejected at submit {rejected}, \
+         hung {hung})"
+    );
+    println!(
+        "swaps {}  weight generation {}  replica generation switches {}",
+        metrics.counter("serve/swaps"),
+        generation,
+        metrics.counter("serve/replica_gen_switches"),
+    );
+    anyhow::ensure!(
+        hung == 0,
+        "{hung} requests hung across the hot swap — the no-hang \
+         contract is broken"
+    );
+    print_serve_tail(served, &metrics);
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

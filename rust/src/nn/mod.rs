@@ -16,9 +16,24 @@
 pub mod layers;
 pub mod vit;
 
-pub use vit::{ParamStore, PreparedModel, TrainScratch, VitModel};
+pub use vit::{ParamStore, PreparedModel, RefreshStats, TrainScratch,
+              VitModel};
 
 use crate::tensor::Tensor;
+
+/// Process-wide monotonic weight-generation counter. Every
+/// [`PreparedModel`] construction (full prepare, snapshot load, delta
+/// refresh) takes the next id, so "which weights is this replica
+/// serving?" is a single integer compare — the swap protocol in
+/// `serve` publishes a new generation and replicas pick it up at batch
+/// boundaries. Starts at 1; 0 means "nothing installed".
+static NEXT_GENERATION: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(1);
+
+/// Allocate the next weight-generation id.
+pub fn next_weight_generation() -> u64 {
+    NEXT_GENERATION.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
 
 /// Gradient accumulator keyed like the ParamStore — the seed-era
 /// representation, kept for the reference backward path

@@ -11,9 +11,12 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::ckpt::snapshot::{write_snapshot, EntryRef, SnapshotFile};
+use crate::ckpt::snapshot::{
+    write_snapshot, write_snapshot_delta, DeltaEntry, DeltaStats, EntryRef,
+    SnapshotEntry, SnapshotFile,
+};
 use crate::config::{MixMode, ModelConfig, MoeType};
 use crate::moe::{
     expert_mlps_bwd_grouped, PreparedExperts, PreparedSparseRouter,
@@ -1960,6 +1963,13 @@ impl TrainScratch {
     pub fn grads(&self) -> &GradStore {
         &self.merged
     }
+
+    /// Mutable view of the merged gradients — the filtered fine-tune
+    /// path (`NativeRuntime::train_step_filtered`) zeroes the frozen
+    /// slots here before the optimizer sees them.
+    pub fn grads_mut(&mut self) -> &mut GradStore {
+        &mut self.merged
+    }
 }
 
 impl Default for TrainScratch {
@@ -2065,6 +2075,18 @@ pub struct PreparedModel {
     /// ([`crate::ckpt::params_fingerprint`]) — carried into snapshots so
     /// a stale file cannot silently serve outdated weights.
     params_fp: u64,
+    /// Monotonic weight-generation id ([`crate::nn::next_weight_generation`]):
+    /// every construction — full prepare, snapshot load, delta refresh —
+    /// takes a fresh id, so the serving layer's hot-swap protocol can
+    /// compare "which weights am I running?" with one integer.
+    generation: u64,
+    /// Per-snapshot-entry fingerprints of the *source params* each entry
+    /// was packed from ([`crate::ckpt::entry_fingerprint`]), keyed by
+    /// entry name. [`PreparedModel::refreshed`] re-packs exactly the
+    /// entries whose fingerprint changed; the snapshot writer records
+    /// them in the v3 header so [`PreparedModel::save_snapshot_delta`]
+    /// rewrites only those bytes.
+    entry_fps: BTreeMap<String, u64>,
     patch_w: PackedPanels,
     patch_b: Vec<f32>,
     pos_embed: Tensor,
@@ -2138,6 +2160,8 @@ impl PreparedModel {
             model: model.clone(),
             dtype,
             params_fp: crate::ckpt::params_fingerprint(p),
+            generation: crate::nn::next_weight_generation(),
+            entry_fps: compute_entry_fps(model, p),
             patch_w: PackedPanels::pack(model.get(p, "patch_embed/w"), dtype),
             patch_b: model.get(p, "patch_embed/b").data.clone(),
             pos_embed: model.get(p, "pos_embed").clone(),
@@ -2162,6 +2186,19 @@ impl PreparedModel {
     /// compare it against the store they are asked to serve.
     pub fn params_fingerprint(&self) -> u64 {
         self.params_fp
+    }
+
+    /// This surface's monotonic weight-generation id (unique per
+    /// construction within the process; see
+    /// [`crate::nn::next_weight_generation`]).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Number of snapshot entries this surface packs (== entries in its
+    /// `.panels` file and in the per-entry fingerprint map).
+    pub fn entry_count(&self) -> usize {
+        self.entry_fps.len()
     }
 
     /// True when every weight matrix is a zero-copy view of a mapped
@@ -2218,13 +2255,12 @@ impl PreparedModel {
     // Panel snapshots — the prepared surface on disk, loaded by mmap.
     // -----------------------------------------------------------------------
 
-    /// Write this prepared model to a `.panels` snapshot
-    /// (`ckpt::snapshot` format): every packed panel blob byte-exact as
-    /// the kernels consume it — including the folded Φ and the stacked
-    /// expert manifests — plus the f32 bias/LN/positional vectors.
-    /// [`PreparedModel::load_snapshot`] reverses this with zero pack
-    /// passes and zero panel copies.
-    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+    /// The ordered `(entry name, payload)` manifest `save_snapshot`
+    /// emits — one entry per snapshot record, names matching the
+    /// `ParamStore` keys (Φ stored under the phi key holds the
+    /// inference fold of phi *and* scale). Shared by the full and delta
+    /// writers so the two can never disagree on the entry set.
+    fn snapshot_payloads(&self) -> Vec<(String, EntryRef<'_>)> {
         let mut entries: Vec<(String, EntryRef<'_>)> = Vec::new();
         entries.push(("patch_embed/w".into(),
                       EntryRef::Panels(&self.patch_w)));
@@ -2270,7 +2306,73 @@ impl PreparedModel {
         entries.push(("ln_f/b".into(), EntryRef::F32s(&self.lnf_b)));
         entries.push(("head/w".into(), EntryRef::Panels(&self.head_w)));
         entries.push(("head/b".into(), EntryRef::F32s(&self.head_b)));
+        entries
+    }
+
+    /// The recorded source-param fingerprint of entry `name` (clean
+    /// error if the surface has no such entry — the manifest and the
+    /// fingerprint map are built from the same key scheme, so a miss
+    /// means an internal inconsistency, not a user mistake).
+    fn entry_fp_of(&self, name: &str) -> Result<u64> {
+        self.entry_fps.get(name).copied().with_context(|| {
+            format!("prepared surface has no source fingerprint for \
+                     snapshot entry '{name}'")
+        })
+    }
+
+    /// Write this prepared model to a `.panels` snapshot
+    /// (`ckpt::snapshot` format): every packed panel blob byte-exact as
+    /// the kernels consume it — including the folded Φ and the stacked
+    /// expert manifests — plus the f32 bias/LN/positional vectors.
+    /// [`PreparedModel::load_snapshot`] reverses this with zero pack
+    /// passes and zero panel copies.
+    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+        let payloads = self.snapshot_payloads();
+        let mut entries = Vec::with_capacity(payloads.len());
+        for (name, payload) in payloads {
+            let fp = self.entry_fp_of(&name)?;
+            entries.push(SnapshotEntry { name, fp, payload });
+        }
         write_snapshot(path, self.dtype, self.params_fp, &entries)
+    }
+
+    /// Delta-refresh the snapshot at `path`: entries whose source-param
+    /// fingerprint already matches the open `base` file are copied
+    /// byte-for-byte at their existing byte ranges (no re-quantize, no
+    /// re-pack); only changed entries are re-emitted. The result is
+    /// byte-identical to a full [`PreparedModel::save_snapshot`] of this
+    /// surface, published with the same atomic temp-file + rename, so a
+    /// reader that mapped the base keeps serving its old generation
+    /// untouched.
+    ///
+    /// `expected_base_fp` is the params fingerprint the caller believes
+    /// the base file was written from (the pre-fine-tune surface's
+    /// [`PreparedModel::params_fingerprint`]). A mismatch means the file
+    /// on disk is someone else's artifact or a stale generation — the
+    /// delta is rejected with the file-invalid marker and the base left
+    /// untouched rather than blindly stomped. The same marker is
+    /// returned when the `snapshot/delta_write` failpoint fires.
+    pub fn save_snapshot_delta(&self, path: &Path, base: &SnapshotFile,
+                               expected_base_fp: u64) -> Result<DeltaStats> {
+        if base.params_fp() != expected_base_fp {
+            return Err(crate::ckpt::snapshot::file_invalid(format!(
+                "delta refresh base {path:?} is stale: written from \
+                 params {:016x}, the refresh was computed against \
+                 {expected_base_fp:016x}",
+                base.params_fp())));
+        }
+        let payloads = self.snapshot_payloads();
+        let mut entries = Vec::with_capacity(payloads.len());
+        for (name, payload) in payloads {
+            let fp = self.entry_fp_of(&name)?;
+            if base.entry_fp(&name) == Some(fp) {
+                entries.push(DeltaEntry::Keep { name, fp });
+            } else {
+                entries.push(DeltaEntry::Write { name, fp, payload });
+            }
+        }
+        write_snapshot_delta(path, base, self.dtype, self.params_fp,
+                             &entries)
     }
 
     /// Load a snapshot written by [`PreparedModel::save_snapshot`] for
@@ -2355,10 +2457,16 @@ impl PreparedModel {
             });
         }
         let m = cfg.tokens();
+        let entry_fps: BTreeMap<String, u64> = snap
+            .entry_fps()
+            .map(|(n, f)| (n.to_string(), f))
+            .collect();
         Ok(PreparedModel {
             model: model.clone(),
             dtype: want,
             params_fp: snap.params_fp(),
+            generation: crate::nn::next_weight_generation(),
+            entry_fps,
             patch_w: snap.panels("patch_embed/w", cfg.patch_dim(), d, 1)?,
             patch_b: snap.f32s("patch_embed/b", d)?,
             pos_embed: Tensor::from_vec(&[m, d],
@@ -2369,6 +2477,243 @@ impl PreparedModel {
             head_w: snap.panels("head/w", d, cfg.num_classes, 1)?,
             head_b: snap.f32s("head/b", cfg.num_classes)?,
         })
+    }
+
+    /// Re-prepare against `p`, re-packing **only** the entries whose
+    /// source params changed since this surface was built and sharing
+    /// everything else with `self` (panel storage clones are `Arc`
+    /// handles — no byte copies, no pack passes for clean entries). The
+    /// result is bit-identical to a cold [`PreparedModel::new`] of the
+    /// same params — packing is deterministic, so a dirty entry re-packs
+    /// to exactly what a full prepare would build, and a clean entry
+    /// already holds those bytes — but at fine-tune scale (gates/head/a
+    /// few experts dirty) it costs a small fraction of a full prepare.
+    /// The new surface takes a fresh generation id.
+    pub fn refreshed(&self, p: &ParamStore)
+        -> (PreparedModel, RefreshStats) {
+        let model = &self.model;
+        let cfg = &model.cfg;
+        let d = cfg.dim;
+        let dtype = self.dtype;
+        let new_fps = compute_entry_fps(model, p);
+        let dirty_set: std::collections::BTreeSet<&str> = new_fps
+            .iter()
+            .filter(|&(k, v)| self.entry_fps.get(k.as_str()) != Some(v))
+            .map(|(k, _)| k.as_str())
+            .collect();
+        let dirty = |name: &str| dirty_set.contains(name);
+
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (i, ob) in self.blocks.iter().enumerate() {
+            let bk = &model.keys[i];
+            let attn = AttnPrepacked {
+                wq: if dirty(&bk.wq) {
+                    PackedPanels::pack(model.get(p, &bk.wq), dtype)
+                } else {
+                    ob.attn.wq.clone()
+                },
+                bq: if dirty(&bk.wq_b) {
+                    model.get(p, &bk.wq_b).data.clone()
+                } else {
+                    ob.attn.bq.clone()
+                },
+                wk: if dirty(&bk.wk) {
+                    PackedPanels::pack(model.get(p, &bk.wk), dtype)
+                } else {
+                    ob.attn.wk.clone()
+                },
+                bk: if dirty(&bk.wk_b) {
+                    model.get(p, &bk.wk_b).data.clone()
+                } else {
+                    ob.attn.bk.clone()
+                },
+                wv: if dirty(&bk.wv) {
+                    PackedPanels::pack(model.get(p, &bk.wv), dtype)
+                } else {
+                    ob.attn.wv.clone()
+                },
+                bv: if dirty(&bk.wv_b) {
+                    model.get(p, &bk.wv_b).data.clone()
+                } else {
+                    ob.attn.bv.clone()
+                },
+                wo: if dirty(&bk.wo) {
+                    PackedPanels::pack(model.get(p, &bk.wo), dtype)
+                } else {
+                    ob.attn.wo.clone()
+                },
+                bo: if dirty(&bk.wo_b) {
+                    model.get(p, &bk.wo_b).data.clone()
+                } else {
+                    ob.attn.bo.clone()
+                },
+                heads: cfg.heads,
+            };
+            let refresh_experts = |experts: &PreparedExperts| {
+                PreparedExperts {
+                    w1: if dirty(&bk.moe_w1) {
+                        let t = model.get(p, &bk.moe_w1);
+                        PackedPanels::pack_grouped(
+                            &t.data, t.shape[1], t.shape[2], dtype)
+                    } else {
+                        experts.w1.clone()
+                    },
+                    b1: if dirty(&bk.moe_b1) {
+                        model.get(p, &bk.moe_b1).data.clone()
+                    } else {
+                        experts.b1.clone()
+                    },
+                    w2: if dirty(&bk.moe_w2) {
+                        let t = model.get(p, &bk.moe_w2);
+                        PackedPanels::pack_grouped(
+                            &t.data, t.shape[1], t.shape[2], dtype)
+                    } else {
+                        experts.w2.clone()
+                    },
+                    b2: if dirty(&bk.moe_b2) {
+                        model.get(p, &bk.moe_b2).data.clone()
+                    } else {
+                        experts.b2.clone()
+                    },
+                }
+            };
+            let moe = match &ob.moe {
+                PreparedMoeBlock::Dense { w1, b1, w2, b2 } => {
+                    PreparedMoeBlock::Dense {
+                        w1: if dirty(&bk.mlp_w1) {
+                            PackedPanels::pack(
+                                model.get(p, &bk.mlp_w1), dtype)
+                        } else {
+                            w1.clone()
+                        },
+                        b1: if dirty(&bk.mlp_b1) {
+                            model.get(p, &bk.mlp_b1).data.clone()
+                        } else {
+                            b1.clone()
+                        },
+                        w2: if dirty(&bk.mlp_w2) {
+                            PackedPanels::pack(
+                                model.get(p, &bk.mlp_w2), dtype)
+                        } else {
+                            w2.clone()
+                        },
+                        b2: if dirty(&bk.mlp_b2) {
+                            model.get(p, &bk.mlp_b2).data.clone()
+                        } else {
+                            b2.clone()
+                        },
+                    }
+                }
+                PreparedMoeBlock::Soft { phi, experts } => {
+                    PreparedMoeBlock::Soft {
+                        // The Φ entry's fingerprint covers phi AND the
+                        // router scale (the stored panels fold both), so
+                        // a fine-tuned scale re-folds here too.
+                        phi: if dirty(&bk.phi) {
+                            let phit = model.get(p, &bk.phi);
+                            let scale = model.get(p, &bk.scale).data[0];
+                            crate::moe::soft::pack_phi_for_inference(
+                                &phit.data, d, cfg.total_slots(), scale,
+                                cfg.normalize_router, dtype)
+                        } else {
+                            phi.clone()
+                        },
+                        experts: refresh_experts(experts),
+                    }
+                }
+                PreparedMoeBlock::Sparse { wg, experts } => {
+                    PreparedMoeBlock::Sparse {
+                        wg: if dirty(&bk.wg) {
+                            PackedPanels::pack(model.get(p, &bk.wg),
+                                               dtype.router_dtype())
+                        } else {
+                            wg.clone()
+                        },
+                        experts: refresh_experts(experts),
+                    }
+                }
+            };
+            blocks.push(PreparedBlock {
+                ln1_s: if dirty(&bk.ln1_s) {
+                    model.get(p, &bk.ln1_s).data.clone()
+                } else {
+                    ob.ln1_s.clone()
+                },
+                ln1_b: if dirty(&bk.ln1_b) {
+                    model.get(p, &bk.ln1_b).data.clone()
+                } else {
+                    ob.ln1_b.clone()
+                },
+                attn,
+                ln2_s: if dirty(&bk.ln2_s) {
+                    model.get(p, &bk.ln2_s).data.clone()
+                } else {
+                    ob.ln2_s.clone()
+                },
+                ln2_b: if dirty(&bk.ln2_b) {
+                    model.get(p, &bk.ln2_b).data.clone()
+                } else {
+                    ob.ln2_b.clone()
+                },
+                moe,
+            });
+        }
+        let patch_w = if dirty("patch_embed/w") {
+            PackedPanels::pack(model.get(p, "patch_embed/w"), dtype)
+        } else {
+            self.patch_w.clone()
+        };
+        let patch_b = if dirty("patch_embed/b") {
+            model.get(p, "patch_embed/b").data.clone()
+        } else {
+            self.patch_b.clone()
+        };
+        let pos_embed = if dirty("pos_embed") {
+            model.get(p, "pos_embed").clone()
+        } else {
+            self.pos_embed.clone()
+        };
+        let lnf_s = if dirty("ln_f/s") {
+            model.get(p, "ln_f/s").data.clone()
+        } else {
+            self.lnf_s.clone()
+        };
+        let lnf_b = if dirty("ln_f/b") {
+            model.get(p, "ln_f/b").data.clone()
+        } else {
+            self.lnf_b.clone()
+        };
+        let head_w = if dirty("head/w") {
+            PackedPanels::pack(model.get(p, "head/w"), dtype)
+        } else {
+            self.head_w.clone()
+        };
+        let head_b = if dirty("head/b") {
+            model.get(p, "head/b").data.clone()
+        } else {
+            self.head_b.clone()
+        };
+        let stats = RefreshStats {
+            entries_total: new_fps.len(),
+            entries_repacked: dirty_set.len(),
+        };
+        drop(dirty_set);
+        let next = PreparedModel {
+            model: model.clone(),
+            dtype,
+            params_fp: crate::ckpt::params_fingerprint(p),
+            generation: crate::nn::next_weight_generation(),
+            entry_fps: new_fps,
+            patch_w,
+            patch_b,
+            pos_embed,
+            blocks,
+            lnf_s,
+            lnf_b,
+            head_w,
+            head_b,
+        };
+        (next, stats)
     }
 
     fn moe_infer_into(&self, blk: &PreparedBlock, x: &Tensor,
@@ -2566,6 +2911,71 @@ fn push_experts<'a>(entries: &mut Vec<(String, EntryRef<'a>)>,
     entries.push((bk.moe_b1.clone(), EntryRef::F32s(&experts.b1)));
     entries.push((bk.moe_w2.clone(), EntryRef::Panels(&experts.w2)));
     entries.push((bk.moe_b2.clone(), EntryRef::F32s(&experts.b2)));
+}
+
+/// What a delta refresh actually did: how many snapshot entries the
+/// prepared surface has, and how many had to be re-packed because their
+/// source params changed. `entries_repacked == 0` means the refresh was
+/// a pure generation bump (every panel shared with the old surface).
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshStats {
+    pub entries_total: usize,
+    pub entries_repacked: usize,
+}
+
+/// Per-entry fingerprints of the params behind each snapshot entry, in
+/// the entry-name keyspace of [`PreparedModel::save_snapshot`]. One map
+/// entry per snapshot entry — the Φ entry hashes `phi` *and* the router
+/// `scale` (the packed panels fold both), every other entry hashes its
+/// single source param. This is what makes "which entries changed?" a
+/// pure map compare for both the in-memory refresh
+/// ([`PreparedModel::refreshed`]) and the on-disk delta writer
+/// ([`PreparedModel::save_snapshot_delta`]).
+fn compute_entry_fps(model: &VitModel, p: &ParamStore)
+    -> BTreeMap<String, u64> {
+    use crate::ckpt::entry_fingerprint as efp;
+    let cfg = &model.cfg;
+    let mut fps = BTreeMap::new();
+    let mut one = |fps: &mut BTreeMap<String, u64>, name: &str| {
+        fps.insert(name.to_string(), efp(&[model.get(p, name)]));
+    };
+    one(&mut fps, "patch_embed/w");
+    one(&mut fps, "patch_embed/b");
+    one(&mut fps, "pos_embed");
+    for bk in &model.keys {
+        for name in [&bk.ln1_s, &bk.ln1_b, &bk.wq, &bk.wq_b, &bk.wk,
+                     &bk.wk_b, &bk.wv, &bk.wv_b, &bk.wo, &bk.wo_b,
+                     &bk.ln2_s, &bk.ln2_b] {
+            one(&mut fps, name);
+        }
+        if p.contains_key(&bk.mlp_w1) {
+            for name in [&bk.mlp_w1, &bk.mlp_b1, &bk.mlp_w2, &bk.mlp_b2] {
+                one(&mut fps, name);
+            }
+        } else {
+            match cfg.moe_type {
+                MoeType::Soft => {
+                    fps.insert(
+                        bk.phi.clone(),
+                        efp(&[model.get(p, &bk.phi),
+                              model.get(p, &bk.scale)]));
+                }
+                MoeType::TokensChoice | MoeType::ExpertsChoice => {
+                    one(&mut fps, &bk.wg);
+                }
+                MoeType::Dense => unreachable!(
+                    "dense block without mlp params"),
+            }
+            for name in [&bk.moe_w1, &bk.moe_b1, &bk.moe_w2, &bk.moe_b2] {
+                one(&mut fps, name);
+            }
+        }
+    }
+    one(&mut fps, "ln_f/s");
+    one(&mut fps, "ln_f/b");
+    one(&mut fps, "head/w");
+    one(&mut fps, "head/b");
+    fps
 }
 
 fn identity_mix(m: usize, s: usize) -> Tensor {

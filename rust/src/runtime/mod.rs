@@ -101,9 +101,42 @@ pub trait Backend {
 
     /// Write the prepared representation built by [`Backend::prepare`]
     /// to a `.panels` snapshot for later [`Backend::prepare_from_snapshot`]
-    /// loads. `Ok(false)` when unsupported or nothing is prepared.
-    fn write_snapshot(&self, _path: &Path) -> Result<bool> {
+    /// loads, and record the file's provenance for
+    /// [`Backend::write_snapshot_delta`]. `Ok(false)` when unsupported
+    /// or nothing is prepared.
+    fn write_snapshot(&mut self, _path: &Path) -> Result<bool> {
         Ok(false)
+    }
+
+    /// Rebuild the prepared inference surface against `params`,
+    /// re-packing **only** the entries whose source params changed since
+    /// the last prepare/refresh (the rest share storage with the old
+    /// surface) and allocating a fresh weight generation. The old
+    /// surface — and any `Arc` handle the serve layer still holds —
+    /// stays valid and serving until its holders drop it; this is the
+    /// producer half of the zero-downtime hot swap. With nothing
+    /// prepared yet this degrades to a full prepare. Backends without a
+    /// refreshable surface return `Err` (PJRT holds device-side
+    /// parameters; there is nothing to swap).
+    fn refresh_prepared(&mut self, _params: &ParamStore)
+        -> Result<(std::sync::Arc<crate::nn::PreparedModel>,
+                   crate::nn::RefreshStats)> {
+        anyhow::bail!("{}: refresh_prepared is not supported", self.name())
+    }
+
+    /// Delta-rewrite the `.panels` snapshot at `path` against the
+    /// currently prepared surface: unchanged entries are copied
+    /// byte-for-byte at their existing ranges, only changed entries are
+    /// re-emitted, and the result is byte-identical to a full
+    /// [`Backend::write_snapshot`]. Requires the backend to know which
+    /// generation the file on disk was written from (recorded by
+    /// `write_snapshot` / `prepare_from_snapshot`); a file that does not
+    /// match that record is rejected, not stomped. `Ok(None)` when
+    /// unsupported or when no snapshot provenance is recorded — callers
+    /// fall back to the full write.
+    fn write_snapshot_delta(&mut self, _path: &Path)
+        -> Result<Option<crate::ckpt::snapshot::DeltaStats>> {
+        Ok(None)
     }
 
     /// `(resident bytes, dtype name)` of the prepared representation

@@ -11,8 +11,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::ckpt::snapshot::{DeltaStats, SnapshotFile};
 use crate::config::ModelConfig;
-use crate::nn::{GradStore, ParamStore, PreparedModel, TrainScratch, VitModel};
+use crate::nn::{
+    GradStore, ParamStore, PreparedModel, RefreshStats, TrainScratch,
+    VitModel,
+};
 use crate::runtime::{Backend, StepOut, TrainState};
 use crate::tensor::{Tensor, WeightDtype};
 
@@ -48,6 +52,45 @@ pub fn adam_update(
     }
 }
 
+/// Adam restricted to parameters whose name contains one of `filter`'s
+/// substrings. Filtered-out parameters are not touched at all — no
+/// parameter movement, no moment decay — so their tensors (and thus
+/// their snapshot-entry fingerprints) stay bit-identical across the
+/// step. Returns how many parameters matched. Step count and bias
+/// correction advance exactly like [`adam_update`].
+pub fn adam_update_filtered(
+    state: &mut TrainState,
+    grads: &GradStore,
+    lr: f32,
+    filter: &[&str],
+) -> usize {
+    state.step += 1;
+    let bc1 = 1.0 - ADAM_B1.powi(state.step);
+    let bc2 = 1.0 - ADAM_B2.powi(state.step);
+    let mut kept = 0usize;
+    for (k, p) in state.params.iter_mut() {
+        if !filter.iter().any(|f| k.contains(f)) {
+            continue;
+        }
+        let g = match grads.get(k) {
+            Some(g) => g,
+            None => continue,
+        };
+        kept += 1;
+        let m = state.adam_m.get_mut(k).expect("moment m");
+        let v = state.adam_v.get_mut(k).expect("moment v");
+        for i in 0..p.data.len() {
+            let gi = g.data[i];
+            m.data[i] = ADAM_B1 * m.data[i] + (1.0 - ADAM_B1) * gi;
+            v.data[i] = ADAM_B2 * v.data[i] + (1.0 - ADAM_B2) * gi * gi;
+            let mhat = m.data[i] / bc1;
+            let vhat = v.data[i] / bc2;
+            p.data[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+    }
+    kept
+}
+
 /// Pure-Rust backend over [`VitModel`].
 pub struct NativeRuntime {
     pub model: VitModel,
@@ -56,13 +99,27 @@ pub struct NativeRuntime {
     /// snapshot of the store passed to `prepare`, plus a key identifying
     /// that store. `forward` takes the prepared path only for the same
     /// store (a different store falls back to the unprepared path) and
-    /// `train_step` drops the snapshot (it mutates the parameters in
-    /// place, so any snapshot is stale). Callers that mutate the store
-    /// by other means must call `prepare` again. Behind an `Arc` so the
-    /// serve layer can run N executor replicas against one prepared
-    /// model ([`Backend::shared_prepared`]).
+    /// `train_step` marks the surface **stale** (it mutates the
+    /// parameters in place) — the handle is kept, not dropped, so
+    /// [`Backend::refresh_prepared`] can re-pack only the entries whose
+    /// params actually changed. While stale, every prepared-path
+    /// accessor (`forward` fast path, `shared_prepared`,
+    /// `prepared_footprint`) behaves as if nothing were prepared.
+    /// Callers that mutate the store by other means must call `prepare`
+    /// again. Behind an `Arc` so the serve layer can run N executor
+    /// replicas against one prepared model
+    /// ([`Backend::shared_prepared`]).
     prepared: Option<Arc<PreparedModel>>,
     prepared_for: StoreKey,
+    /// Set by `train_step`, cleared by prepare/refresh: the params moved
+    /// under the prepared surface's feet.
+    stale: bool,
+    /// Provenance for [`Backend::write_snapshot_delta`]: the params
+    /// fingerprint of the surface the snapshot at the last
+    /// `write_snapshot` / `prepare_from_snapshot` path was written from.
+    /// `None` until one of those succeeds — the delta writer then has no
+    /// base it can trust and reports "unsupported".
+    snapshot_base_fp: Option<u64>,
     /// Per-item + merged gradient stores, reused across `train_step`
     /// calls so steady-state training allocates nothing on the gradient
     /// side (asserted in `rust/tests/pool_steady_state.rs`).
@@ -95,14 +152,53 @@ impl NativeRuntime {
             label,
             prepared: None,
             prepared_for: (0, 0, 0),
+            stale: false,
+            snapshot_base_fp: None,
             scratch: TrainScratch::new(),
         }
     }
 
     /// The prepacked parameters, if [`Backend::prepare`] ran (tests and
     /// warmup paths use this to drive the exact serve-time code path).
+    /// `None` while the surface is stale (post-`train_step`).
     pub fn prepared(&self) -> Option<&PreparedModel> {
+        if self.stale {
+            return None;
+        }
         self.prepared.as_deref()
+    }
+
+    /// One fine-tune step: gradients flow everywhere (full backward),
+    /// but the optimizer only moves parameters whose name contains one
+    /// of `filter`'s substrings — the frozen params **and their Adam
+    /// moments** stay bit-identical (see [`adam_update_filtered`]; just
+    /// zeroing gradients would not freeze anything, first-moment
+    /// momentum keeps a parameter moving long after its gradient goes
+    /// quiet). This is what keeps a serve-while-train delta refresh
+    /// small: with `filter = ["head/", "phi", "scale"]` only the
+    /// classifier head and the Soft-MoE routers dirty their snapshot
+    /// entries. Marks the prepared surface stale exactly like
+    /// [`Backend::train_step`]. Returns the count of parameters updated
+    /// alongside the step output.
+    pub fn train_step_filtered(
+        &mut self,
+        state: &mut TrainState,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        filter: &[&str],
+    ) -> Result<(StepOut, usize)> {
+        self.stale = true;
+        let labels_usize: Vec<usize> =
+            labels.iter().map(|&l| l as usize).collect();
+        let (loss, acc) = self.model.loss_and_grads_with(
+            &state.params, images, &labels_usize, &mut self.scratch);
+        let kept = adam_update_filtered(state, self.scratch.grads(), lr,
+                                        filter);
+        anyhow::ensure!(kept > 0,
+                        "train_step_filtered: filter {filter:?} matches no \
+                         parameter — the step would be a no-op");
+        Ok((StepOut { loss, accuracy: acc }, kept))
     }
 }
 
@@ -119,6 +215,7 @@ impl Backend for NativeRuntime {
         self.prepared = Some(Arc::new(PreparedModel::new(
             &self.model, params, WeightDtype::from_env())));
         self.prepared_for = store_key(params);
+        self.stale = false;
         Ok(())
     }
 
@@ -147,32 +244,79 @@ impl Backend for NativeRuntime {
         }
         self.prepared = Some(Arc::new(prep));
         self.prepared_for = store_key(params);
+        self.stale = false;
+        self.snapshot_base_fp = Some(want_fp);
         Ok(true)
     }
 
-    fn write_snapshot(&self, path: &Path) -> Result<bool> {
-        match &self.prepared {
+    fn write_snapshot(&mut self, path: &Path) -> Result<bool> {
+        let fp = match self.prepared() {
             Some(p) => {
                 p.save_snapshot(path)?;
-                Ok(true)
+                p.params_fingerprint()
             }
-            None => Ok(false),
-        }
+            None => return Ok(false),
+        };
+        self.snapshot_base_fp = Some(fp);
+        Ok(true)
     }
 
     fn prepared_footprint(&self) -> Option<(usize, &'static str)> {
-        self.prepared
-            .as_ref()
+        self.prepared()
             .map(|p| (p.resident_bytes(), p.dtype().name()))
     }
 
     fn shared_prepared(&self) -> Option<Arc<PreparedModel>> {
+        if self.stale {
+            return None;
+        }
         self.prepared.clone()
+    }
+
+    fn refresh_prepared(&mut self, params: &ParamStore)
+        -> Result<(Arc<PreparedModel>, RefreshStats)> {
+        // The OLD surface is the refresh base even while stale — stale
+        // only means "don't serve through it", its panels are still the
+        // exact bytes of the pre-step params and every clean entry can
+        // be shared instead of re-packed.
+        let (prep, stats) = match self.prepared.as_deref() {
+            Some(old) => old.refreshed(params),
+            None => {
+                let p = PreparedModel::new(&self.model, params,
+                                           WeightDtype::from_env());
+                let total = p.entry_count();
+                (p, RefreshStats { entries_total: total,
+                                   entries_repacked: total })
+            }
+        };
+        let prep = Arc::new(prep);
+        self.prepared = Some(Arc::clone(&prep));
+        self.prepared_for = store_key(params);
+        self.stale = false;
+        Ok((prep, stats))
+    }
+
+    fn write_snapshot_delta(&mut self, path: &Path)
+        -> Result<Option<DeltaStats>> {
+        if self.stale {
+            // The surface predates the last train_step; refresh first —
+            // writing it out would publish pre-step weights as if
+            // current.
+            return Ok(None);
+        }
+        let (prep, base_fp) = match (&self.prepared, self.snapshot_base_fp) {
+            (Some(p), Some(fp)) => (p, fp),
+            _ => return Ok(None),
+        };
+        let base = SnapshotFile::open(path)?;
+        let stats = prep.save_snapshot_delta(path, &base, base_fp)?;
+        self.snapshot_base_fp = Some(prep.params_fingerprint());
+        Ok(Some(stats))
     }
 
     fn forward(&mut self, params: &ParamStore, images: &Tensor)
         -> Result<(Tensor, Tensor)> {
-        if let Some(prep) = &self.prepared {
+        if let Some(prep) = self.prepared() {
             if self.prepared_for == store_key(params) {
                 let out = prep.forward(images);
                 return Ok((out.logits, out.features));
@@ -190,10 +334,12 @@ impl Backend for NativeRuntime {
         lr: f32,
     ) -> Result<StepOut> {
         // Adam mutates the parameters IN PLACE (same store, same
-        // address), so any prepared snapshot is stale from here on —
-        // drop it or a later forward would read pre-update weights
-        // through the same-store check.
-        self.prepared = None;
+        // address), so any prepared surface is stale from here on: mark
+        // it — a later forward through the same-store check would read
+        // pre-update weights — but KEEP the handle, because the stale
+        // panels are the delta-refresh base (`refresh_prepared`
+        // re-packs only what this step changed).
+        self.stale = true;
         let labels_usize: Vec<usize> =
             labels.iter().map(|&l| l as usize).collect();
         let (loss, acc) = self.model.loss_and_grads_with(
@@ -320,8 +466,9 @@ mod tests {
     fn train_step_invalidates_prepared_snapshot() {
         // Adam mutates state.params in place (same address), so the
         // same-store check alone cannot catch staleness — train_step
-        // must drop the snapshot and the next forward must read the
-        // UPDATED weights.
+        // must mark the surface stale (externally indistinguishable
+        // from dropped: no footprint, no shared handle, no fast path)
+        // and the next forward must read the UPDATED weights.
         let cfg = tiny();
         let mut be = NativeRuntime::new(cfg.clone());
         let params = be.init(3).unwrap();
@@ -331,10 +478,84 @@ mod tests {
         let imgs = images(2, &cfg, 4);
         be.train_step(&mut state, &imgs, &[0, 1], 1e-2).unwrap();
         assert!(be.prepared_footprint().is_none(),
-                "train_step must drop the stale prepared snapshot");
+                "train_step must invalidate the prepared surface");
+        assert!(be.shared_prepared().is_none(),
+                "a stale surface must not be handed to new replicas");
         let (logits, _) = be.forward(&state.params, &imgs).unwrap();
         let direct = VitModel::new(cfg).forward(&state.params, &imgs);
         assert_eq!(logits.data, direct.logits.data,
                    "forward after training must read the updated weights");
+    }
+
+    #[test]
+    fn refresh_after_filtered_step_is_partial_and_bit_identical() {
+        // The serve-while-train loop: prepare, fine-tune only the head
+        // and Soft-MoE routers, refresh. The refresh must (a) take a
+        // newer generation, (b) re-pack strictly fewer entries than the
+        // surface holds, and (c) produce logits bit-identical to a cold
+        // full prepare of the updated params.
+        let cfg = tiny();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(3).unwrap();
+        let mut state = TrainState::fresh(params);
+        be.prepare(&state.params).unwrap();
+        let gen0 = be.prepared().unwrap().generation();
+        let fp0 = be.prepared().unwrap().params_fingerprint();
+        let imgs = images(2, &cfg, 4);
+        let (_, kept) = be
+            .train_step_filtered(&mut state, &imgs, &[0, 1], 1e-2,
+                                 &["head/", "phi", "scale"])
+            .unwrap();
+        assert!(kept >= 2, "filter must hit head and router params");
+        let (prep, stats) = be.refresh_prepared(&state.params).unwrap();
+        assert!(prep.generation() > gen0, "refresh must bump generation");
+        assert_ne!(prep.params_fingerprint(), fp0);
+        assert!(stats.entries_repacked > 0);
+        assert!(
+            stats.entries_repacked < stats.entries_total,
+            "filtered fine-tune must dirty a strict subset: {} of {}",
+            stats.entries_repacked, stats.entries_total
+        );
+        let cold = PreparedModel::new(&VitModel::new(cfg), &state.params,
+                                      WeightDtype::from_env());
+        let warm_out = prep.forward(&imgs);
+        let cold_out = cold.forward(&imgs);
+        assert_eq!(warm_out.logits.data, cold_out.logits.data,
+                   "delta refresh must be bit-identical to a full prepare");
+        assert_eq!(warm_out.features.data, cold_out.features.data);
+        // The backend now serves the refreshed surface through the
+        // normal prepared path again.
+        let (logits, _) = be.forward(&state.params, &imgs).unwrap();
+        assert_eq!(logits.data, cold_out.logits.data);
+    }
+
+    #[test]
+    fn filtered_step_freezes_unmatched_params_exactly() {
+        // Momentum must not leak into frozen params: after several
+        // filtered steps, every parameter outside the filter is
+        // bit-identical, and the matched ones moved.
+        let cfg = tiny();
+        let mut be = NativeRuntime::new(cfg.clone());
+        let params = be.init(5).unwrap();
+        let before = params.clone();
+        let mut state = TrainState::fresh(params);
+        let imgs = images(2, &cfg, 6);
+        for _ in 0..3 {
+            be.train_step_filtered(&mut state, &imgs, &[1, 0], 5e-3,
+                                   &["head/"])
+                .unwrap();
+        }
+        let mut moved = 0usize;
+        for (k, t) in &state.params {
+            if k.contains("head/") {
+                if t.data != before[k].data {
+                    moved += 1;
+                }
+            } else {
+                assert_eq!(t.data, before[k].data,
+                           "frozen param {k} must stay bit-identical");
+            }
+        }
+        assert!(moved > 0, "head params must actually train");
     }
 }

@@ -31,9 +31,11 @@
 //!   mid-flight (see `util/failpoints.rs`).
 //!
 //! Endpoints: `GET /` (service index), `GET /healthz` (liveness),
-//! `GET /readyz` (ready only after serve warm-up), `GET /metrics`
+//! `GET /readyz` (ready only after serve warm-up, and 503 again while
+//! a hot swap's warm-up runs — see [`ServeHooks`]), `GET /metrics`
 //! (text exposition of the [`Registry`]), `POST /infer` (f32-LE bytes
-//! or JSON `{"image": [...]}`).
+//! or JSON `{"image": [...]}`), `POST /reload` (hot-swap refreshed
+//! weights when a [`ServeHooks::reload`] hook is wired; 501 otherwise).
 //!
 //! Threading: one acceptor, one reaper, one thread per live connection
 //! (bounded by the connection cap). The inference `Server::run` loop
@@ -145,6 +147,23 @@ fn error_response(e: &ServeError) -> HttpResponse {
     resp
 }
 
+/// Optional serve-loop hooks wired into the front-end by the flow that
+/// owns both sides (e.g. `softmoe finetune-serve`). Everything defaults
+/// to absent: a plain `start()` front-end behaves exactly as before.
+#[derive(Default)]
+pub struct ServeHooks {
+    /// The serve loop's [`super::SwapCell`]: with it, `/readyz` answers
+    /// 503 while a hot swap's warm-up batches run on the incoming
+    /// generation — the boot-time `serve/warmup_batches > 0` gate alone
+    /// stays true forever after the first warm-up and would keep
+    /// reporting ready mid-swap.
+    pub swap: Option<Arc<super::SwapCell>>,
+    /// `POST /reload` handler: refresh the prepared surface from the
+    /// training side and hot-swap it in, returning the new generation.
+    /// Errors leave the old generation serving. Absent → 501.
+    pub reload: Option<Arc<dyn Fn() -> Result<u64> + Send + Sync>>,
+}
+
 /// Reaper bookkeeping for one live connection: a clone of its stream
 /// (so the reaper can `shutdown()` it from outside) and the deadline by
 /// which its current read phase must finish. `None` while the request
@@ -163,6 +182,7 @@ struct FrontState {
     max_conns: usize,
     budget: Option<usize>,
     metrics: Arc<Registry>,
+    hooks: ServeHooks,
     /// Master client; cloned per connection. Taken (dropped) when the
     /// drain begins so the server's producer count can reach zero.
     client: Mutex<Option<Client>>,
@@ -249,6 +269,16 @@ impl HttpFrontend {
     /// `Server::run` on another thread (or this one, via main.rs).
     pub fn start(cfg: HttpConfig, client: Client,
                  metrics: Arc<Registry>) -> Result<HttpFrontend> {
+        Self::start_with_hooks(cfg, client, metrics,
+                               ServeHooks::default())
+    }
+
+    /// [`HttpFrontend::start`] plus [`ServeHooks`]: swap-aware
+    /// `/readyz` and a live `POST /reload` endpoint for flows that run
+    /// training and serving in one process.
+    pub fn start_with_hooks(cfg: HttpConfig, client: Client,
+                            metrics: Arc<Registry>, hooks: ServeHooks)
+        -> Result<HttpFrontend> {
         let listener = TcpListener::bind(&cfg.listen)
             .with_context(|| format!("binding {}", cfg.listen))?;
         let local_addr = listener.local_addr()?;
@@ -259,6 +289,7 @@ impl HttpFrontend {
             max_conns: cfg.max_conns,
             budget: cfg.request_budget,
             metrics,
+            hooks,
             client: Mutex::new(Some(client)),
             image_elems,
             local_addr,
@@ -602,6 +633,18 @@ fn route(state: &FrontState, client: &Client, req: HttpRequest)
                     "server is draining");
                 r.retry_after = Some(1);
                 r
+            } else if state.hooks.swap.as_ref()
+                .is_some_and(|c| c.warming()) {
+                // A hot swap's warm-up batches are running on the
+                // incoming generation. The cumulative
+                // `serve/warmup_batches` counter is useless here — it
+                // stays positive forever after boot — so readiness must
+                // come from the swap cell's live flag.
+                let mut r = HttpResponse::error(
+                    503, "Service Unavailable", "warming",
+                    "a weight-swap warm-up is in progress");
+                r.retry_after = Some(1);
+                r
             } else if state.metrics.counter("serve/warmup_batches") > 0 {
                 HttpResponse::text(200, "OK", "ready\n")
             } else {
@@ -615,7 +658,9 @@ fn route(state: &FrontState, client: &Client, req: HttpRequest)
         ("GET", "/metrics") => HttpResponse::text(
             200, "OK", &state.metrics.render_text()),
         ("POST", "/infer") => infer(state, client, &req),
-        (_, "/" | "/healthz" | "/readyz" | "/metrics" | "/infer") => {
+        ("POST", "/reload") => reload(state),
+        (_, "/" | "/healthz" | "/readyz" | "/metrics" | "/infer"
+            | "/reload") => {
             HttpResponse::error(
                 405, "Method Not Allowed", "method-not-allowed",
                 "endpoint exists, method does not")
@@ -633,13 +678,42 @@ fn index(state: &FrontState) -> HttpResponse {
         "endpoints",
         Value::Arr(
             ["GET /healthz", "GET /readyz", "GET /metrics",
-             "POST /infer"]
+             "POST /infer", "POST /reload"]
                 .iter()
                 .map(|&e| Value::from(e))
                 .collect(),
         ),
     );
     HttpResponse::json(200, "OK", &v)
+}
+
+/// `POST /reload`: refresh the prepared weights and hot-swap them into
+/// the serve loop via the wired [`ServeHooks::reload`] closure. The
+/// swap is warm-before-publish, so in-flight and subsequent requests
+/// never see a cold generation; on failure the old generation keeps
+/// serving and the client gets a 500 with the cause.
+fn reload(state: &FrontState) -> HttpResponse {
+    let Some(hook) = state.hooks.reload.as_ref() else {
+        return HttpResponse::error(
+            501, "Not Implemented", "no-reload",
+            "this deployment has no reload hook (weights are static; \
+             run `softmoe finetune-serve` for a live-reload server)");
+    };
+    state.metrics.inc("http/reloads", 1);
+    match hook() {
+        Ok(generation) => {
+            let mut v = Value::obj();
+            v.set("generation", Value::Num(generation as f64));
+            HttpResponse::json(200, "OK", &v)
+        }
+        Err(e) => {
+            state.metrics.inc("http/reload_failures", 1);
+            HttpResponse::error(
+                500, "Internal Server Error", "reload-failed",
+                &format!("reload failed ({e:#}); the previous weight \
+                          generation keeps serving"))
+        }
+    }
 }
 
 fn infer(state: &FrontState, client: &Client, req: &HttpRequest)

@@ -42,9 +42,20 @@
 //!   `ShuttingDown` drain at exit. [`PendingReply::wait`] can block only
 //!   while the server is alive and working.
 //!
+//! * **Zero-downtime hot swap** — a retrained surface is published
+//!   through the server's [`SwapCell`] ([`Server::swap_handle`] →
+//!   [`SwapHandle::swap`]): the incoming generation is warmed at every
+//!   compiled batch size *before* publication (zero-pack, zero-first-
+//!   touch guarantee per generation), replicas pick it up at their next
+//!   batch boundary, in-flight batches finish on the `Arc` they hold,
+//!   and the old generation is freed when the last batch holding it
+//!   completes. A surface that fails warm-up is rejected — the old
+//!   generation keeps serving. Exercised end to end by
+//!   `softmoe finetune-serve` and `rust/tests/serve_swap.rs`.
+//!
 //! Fault injection for all of the above: `util/failpoints.rs`
-//! (`serve/forward`, `snapshot/read`), exercised by
-//! `rust/tests/serve_faults.rs`.
+//! (`serve/forward`, `snapshot/read`, `snapshot/delta_write`),
+//! exercised by `rust/tests/serve_faults.rs`.
 
 pub mod conn;
 pub mod http;
@@ -52,14 +63,14 @@ mod queue;
 mod replica;
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::metrics::Registry;
-use crate::nn::ParamStore;
+use crate::nn::{ParamStore, PreparedModel};
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
@@ -353,6 +364,144 @@ impl Client {
     }
 }
 
+/// Double-buffered publication point for the live prepared surface.
+///
+/// The serving side of the zero-downtime hot swap: the server installs
+/// generation 0 here before taking traffic, and every later
+/// [`SwapHandle::swap`] publishes a retrained generation through the
+/// same cell. Replicas hold their own `Arc<PreparedModel>` clone and
+/// poll `generation()` (one atomic load) at each batch boundary — an
+/// in-flight batch always finishes on the surface it started with, a
+/// new batch takes the newest published one, and the old generation's
+/// memory is freed when the last `Arc` holding it drops.
+pub struct SwapCell {
+    current: Mutex<Option<Arc<PreparedModel>>>,
+    /// Generation of `current` (0 = nothing installed). Written after
+    /// `current` with Release so a replica that observes the new id
+    /// always loads the new surface.
+    generation: AtomicU64,
+    /// True while a swap's pre-publication warm-up batches run —
+    /// `/readyz` reports 503 for the duration.
+    warming: AtomicBool,
+}
+
+impl SwapCell {
+    fn new() -> Self {
+        Self {
+            current: Mutex::new(None),
+            generation: AtomicU64::new(0),
+            warming: AtomicBool::new(false),
+        }
+    }
+
+    /// The published weight generation (0 until the server installs its
+    /// boot surface).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Is a hot swap's warm-up running right now?
+    pub fn warming(&self) -> bool {
+        self.warming.load(Ordering::Acquire)
+    }
+
+    /// Publish `prep` as the live surface.
+    pub(crate) fn install(&self, prep: Arc<PreparedModel>) {
+        let generation = prep.generation();
+        *self.current.lock().unwrap() = Some(prep);
+        self.generation.store(generation, Ordering::Release);
+    }
+
+    /// A fresh handle to the live surface (short critical section; the
+    /// replicas call this only when the generation id moved).
+    pub(crate) fn load(&self) -> Option<Arc<PreparedModel>> {
+        self.current.lock().unwrap().clone()
+    }
+}
+
+/// Publishes retrained weight generations into a running server.
+/// Obtained from [`Server::swap_handle`] *before* handing the thread to
+/// `run`/`run_prepared`; `Clone + Send`, so the training loop can hold
+/// it on another thread (or wire it into the HTTP front-end's
+/// `POST /reload`).
+#[derive(Clone)]
+pub struct SwapHandle {
+    cell: Arc<SwapCell>,
+    policy: BatchPolicy,
+    image_shape: Vec<usize>,
+}
+
+impl SwapHandle {
+    /// The currently published generation (0 = server not serving a
+    /// shared surface yet).
+    pub fn generation(&self) -> u64 {
+        self.cell.generation()
+    }
+
+    /// Hot-swap `new` in as the live surface. Blocks for the warm-up
+    /// (one padded batch per compiled size on the *incoming* surface —
+    /// the per-generation zero-pack/zero-first-touch guarantee), then
+    /// publishes atomically. On any warm-up panic the swap is aborted
+    /// and the old generation keeps serving; `/readyz` reports 503
+    /// "warming" for the duration either way. Returns the published
+    /// generation id.
+    pub fn swap(&self, new: Arc<PreparedModel>, metrics: &Registry)
+        -> Result<u64> {
+        anyhow::ensure!(
+            self.cell.generation() != 0,
+            "no shared prepared surface is being served yet — swap after \
+             the server has installed its boot generation"
+        );
+        struct WarmingGuard<'a>(&'a SwapCell);
+        impl Drop for WarmingGuard<'_> {
+            fn drop(&mut self) {
+                self.0.warming.store(false, Ordering::Release);
+            }
+        }
+        self.cell.warming.store(true, Ordering::Release);
+        let _warming = WarmingGuard(&self.cell);
+        let mut shape = vec![0usize];
+        shape.extend_from_slice(&self.image_shape);
+        for &bsz in &self.policy.compiled_sizes {
+            shape[0] = bsz;
+            let images = Tensor::zeros(&shape);
+            let new_ref = &new;
+            let warmed = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let _ = new_ref.forward(&images);
+                }))
+                .is_ok();
+            anyhow::ensure!(
+                warmed,
+                "hot swap aborted: generation {} panicked on its size-\
+                 {bsz} warm-up batch; the old generation keeps serving",
+                new.generation()
+            );
+        }
+        metrics.inc("serve/warmup_batches",
+                    self.policy.compiled_sizes.len() as u64);
+        let generation = new.generation();
+        self.cell.install(new);
+        metrics.inc("serve/swaps", 1);
+        metrics.set_gauge("model/weight_generation", generation as f64);
+        Ok(generation)
+    }
+}
+
+/// No-hang contract, part 1: whatever exits a serve loop — normal
+/// completion, a snapshot error, a warmup failure —
+/// admitted-but-unserved requests drain as ShuttingDown replies.
+struct DrainGuard<'a>(&'a AdmissionQueue);
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+        for req in self.0.drain() {
+            let _ = req.reply.send(Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
 /// The server: owns the admission queue; `run` drives the replica loops
 /// (replica 0 on the calling thread, which must own the backend).
 pub struct Server {
@@ -361,6 +510,7 @@ pub struct Server {
     pub config: ServeConfig,
     image_elems: usize,
     image_shape: Vec<usize>,
+    swap: Arc<SwapCell>,
 }
 
 impl Server {
@@ -384,8 +534,25 @@ impl Server {
             config,
             image_elems,
             image_shape: image_shape.to_vec(),
+            swap: Arc::new(SwapCell::new()),
         };
         (server, Client { queue, image_elems })
+    }
+
+    /// The server's swap-cell handle — `/readyz` gates on its warming
+    /// flag, observability reads its generation.
+    pub fn swap_cell(&self) -> Arc<SwapCell> {
+        Arc::clone(&self.swap)
+    }
+
+    /// A [`SwapHandle`] for publishing retrained weight generations
+    /// while `run`/`run_prepared` serves on (an)other thread(s).
+    pub fn swap_handle(&self) -> SwapHandle {
+        SwapHandle {
+            cell: Arc::clone(&self.swap),
+            policy: self.policy.clone(),
+            image_shape: self.image_shape.clone(),
+        }
     }
 
     /// Serve until all clients disconnect (or `max_requests` served).
@@ -420,18 +587,6 @@ impl Server {
         // Under SOFTMOE_PIN_CORES=1 the pool pins worker i to core i+1;
         // replica 0 (this thread) takes the core they leave free.
         crate::threadpool::pin_replica_thread(0);
-        // No-hang contract, part 1: whatever exits this function —
-        // normal completion, a snapshot error, a warmup failure —
-        // admitted-but-unserved requests drain as ShuttingDown replies.
-        struct DrainGuard<'a>(&'a AdmissionQueue);
-        impl Drop for DrainGuard<'_> {
-            fn drop(&mut self) {
-                self.0.close();
-                for req in self.0.drain() {
-                    let _ = req.reply.send(Err(ServeError::ShuttingDown));
-                }
-            }
-        }
         let _drain = DrainGuard(&self.queue);
         // Prepacked-weight startup, BEFORE any request is served:
         // 1. Build the backend's prepared parameter representation
@@ -504,6 +659,24 @@ impl Server {
             }
         }
         metrics.set_label("model/weight_source", weight_source);
+
+        // Replica fan-out. Backends with a shareable prepared model
+        // serve through the generation/swap machinery (`run_prepared` —
+        // which also owns warm-up and the footprint gauges). Backends
+        // without one (PJRT: device handles are not Send) degrade to
+        // one executor on this thread; everything else about the
+        // failure contract — admission, deadlines, panic containment,
+        // drain — still holds.
+        if let Some(prep) = backend.shared_prepared() {
+            return self.run_prepared(prep, metrics, max_requests);
+        }
+        if self.config.replicas > 1 {
+            eprintln!(
+                "serve: backend has no shareable prepared model; \
+                 running 1 replica instead of {}",
+                self.config.replicas
+            );
+        }
         if let Some((bytes, dtype)) = backend.prepared_footprint() {
             metrics.set_gauge("model/prepacked_bytes", bytes as f64);
             metrics.set_label("model/weight_dtype", dtype);
@@ -517,20 +690,75 @@ impl Server {
         }
         metrics.inc("serve/warmup_batches",
                     self.policy.compiled_sizes.len() as u64);
+        metrics.set_gauge("serve/replicas", 1.0);
+        metrics.set_gauge("serve/queue_cap",
+                          self.config.queue_cap as f64);
+        let served = AtomicUsize::new(0);
+        let active = AtomicUsize::new(1);
+        let ctx = replica::ReplicaCtx {
+            queue: &self.queue,
+            policy: &self.policy,
+            image_elems: self.image_elems,
+            image_shape: &self.image_shape,
+            metrics,
+            served: &served,
+            max_requests,
+            config: &self.config,
+            active: &active,
+        };
+        let mut local =
+            |images: &Tensor| backend.forward(params, images);
+        let mut exec = replica::Executor::Local(&mut local);
+        replica::run_replica(&ctx, 0, &mut exec);
+        // Queue-side robustness counters, published once the replicas
+        // are done (the queue's own counters are the source of truth
+        // while serving).
+        metrics.inc("serve/shed", self.queue.shed_count());
+        Ok(served.load(Ordering::SeqCst))
+    }
 
-        // Replica fan-out. Backends without a shareable prepared model
-        // (PJRT: device handles are not Send) degrade to one executor
-        // on this thread; everything else about the failure contract —
-        // admission, deadlines, panic containment, drain — still holds.
-        let shared = backend.shared_prepared();
-        let mut replicas = self.config.replicas.max(1);
-        if shared.is_none() && replicas > 1 {
-            eprintln!(
-                "serve: backend has no shareable prepared model; \
-                 running 1 replica instead of {replicas}"
-            );
-            replicas = 1;
+    /// Serve an already-built prepared surface: the generation-aware
+    /// half of [`Server::run`], and the direct entry point for
+    /// serve-while-train flows where another thread owns the backend
+    /// (`softmoe finetune-serve` trains through `&mut backend` while
+    /// this loop serves `Arc` clones of its surfaces).
+    ///
+    /// Boot sequence: warm `prep` at every compiled size (so the hot
+    /// loop never packs or first-touches), install it into the
+    /// [`SwapCell`] as the boot generation, then fan out
+    /// `config.replicas` executors that poll the cell at every batch
+    /// boundary — [`SwapHandle::swap`] published generations take over
+    /// without dropping, hanging, or re-executing a single request.
+    pub fn run_prepared(
+        &self,
+        prep: Arc<PreparedModel>,
+        metrics: &Registry,
+        max_requests: Option<usize>,
+    ) -> Result<usize> {
+        debug_assert!(
+            crate::threadpool::parallelism_available(),
+            "serve executor must own the parallelism budget (don't call \
+             Server::run_prepared from inside a parallel region)"
+        );
+        crate::threadpool::prewarm();
+        crate::threadpool::pin_replica_thread(0);
+        let _drain = DrainGuard(&self.queue);
+        metrics.set_gauge("model/prepacked_bytes",
+                          prep.resident_bytes() as f64);
+        metrics.set_label("model/weight_dtype", prep.dtype().name());
+        let mut shape = vec![0usize];
+        shape.extend_from_slice(&self.image_shape);
+        for &bsz in &self.policy.compiled_sizes {
+            shape[0] = bsz;
+            let images = Tensor::zeros(&shape);
+            let _ = prep.forward(&images);
         }
+        metrics.inc("serve/warmup_batches",
+                    self.policy.compiled_sizes.len() as u64);
+        self.swap.install(Arc::clone(&prep));
+        metrics.set_gauge("model/weight_generation",
+                          prep.generation() as f64);
+        let replicas = self.config.replicas.max(1);
         metrics.set_gauge("serve/replicas", replicas as f64);
         metrics.set_gauge("serve/queue_cap",
                           self.config.queue_cap as f64);
@@ -547,36 +775,25 @@ impl Server {
             config: &self.config,
             active: &active,
         };
-        match &shared {
-            Some(source) => std::thread::scope(|s| {
-                for r in 1..replicas {
-                    let ctx = &ctx;
-                    s.spawn(move || {
-                        crate::threadpool::pin_replica_thread(r);
-                        let mut exec = replica::Executor::Shared {
-                            current: Arc::clone(source),
-                            source,
-                        };
-                        replica::warm(ctx, &mut exec);
-                        replica::run_replica(ctx, r, &mut exec);
-                    });
-                }
-                let mut exec = replica::Executor::Shared {
-                    current: Arc::clone(source),
-                    source,
-                };
-                replica::run_replica(&ctx, 0, &mut exec);
-            }),
-            None => {
-                let mut local =
-                    |images: &Tensor| backend.forward(params, images);
-                let mut exec = replica::Executor::Local(&mut local);
-                replica::run_replica(&ctx, 0, &mut exec);
+        let cell = &*self.swap;
+        std::thread::scope(|s| {
+            for r in 1..replicas {
+                let ctx = &ctx;
+                let current = Arc::clone(&prep);
+                s.spawn(move || {
+                    crate::threadpool::pin_replica_thread(r);
+                    let mut exec =
+                        replica::Executor::Shared { current, cell };
+                    replica::warm(ctx, &mut exec);
+                    replica::run_replica(ctx, r, &mut exec);
+                });
             }
-        }
-        // Queue-side robustness counters, published once the replicas
-        // are done (the queue's own counters are the source of truth
-        // while serving).
+            let mut exec = replica::Executor::Shared {
+                current: Arc::clone(&prep),
+                cell,
+            };
+            replica::run_replica(&ctx, 0, &mut exec);
+        });
         metrics.inc("serve/shed", self.queue.shed_count());
         Ok(served.load(Ordering::SeqCst))
     }

@@ -13,8 +13,9 @@
 //!   `catch_unwind`; on panic every request in the in-flight batch gets
 //!   an `ExecutorPanicked` reply (never a hang), the replica sleeps a
 //!   bounded exponential backoff, reinstalls its executor from the
-//!   shared prepared model (the `Arc` everyone else is serving from) and
-//!   resumes — counted in `serve/replica_panics` / `serve/replica_restarts`.
+//!   published prepared model (the newest generation in the server's
+//!   `SwapCell`) and resumes — counted in `serve/replica_panics` /
+//!   `serve/replica_restarts`.
 //! * **A crash-looping replica is quarantined.** After
 //!   `ServeConfig::quarantine_after` consecutive failures the replica
 //!   retires (`serve/replica_quarantined`) and the server degrades to
@@ -38,16 +39,21 @@ use crate::nn::PreparedModel;
 use crate::tensor::Tensor;
 
 use super::queue::{AdmissionQueue, Pop};
-use super::{BatchPolicy, Request, Response, ServeConfig, ServeError};
+use super::{BatchPolicy, Request, Response, ServeConfig, ServeError,
+            SwapCell};
 
 /// How a replica executes a padded batch.
 pub(crate) enum Executor<'a> {
-    /// N-replica mode: a clone of the shared `Arc<PreparedModel>`.
-    /// `source` is the canonical handle held by `Server::run`; restart
-    /// after a panic reinstalls from it.
+    /// N-replica mode: this replica's own clone of the published
+    /// prepared surface plus the [`SwapCell`] it was published through.
+    /// At every batch boundary the replica polls the cell's generation
+    /// id (one atomic load) and re-clones on change ([`Executor::
+    /// poll_swap`]) — an in-flight batch always completes on the `Arc`
+    /// it holds, so a hot swap can never tear a batch, and the old
+    /// generation's memory is freed when the last replica lets go.
     Shared {
         current: Arc<PreparedModel>,
-        source: &'a Arc<PreparedModel>,
+        cell: &'a SwapCell,
     },
     /// Single-replica fallback for backends without a shareable
     /// prepared model (PJRT): execute on the calling thread through the
@@ -66,13 +72,34 @@ impl Executor<'_> {
         }
     }
 
+    /// Pick up a published hot swap, if any: compare the cell's
+    /// generation id against the surface this replica holds, and take a
+    /// fresh clone when they differ. Called between batches only — the
+    /// swap protocol's "new batches take the new generation" half.
+    /// Returns the generation switched to.
+    fn poll_swap(&mut self) -> Option<u64> {
+        if let Executor::Shared { current, cell } = self {
+            let generation = cell.generation();
+            if generation != current.generation() {
+                if let Some(p) = cell.load() {
+                    *current = p;
+                    return Some(generation);
+                }
+            }
+        }
+        None
+    }
+
     /// Restart after a contained panic: drop the (possibly suspect)
-    /// handle and take a fresh clone of the shared prepared model — for
-    /// snapshot-loaded weights that is a fresh zero-copy view of the
-    /// same `Arc<Mmap>`.
+    /// handle and take a fresh clone of the published prepared model —
+    /// for snapshot-loaded weights that is a fresh zero-copy view of
+    /// the same `Arc<Mmap>`; after a hot swap it is the newest
+    /// generation.
     fn reinstall(&mut self) {
-        if let Executor::Shared { current, source } = self {
-            *current = Arc::clone(source);
+        if let Executor::Shared { current, cell } = self {
+            if let Some(p) = cell.load() {
+                *current = p;
+            }
         }
     }
 }
@@ -170,6 +197,13 @@ pub(crate) fn run_replica(ctx: &ReplicaCtx, idx: usize,
     // the single-executor server had).
     let mut buf: Vec<f32> = Vec::new();
     while let Some(batch) = collect(ctx) {
+        // Batch boundary: adopt a published hot swap before executing.
+        // The batch just collected runs entirely on the generation
+        // chosen here; a swap published mid-execution waits for the
+        // next boundary.
+        if exec.poll_swap().is_some() {
+            ctx.metrics.inc("serve/replica_gen_switches", 1);
+        }
         ctx.metrics.set_gauge("serve/queue_depth",
                               ctx.queue.depth() as f64);
         let n = batch.len();

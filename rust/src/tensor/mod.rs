@@ -1492,8 +1492,11 @@ enum PanelsRef<'a> {
 /// (`util::Mmap` behind an `Arc`, which this variant keeps alive). Both
 /// present the same `&[T]`; every consumer goes through
 /// [`PanelStore::as_slice`], so the GEMM path cannot tell them apart.
+/// Owned storage sits behind an `Arc` so cloning a panel whose bytes
+/// did not change (delta refresh carrying clean entries across
+/// `PreparedModel` generations) shares the buffer instead of copying it.
 enum PanelStore<T: Copy> {
-    Owned(Vec<T>),
+    Owned(Arc<Vec<T>>),
     View {
         ptr: *const T,
         len: usize,
@@ -1506,7 +1509,7 @@ enum PanelStore<T: Copy> {
 impl<T: Copy> PanelStore<T> {
     fn as_slice(&self) -> &[T] {
         match self {
-            PanelStore::Owned(v) => v,
+            PanelStore::Owned(v) => v.as_slice(),
             // Safety: ptr/len were validated against the mapped region at
             // construction ([`PackedPanels::from_mapped`]); the region is
             // immutable and `_map` keeps it alive for `self`'s lifetime.
@@ -1531,7 +1534,7 @@ impl<T: Copy> PanelStore<T> {
 impl<T: Copy> Clone for PanelStore<T> {
     fn clone(&self) -> Self {
         match self {
-            PanelStore::Owned(v) => PanelStore::Owned(v.clone()),
+            PanelStore::Owned(v) => PanelStore::Owned(Arc::clone(v)),
             PanelStore::View { ptr, len, _map } => PanelStore::View {
                 ptr: *ptr,
                 len: *len,
@@ -1629,18 +1632,20 @@ impl PackedPanels {
                    &mut f32s[g * plen..(g + 1) * plen]);
         }
         let data = match dtype {
-            WeightDtype::F32 => PanelData::F32(PanelStore::Owned(f32s)),
+            WeightDtype::F32 => {
+                PanelData::F32(PanelStore::Owned(Arc::new(f32s)))
+            }
             WeightDtype::Bf16 => {
                 let mut enc = vec![0u16; f32s.len()];
                 kernel::encode_bf16_slice(&f32s, &mut enc);
-                PanelData::Bf16(PanelStore::Owned(enc))
+                PanelData::Bf16(PanelStore::Owned(Arc::new(enc)))
             }
             WeightDtype::Int8 => {
                 let sz = Self::int8_column_params(b_stacked, k, n, groups);
                 let q = Self::int8_encode_panels(&f32s, k, n, groups, &sz);
                 PanelData::Int8 {
-                    q: PanelStore::Owned(q),
-                    sz: PanelStore::Owned(sz),
+                    q: PanelStore::Owned(Arc::new(q)),
+                    sz: PanelStore::Owned(Arc::new(sz)),
                 }
             }
         };

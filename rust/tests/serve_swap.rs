@@ -1,0 +1,372 @@
+//! Zero-downtime hot swap under live traffic: the serve-while-train
+//! contract end to end.
+//!
+//! * A swap published through [`softmoe::serve::SwapHandle`] while
+//!   requests flow must drop, hang, or re-execute **nothing** — every
+//!   reply arrives, pre-swap replies are bit-identical to the boot
+//!   surface and post-swap replies bit-identical to a cold full prepare
+//!   of the fine-tuned params (the delta refresh adds no drift).
+//! * The refresh itself must be a strict delta: fewer entries re-packed
+//!   than the surface holds.
+//! * A swap before the server installed its boot generation is refused.
+//! * The delta-rewritten `.panels` snapshot must reload into a second
+//!   process's backend and serve the fine-tuned weights exactly.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use softmoe::config::{ModelConfig, MoeType};
+use softmoe::metrics::Registry;
+use softmoe::nn::{PreparedModel, VitModel};
+use softmoe::runtime::native::NativeRuntime;
+use softmoe::runtime::{Backend, TrainState};
+use softmoe::serve::{BatchPolicy, ServeConfig, Server};
+use softmoe::tensor::Tensor;
+use softmoe::util::Rng;
+
+const FILTER: &[&str] = &["head/", "phi", "scale"];
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        image_size: 8,
+        patch_size: 4,
+        channels: 3,
+        dim: 16,
+        depth: 2,
+        heads: 2,
+        mlp_dim: 24,
+        num_classes: 5,
+        moe_type: MoeType::Soft,
+        moe_layers: vec![1],
+        num_experts: 3,
+        slots_per_expert: 2,
+        expert_hidden: 24,
+        ..ModelConfig::default()
+    }
+}
+
+fn rand_image(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..cfg.image_size * cfg.image_size * cfg.channels)
+        .map(|_| rng.uniform())
+        .collect()
+}
+
+fn image_tensor(cfg: &ModelConfig, img: &[f32]) -> Tensor {
+    Tensor::from_vec(
+        &[1, cfg.image_size, cfg.image_size, cfg.channels],
+        img.to_vec(),
+    )
+}
+
+fn train_images(b: usize, cfg: &ModelConfig, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n = b * cfg.image_size * cfg.image_size * cfg.channels;
+    Tensor::from_vec(
+        &[b, cfg.image_size, cfg.image_size, cfg.channels],
+        (0..n).map(|_| rng.uniform()).collect(),
+    )
+}
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "softmoe-serve-swap-{tag}-{}.panels",
+        std::process::id()
+    ))
+}
+
+/// The headline test: serve → fine-tune → delta refresh → swap → serve,
+/// with batch size forced to 1 so every served reply can be compared
+/// bitwise against a direct single-item forward.
+#[test]
+fn swap_under_load_is_seamless_and_bit_identical() {
+    let cfg = tiny_cfg();
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(0).unwrap();
+    let mut state = TrainState::fresh(params);
+    be.prepare(&state.params).unwrap();
+    let prep0 = be.shared_prepared().unwrap();
+
+    let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+    let (server, client) = Server::with_config(
+        BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::from_millis(0),
+            compiled_sizes: vec![1],
+        },
+        &shape,
+        ServeConfig { replicas: 2, ..ServeConfig::default() },
+    );
+    let handle = server.swap_handle();
+    let metrics = Registry::new();
+
+    let n = 8usize;
+    let imgs_a: Vec<Vec<f32>> =
+        (0..n).map(|i| rand_image(&cfg, i as u64)).collect();
+    let imgs_b: Vec<Vec<f32>> =
+        (0..n).map(|i| rand_image(&cfg, 100 + i as u64)).collect();
+    let swapped = AtomicBool::new(false);
+    let phase_a_done = AtomicBool::new(false);
+
+    let (logits_a, logits_b, served, prep1, gen0, gen1) =
+        std::thread::scope(|s| {
+            let srv = {
+                let prep_boot = Arc::clone(&prep0);
+                let server = &server;
+                let metrics = &metrics;
+                s.spawn(move || {
+                    server.run_prepared(prep_boot, metrics, None).unwrap()
+                })
+            };
+            let producer = {
+                let imgs_a = &imgs_a;
+                let imgs_b = &imgs_b;
+                let swapped = &swapped;
+                let phase_a_done = &phase_a_done;
+                s.spawn(move || {
+                    // Closed-loop: wait for each reply before the next
+                    // submit, so phase A is fully served pre-swap and
+                    // phase B fully post-swap.
+                    let la: Vec<Vec<f32>> = imgs_a
+                        .iter()
+                        .map(|img| {
+                            client.submit(img.clone()).unwrap()
+                                .wait().unwrap().logits
+                        })
+                        .collect();
+                    phase_a_done.store(true, Ordering::SeqCst);
+                    while !swapped.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    let lb: Vec<Vec<f32>> = imgs_b
+                        .iter()
+                        .map(|img| {
+                            client.submit(img.clone()).unwrap()
+                                .wait().unwrap().logits
+                        })
+                        .collect();
+                    drop(client);
+                    (la, lb)
+                })
+            };
+
+            // Trainer: wait for the boot install AND the whole of
+            // phase A (so every phase-A reply really rode the boot
+            // generation), then fine-tune, refresh, swap.
+            while handle.generation() == 0
+                || !phase_a_done.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let gen0 = handle.generation();
+            let imgs = train_images(2, &cfg, 7);
+            be.train_step_filtered(&mut state, &imgs, &[0, 1], 1e-2,
+                                   FILTER)
+                .unwrap();
+            let (prep1, stats) =
+                be.refresh_prepared(&state.params).unwrap();
+            assert!(
+                stats.entries_repacked < stats.entries_total,
+                "refresh must be a strict delta: {} of {}",
+                stats.entries_repacked, stats.entries_total
+            );
+            let gen1 =
+                handle.swap(Arc::clone(&prep1), &metrics).unwrap();
+            assert!(gen1 > gen0, "swap must publish a newer generation");
+            swapped.store(true, Ordering::SeqCst);
+
+            let (la, lb) = producer.join().unwrap();
+            let served = srv.join().unwrap();
+            (la, lb, served, prep1, gen0, gen1)
+        });
+
+    assert_eq!(served, 2 * n, "every request across the swap is served");
+    assert_eq!(metrics.counter("serve/swaps"), 1);
+    assert_eq!(metrics.gauge("model/weight_generation"),
+               Some(gen1 as f64));
+    assert!(gen0 >= 1);
+    assert!(
+        metrics.counter("serve/replica_gen_switches") >= 1,
+        "at least one replica must have picked up the new generation"
+    );
+
+    // Pre-swap replies: bit-identical to the boot surface.
+    for (img, logits) in imgs_a.iter().zip(&logits_a) {
+        let want = prep0.forward(&image_tensor(&cfg, img));
+        assert_eq!(logits, &want.logits.data,
+                   "pre-swap reply drifted from the boot generation");
+    }
+    // Post-swap replies: bit-identical to a COLD full prepare of the
+    // fine-tuned params — served through the delta-refreshed surface.
+    let cold = PreparedModel::new(&VitModel::new(cfg.clone()),
+                                  &state.params, prep1.dtype());
+    for (img, logits) in imgs_b.iter().zip(&logits_b) {
+        let t = image_tensor(&cfg, img);
+        let want = cold.forward(&t);
+        assert_eq!(logits, &want.logits.data,
+                   "post-swap reply diverges from a cold full prepare");
+        let via_prep1 = prep1.forward(&t);
+        assert_eq!(via_prep1.logits.data, want.logits.data);
+    }
+}
+
+/// Open-loop hammering straddling the swap: requests are in flight
+/// while the generation changes. Nothing may drop or hang, and every
+/// reply must match one of the two generations (no torn weights).
+#[test]
+fn hammering_across_swap_drops_and_hangs_nothing() {
+    let cfg = tiny_cfg();
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(1).unwrap();
+    let mut state = TrainState::fresh(params);
+    be.prepare(&state.params).unwrap();
+    let prep0 = be.shared_prepared().unwrap();
+
+    let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+    let (server, client) = Server::with_config(
+        BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(1),
+            compiled_sizes: vec![1, 2, 4],
+        },
+        &shape,
+        ServeConfig { replicas: 3, ..ServeConfig::default() },
+    );
+    let handle = server.swap_handle();
+    let metrics = Registry::new();
+
+    let n = 48usize;
+    let images: Vec<Vec<f32>> =
+        (0..n).map(|i| rand_image(&cfg, 500 + i as u64)).collect();
+
+    let (outcomes, served, prep1) = std::thread::scope(|s| {
+        let srv = {
+            let prep_boot = Arc::clone(&prep0);
+            let server = &server;
+            let metrics = &metrics;
+            s.spawn(move || {
+                server.run_prepared(prep_boot, metrics, None).unwrap()
+            })
+        };
+        let producer = {
+            let images = &images;
+            s.spawn(move || {
+                let rxs: Vec<_> = images
+                    .iter()
+                    .map(|img| {
+                        let rx = client.submit(img.clone()).unwrap();
+                        std::thread::sleep(Duration::from_micros(200));
+                        rx
+                    })
+                    .collect();
+                drop(client);
+                rxs.into_iter()
+                    .map(|rx| rx.wait_timeout(Duration::from_secs(30)))
+                    .collect::<Vec<_>>()
+            })
+        };
+
+        while handle.generation() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Swap mid-stream, while the producer is still submitting.
+        let imgs = train_images(2, &cfg, 9);
+        be.train_step_filtered(&mut state, &imgs, &[2, 3], 1e-2, FILTER)
+            .unwrap();
+        let (prep1, _) = be.refresh_prepared(&state.params).unwrap();
+        handle.swap(Arc::clone(&prep1), &metrics).unwrap();
+
+        let outcomes = producer.join().unwrap();
+        let served = srv.join().unwrap();
+        (outcomes, served, prep1)
+    });
+
+    assert_eq!(served, n);
+    let cold1 = PreparedModel::new(&VitModel::new(cfg.clone()),
+                                   &state.params, prep1.dtype());
+    for (img, outcome) in images.iter().zip(outcomes) {
+        let resp = outcome
+            .expect("request hung across the swap")
+            .expect("request failed across the swap");
+        let t = image_tensor(&cfg, img);
+        let old = prep0.forward(&t).logits.data;
+        let new = cold1.forward(&t).logits.data;
+        let matches = |want: &[f32]| {
+            resp.logits.iter().zip(want)
+                .all(|(a, b)| (a - b).abs() < 1e-5)
+        };
+        assert!(
+            matches(&old) || matches(&new),
+            "reply matches neither generation — torn weights?"
+        );
+    }
+}
+
+/// A swap handle obtained before the server boots must refuse to
+/// publish: there is no generation-0 surface for in-flight batches to
+/// finish on, and warm-up ordering would be undefined.
+#[test]
+fn swap_refuses_before_boot_generation() {
+    let cfg = tiny_cfg();
+    let model = VitModel::new(cfg.clone());
+    let params = model.init(4);
+    let prep = Arc::new(PreparedModel::new(
+        &model, &params, softmoe::tensor::WeightDtype::from_env()));
+
+    let shape = [cfg.image_size, cfg.image_size, cfg.channels];
+    let (server, _client) =
+        Server::with_config(BatchPolicy::default(), &shape,
+                            ServeConfig::default());
+    let handle = server.swap_handle();
+    assert_eq!(handle.generation(), 0);
+    let err = handle.swap(prep, &Registry::new()).unwrap_err();
+    assert!(err.to_string().contains("boot generation"),
+            "unexpected error: {err:#}");
+}
+
+/// The serve-while-train persistence loop: write the boot snapshot,
+/// fine-tune, delta-rewrite it, and reload the file into a *fresh*
+/// backend — which must serve the fine-tuned weights bit-identically.
+/// Also asserts the delta rewrote strictly less than the full file.
+#[test]
+fn delta_snapshot_reloads_into_fresh_backend() {
+    let cfg = tiny_cfg();
+    let path = tmpfile("delta");
+    let _ = std::fs::remove_file(&path);
+
+    let mut be = NativeRuntime::new(cfg.clone());
+    let params = be.init(6).unwrap();
+    let mut state = TrainState::fresh(params);
+    be.prepare(&state.params).unwrap();
+    assert!(be.write_snapshot(&path).unwrap());
+    let full_len = std::fs::metadata(&path).unwrap().len();
+
+    let imgs = train_images(2, &cfg, 11);
+    be.train_step_filtered(&mut state, &imgs, &[0, 1], 1e-2, FILTER)
+        .unwrap();
+    let (prep1, _) = be.refresh_prepared(&state.params).unwrap();
+    let stats = be
+        .write_snapshot_delta(&path)
+        .unwrap()
+        .expect("provenance was recorded by write_snapshot");
+    assert!(stats.entries_rewritten > 0);
+    assert!(stats.entries_rewritten < stats.entries_total,
+            "delta must rewrite a strict subset of entries");
+    assert!(stats.bytes_rewritten < stats.bytes_total,
+            "delta must rewrite strictly fewer payload bytes than full");
+    assert_eq!(std::fs::metadata(&path).unwrap().len(), full_len,
+               "delta keeps the byte-identical full-file layout");
+
+    // A fresh backend (new process stand-in) boots from the delta'd
+    // file and serves the fine-tuned weights exactly.
+    let mut be2 = NativeRuntime::new(cfg.clone());
+    assert!(be2.prepare_from_snapshot(&state.params, &path).unwrap());
+    let probe = train_images(2, &cfg, 12);
+    let (logits, _) = be2.forward(&state.params, &probe).unwrap();
+    let want = prep1.forward(&probe);
+    assert_eq!(logits.data, want.logits.data,
+               "snapshot delta round-trip changed served logits");
+
+    let _ = std::fs::remove_file(&path);
+}
